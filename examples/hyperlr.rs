@@ -1,0 +1,47 @@
+//! Hyperparameter learning E2E (paper §5.2 task 1, Bengio 2000 scaled):
+//! meta-learn per-parameter learning rates for the inner Adam optimiser.
+//! η is a pytree of log-scale multipliers; the entire outer update runs as
+//! one MixFlow-MG artifact from Rust.
+//!
+//! ```bash
+//! cargo run --release --example hyperlr -- [steps]
+//! ```
+
+use anyhow::Result;
+use mixflow::meta::MetaTrainer;
+use mixflow::runtime::Runtime;
+use mixflow::util::stats::human_secs;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let runtime = Runtime::new()?;
+    let key = runtime
+        .manifest
+        .group("e2e")
+        .iter()
+        .find(|m| m.task == "learning_lr")
+        .map(|m| m.key.clone())
+        .expect("e2e learning_lr artifact missing — rerun make artifacts");
+
+    println!("meta-learning per-parameter learning rates: {key}");
+    let mut trainer = MetaTrainer::new(&runtime, &key, 7);
+    let report = trainer.train(steps)?;
+    for (i, l) in report.losses.iter().enumerate() {
+        if i % (steps / 15).max(1) == 0 || i + 1 == report.losses.len() {
+            println!("  step {i:>4}  val_loss {l:.4}");
+        }
+    }
+    let (head, tail) = report.improvement(10);
+    println!(
+        "\n{} outer steps in {} ({:.2} steps/s); loss {head:.4} → {tail:.4}",
+        report.steps,
+        human_secs(report.seconds),
+        report.steps_per_second
+    );
+    assert!(tail < head, "learned LRs must improve the validation loss");
+    println!("hyperlr OK");
+    Ok(())
+}

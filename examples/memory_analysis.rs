@@ -1,0 +1,90 @@
+//! Memory analysis tour: regenerate the paper's Figure 2 (device-memory
+//! footprint over instruction number) and Figure 9 (graph census) for a
+//! default/mixflow artifact pair using the HLO liveness simulator —
+//! no execution, pure analysis.
+//!
+//! ```bash
+//! cargo run --release --example memory_analysis -- [artifact_key]
+//! ```
+
+use anyhow::Result;
+use mixflow::coordinator::report::timeline_plot;
+use mixflow::hlo::{parser, MemorySimulator};
+use mixflow::runtime::Manifest;
+use mixflow::util::stats::human_bytes;
+use mixflow::util::table::Table;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::discover()?;
+    // Default: the Table-3 44M-scaled MAML pair (the paper's Fig. 2/3 model).
+    let pick = |variant: &str| {
+        manifest
+            .group("table3_ablation")
+            .into_iter()
+            .find(|m| m.mode == variant && m.block_remat && m.save_inner_grads == (variant != "default"))
+            .map(|m| m.key.clone())
+    };
+    let keys: Vec<String> = match std::env::args().nth(1) {
+        Some(k) => vec![k],
+        None => [pick("default"), pick("fwdrev")]
+            .into_iter()
+            .flatten()
+            .collect(),
+    };
+
+    let mut census_rows: Vec<(String, usize, usize, u64)> = Vec::new();
+    for key in &keys {
+        let meta = manifest.get(key)?;
+        let text = std::fs::read_to_string(manifest.hlo_path(meta))?;
+        let module = parser::parse_module(&text)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mem = MemorySimulator::new(&module).run();
+        println!(
+            "{}",
+            timeline_plot(
+                &format!(
+                    "Figure 2 — {} ({}) memory over instruction number",
+                    key, meta.variant
+                ),
+                &mem.timeline,
+                100,
+                14,
+            )
+        );
+        println!(
+            "  static {} (params {} + constants {} + outputs {}) | peak dynamic {}\n",
+            human_bytes(mem.static_bytes()),
+            human_bytes(mem.param_bytes),
+            human_bytes(mem.const_bytes),
+            human_bytes(mem.output_bytes),
+            human_bytes(mem.peak_dynamic),
+        );
+        let census = module.opcode_census();
+        let data_ops: usize = ["broadcast", "transpose", "copy", "concatenate", "pad", "slice", "dynamic-slice", "dynamic-update-slice"]
+            .iter()
+            .filter_map(|op| census.get(*op))
+            .sum();
+        census_rows.push((
+            meta.variant.clone(),
+            module.instruction_count(),
+            data_ops,
+            mem.peak_dynamic,
+        ));
+    }
+
+    if census_rows.len() == 2 {
+        println!("Figure 9 — compiled-graph census (data nodes shrink under mixed mode)");
+        let mut t = Table::new(&["variant", "instructions", "data-movement ops", "peak dynamic"])
+            .numeric_cols(&[1, 2, 3]);
+        for (v, n, d, p) in &census_rows {
+            t.row(vec![
+                v.clone(),
+                n.to_string(),
+                d.to_string(),
+                human_bytes(*p),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Never imported at runtime — the Rust coordinator consumes only the HLO text
+artifacts and ``manifest.json`` that ``compile.aot`` emits.
+"""

@@ -1,0 +1,585 @@
+"""AOT pipeline: lower every benchmark configuration to HLO text artifacts.
+
+This is the single build-time entry point (``make artifacts``).  For each
+experiment configuration of DESIGN.md §4 it
+
+1. builds the meta-gradient (or full train-step / toy) function,
+2. flattens its pytree signature to a positional array list,
+3. lowers with ``jax.jit(...).lower(...)`` and converts the StableHLO to
+   **HLO text** (the interchange the ``xla`` crate's 0.5.1 extension can
+   parse — serialized protos from jax≥0.5 are rejected, see
+   /opt/xla-example/README.md),
+4. optionally compiles on the CPU backend to record XLA's
+   ``CompiledMemoryStats`` (the "measured peak HBM" stand-in, DESIGN.md §2),
+5. records everything in ``artifacts/manifest.json`` for the Rust runtime.
+
+Artifacts are content-keyed and deduplicated across figure groups; an
+existing file is skipped unless ``--force``.
+
+Usage::
+
+    cd python && python -m compile.aot --out ../artifacts [--full] [--force]
+                                       [--groups fig4,table3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import mixflow
+from . import model as model_lib
+from . import optim as optim_lib
+from . import tasks as tasks_lib
+from . import toy as toy_lib
+
+# ---------------------------------------------------------------------------
+# Scaled model presets (DESIGN.md §2: CPU-budget proportional scaling)
+# ---------------------------------------------------------------------------
+
+SIZES: Dict[str, Dict[str, int]] = {
+    "tiny": dict(d_model=32, ffw_size=128, kv_size=8, n_heads=4, n_layers=2),
+    "small": dict(d_model=48, ffw_size=192, kv_size=8, n_heads=6, n_layers=4),
+}
+# The scaled Chinchilla ladder rungs join the size table under their names.
+for _name, (_d, _f, _kv, _h, _l) in model_lib.CHINCHILLA_LADDER.items():
+    SIZES[_name] = dict(
+        d_model=_d, ffw_size=_f, kv_size=_kv, n_heads=_h, n_layers=_l
+    )
+
+VOCAB = 128
+
+DEFAULT_VARIANTS = {
+    # Algorithm 1: plain autodiff, block remat on (paper keeps it on
+    # everywhere), no inner-grad saving.
+    "default": dict(mode="default", block_remat=True, save_inner_grads=False),
+    # Algorithm 2: MixFlow-MG = fwdrev + block remat + save inner grads.
+    "mixflow": dict(mode="fwdrev", block_remat=True, save_inner_grads=True),
+}
+
+
+def _dtype_name(dt) -> str:
+    return np.dtype(dt).name  # 'float32', 'int32', ...
+
+
+@dataclasses.dataclass
+class Artifact:
+    """One lowered HLO artifact plus the metadata Rust needs to run it."""
+
+    key: str
+    kind: str                  # 'meta_grad' | 'train_step' | 'toy'
+    task: str
+    variant: str               # 'default' | 'mixflow' | ablation tag
+    mode: str
+    block_remat: bool
+    save_inner_grads: bool
+    tier: str                  # 'exec' | 'analysis'
+    model: Dict[str, Any]
+    inner_steps: int
+    batch: int
+    seq_len: int
+    vocab_size: int
+    inputs: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    outputs: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    file: str = ""
+    xla_stats: Dict[str, int] | None = None
+    cost: Dict[str, float] | None = None
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    lower_seconds: float = 0.0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_fn(fn: Callable, example_args) -> tuple:
+    """Positional-array wrapper + flat input specs for ``fn``.
+
+    Returns ``(flat_fn, leaf_specs)`` where ``flat_fn(*arrays)`` returns a
+    flat tuple of output arrays and ``leaf_specs`` is the list of
+    ``ShapeDtypeStruct`` for the flattened ``example_args``.
+    """
+    spec_args = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), example_args
+    )
+    leaves, treedef = jax.tree.flatten(spec_args)
+
+    def flat_fn(*flat):
+        args = jax.tree.unflatten(treedef, list(flat))
+        return tuple(jax.tree.leaves(fn(*args)))
+
+    return flat_fn, leaves
+
+
+# ---------------------------------------------------------------------------
+# Builders for each artifact kind
+# ---------------------------------------------------------------------------
+
+
+def _model_cfg(size: str, seq_len: int, block_remat: bool,
+               use_pallas: bool = False) -> model_lib.TransformerConfig:
+    return model_lib.TransformerConfig(
+        vocab_size=VOCAB,
+        seq_len=seq_len,
+        block_remat=block_remat,
+        use_pallas=use_pallas,
+        **SIZES[size],
+    )
+
+
+def build_meta_grad_artifact(
+    task_name: str,
+    size: str,
+    seq_len: int,
+    batch: int,
+    inner_steps: int,
+    variant: str,
+    *,
+    mode: str,
+    block_remat: bool,
+    save_inner_grads: bool,
+    tier: str,
+    use_pallas: bool = False,
+) -> tuple:
+    """(Artifact, flat_fn, leaf_specs) for one ∂V/∂η configuration."""
+    cfg = _model_cfg(size, seq_len, block_remat, use_pallas)
+    task = tasks_lib.by_name(task_name, cfg)
+    flags = mixflow.MetaFlags(
+        mode=mode,
+        save_inner_grads=save_inner_grads,
+        per_step_checkpoint=True,
+        inner_steps=inner_steps,
+    )
+    fn = mixflow.build_meta_grad(task, flags, with_aux=False)
+
+    rng = jax.random.PRNGKey(0)
+    eta = task.init_eta(rng)
+    theta0 = task.init_theta(jax.random.PRNGKey(1))
+    opt0 = task.init_opt_state(theta0)
+    xs = jnp.zeros((inner_steps, batch, seq_len + 1), jnp.int32)
+    val = jnp.zeros((batch, seq_len + 1), jnp.int32)
+    flat, leaves = flatten_fn(fn, (eta, theta0, opt0, xs, val))
+
+    key = (
+        f"{task_name}_{size}_S{seq_len}_B{batch}_T{inner_steps}"
+        f"_{mode}_br{int(block_remat)}_sg{int(save_inner_grads)}"
+        + ("_pallas" if use_pallas else "")
+    )
+    art = Artifact(
+        key=key,
+        kind="meta_grad",
+        task=task_name,
+        variant=variant,
+        mode=mode,
+        block_remat=block_remat,
+        save_inner_grads=save_inner_grads,
+        tier=tier,
+        model={**SIZES[size], "size_name": size,
+               "param_count": cfg.param_count()},
+        inner_steps=inner_steps,
+        batch=batch,
+        seq_len=seq_len,
+        vocab_size=VOCAB,
+        extra={"use_pallas": use_pallas},
+    )
+    return art, flat, leaves
+
+
+def build_train_step_artifact(
+    task_name: str,
+    size: str,
+    seq_len: int,
+    batch: int,
+    inner_steps: int,
+    variant: str,
+    *,
+    mode: str,
+    block_remat: bool,
+    save_inner_grads: bool,
+    meta_lr: float = 1e-2,
+    use_pallas: bool = False,
+    out_dir: str,
+) -> tuple:
+    """Full outer step (meta-grad + meta-Adam) + init-state npz for Rust."""
+    cfg = _model_cfg(size, seq_len, block_remat, use_pallas)
+    task = tasks_lib.by_name(task_name, cfg)
+    flags = mixflow.MetaFlags(
+        mode=mode,
+        save_inner_grads=save_inner_grads,
+        per_step_checkpoint=True,
+        inner_steps=inner_steps,
+    )
+    meta_opt = optim_lib.adam(meta_lr)
+    fn = mixflow.build_meta_train_step(task, flags, meta_opt)
+
+    rng = jax.random.PRNGKey(0)
+    eta = task.init_eta(rng)
+    meta_state = meta_opt.init(eta)
+    theta0 = task.init_theta(jax.random.PRNGKey(1))
+    opt0 = task.init_opt_state(theta0)
+    xs = jnp.zeros((inner_steps, batch, seq_len + 1), jnp.int32)
+    val = jnp.zeros((batch, seq_len + 1), jnp.int32)
+    args = (eta, meta_state, theta0, opt0, xs, val)
+    flat, leaves = flatten_fn(fn, args)
+
+    key = f"train_{task_name}_{size}_S{seq_len}_B{batch}_T{inner_steps}_{mode}" + (
+        "_pallas" if use_pallas else ""
+    )
+
+    # Dump the initial state so Rust starts from a proper initialisation
+    # (LayerNorm gains at 1, scaled normals, zero Adam moments).
+    state_leaves = jax.tree.leaves((eta, meta_state, theta0, opt0))
+    init_path = os.path.join(out_dir, f"{key}.init.npz")
+    np.savez(
+        init_path,
+        **{
+            f"in_{i:04d}": np.asarray(x)
+            for i, x in enumerate(state_leaves)
+        },
+    )
+
+    n_eta = len(jax.tree.leaves(eta))
+    n_meta = len(jax.tree.leaves(meta_state))
+    art = Artifact(
+        key=key,
+        kind="train_step",
+        task=task_name,
+        variant=variant,
+        mode=mode,
+        block_remat=block_remat,
+        save_inner_grads=save_inner_grads,
+        tier="exec",
+        model={**SIZES[size], "size_name": size,
+               "param_count": cfg.param_count()},
+        inner_steps=inner_steps,
+        batch=batch,
+        seq_len=seq_len,
+        vocab_size=VOCAB,
+        extra={
+            "use_pallas": use_pallas,
+            "init_file": os.path.basename(init_path),
+            # Outputs [0, n_eta) are η', [n_eta, n_eta+n_meta) the meta-opt
+            # state, last output the validation loss.  Inputs follow the
+            # same leaf order, so out[i] feeds in[i] on the next step.
+            "num_eta_leaves": n_eta,
+            "num_meta_opt_leaves": n_meta,
+            "num_state_leaves": len(state_leaves),
+            "meta_lr": meta_lr,
+        },
+    )
+    return art, flat, leaves
+
+
+def build_toy_artifact(
+    num_maps: int,
+    variant: str,
+    *,
+    use_mixed_mode: bool,
+    batch: int = 32,
+    dim: int = 64,
+    inner_updates: int = 2,
+    use_loop_fusion: bool = False,
+    use_pallas: bool = False,
+) -> tuple:
+    """§3.2 motivating-example artifact (Fig. 1's x-axis point)."""
+    cfg = toy_lib.ToyConfig(
+        batch=batch,
+        dim=dim,
+        num_maps=num_maps,
+        inner_updates=inner_updates,
+        use_loop_fusion=use_loop_fusion,
+        use_mixed_mode=use_mixed_mode,
+        use_pallas=use_pallas,
+    )
+    fn = toy_lib.build_meta_grad(cfg)
+    flat, leaves = flatten_fn(fn, toy_lib.example_args(cfg))
+    key = f"toy_M{num_maps}_D{dim}_B{batch}_T{inner_updates}_" + (
+        "mixflow" if use_mixed_mode else "default"
+    ) + ("_pallas" if use_pallas else "")
+    art = Artifact(
+        key=key,
+        kind="toy",
+        task="toy",
+        variant=variant,
+        mode="fwdrev" if use_mixed_mode else "default",
+        block_remat=False,
+        save_inner_grads=False,
+        tier="exec",
+        model={"dim": dim, "num_maps": num_maps,
+               "param_count": dim * dim,
+               "size_name": f"toy{dim}_M{num_maps}"},
+        inner_steps=inner_updates,
+        batch=batch,
+        seq_len=dim,
+        vocab_size=0,
+        extra={"use_loop_fusion": use_loop_fusion, "use_pallas": use_pallas},
+    )
+    return art, flat, leaves
+
+
+# ---------------------------------------------------------------------------
+# Grid definitions (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def plan(full: bool) -> Dict[str, List[dict]]:
+    """Group name → list of builder kwargs (pre-dedup)."""
+    groups: Dict[str, List[dict]] = {}
+
+    def mg(task, size, s, b, t, variant, tier, **over):
+        base = dict(DEFAULT_VARIANTS[variant]) if variant in DEFAULT_VARIANTS \
+            else {}
+        base.update(over)
+        return dict(
+            builder="meta_grad", task_name=task, size=size, seq_len=s,
+            batch=b, inner_steps=t, variant=variant, tier=tier, **base,
+        )
+
+    # --- fig1: toy example, sweep M, default vs mixed -------------------
+    ms = [1, 2, 4, 8, 16, 32] + ([64] if full else [])
+    groups["fig1_toy"] = [
+        dict(builder="toy", num_maps=m, variant=v,
+             use_mixed_mode=(v == "mixflow"))
+        for m in ms
+        for v in ("default", "mixflow")
+    ]
+
+    # --- table3 (+fig2/fig3-at-44M): ablation cube on the 44M rung ------
+    groups["table3_ablation"] = [
+        mg("maml", "44M", 64, 2, 2,
+           variant=f"{m}_br{int(br)}_sg{int(sg)}", tier="exec",
+           mode=m, block_remat=br, save_inner_grads=sg)
+        for m in ("default", "fwdrev")
+        for br in (False, True)
+        for sg in (False, True)
+    ]
+
+    # --- table2 (+fig3/fig10): ablation cube on the 489M rung -----------
+    groups["table2_ablation"] = [
+        mg("maml", "489M", 64, 2, 2,
+           variant=f"{m}_br{int(br)}_sg{int(sg)}", tier="analysis",
+           mode=m, block_remat=br, save_inner_grads=sg)
+        for m in ("default", "fwdrev")
+        for br in (False, True)
+        for sg in (False, True)
+    ]
+
+    # --- fig4: joint sweep over tasks × size × T × S (Table 1 scaled) ---
+    sizes4 = ["tiny", "small"]
+    ts4 = [2, 4] + ([8] if full else [])
+    ss4 = [32, 64] + ([128] if full else [])
+    groups["fig4_sweep"] = [
+        mg(task, size, s, 2, t, variant=v, tier="exec")
+        for task in tasks_lib.TASK_NAMES
+        for size in sizes4
+        for t in ts4
+        for s in ss4
+        for v in ("default", "mixflow")
+    ]
+
+    # --- fig5/fig11: data regimes, per-axis sweeps around a base --------
+    base = dict(task="maml", size="small", s=64, b=2, t=2)
+    fig5: List[dict] = []
+    for size in ["tiny", "small", "44M"] + (["90M"] if full else []):
+        tier = "exec" if size in ("tiny", "small") else "analysis"
+        fig5.append((dict(base, size=size), tier))
+    for s in [32, 64, 128, 256] + ([512] if full else []):
+        fig5.append((dict(base, s=s), "exec" if s <= 128 else "analysis"))
+    for t in [2, 4, 8]:
+        fig5.append((dict(base, t=t), "exec"))
+    for b in [1, 2, 4] + ([8] if full else []):
+        fig5.append((dict(base, b=b), "exec"))
+    groups["fig5_data"] = [
+        mg(p["task"], p["size"], p["s"], p["b"], p["t"], variant=v, tier=tier)
+        for (p, tier) in fig5
+        for v in ("default", "mixflow")
+    ]
+
+    # --- fig6: transformer-component sweeps (Table 5 scaled) ------------
+    comp_base = dict(d_model=64, ffw_size=256, kv_size=8, n_heads=8,
+                     n_layers=4)
+    axes = {
+        "d_model": [32, 64, 96, 128],
+        "ffw_size": [128, 256, 512, 1024],
+        "n_heads": [2, 4, 8, 16],
+        "n_layers": [2, 4, 8, 16],
+    }
+    fig6: List[dict] = []
+    for axis, values in axes.items():
+        for val in values:
+            preset = dict(comp_base)
+            preset[axis] = val
+            name = f"comp_{axis}{val}"
+            SIZES[name] = preset
+            fig6.extend(
+                mg("maml", name, 64, 2, 2, variant=v, tier="analysis")
+                for v in ("default", "mixflow")
+            )
+    groups["fig6_components"] = fig6
+
+    # --- fig7/fig8: the Chinchilla scaling ladder (B=4, T=2, paper §A.9)
+    rungs = ["44M", "90M", "140M", "196M", "278M", "489M"] + (
+        ["587M", "1018M"] if full else ["587M"]
+    )
+    groups["fig7_ladder"] = [
+        mg("maml", r, 64, 4, 2, variant=v, tier="analysis")
+        for r in rungs
+        for v in ("default", "mixflow")
+    ]
+
+    # --- kernelized pair: L1 Pallas kernels through the full stack ------
+    groups["kernelized"] = [
+        mg("maml", "tiny", 32, 2, 2, variant=v, tier="exec",
+           use_pallas=True)
+        for v in ("default", "mixflow")
+    ]
+
+    # --- e2e train steps (the Rust meta-training driver's artifacts) ----
+    groups["e2e"] = [
+        dict(builder="train_step", task_name=task, size="tiny", seq_len=32,
+             batch=4, inner_steps=2, variant="mixflow",
+             **DEFAULT_VARIANTS["mixflow"])
+        for task in tasks_lib.TASK_NAMES
+    ]
+
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+#: exec-tier artifacts additionally compiled in-process to record XLA's
+#: CompiledMemoryStats (cross-validates the Rust simulator).  Keep small:
+#: each compile costs ~10-60 s.  (table3's stats were recorded in the
+#: validation pass — see EXPERIMENTS.md — and cost ~8 min of XLA compiles,
+#: so they are opt-in via MIXFLOW_AOT_STATS=table3_ablation.)
+STATS_GROUPS = tuple(
+    ["fig1_toy"]
+    + os.environ.get("MIXFLOW_AOT_STATS", "").split(",")
+)
+
+
+def generate(out_dir: str, full: bool, force: bool,
+             only_groups: Sequence[str] | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    groups = plan(full)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest: Dict[str, Any] = {
+        "jax_version": jax.__version__,
+        "generated_unix": int(time.time()),
+        "full": full,
+        "artifacts": {},
+        "groups": {},
+    }
+    # Merge an existing manifest so --groups regenerates incrementally.
+    # (--force re-lowers files but must never discard other groups'
+    # entries — it applies to the selected groups only.)
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        manifest["artifacts"] = old.get("artifacts", {})
+        manifest["groups"] = old.get("groups", {})
+
+    for gname, entries in groups.items():
+        if only_groups and gname not in only_groups:
+            continue
+        keys: List[str] = []
+        for kwargs in entries:
+            builder = kwargs.pop("builder")
+            if builder == "toy":
+                art, flat, leaves = build_toy_artifact(**kwargs)
+            elif builder == "train_step":
+                art, flat, leaves = build_train_step_artifact(
+                    out_dir=out_dir, **kwargs
+                )
+            else:
+                art, flat, leaves = build_meta_grad_artifact(**kwargs)
+            keys.append(art.key)
+            hlo_path = os.path.join(out_dir, art.key + ".hlo.txt")
+            if (
+                art.key in manifest["artifacts"]
+                and os.path.exists(hlo_path)
+                and not force
+            ):
+                continue
+            t0 = time.time()
+            # keep_unused: the Rust runtime feeds every manifest input, so
+            # jax must not prune arguments the task ignores (MAML never
+            # reads θ₀ — it would otherwise vanish from the entry layout).
+            lowered = jax.jit(flat, keep_unused=True).lower(*leaves)
+            hlo = to_hlo_text(lowered)
+            with open(hlo_path, "w") as f:
+                f.write(hlo)
+            art.file = os.path.basename(hlo_path)
+            art.lower_seconds = round(time.time() - t0, 2)
+            art.inputs = [
+                {"shape": list(l.shape), "dtype": _dtype_name(l.dtype)}
+                for l in leaves
+            ]
+            out_shapes = jax.eval_shape(flat, *leaves)
+            art.outputs = [
+                {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)}
+                for o in out_shapes
+            ]
+            try:
+                cost = lowered.cost_analysis() or {}
+                art.cost = {
+                    "flops": float(cost.get("flops", 0.0)),
+                    "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                }
+            except Exception:  # pragma: no cover - backend specific
+                art.cost = None
+            if gname in STATS_GROUPS:
+                compiled = lowered.compile()
+                ma = compiled.memory_analysis()
+                art.xla_stats = {
+                    "temp_bytes": int(ma.temp_size_in_bytes),
+                    "argument_bytes": int(ma.argument_size_in_bytes),
+                    "output_bytes": int(ma.output_size_in_bytes),
+                    "alias_bytes": int(ma.alias_size_in_bytes),
+                }
+            manifest["artifacts"][art.key] = dataclasses.asdict(art)
+            print(
+                f"[aot] {gname}: {art.key} "
+                f"({len(hlo) / 1e6:.2f} MB, {art.lower_seconds}s)",
+                flush=True,
+            )
+        manifest["groups"][gname] = keys
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--full", action="store_true",
+                   help="expanded grids (slower)")
+    p.add_argument("--force", action="store_true",
+                   help="regenerate even if files exist")
+    p.add_argument("--groups", default=None,
+                   help="comma-separated subset of groups")
+    args = p.parse_args()
+    only = args.groups.split(",") if args.groups else None
+    manifest = generate(args.out, args.full, args.force, only)
+    n = len(manifest["artifacts"])
+    print(f"[aot] manifest: {n} artifacts in {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+Public surface:
+  * ``wrappers.causal_attention`` / ``wrappers.layernorm`` /
+    ``wrappers.toy_map`` — differentiable kernel entry points used by the
+    L2 model code.
+  * ``ref`` — pure-jnp oracles (pytest ground truth).
+"""
+
+from . import attention, layernorm, ref, toy_map, wrappers  # noqa: F401

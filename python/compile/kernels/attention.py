@@ -1,0 +1,163 @@
+"""Fused causal flash-attention Pallas kernel (TPU-style, interpret mode).
+
+The paper's inner models are Chinchilla transformers; self-attention is the
+compute hot-spot, and its activation footprint (``O(B·L·k·S²)``) is exactly
+the term MixFlow-MG's analysis (§5.3, Eq. 12) targets.  This kernel follows
+the TPU adaptation rules from DESIGN.md §Hardware-Adaptation:
+
+* tiles are shaped for **VMEM** via ``BlockSpec`` — one query block plus the
+  streamed K/V blocks live on-chip at a time (no ``S×S`` logits in HBM);
+* the contraction feeds the **MXU** (block matmuls in f32 accumulation);
+* the HBM↔VMEM schedule the CUDA implementations express with threadblocks
+  is expressed with the grid + ``BlockSpec`` index maps.
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.  Interpret mode
+lowers to plain HLO, so the kernel participates in the same AOT artifact the
+Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: multiples of the TPU (8, 128) register tiling; the MXU
+# is a 128x128 systolic array, so 128-wide query/key tiles keep it fed.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+
+_NEG_INF = -1e30
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ``<= cap`` (>=1)."""
+    best = 1
+    for d in range(1, min(n, cap) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_kv: int, seq_len: int
+):
+    """One (batch*head, q-block) grid step of causal flash attention.
+
+    Ref shapes: q ``(1, block_q, d)``; k, v ``(1, seq_len, d)`` (streamed in
+    ``block_kv`` slices); o ``(1, block_q, d)``.  Online-softmax state
+    (running max ``m``, normaliser ``l``, accumulator ``acc``) is carried in
+    f32 — the MXU accumulates in f32 even for bf16 operands, and so do we.
+    """
+    q_block = pl.program_id(1)
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # [bq, d]
+
+    acc = jnp.zeros((block_q, d), jnp.float32)
+    m = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q,), jnp.float32)
+
+    num_kv_blocks = seq_len // block_kv
+    for j in range(num_kv_blocks):
+        k = k_ref[0, j * block_kv : (j + 1) * block_kv, :].astype(jnp.float32)
+        v = v_ref[0, j * block_kv : (j + 1) * block_kv, :].astype(jnp.float32)
+        s = q @ k.T  # [bq, bkv] — MXU tile
+        q_pos = q_block * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0
+        )
+        k_pos = j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1
+        )
+        mask = q_pos >= k_pos
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        m = m_new
+
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv"))
+def causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int | None = None,
+    block_kv: int | None = None,
+) -> jax.Array:
+    """Pallas fused causal attention over ``[B, H, S, D]`` inputs.
+
+    Numerics match :func:`compile.kernels.ref.causal_attention` (the pytest
+    oracle).  Block sizes default to the largest divisors of ``S`` below the
+    MXU-friendly 128.
+    """
+    b, h, s, d = q.shape
+    bq = block_q or _largest_divisor(s, DEFAULT_BLOCK_Q)
+    bkv = block_kv or _largest_divisor(s, DEFAULT_BLOCK_KV)
+    assert s % bq == 0 and s % bkv == 0, (s, bq, bkv)
+
+    qf = q.reshape(b * h, s, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+
+    grid = (b * h, s // bq)
+    kernel = functools.partial(
+        _attention_kernel, block_q=bq, block_kv=bkv, seq_len=s
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i: (bh, i, 0)),
+            pl.BlockSpec((1, s, d), lambda bh, i: (bh, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda bh, i: (bh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        interpret=True,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)
+
+
+def vmem_bytes_estimate(
+    seq_len: int, head_dim: int, block_q: int | None = None,
+    block_kv: int | None = None, dtype_bytes: int = 4,
+) -> int:
+    """VMEM footprint estimate for one grid step (DESIGN.md §7).
+
+    q tile + one k/v tile pair + logits tile + online-softmax state + output
+    accumulator, all in f32 (4 B) except the HBM-resident operands.
+    """
+    bq = block_q or _largest_divisor(seq_len, DEFAULT_BLOCK_Q)
+    bkv = block_kv or _largest_divisor(seq_len, DEFAULT_BLOCK_KV)
+    f32 = 4
+    tiles = (
+        bq * head_dim * f32          # q (scaled, f32)
+        + 2 * bkv * head_dim * f32   # k, v tiles
+        + bq * bkv * f32             # logits/probs tile
+        + bq * head_dim * f32        # accumulator
+        + 2 * bq * f32               # m, l
+        + bq * head_dim * dtype_bytes  # output tile in storage dtype
+    )
+    return tiles
+
+
+def mxu_flops_per_step(seq_len: int, head_dim: int, block_q: int | None = None,
+                       block_kv: int | None = None) -> int:
+    """MXU FLOPs per grid step: the two block matmuls over all kv tiles."""
+    bq = block_q or _largest_divisor(seq_len, DEFAULT_BLOCK_Q)
+    bkv = block_kv or _largest_divisor(seq_len, DEFAULT_BLOCK_KV)
+    num_kv = seq_len // bkv
+    per_tile = 2 * bq * bkv * head_dim  # q@k.T
+    per_tile += 2 * bq * bkv * head_dim  # p@v
+    return per_tile * num_kv

@@ -1,0 +1,82 @@
+"""Fused LayerNorm Pallas kernel (row-tiled, f32 statistics).
+
+The Chinchilla blocks are pre-LN; with block rematerialisation on (the
+paper's §4 optimisation 1), each LayerNorm runs in both the forward pass and
+every recomputation, so fusing the two reduction passes and the affine into
+a single VMEM-resident tile pays off on TPU.  ``interpret=True`` per
+DESIGN.md (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step; 8 sublanes x f32 is the native TPU tile height.
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    best = 1
+    for d in range(1, min(n, cap) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _layernorm_kernel(x_ref, gamma_ref, beta_ref, o_ref, *, eps: float):
+    """Normalise a ``(block_rows, D)`` tile over its last axis."""
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    centred = x - mean
+    var = jnp.mean(centred * centred, axis=-1, keepdims=True)
+    y = centred * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * gamma_ref[...] + beta_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def layernorm(
+    x: jax.Array,
+    gamma: jax.Array,
+    beta: jax.Array,
+    eps: float = 1e-5,
+    block_rows: int | None = None,
+) -> jax.Array:
+    """Pallas LayerNorm over the last axis of ``x`` (any leading shape).
+
+    Matches :func:`compile.kernels.ref.layernorm`.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    xf = x.reshape(rows, d)
+    br = block_rows or _largest_divisor(rows, DEFAULT_BLOCK_ROWS)
+    assert rows % br == 0, (rows, br)
+
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(xf, gamma, beta)
+    return out.reshape(orig_shape)
+
+
+def vmem_bytes_estimate(d_model: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                        dtype_bytes: int = 4) -> int:
+    """VMEM estimate for one grid step: x tile (f32) + params + out tile."""
+    f32 = 4
+    return block_rows * d_model * f32 + 2 * d_model * f32 + (
+        block_rows * d_model * dtype_bytes
+    )

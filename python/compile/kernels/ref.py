@@ -1,0 +1,55 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth that ``python/tests`` (incl. hypothesis sweeps)
+compare the kernels against, and the differentiable "tangent" bodies used by
+the ``custom_jvp`` wrappers in :mod:`compile.kernels.wrappers` — they must be
+written in plain ``jnp`` so JAX can differentiate them to any order.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Reference multi-head causal attention.
+
+    Args:
+      q, k, v: ``[B, H, S, D]`` arrays.
+
+    Returns:
+      ``[B, H, S, D]`` attention output, computed with a dense causal mask
+      and numerically-stable softmax in f32.
+    """
+    s = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(
+        q.dtype
+    )
+
+
+def layernorm(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    """Reference LayerNorm over the last axis (stats in f32)."""
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * gamma + beta).astype(x.dtype)
+
+
+def toy_map(y0: jax.Array, num_maps: int) -> jax.Array:
+    """Reference for the paper's Eq. (9) recursive map.
+
+    ``y_i = i * (2 + sin(y_{i-1})) ** cos(y_{i-1})`` for ``i = 1..num_maps``.
+    """
+    y = y0
+    for i in range(1, num_maps + 1):
+        y = i * (2.0 + jnp.sin(y)) ** jnp.cos(y)
+    return y

@@ -1,0 +1,57 @@
+"""Pallas kernel for the paper's motivating example (Eq. 9 recursive map).
+
+``y_i = i * (2 + sin(y_{i-1})) ** cos(y_{i-1})``, iterated ``M`` times over a
+``[B, D]`` activation.  The map is elementwise, so the whole chain fuses into
+one VPU-resident tile: the default autodiff implementation instead stores all
+``M`` intermediates for the backward pass, which is precisely the asymmetry
+Figure 1 of the paper plots.  ``interpret=True`` per DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    best = 1
+    for d in range(1, min(n, cap) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _toy_map_kernel(y_ref, o_ref, *, num_maps: int):
+    y = y_ref[...].astype(jnp.float32)
+    for i in range(1, num_maps + 1):
+        y = i * (2.0 + jnp.sin(y)) ** jnp.cos(y)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_maps", "block_rows"))
+def toy_map(
+    y0: jax.Array, num_maps: int, block_rows: int | None = None
+) -> jax.Array:
+    """Apply the Eq. (9) map ``num_maps`` times (matches ``ref.toy_map``)."""
+    rows, d = y0.shape
+    br = block_rows or _largest_divisor(rows, DEFAULT_BLOCK_ROWS)
+    assert rows % br == 0, (rows, br)
+    return pl.pallas_call(
+        functools.partial(_toy_map_kernel, num_maps=num_maps),
+        grid=(rows // br,),
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), y0.dtype),
+        interpret=True,
+    )(y0)
+
+
+def vmem_bytes_estimate(d: int, block_rows: int = DEFAULT_BLOCK_ROWS,
+                        dtype_bytes: int = 4) -> int:
+    """One tile in, one tile out, f32 working copy — M-independent."""
+    return block_rows * d * (4 + dtype_bytes + 4)

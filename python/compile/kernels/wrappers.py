@@ -1,0 +1,72 @@
+"""Higher-order-differentiable wrappers around the Pallas kernels.
+
+``pallas_call`` has no autodiff rule, but MixFlow-MG differentiates the inner
+loss **twice** (the HVP/MVP products of Eqs. 7–8), in both forward and
+reverse mode.  Each kernel is therefore wrapped in ``jax.custom_jvp`` whose
+rule
+
+1. computes the **primal** by recursively calling the wrapped kernel — so the
+   Pallas kernel stays on the primal path at every differentiation order, and
+2. computes the **tangent** with the pure-``jnp`` reference from ``ref.py`` —
+   differentiable to any order, so ``grad``, ``jvp∘grad`` (forward-over-
+   reverse) and ``grad∘grad`` (reverse-over-reverse) all compose.
+
+Reverse mode falls out of JAX's linearize-then-transpose of the rule.  The
+redundant reference primal inside ``jax.jvp`` is dead code XLA eliminates
+(only ops shared with the tangent survive).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import attention as _attention
+from . import layernorm as _layernorm
+from . import ref as _ref
+from . import toy_map as _toy_map
+
+
+def make_differentiable(kernel_fn, ref_fn):
+    """Wrap ``kernel_fn`` so it is differentiable to any order.
+
+    Args:
+      kernel_fn: the Pallas kernel entry point (array args only).
+      ref_fn: pure-jnp function with identical semantics/signature.
+
+    Returns:
+      A function numerically equal to ``kernel_fn`` whose JVP (and hence
+      VJP, and higher-order derivatives) are defined via ``ref_fn``.
+    """
+    wrapped = jax.custom_jvp(kernel_fn)
+
+    @wrapped.defjvp
+    def _jvp(primals, tangents):  # noqa: ANN001 — jax callback signature
+        primal_out = wrapped(*primals)
+        _, tangent_out = jax.jvp(ref_fn, primals, tangents)
+        return primal_out, tangent_out
+
+    return wrapped
+
+
+#: Differentiable fused causal attention: ``[B, H, S, D]`` q/k/v → output.
+causal_attention = make_differentiable(
+    lambda q, k, v: _attention.causal_attention(q, k, v),
+    _ref.causal_attention,
+)
+
+#: Differentiable fused LayerNorm over the last axis.
+layernorm = make_differentiable(
+    lambda x, g, b: _layernorm.layernorm(x, g, b),
+    _ref.layernorm,
+)
+
+
+@functools.lru_cache(maxsize=None)
+def toy_map(num_maps: int):
+    """Differentiable Eq. (9) map with ``num_maps`` baked in (cached)."""
+    return make_differentiable(
+        lambda y0: _toy_map.toy_map(y0, num_maps),
+        lambda y0: _ref.toy_map(y0, num_maps),
+    )

@@ -1,0 +1,350 @@
+"""MixFlow-MG: mixed-mode differentiation for bilevel gradients (paper §3).
+
+This module is the paper's contribution:
+
+* :func:`get_grad_fn` — the ``fwdrev_grad`` transformation of Algorithm 2 /
+  Listing 1 (plus the reverse-over-forward and explicit reverse-over-reverse
+  alternatives Proposition 3.1 mentions).  Each returns a drop-in replacement
+  for ``jax.grad(inner_loss_fn)`` whose *backward* rule computes the
+  Hessian-vector and mixed-derivative products of Eqs. (7)–(8) in the chosen
+  mode instead of default reverse-over-reverse.
+
+* :func:`tag_inner_grads` / :func:`checkpoint_inner_step` — the
+  "saving inner gradients" optimisation of §4 (Listing 3): tag ``∇L_i`` with
+  ``checkpoint_name`` and checkpoint each inner step with a
+  ``save_only_these_names`` policy so the outer backward pass never redoes
+  the inner backward pass.
+
+* :func:`build_meta_loss` / :func:`build_meta_grad` — assemble a complete
+  Truncated-BPTT meta-gradient program (Algorithm 1 when
+  ``mode='default'``, Algorithm 2 otherwise) for any
+  :class:`compile.tasks.BiLevelTask`.
+
+Everything here is exact — MixFlow-MG changes *how* the second-order
+products are evaluated, never their value; ``python/tests/test_mixflow.py``
+asserts bit-level-tolerance agreement between all modes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+#: The differentiation modes of Proposition 3.1 for the second-order
+#: products inside the outer backward pass.
+MODES = ("default", "fwdrev", "revfwd", "revrev")
+
+
+# ---------------------------------------------------------------------------
+# The core transformation (paper Listing 1 + Proposition 3.1)
+# ---------------------------------------------------------------------------
+
+
+def _is_differentiable(tree: PyTree) -> bool:
+    """True iff every leaf has an inexact dtype (token batches are int)."""
+    leaves = jax.tree.leaves(tree)
+    return bool(leaves) and all(
+        jnp.issubdtype(jnp.asarray(l).dtype, jnp.inexact) for l in leaves
+    )
+
+
+def _diff_input_positions(inputs: Sequence[PyTree]) -> tuple:
+    """Positions (within ``inputs``) that can carry cotangents."""
+    return tuple(
+        i for i, a in enumerate(inputs) if _is_differentiable(a)
+    )
+
+
+def _scatter_cotangents(inputs, positions, cts):
+    """Place ``cts`` at ``positions``; ``None`` elsewhere (int inputs)."""
+    out = [None] * len(inputs)
+    for p, ct in zip(positions, cts):
+        out[p] = ct
+    return tuple(out)
+
+
+def get_fwdrev_grad_fn(inner_loss_fn: Callable[..., jax.Array]):
+    """Forward-over-reverse ``grad(inner_loss_fn)`` (paper Listing 1).
+
+    The returned function computes ``∂L/∂θ`` exactly like
+    ``jax.grad(inner_loss_fn)``, but defines a custom VJP that evaluates the
+    cotangent products
+
+      ``ct ↦ (∂²L/∂θ² · ct,  ∂²L/∂inputs∂θ · ct)``
+
+    as a **JVP of the gradient** (``jax.jvp(grad(L), (θ,), (ct,))``): the
+    HVP of Eq. (7) and the MVP of Eq. (8), both in forward-over-reverse
+    mode.  Symmetry of the Hessian / Schwarz's theorem (§3) makes this equal
+    to the default reverse-over-reverse products while storing no
+    activations of the inner backward pass.
+
+    Args:
+      inner_loss_fn: scalar loss ``L(params, *inputs)``; ``params`` must be
+        the first argument.  Integer-dtype inputs (token batches) are
+        detected automatically and receive ``None`` cotangents.
+
+    Returns:
+      A function with signature ``(params, *inputs) -> ∂L/∂params``.
+    """
+
+    @jax.custom_vjp
+    def fwdrev_grad_fn(params, *inputs):
+        return jax.grad(inner_loss_fn)(params, *inputs)
+
+    def forward_pass(params, *inputs):
+        # Residuals are the *primal* point only — no inner-backward
+        # activations are saved, which is the entire memory story.
+        return fwdrev_grad_fn(params, *inputs), (params, inputs)
+
+    def backward_pass(residuals, ct):
+        params, inputs = residuals
+        diff_pos = _diff_input_positions(inputs)
+        grad_loss_fn = jax.grad(
+            inner_loss_fn, argnums=(0,) + tuple(p + 1 for p in diff_pos)
+        )
+        _, hvp_ct = jax.jvp(
+            lambda p: grad_loss_fn(p, *inputs), (params,), (ct,)
+        )
+        return (hvp_ct[0],) + _scatter_cotangents(
+            inputs, diff_pos, hvp_ct[1:]
+        )
+
+    fwdrev_grad_fn.defvjp(forward_pass, backward_pass)
+    return fwdrev_grad_fn
+
+
+def get_revfwd_grad_fn(inner_loss_fn: Callable[..., jax.Array]):
+    """Reverse-over-forward ``grad(inner_loss_fn)`` (Proposition 3.1).
+
+    The cotangent products are evaluated as the gradient of the directional
+    derivative ``⟨∂L/∂θ, ct⟩``: reverse mode over a forward-mode product
+    (``VJP(e, JVP(L, v))`` in §2.2's taxonomy).  By Schwarz's theorem this
+    equals the same HVP/MVP as :func:`get_fwdrev_grad_fn`.
+    """
+
+    @jax.custom_vjp
+    def revfwd_grad_fn(params, *inputs):
+        return jax.grad(inner_loss_fn)(params, *inputs)
+
+    def forward_pass(params, *inputs):
+        return revfwd_grad_fn(params, *inputs), (params, inputs)
+
+    def backward_pass(residuals, ct):
+        params, inputs = residuals
+        diff_pos = _diff_input_positions(inputs)
+
+        def directional(p, *ins):
+            # d/dε L(p + ε·ct, *ins) — a scalar, cheap in forward mode.
+            return jax.jvp(
+                lambda pp: inner_loss_fn(pp, *ins), (p,), (ct,)
+            )[1]
+
+        cts = jax.grad(
+            directional, argnums=(0,) + tuple(p + 1 for p in diff_pos)
+        )(params, *inputs)
+        return (cts[0],) + _scatter_cotangents(inputs, diff_pos, cts[1:])
+
+    revfwd_grad_fn.defvjp(forward_pass, backward_pass)
+    return revfwd_grad_fn
+
+
+def get_revrev_grad_fn(inner_loss_fn: Callable[..., jax.Array]):
+    """Explicit reverse-over-reverse ``grad(inner_loss_fn)``.
+
+    Numerically identical to what default autodiff produces for Algorithm 1;
+    exists so benchmarks can isolate the *reparameterisation* (Eq. 4) from
+    the *mode switch* (Eqs. 7–8) — with this, the program structure matches
+    Algorithm 2 while the second-order products stay reverse-over-reverse.
+    """
+
+    @jax.custom_vjp
+    def revrev_grad_fn(params, *inputs):
+        return jax.grad(inner_loss_fn)(params, *inputs)
+
+    def forward_pass(params, *inputs):
+        return revrev_grad_fn(params, *inputs), (params, inputs)
+
+    def backward_pass(residuals, ct):
+        params, inputs = residuals
+        diff_pos = _diff_input_positions(inputs)
+        diff_inputs = [inputs[p] for p in diff_pos]
+
+        def grad_of_diff(p, *dins):
+            ins = list(inputs)
+            for pos, a in zip(diff_pos, dins):
+                ins[pos] = a
+            return jax.grad(inner_loss_fn)(p, *ins)
+
+        _, vjp_fn = jax.vjp(grad_of_diff, params, *diff_inputs)
+        cts = vjp_fn(ct)
+        return (cts[0],) + _scatter_cotangents(inputs, diff_pos, cts[1:])
+
+    revrev_grad_fn.defvjp(forward_pass, backward_pass)
+    return revrev_grad_fn
+
+
+def get_grad_fn(inner_loss_fn: Callable[..., jax.Array], mode: str):
+    """Gradient transform for ``mode`` ∈ :data:`MODES`.
+
+    ``'default'`` is plain ``jax.grad`` — Algorithm 1's un-reparameterised
+    baseline.  The other three are the reparameterised (Eq. 4) variants with
+    the second-order products in the named mode.
+    """
+    if mode == "default":
+        return jax.grad(inner_loss_fn)
+    if mode == "fwdrev":
+        return get_fwdrev_grad_fn(inner_loss_fn)
+    if mode == "revfwd":
+        return get_revfwd_grad_fn(inner_loss_fn)
+    if mode == "revrev":
+        return get_revrev_grad_fn(inner_loss_fn)
+    raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+
+
+# ---------------------------------------------------------------------------
+# Saving inner gradients (paper §4 optimisation 2, Listing 3)
+# ---------------------------------------------------------------------------
+
+INNER_GRADS_NAME = "inner_grads"
+
+
+def tag_inner_grads(d_params: PyTree) -> PyTree:
+    """Mark ``∇L_i`` as checkpointable (Listing 3's ``checkpoint_name``)."""
+    from jax import ad_checkpoint
+
+    return jax.tree.map(
+        lambda x: ad_checkpoint.checkpoint_name(x, INNER_GRADS_NAME),
+        d_params,
+    )
+
+
+def checkpoint_inner_step(step_fn, save_inner_grads: bool):
+    """Per-inner-step gradient checkpointing (paper §4).
+
+    With ``save_inner_grads`` the rematerialisation policy additionally
+    saves the tagged ``∇L_i``, so the outer backward pass re-runs only the
+    (cheap) optimiser arithmetic, never the inner backward pass.
+    """
+    if save_inner_grads:
+        policy = jax.checkpoint_policies.save_only_these_names(
+            INNER_GRADS_NAME
+        )
+        return jax.checkpoint(step_fn, policy=policy)
+    return jax.checkpoint(step_fn)
+
+
+# ---------------------------------------------------------------------------
+# Full Truncated-BPTT meta-gradient programs (Algorithms 1 & 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MetaFlags:
+    """The ablation grid of §4 / Tables 2–3."""
+
+    mode: str = "fwdrev"          # 'default' == Algorithm 1
+    save_inner_grads: bool = True  # §4 optimisation 2
+    per_step_checkpoint: bool = True  # inner-loop gradient checkpointing
+    inner_steps: int = 2           # T
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode {self.mode!r} not in {MODES}")
+        if self.save_inner_grads and not self.per_step_checkpoint:
+            raise ValueError(
+                "save_inner_grads requires per_step_checkpoint "
+                "(the policy lives on the per-step checkpoint)"
+            )
+
+
+def build_meta_loss(task, flags: MetaFlags):
+    """The ``VALLOSS`` function of Algorithms 1/2 for ``task``.
+
+    Args:
+      task: a :class:`compile.tasks.BiLevelTask`.
+      flags: ablation switches (mode / checkpointing).
+
+    Returns:
+      ``meta_loss(eta, theta0, opt_state, xs, val_batch) -> scalar`` where
+      ``xs`` is a length-``T`` stack of inner batches (leading axis scanned).
+    """
+
+    # The transform is created once, outside any trace: token batches are
+    # explicit arguments (with ``None`` cotangents), never closure captures.
+    grad_fn = get_grad_fn(task.inner_loss, flags.mode)
+
+    def meta_loss(eta, theta0, opt_state, xs, val_batch):
+        theta = task.theta_init(eta, theta0)
+
+        def inner_step(carry, batch):
+            theta, opt_state = carry
+            # 'default' == Algorithm 1 (Φ computes grad(L) inline, plain
+            # jax.grad); otherwise Algorithm 2's Υ takes ∇L from the
+            # reparameterised mixed-mode transform.
+            d_theta = grad_fn(theta, eta, batch)
+            if flags.save_inner_grads:
+                d_theta = tag_inner_grads(d_theta)
+            theta, opt_state = task.apply_update(
+                d_theta, theta, opt_state, eta
+            )
+            return (theta, opt_state), ()
+
+        step = inner_step
+        if flags.per_step_checkpoint:
+            step = checkpoint_inner_step(step, flags.save_inner_grads)
+
+        (theta_t, _), _ = jax.lax.scan(step, (theta, opt_state), xs)
+        return task.val_loss(theta_t, eta, val_batch)
+
+    return meta_loss
+
+
+def build_meta_grad(task, flags: MetaFlags, with_aux: bool = True):
+    """``∂V/∂η`` for ``task`` under ``flags``.
+
+    Returns ``f(eta, theta0, opt_state, xs, val_batch) -> (dV/dη, V)`` when
+    ``with_aux`` (the validation loss rides along for logging), else just
+    the gradient.
+    """
+    meta_loss = build_meta_loss(task, flags)
+    if with_aux:
+
+        def loss_and_val(eta, *args):
+            v = meta_loss(eta, *args)
+            return v, v
+
+        return jax.grad(loss_and_val, has_aux=True)
+    return jax.grad(meta_loss)
+
+
+def build_meta_train_step(
+    task,
+    flags: MetaFlags,
+    meta_optimizer,
+):
+    """One full outer update: meta-gradient + meta-optimiser application.
+
+    This is the function the Rust E2E driver executes in a loop: it is
+    lowered once to a single HLO artifact so the entire outer step — inner
+    unroll, mixed-mode backward, Adam on ``η`` — runs on-device with Python
+    nowhere near the hot path.
+
+    Returns:
+      ``step(eta, meta_opt_state, theta0, opt_state, xs, val_batch)
+        -> (eta', meta_opt_state', val_loss)``.
+    """
+    meta_grad = build_meta_grad(task, flags, with_aux=True)
+
+    def train_step(eta, meta_opt_state, theta0, opt_state, xs, val_batch):
+        g, val = meta_grad(eta, theta0, opt_state, xs, val_batch)
+        upd, meta_opt_state = meta_optimizer.update(g, meta_opt_state, eta)
+        eta = jax.tree.map(lambda e, u: e + u, eta, upd)
+        return eta, meta_opt_state, val
+
+    return train_step

@@ -1,0 +1,248 @@
+"""Layer-2 model: Chinchilla-family transformer in pure JAX pytrees.
+
+Mirrors the paper's §5 inner model: pre-LN residual blocks, multi-head
+attention with RoPE (Su et al., 2024), GELU MLP, tied embeddings, and the
+next-token-prediction loss.  Parameters are nested dicts so the inner
+optimiser, the MixFlow-MG transforms, and the per-parameter meta-tasks all
+operate with ``jax.tree`` utilities.
+
+Block rematerialisation (paper §4 optimisation 1) is a config flag: each
+residual block is wrapped in ``jax.checkpoint``, which under MixFlow-MG's
+forward-over-reverse outer mode costs no extra outer-level checkpoints —
+that interaction is the source of the Fig. 3 block-#3 reduction.
+
+The attention / layernorm cores call the L1 Pallas kernels (``use_pallas``)
+or the pure-jnp references; both lower into the same AOT HLO artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels import wrappers as kw
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """Chinchilla-style architecture hyperparameters (paper Tables 5/6)."""
+
+    vocab_size: int = 256
+    d_model: int = 128
+    ffw_size: int = 512
+    kv_size: int = 32          # per-head dim, Chinchilla's `kv_size`
+    n_heads: int = 4
+    n_layers: int = 2
+    seq_len: int = 64
+    block_remat: bool = True   # paper §4 optimisation 1
+    use_pallas: bool = True    # L1 kernels vs pure-jnp reference cores
+    dtype: Any = jnp.float32
+
+    @property
+    def attn_dim(self) -> int:
+        return self.n_heads * self.kv_size
+
+    def param_count(self) -> int:
+        """Exact parameter count of :func:`init_params` for this config."""
+        c = self
+        per_block = (
+            4 * c.d_model                                  # 2x LN gamma/beta
+            + 3 * c.d_model * c.attn_dim                   # wq wk wv
+            + c.attn_dim * c.d_model                       # wo
+            + c.d_model * c.ffw_size + c.ffw_size          # w1 b1
+            + c.ffw_size * c.d_model + c.d_model           # w2 b2
+        )
+        return (
+            c.vocab_size * c.d_model                       # embed (tied)
+            + c.n_layers * per_block
+            + 2 * c.d_model                                # final LN
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_params(rng: jax.Array, cfg: TransformerConfig) -> Params:
+    """He/Glorot-style init matching the paper's Chinchilla recipe."""
+    keys = jax.random.split(rng, cfg.n_layers + 1)
+
+    def dense(key, fan_in, shape):
+        return (
+            jax.random.normal(key, shape, cfg.dtype) / math.sqrt(fan_in)
+        )
+
+    def block(key) -> Params:
+        ks = jax.random.split(key, 6)
+        d, a, f = cfg.d_model, cfg.attn_dim, cfg.ffw_size
+        return {
+            "ln1_g": jnp.ones((d,), cfg.dtype),
+            "ln1_b": jnp.zeros((d,), cfg.dtype),
+            "wq": dense(ks[0], d, (d, a)),
+            "wk": dense(ks[1], d, (d, a)),
+            "wv": dense(ks[2], d, (d, a)),
+            "wo": dense(ks[3], a, (a, d)),
+            "ln2_g": jnp.ones((d,), cfg.dtype),
+            "ln2_b": jnp.zeros((d,), cfg.dtype),
+            "w1": dense(ks[4], d, (d, f)),
+            "b1": jnp.zeros((f,), cfg.dtype),
+            "w2": dense(ks[5], f, (f, d)),
+            "b2": jnp.zeros((d,), cfg.dtype),
+        }
+
+    return {
+        "embed": jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), cfg.dtype
+        )
+        * 0.02,
+        "blocks": [block(keys[i + 1]) for i in range(cfg.n_layers)],
+        "lnf_g": jnp.ones((cfg.d_model,), cfg.dtype),
+        "lnf_b": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _rope_tables(seq_len: int, dim: int):
+    """RoPE cos/sin tables ``[S, dim/2]`` (Su et al., 2024).
+
+    Computed in host numpy (and cached) so the tables enter every trace as
+    fresh constants — caching traced ``jnp`` arrays would leak tracers under
+    ``jax.checkpoint``.
+    """
+    half = dim // 2
+    freqs = 1.0 / (10000.0 ** (np.arange(half, dtype=np.float32) / half))
+    pos = np.arange(seq_len, dtype=np.float32)
+    angles = pos[:, None] * freqs[None, :]
+    return np.cos(angles), np.sin(angles)
+
+
+def apply_rope(x: jax.Array) -> jax.Array:
+    """Rotary position embedding over ``[B, H, S, D]`` (D even)."""
+    *_, s, d = x.shape
+    cos_np, sin_np = _rope_tables(s, d)
+    cos, sin = jnp.asarray(cos_np), jnp.asarray(sin_np)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    ).astype(x.dtype)
+
+
+def _layernorm(x, g, b, cfg: TransformerConfig):
+    return (kw.layernorm if cfg.use_pallas else kref.layernorm)(x, g, b)
+
+
+def _attention_core(q, k, v, cfg: TransformerConfig):
+    return (kw.causal_attention if cfg.use_pallas else kref.causal_attention)(
+        q, k, v
+    )
+
+
+def _block_fn(p: Params, h: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """One pre-LN residual block: ``h + attn(LN(h)) + mlp(LN(·))``."""
+    b, s, d = h.shape
+    nh, hd = cfg.n_heads, cfg.kv_size
+
+    x = _layernorm(h, p["ln1_g"], p["ln1_b"], cfg)
+    q = (x @ p["wq"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+    q, k = apply_rope(q), apply_rope(k)
+    attn = _attention_core(q, k, v, cfg)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    h = h + attn @ p["wo"]
+
+    x = _layernorm(h, p["ln2_g"], p["ln2_b"], cfg)
+    y = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    return h + y @ p["w2"] + p["b2"]
+
+
+def forward(params: Params, tokens: jax.Array, cfg: TransformerConfig) -> jax.Array:
+    """Logits ``[B, S, V]`` for int32 ``tokens [B, S]``."""
+    h = jnp.take(params["embed"], tokens, axis=0)
+    block = _block_fn
+    if cfg.block_remat:
+        block = jax.checkpoint(
+            functools.partial(_block_fn, cfg=cfg), static_argnums=()
+        )
+        for p in params["blocks"]:
+            h = block(p, h)
+    else:
+        for p in params["blocks"]:
+            h = _block_fn(p, h, cfg)
+    h = _layernorm(h, params["lnf_g"], params["lnf_b"], cfg)
+    return h @ params["embed"].T  # tied unembedding
+
+
+def ntp_loss(
+    params: Params,
+    tokens: jax.Array,
+    cfg: TransformerConfig,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """Next-token-prediction loss over ``tokens [B, S+1]``.
+
+    ``weights`` (``[B]``, optional) are the per-example factors the
+    loss-weighting meta-task produces (paper §5.2, Hu et al. 2023).
+    """
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inputs, cfg).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    per_example = -jnp.mean(ll, axis=-1)  # [B]
+    if weights is not None:
+        per_example = per_example * weights
+    return jnp.mean(per_example)
+
+
+# ---------------------------------------------------------------------------
+# The scaled Chinchilla ladder (paper Table 6, proportions preserved)
+# ---------------------------------------------------------------------------
+
+#: name -> (d_model, ffw_size, kv_size, n_heads, n_layers); all dims are the
+#: paper's Table 6 divided by 8 (d_model/ffw/kv) with layer counts kept,
+#: which preserves Eq. 12's L-dependence while fitting CPU budgets.
+CHINCHILLA_LADDER = {
+    "44M": (64, 256, 8, 8, 8),
+    "90M": (80, 320, 8, 10, 13),
+    "140M": (96, 384, 8, 12, 15),
+    "196M": (112, 448, 8, 14, 16),
+    "278M": (128, 512, 8, 16, 18),
+    "489M": (160, 640, 16, 10, 21),
+    "587M": (176, 704, 16, 11, 21),
+    "1018M": (224, 896, 16, 14, 23),
+}
+
+
+def ladder_config(
+    name: str,
+    seq_len: int = 64,
+    vocab_size: int = 256,
+    **overrides,
+) -> TransformerConfig:
+    """Config for a scaled Table-6 ladder rung (see DESIGN.md §2)."""
+    d, f, kv, h, l = CHINCHILLA_LADDER[name]
+    return TransformerConfig(
+        vocab_size=vocab_size,
+        d_model=d,
+        ffw_size=f,
+        kv_size=kv,
+        n_heads=h,
+        n_layers=l,
+        seq_len=seq_len,
+        **overrides,
+    )

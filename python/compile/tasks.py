@@ -1,0 +1,229 @@
+"""The three bilevel-optimisation tasks of the paper's evaluation (§5.2).
+
+Each task packages the pieces Eq. (3) needs:
+
+* ``theta_init(eta, theta0)`` — how meta-parameters seed the inner model
+  (identity for all but MAML, where ``θ₀ = η``);
+* ``inner_loss(theta, eta, batch)`` — the train loss ``L(θ, η, x)``;
+* ``apply_update(grads, theta, opt_state, eta)`` — the update ``Υ`` minus
+  the gradient computation (paper Eq. 4's reparameterisation boundary);
+* ``val_loss(theta, eta, val_batch)`` — the outer objective ``V``.
+
+Tasks (Table 1):
+  * ``learning_lr``   — per-parameter learning rates (Bengio 2000;
+    Maclaurin et al. 2015): ``η`` is a pytree like ``θ`` of log-scale
+    multipliers on the Adam update.
+  * ``maml``          — learned initialisation (Finn et al. 2017).
+  * ``loss_weighting``— per-datapoint loss weights ``α(η, x)`` (Hu et al.
+    2023): ``η`` parameterises a weighting network over the batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_lib
+from . import optim as optim_lib
+
+PyTree = Any
+
+TASK_NAMES = ("learning_lr", "maml", "loss_weighting")
+
+
+@dataclasses.dataclass(frozen=True)
+class BiLevelTask:
+    """A bilevel problem instance (see module docstring)."""
+
+    name: str
+    cfg: model_lib.TransformerConfig
+    theta_init: Callable[[PyTree, PyTree], PyTree]
+    inner_loss: Callable[[PyTree, PyTree, jax.Array], jax.Array]
+    apply_update: Callable[
+        [PyTree, PyTree, Any, PyTree], Tuple[PyTree, Any]
+    ]
+    val_loss: Callable[[PyTree, PyTree, jax.Array], jax.Array]
+    init_eta: Callable[[jax.Array], PyTree]
+    init_theta: Callable[[jax.Array], PyTree]
+    init_opt_state: Callable[[PyTree], Any]
+
+
+# ---------------------------------------------------------------------------
+# Task builders
+# ---------------------------------------------------------------------------
+
+
+def _ntp(cfg):
+    return lambda theta, batch, weights=None: model_lib.ntp_loss(
+        theta, batch, cfg, weights
+    )
+
+
+def make_learning_lr(
+    cfg: model_lib.TransformerConfig,
+    inner_optimizer: optim_lib.Optimizer | None = None,
+) -> BiLevelTask:
+    """Per-parameter learning rates: ``θ' = θ + exp(η) ⊙ adam_update``.
+
+    ``η`` has the same structure as ``θ`` and is initialised to 0 (unit
+    multiplier); the inner loss itself is η-independent, so the meta-signal
+    flows purely through the update rule — the ``∂Υ/∂η`` term of Eq. (6).
+    """
+    opt = inner_optimizer or optim_lib.adam(1e-3)
+    ntp = _ntp(cfg)
+
+    def inner_loss(theta, eta, batch):
+        del eta
+        return ntp(theta, batch)
+
+    def apply_update(grads, theta, opt_state, eta):
+        upd, opt_state = opt.update(grads, opt_state, theta)
+        theta = jax.tree.map(
+            lambda t, u, e: t + jnp.exp(e) * u, theta, upd, eta
+        )
+        return theta, opt_state
+
+    def val_loss(theta, eta, val_batch):
+        del eta
+        return ntp(theta, val_batch)
+
+    def init_eta(rng):
+        del rng
+        params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+        return jax.tree.map(jnp.zeros_like, params)
+
+    init_theta = lambda rng: model_lib.init_params(rng, cfg)
+
+    return BiLevelTask(
+        name="learning_lr",
+        cfg=cfg,
+        theta_init=lambda eta, theta0: theta0,
+        inner_loss=inner_loss,
+        apply_update=apply_update,
+        val_loss=val_loss,
+        init_eta=init_eta,
+        init_theta=init_theta,
+        init_opt_state=opt.init,
+    )
+
+
+def make_maml(
+    cfg: model_lib.TransformerConfig,
+    inner_optimizer: optim_lib.Optimizer | None = None,
+) -> BiLevelTask:
+    """MAML (Finn et al. 2017): ``η`` is the inner initialisation ``θ₀``."""
+    opt = inner_optimizer or optim_lib.adam(1e-3)
+    ntp = _ntp(cfg)
+
+    def inner_loss(theta, eta, batch):
+        del eta
+        return ntp(theta, batch)
+
+    def apply_update(grads, theta, opt_state, eta):
+        del eta
+        upd, opt_state = opt.update(grads, opt_state, theta)
+        return jax.tree.map(lambda t, u: t + u, theta, upd), opt_state
+
+    def val_loss(theta, eta, val_batch):
+        del eta
+        return ntp(theta, val_batch)
+
+    init_eta = lambda rng: model_lib.init_params(rng, cfg)
+
+    def init_theta(rng):
+        # θ₀ is replaced by η at meta-step entry; keep a placeholder with
+        # the right structure so all tasks share one calling convention.
+        return model_lib.init_params(rng, cfg)
+
+    return BiLevelTask(
+        name="maml",
+        cfg=cfg,
+        theta_init=lambda eta, theta0: eta,
+        inner_loss=inner_loss,
+        apply_update=apply_update,
+        val_loss=val_loss,
+        init_eta=init_eta,
+        init_theta=init_theta,
+        init_opt_state=opt.init,
+    )
+
+
+def make_loss_weighting(
+    cfg: model_lib.TransformerConfig,
+    inner_optimizer: optim_lib.Optimizer | None = None,
+    weight_hidden: int = 32,
+) -> BiLevelTask:
+    """Meta-learned per-datapoint loss weights ``α(η, x)`` (Hu et al. 2023).
+
+    ``η`` parameterises a small weighting network: embed the example's
+    tokens with a learned table, mean-pool, 2-layer MLP → softplus weight,
+    normalised to mean 1 across the batch.  ``L = α(η, x) · NTP(θ, x)``
+    makes the mixed term ``∂²L/∂η∂θ`` of Eq. (8) dense and non-trivial.
+    """
+    opt = inner_optimizer or optim_lib.adam(1e-3)
+    ntp = _ntp(cfg)
+
+    def alpha(eta, batch):
+        # batch: [B, S+1] int tokens.
+        h = jnp.take(eta["embed"], batch[:, :-1], axis=0)  # [B, S, e]
+        h = jnp.mean(h, axis=1)  # [B, e]
+        h = jnp.tanh(h @ eta["w1"] + eta["b1"])
+        w = jax.nn.softplus(h @ eta["w2"] + eta["b2"])[:, 0]  # [B]
+        return w / (jnp.mean(w) + 1e-8)
+
+    def inner_loss(theta, eta, batch):
+        return ntp(theta, batch, weights=alpha(eta, batch))
+
+    def apply_update(grads, theta, opt_state, eta):
+        del eta
+        upd, opt_state = opt.update(grads, opt_state, theta)
+        return jax.tree.map(lambda t, u: t + u, theta, upd), opt_state
+
+    def val_loss(theta, eta, val_batch):
+        del eta
+        return ntp(theta, val_batch)  # unweighted validation NTP
+
+    def init_eta(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        e = weight_hidden
+        return {
+            "embed": jax.random.normal(k1, (cfg.vocab_size, e)) * 0.02,
+            "w1": jax.random.normal(k2, (e, e)) / math.sqrt(e),
+            "b1": jnp.zeros((e,)),
+            "w2": jax.random.normal(k3, (e, 1)) / math.sqrt(e),
+            "b2": jnp.zeros((1,)),
+        }
+
+    init_theta = lambda rng: model_lib.init_params(rng, cfg)
+
+    return BiLevelTask(
+        name="loss_weighting",
+        cfg=cfg,
+        theta_init=lambda eta, theta0: theta0,
+        inner_loss=inner_loss,
+        apply_update=apply_update,
+        val_loss=val_loss,
+        init_eta=init_eta,
+        init_theta=init_theta,
+        init_opt_state=opt.init,
+    )
+
+
+BUILDERS = {
+    "learning_lr": make_learning_lr,
+    "maml": make_maml,
+    "loss_weighting": make_loss_weighting,
+}
+
+
+def by_name(
+    name: str,
+    cfg: model_lib.TransformerConfig,
+    inner_optimizer: optim_lib.Optimizer | None = None,
+) -> BiLevelTask:
+    """Build a Table-1 task by name."""
+    return BUILDERS[name](cfg, inner_optimizer)

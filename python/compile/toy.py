@@ -1,0 +1,101 @@
+"""The paper's §3.2 motivating example (Listing 4, Eq. 9).
+
+A deliberately simple BLO problem that isolates the activation-storage
+asymmetry between reverse-over-reverse and mixed-mode differentiation:
+``η = θ₀`` (MAML-like), L2 inner loss, stateless SGD inner update, and an
+inner model that is an ``M``-step elementwise recursive map — so the
+computational graph (and therefore the default implementation's stored
+activations) grows linearly in ``M`` while the mixed-mode version streams.
+
+``use_loop_fusion=False`` reproduces the paper's "disable loop fusions"
+setting by unrolling the map in Python (each of the ``M`` steps is a
+distinct HLO region the compiler cannot collapse into a loop); ``True``
+uses ``lax.scan``.  ``use_pallas`` swaps the map body for the L1 kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mixflow
+from .kernels import ref as kref
+from .kernels import wrappers as kw
+
+
+@dataclasses.dataclass(frozen=True)
+class ToyConfig:
+    """Motivating-example hyperparameters (paper used B=1024, D=4096)."""
+
+    batch: int = 64          # B
+    dim: int = 128           # D  (θ ∈ R^{D×D}, x ∈ R^{B×D})
+    num_maps: int = 8        # M — the swept x-axis of Fig. 1
+    inner_updates: int = 2   # T
+    inner_lr: float = 1e-3
+    use_loop_fusion: bool = False
+    use_mixed_mode: bool = True
+    use_pallas: bool = False
+
+
+def apply_model(params: jax.Array, x: jax.Array, cfg: ToyConfig) -> jax.Array:
+    """``y_M`` of Eq. (9): ``y₀ = xθ`` then M recursive map steps."""
+    y = jnp.matmul(x, params)
+    if cfg.use_pallas:
+        return kw.toy_map(cfg.num_maps)(y)
+    if cfg.use_loop_fusion:
+
+        def f(y, i):
+            return i * (2.0 + jnp.sin(y)) ** jnp.cos(y), ()
+
+        y, _ = jax.lax.scan(
+            f, y, jnp.arange(1, cfg.num_maps + 1, dtype=y.dtype)
+        )
+        return y
+    return kref.toy_map(y, cfg.num_maps)
+
+
+def loss(params, x, target, cfg: ToyConfig) -> jax.Array:
+    """Standard L2 loss, independent of η (paper §3.2)."""
+    return jnp.mean((apply_model(params, x, cfg) - target) ** 2)
+
+
+def build_meta_grad(cfg: ToyConfig):
+    """``∂(meta_loss)/∂θ₀`` exactly as in the paper's Listing 4.
+
+    Returns ``f(params, xs, targets, val_x, val_target) -> meta_grad`` with
+    ``xs, targets: [T, B, D]``.
+    """
+    loss_fn = functools.partial(loss, cfg=cfg)
+
+    def meta_loss(params, xs, targets, val_x, val_target):
+        if cfg.use_mixed_mode:
+            grad_fn = mixflow.get_fwdrev_grad_fn(loss_fn)
+        else:
+            grad_fn = jax.grad(loss_fn)
+
+        def inner_step(params, x_and_target):
+            d_params = grad_fn(params, *x_and_target)
+            params = jax.tree.map(
+                lambda p, dp: p - cfg.inner_lr * dp, params, d_params
+            )
+            return params, ()
+
+        params, _ = jax.lax.scan(inner_step, params, (xs, targets))
+        return loss_fn(params, val_x, val_target)
+
+    return jax.grad(meta_loss)
+
+
+def example_args(cfg: ToyConfig, seed: int = 0) -> Tuple[jax.Array, ...]:
+    """Random inputs matching Listing 4's shapes."""
+    rng1, rng2, rng3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = jax.random.normal(rng1, (cfg.dim, cfg.dim)) * 0.1
+    xs, targets = jax.random.normal(
+        rng2, (2, cfg.inner_updates, cfg.batch, cfg.dim)
+    )
+    val_x, val_target = jax.random.normal(rng3, (2, cfg.batch, cfg.dim))
+    return params, xs, targets, val_x, val_target

@@ -1,0 +1,46 @@
+"""Shared fixtures for the build-time test suite."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as model_lib
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg() -> model_lib.TransformerConfig:
+    """A minimal transformer every correctness test can afford."""
+    return model_lib.TransformerConfig(
+        vocab_size=64,
+        d_model=32,
+        ffw_size=64,
+        kv_size=8,
+        n_heads=2,
+        n_layers=2,
+        seq_len=16,
+        use_pallas=False,
+    )
+
+
+@pytest.fixture(scope="session")
+def tiny_batch(tiny_cfg):
+    """(xs [T,B,S+1], val [B,S+1]) token batches for the tiny config."""
+    rng = jax.random.PRNGKey(7)
+    t, b = 2, 2
+    xs = jax.random.randint(
+        rng, (t, b, tiny_cfg.seq_len + 1), 0, tiny_cfg.vocab_size
+    )
+    val = jax.random.randint(
+        jax.random.PRNGKey(8), (b, tiny_cfg.seq_len + 1), 0,
+        tiny_cfg.vocab_size,
+    )
+    return xs, val
+
+
+def tree_allclose(a, b, atol=1e-4, rtol=1e-4) -> float:
+    """Max leafwise abs difference (also asserts matching structure)."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(la, lb))

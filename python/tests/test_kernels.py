@@ -1,0 +1,213 @@
+"""L1 kernels vs pure-jnp oracles, incl. hypothesis shape/dtype sweeps.
+
+DESIGN.md §6: the Pallas kernels must match ``ref.py`` on the primal, the
+JVP, the gradient, and the grad-of-grad paths — MixFlow-MG differentiates
+through them twice in both modes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, layernorm, ref, toy_map, wrappers
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-5, rtol=2e-5
+    )
+
+
+def _assert_close(a, b, dtype=jnp.float32, scale=1.0):
+    t = _tol(dtype)
+    np.testing.assert_allclose(
+        np.asarray(a, np.float32),
+        np.asarray(b, np.float32),
+        atol=t["atol"] * scale,
+        rtol=t["rtol"] * scale,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 3),
+    s=st.sampled_from([4, 8, 16, 32, 48]),
+    d=st.sampled_from([4, 8, 16]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, h, s, d, dtype, seed):
+    q, k, v = jax.random.normal(
+        jax.random.PRNGKey(seed), (3, b, h, s, d), dtype
+    )
+    out = attention.causal_attention(q, k, v)
+    expect = ref.causal_attention(q, k, v)
+    _assert_close(out, expect, dtype)
+
+
+@pytest.mark.parametrize("block_q,block_kv", [(4, 4), (8, 4), (4, 8), (16, 16)])
+def test_attention_block_shapes(block_q, block_kv):
+    """Block-size choices change the schedule, never the numbers."""
+    q, k, v = jax.random.normal(jax.random.PRNGKey(0), (3, 2, 2, 16, 8))
+    base = ref.causal_attention(q, k, v)
+    out = attention.causal_attention(
+        q, k, v, block_q=block_q, block_kv=block_kv
+    )
+    _assert_close(out, base)
+
+
+def test_attention_causality():
+    """Future tokens must not influence the past."""
+    q, k, v = jax.random.normal(jax.random.PRNGKey(1), (3, 1, 1, 16, 8))
+    out1 = attention.causal_attention(q, k, v)
+    k2 = k.at[:, :, 12:, :].set(99.0)
+    v2 = v.at[:, :, 12:, :].set(-99.0)
+    out2 = attention.causal_attention(q, k2, v2)
+    _assert_close(out1[:, :, :12], out2[:, :, :12])
+
+
+def test_attention_grad_and_hvp():
+    q, k, v = jax.random.normal(jax.random.PRNGKey(2), (3, 1, 2, 16, 8))
+    f = lambda q: jnp.sum(jnp.sin(wrappers.causal_attention(q, k, v)))
+    g = lambda q: jnp.sum(jnp.sin(ref.causal_attention(q, k, v)))
+    _assert_close(jax.grad(f)(q), jax.grad(g)(q), scale=10)
+    t = jax.random.normal(jax.random.PRNGKey(3), q.shape)
+    hv_f = jax.jvp(jax.grad(f), (q,), (t,))[1]
+    hv_g = jax.jvp(jax.grad(g), (q,), (t,))[1]
+    _assert_close(hv_f, hv_g, scale=100)
+
+
+def test_attention_grad_of_grad():
+    """Reverse-over-reverse (Algorithm 1's path) also composes."""
+    q, k, v = jax.random.normal(jax.random.PRNGKey(4), (3, 1, 1, 8, 4))
+    f = lambda q: jnp.sum(wrappers.causal_attention(q, k, v) ** 2)
+    g = lambda q: jnp.sum(ref.causal_attention(q, k, v) ** 2)
+    gg_f = jax.grad(lambda q: jnp.sum(jax.grad(f)(q) ** 2))(q)
+    gg_g = jax.grad(lambda q: jnp.sum(jax.grad(g)(q) ** 2))(q)
+    _assert_close(gg_f, gg_g, scale=100)
+
+
+def test_attention_vmem_estimate_positive_and_monotone():
+    small = attention.vmem_bytes_estimate(64, 8)
+    big = attention.vmem_bytes_estimate(512, 64)
+    assert 0 < small < big
+    # Must fit TPU VMEM (16 MiB) for every config we ship (DESIGN.md §7).
+    assert attention.vmem_bytes_estimate(8192, 128) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 4, 8, 12, 16]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(rows, d, dtype, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(keys[0], (rows, d), dtype) * 3.0
+    g = jax.random.normal(keys[1], (d,), dtype)
+    b = jax.random.normal(keys[2], (d,), dtype)
+    _assert_close(
+        layernorm.layernorm(x, g, b), ref.layernorm(x, g, b), dtype
+    )
+
+
+def test_layernorm_3d_and_stats():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16)) * 5 + 3
+    out = layernorm.layernorm(x, jnp.ones(16), jnp.zeros(16))
+    np.testing.assert_allclose(np.mean(out, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(out, -1), 1.0, atol=1e-2)
+
+
+def test_layernorm_second_order():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    g, b = jnp.ones(16), jnp.zeros(16)
+    f = lambda x: jnp.sum(jnp.cos(wrappers.layernorm(x, g, b)))
+    r = lambda x: jnp.sum(jnp.cos(ref.layernorm(x, g, b)))
+    t = jnp.ones_like(x)
+    _assert_close(
+        jax.jvp(jax.grad(f), (x,), (t,))[1],
+        jax.jvp(jax.grad(r), (x,), (t,))[1],
+        scale=10,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Toy map (Eq. 9)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 4, 8]),
+    d=st.sampled_from([4, 16, 32]),
+    m=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_toy_map_matches_ref(rows, d, m, seed):
+    y0 = jax.random.normal(jax.random.PRNGKey(seed), (rows, d)) * 0.3
+    _assert_close(
+        toy_map.toy_map(y0, m), ref.toy_map(y0, m), scale=m * 10
+    )
+
+
+def test_toy_map_hvp_matches_ref():
+    y0 = jax.random.normal(jax.random.PRNGKey(5), (8, 8)) * 0.2
+    k = wrappers.toy_map(3)
+    f = lambda y: jnp.mean(k(y) ** 2)
+    r = lambda y: jnp.mean(ref.toy_map(y, 3) ** 2)
+    t = jnp.ones_like(y0)
+    _assert_close(
+        jax.jvp(jax.grad(f), (y0,), (t,))[1],
+        jax.jvp(jax.grad(r), (y0,), (t,))[1],
+        scale=100,
+    )
+
+
+def test_toy_map_m1_analytic():
+    """M=1: y = 1·(2+sin y₀)^cos(y₀) — check one value by hand."""
+    y0 = jnp.zeros((1, 4))
+    out = toy_map.toy_map(y0, 1)
+    np.testing.assert_allclose(np.asarray(out), 2.0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Wrapper machinery itself
+# ---------------------------------------------------------------------------
+
+
+def test_make_differentiable_jvp_uses_ref():
+    """The tangent must come from the ref fn, the primal from the kernel."""
+    calls = {"kernel": 0, "ref": 0}
+
+    def kernel(x):
+        calls["kernel"] += 1
+        return x * 2.0
+
+    def reference(x):
+        calls["ref"] += 1
+        return x * 2.0
+
+    f = wrappers.make_differentiable(kernel, reference)
+    x = jnp.ones(3)
+    out, tan = jax.jvp(f, (x,), (jnp.ones(3),))
+    np.testing.assert_allclose(np.asarray(out), 2.0)
+    np.testing.assert_allclose(np.asarray(tan), 2.0)
+    assert calls["kernel"] >= 1 and calls["ref"] >= 1

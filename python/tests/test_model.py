@@ -1,0 +1,241 @@
+"""L2 model/optimiser/task tests: shapes, invariances, gradients."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as model_lib, optim, tasks
+from .conftest import tree_allclose
+
+
+# ---------------------------------------------------------------------------
+# Transformer
+# ---------------------------------------------------------------------------
+
+
+def test_param_count_matches_init(tiny_cfg):
+    params = model_lib.init_params(jax.random.PRNGKey(0), tiny_cfg)
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    assert total == tiny_cfg.param_count()
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    s=st.sampled_from([4, 8, 16]),
+    layers=st.integers(1, 3),
+)
+def test_forward_shapes(b, s, layers):
+    cfg = model_lib.TransformerConfig(
+        vocab_size=32, d_model=16, ffw_size=32, kv_size=4, n_heads=2,
+        n_layers=layers, seq_len=s, use_pallas=False,
+    )
+    params = model_lib.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((b, s), jnp.int32)
+    logits = model_lib.forward(params, toks, cfg)
+    assert logits.shape == (b, s, cfg.vocab_size)
+
+
+def test_forward_causality(tiny_cfg):
+    """Changing future tokens must not change past logits."""
+    params = model_lib.init_params(jax.random.PRNGKey(0), tiny_cfg)
+    s = tiny_cfg.seq_len
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, s), 0, 64)
+    toks2 = toks.at[0, s - 1].set((toks[0, s - 1] + 1) % 64)
+    l1 = model_lib.forward(params, toks, tiny_cfg)
+    l2 = model_lib.forward(params, toks2, tiny_cfg)
+    np.testing.assert_allclose(l1[:, : s - 1], l2[:, : s - 1], atol=1e-5)
+
+
+def test_block_remat_same_loss_and_grad(tiny_cfg, tiny_batch):
+    xs, _ = tiny_batch
+    batch = xs[0]
+    cfg_no = dataclasses.replace(tiny_cfg, block_remat=False)
+    params = model_lib.init_params(jax.random.PRNGKey(0), tiny_cfg)
+    l_remat, g_remat = jax.value_and_grad(model_lib.ntp_loss)(
+        params, batch, tiny_cfg
+    )
+    l_no, g_no = jax.value_and_grad(model_lib.ntp_loss)(params, batch, cfg_no)
+    np.testing.assert_allclose(float(l_remat), float(l_no), rtol=1e-5)
+    assert tree_allclose(g_remat, g_no) < 1e-4
+
+
+def test_pallas_and_ref_model_agree(tiny_batch):
+    """The whole transformer with L1 kernels == with jnp reference cores."""
+    xs, _ = tiny_batch
+    batch = xs[0]
+    base = model_lib.TransformerConfig(
+        vocab_size=64, d_model=32, ffw_size=64, kv_size=8, n_heads=2,
+        n_layers=2, seq_len=16,
+    )
+    params = model_lib.init_params(jax.random.PRNGKey(0), base)
+    cfg_p = dataclasses.replace(base, use_pallas=True)
+    cfg_r = dataclasses.replace(base, use_pallas=False)
+    lp = model_lib.ntp_loss(params, batch, cfg_p)
+    lr = model_lib.ntp_loss(params, batch, cfg_r)
+    np.testing.assert_allclose(float(lp), float(lr), rtol=1e-4)
+    gp = jax.grad(model_lib.ntp_loss)(params, batch, cfg_p)
+    gr = jax.grad(model_lib.ntp_loss)(params, batch, cfg_r)
+    assert tree_allclose(gp, gr) < 1e-3
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 2, 8, 16))
+    y = model_lib.apply_rope(x)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-4,
+    )
+
+
+def test_rope_position_zero_identity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 4, 8))
+    y = model_lib.apply_rope(x)
+    np.testing.assert_allclose(y[..., 0, :], x[..., 0, :], atol=1e-6)
+
+
+def test_ntp_loss_weighting(tiny_cfg, tiny_batch):
+    xs, _ = tiny_batch
+    batch = xs[0]
+    params = model_lib.init_params(jax.random.PRNGKey(0), tiny_cfg)
+    ones = jnp.ones(batch.shape[0])
+    l1 = model_lib.ntp_loss(params, batch, tiny_cfg)
+    l2 = model_lib.ntp_loss(params, batch, tiny_cfg, weights=ones)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    l3 = model_lib.ntp_loss(params, batch, tiny_cfg, weights=2 * ones)
+    np.testing.assert_allclose(float(l3), 2 * float(l1), rtol=1e-5)
+
+
+def test_ladder_configs_well_formed():
+    for name in model_lib.CHINCHILLA_LADDER:
+        cfg = model_lib.ladder_config(name)
+        assert cfg.d_model % 2 == 0
+        assert cfg.attn_dim == cfg.n_heads * cfg.kv_size
+        assert cfg.param_count() > 0
+
+
+def test_ladder_param_counts_monotone():
+    counts = [
+        model_lib.ladder_config(n).param_count()
+        for n in ("44M", "90M", "140M", "196M", "278M", "489M")
+    ]
+    assert counts == sorted(counts)
+
+
+# ---------------------------------------------------------------------------
+# Optimisers
+# ---------------------------------------------------------------------------
+
+
+def test_sgd_matches_formula():
+    opt = optim.sgd(0.1)
+    p = {"w": jnp.ones(3)}
+    g = {"w": jnp.full(3, 2.0)}
+    upd, _ = opt.update(g, opt.init(p), p)
+    np.testing.assert_allclose(upd["w"], -0.2, rtol=1e-6)
+
+
+def test_momentum_accumulates():
+    opt = optim.momentum(1.0, beta=0.5)
+    p = {"w": jnp.zeros(1)}
+    s = opt.init(p)
+    g = {"w": jnp.ones(1)}
+    u1, s = opt.update(g, s, p)
+    u2, s = opt.update(g, s, p)
+    np.testing.assert_allclose(u1["w"], -1.0)
+    np.testing.assert_allclose(u2["w"], -1.5)
+
+
+def test_adam_first_step_is_lr_sized():
+    opt = optim.adam(1e-3)
+    p = {"w": jnp.zeros(4)}
+    s = opt.init(p)
+    g = {"w": jnp.array([1.0, -1.0, 10.0, -10.0])}
+    upd, s = opt.update(g, s, p)
+    # Bias-corrected Adam's first step is ±lr regardless of grad scale.
+    np.testing.assert_allclose(
+        np.abs(np.asarray(upd["w"])), 1e-3, rtol=1e-4
+    )
+    assert float(s["t"]) == 1.0
+
+
+def test_adam_update_is_differentiable():
+    opt = optim.adam(1e-2)
+
+    def f(g):
+        upd, _ = opt.update({"w": g}, opt.init({"w": g}), {"w": g})
+        return jnp.sum(upd["w"] ** 2)
+
+    grad = jax.grad(f)(jnp.array([0.5, -0.5]))
+    assert np.all(np.isfinite(np.asarray(grad)))
+
+
+def test_optim_by_name():
+    for name in optim.BUILDERS:
+        assert optim.by_name(name, 1e-3).name == name
+
+
+# ---------------------------------------------------------------------------
+# Tasks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("task_name", tasks.TASK_NAMES)
+def test_task_roundtrip(task_name, tiny_cfg, tiny_batch):
+    xs, val = tiny_batch
+    task = tasks.by_name(task_name, tiny_cfg)
+    eta = task.init_eta(jax.random.PRNGKey(0))
+    theta0 = task.init_theta(jax.random.PRNGKey(1))
+    opt0 = task.init_opt_state(theta0)
+    theta = task.theta_init(eta, theta0)
+    loss = task.inner_loss(theta, eta, xs[0])
+    assert np.isfinite(float(loss))
+    g = jax.grad(task.inner_loss)(theta, eta, xs[0])
+    theta2, _ = task.apply_update(g, theta, opt0, eta)
+    assert jax.tree.structure(theta2) == jax.tree.structure(theta)
+    v = task.val_loss(theta2, eta, val)
+    assert np.isfinite(float(v))
+
+
+def test_maml_theta_init_is_eta(tiny_cfg):
+    task = tasks.by_name("maml", tiny_cfg)
+    eta = task.init_eta(jax.random.PRNGKey(0))
+    theta0 = task.init_theta(jax.random.PRNGKey(1))
+    assert tree_allclose(task.theta_init(eta, theta0), eta) == 0.0
+
+
+def test_learning_lr_zero_eta_is_plain_adam(tiny_cfg, tiny_batch):
+    """exp(0)=1 ⇒ the learning_lr task reduces to the plain inner opt."""
+    xs, _ = tiny_batch
+    task = tasks.by_name("learning_lr", tiny_cfg)
+    maml = tasks.by_name("maml", tiny_cfg)
+    theta = task.init_theta(jax.random.PRNGKey(1))
+    opt0 = task.init_opt_state(theta)
+    eta = task.init_eta(jax.random.PRNGKey(0))  # zeros
+    g = jax.grad(task.inner_loss)(theta, eta, xs[0])
+    t1, _ = task.apply_update(g, theta, opt0, eta)
+    t2, _ = maml.apply_update(g, theta, opt0, None)
+    assert tree_allclose(t1, t2) < 1e-6
+
+
+def test_loss_weighting_alpha_normalised(tiny_cfg, tiny_batch):
+    xs, _ = tiny_batch
+    task = tasks.by_name("loss_weighting", tiny_cfg)
+    eta = task.init_eta(jax.random.PRNGKey(0))
+    theta = task.init_theta(jax.random.PRNGKey(1))
+    # inner_loss with weights=1 (fresh eta ≈ uniform) ≈ plain NTP.
+    l_w = task.inner_loss(theta, eta, xs[0])
+    l_plain = model_lib.ntp_loss(theta, xs[0], tiny_cfg)
+    assert abs(float(l_w) - float(l_plain)) / float(l_plain) < 0.5
+
+
+def test_task_unknown_name_raises(tiny_cfg):
+    with pytest.raises(KeyError):
+        tasks.by_name("nope", tiny_cfg)

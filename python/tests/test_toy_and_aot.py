@@ -1,0 +1,164 @@
+"""Motivating-example (§3.2) equivalence + AOT pipeline round-trip."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, toy
+
+
+# ---------------------------------------------------------------------------
+# Toy example
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fusion", [False, True])
+@pytest.mark.parametrize("pallas", [False, True])
+def test_toy_mixed_equals_default(fusion, pallas):
+    if fusion and pallas:
+        pytest.skip("pallas path ignores the fusion flag")
+    base = toy.ToyConfig(
+        batch=4, dim=8, num_maps=3, use_loop_fusion=fusion,
+        use_pallas=pallas, use_mixed_mode=False,
+    )
+    mixed = toy.ToyConfig(
+        batch=4, dim=8, num_maps=3, use_loop_fusion=fusion,
+        use_pallas=pallas, use_mixed_mode=True,
+    )
+    args = toy.example_args(base)
+    g0 = toy.build_meta_grad(base)(*args)
+    g1 = toy.build_meta_grad(mixed)(*args)
+    np.testing.assert_allclose(
+        np.asarray(g0), np.asarray(g1), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_toy_apply_model_matches_scan_and_unroll():
+    cfg_u = toy.ToyConfig(batch=4, dim=8, num_maps=5, use_loop_fusion=False)
+    cfg_s = toy.ToyConfig(batch=4, dim=8, num_maps=5, use_loop_fusion=True)
+    params, xs, *_ = toy.example_args(cfg_u)
+    x = xs[0]
+    yu = toy.apply_model(params, x, cfg_u)
+    ys = toy.apply_model(params, x, cfg_s)
+    np.testing.assert_allclose(np.asarray(yu), np.asarray(ys), rtol=1e-4)
+
+
+def test_toy_meta_grad_is_descent_direction():
+    cfg = toy.ToyConfig(batch=8, dim=8, num_maps=2)
+    args = toy.example_args(cfg)
+    g = toy.build_meta_grad(cfg)(*args)
+
+    def meta_loss(p):
+        mg = toy.build_meta_grad(cfg)  # noqa — reuse loss via finite diff
+        return None
+
+    # Finite-difference check along the gradient direction.
+    from compile.mixflow import get_fwdrev_grad_fn  # noqa: F401
+
+    def vloss(p):
+        import functools
+
+        loss_fn = functools.partial(toy.loss, cfg=cfg)
+
+        def step(params, xt):
+            d = jax.grad(loss_fn)(params, *xt)
+            return params - cfg.inner_lr * d, ()
+
+        params, _ = jax.lax.scan(step, p, (args[1], args[2]))
+        return loss_fn(params, args[3], args[4])
+
+    p0 = args[0]
+    eps = 1e-3
+    drop = float(vloss(p0) - vloss(p0 - eps * g / jnp.linalg.norm(g)))
+    assert drop > 0.0
+
+
+# ---------------------------------------------------------------------------
+# AOT pipeline (on a fresh temp dir — fast configs only)
+# ---------------------------------------------------------------------------
+
+
+def test_flatten_fn_roundtrip():
+    def fn(tree, x):
+        return {"out": tree["a"] * 2 + x}
+
+    tree = {"a": jnp.ones((2, 3))}
+    x = jnp.zeros((2, 3))
+    flat, leaves = aot.flatten_fn(fn, (tree, x))
+    assert [tuple(l.shape) for l in leaves] == [(2, 3), (2, 3)]
+    out = flat(tree["a"], x)
+    assert isinstance(out, tuple) and out[0].shape == (2, 3)
+
+
+def test_to_hlo_text_parses():
+    lowered = jax.jit(lambda x: (jnp.sin(x) @ x,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text and "ENTRY" in text
+    assert "f32[4,4]" in text
+
+
+def test_generate_toy_group(tmp_path):
+    """End-to-end: plan → lower → manifest, on the cheapest group."""
+    out = str(tmp_path / "arts")
+    # Monkey-patch the plan to a single tiny toy pair to keep it fast.
+    orig_plan = aot.plan
+    try:
+        aot.plan = lambda full: {
+            "fig1_toy": [
+                dict(builder="toy", num_maps=2, variant=v,
+                     use_mixed_mode=(v == "mixflow"), batch=4, dim=8)
+                for v in ("default", "mixflow")
+            ]
+        }
+        manifest = aot.generate(out, full=False, force=True)
+    finally:
+        aot.plan = orig_plan
+    assert len(manifest["artifacts"]) == 2
+    for key, art in manifest["artifacts"].items():
+        path = os.path.join(out, art["file"])
+        assert os.path.exists(path)
+        assert art["inputs"] and art["outputs"]
+        assert art["outputs"][0]["shape"] == [8, 8]
+        # fig1_toy is a STATS_GROUPS member: XLA memory stats recorded.
+        assert art["xla_stats"] is not None
+        assert art["xla_stats"]["temp_bytes"] > 0
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert set(on_disk["groups"]["fig1_toy"]) == set(
+        manifest["artifacts"]
+    )
+
+
+def test_manifest_incremental_skip(tmp_path):
+    out = str(tmp_path / "arts")
+    orig_plan = aot.plan
+    try:
+        aot.plan = lambda full: {
+            "g": [dict(builder="toy", num_maps=1, variant="default",
+                       use_mixed_mode=False, batch=4, dim=8)]
+        }
+        m1 = aot.generate(out, full=False, force=True)
+        key = next(iter(m1["artifacts"]))
+        mtime = os.path.getmtime(
+            os.path.join(out, m1["artifacts"][key]["file"])
+        )
+        m2 = aot.generate(out, full=False, force=False)
+        assert os.path.getmtime(
+            os.path.join(out, m2["artifacts"][key]["file"])
+        ) == mtime
+    finally:
+        aot.plan = orig_plan
+
+
+def test_sizes_cover_ladder():
+    for name in ("44M", "278M", "489M"):
+        assert name in aot.SIZES
+    assert set(aot.DEFAULT_VARIANTS) == {"default", "mixflow"}

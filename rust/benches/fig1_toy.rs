@@ -1,0 +1,115 @@
+//! Figure 1 — motivating example (§3.2): peak memory and step time vs the
+//! number of per-step transformations M, default vs mixed-mode.
+//! Also prints the Figure-9 graph census for the largest M.
+
+use mixflow::coordinator::runner::{pair_ratios, ExperimentRunner, RunOptions};
+use mixflow::runtime::Runtime;
+use mixflow::util::bench::Bench;
+use mixflow::util::stats::human_bytes;
+use mixflow::util::table::Table;
+
+fn main() {
+    let runtime = Runtime::new().expect("artifacts missing — run make artifacts");
+    let mut bench = Bench::new("fig1_toy").with_iters(1, 5).with_budget(120.0);
+
+    let metas = runtime.manifest.group("fig1_toy");
+    let runner = ExperimentRunner::new(
+        &runtime,
+        RunOptions { timing_iters: 5, execute: true, seed: 0 },
+    );
+
+    // Group by M (model.num_maps encoded in the key "toy_M<m>_...").
+    let mut rows: Vec<(usize, String, u64, Option<u64>, Option<f64>)> = Vec::new();
+    for meta in &metas {
+        let m: usize = meta
+            .key
+            .split('M')
+            .nth(1)
+            .and_then(|s| s.split('_').next())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let meas = match runner.run_one(meta, "fig1_toy") {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("skip {}: {e}", meta.key);
+                continue;
+            }
+        };
+        if let Some(s) = meas.step_seconds {
+            bench.record(
+                &format!("M={m} {}", meta.variant),
+                mixflow::util::stats::Summary::of(&[s]),
+            );
+        }
+        rows.push((
+            m,
+            meta.variant.clone(),
+            meas.sim_dynamic_bytes,
+            meas.xla_temp_bytes,
+            meas.step_seconds,
+        ));
+    }
+    rows.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+
+    println!("\nFigure 1 — toy example: peak memory & step time across M");
+    let mut t = Table::new(&[
+        "M", "variant", "sim dyn HBM", "XLA temp", "step time (ms)",
+    ])
+    .numeric_cols(&[0, 2, 3, 4]);
+    for (m, variant, dynb, xla, secs) in &rows {
+        t.row(vec![
+            m.to_string(),
+            variant.clone(),
+            human_bytes(*dynb),
+            xla.map(human_bytes).unwrap_or_else(|| "-".into()),
+            secs.map(|s| format!("{:.2}", s * 1e3))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Ratio summary per M (the two Fig. 1 panels).
+    let measurements: Vec<_> = metas
+        .iter()
+        .filter_map(|m| runner.run_one(m, "fig1_toy").ok())
+        .collect();
+    // Pair by seq_len field (toy stores D there) + M via size_name.
+    let mut t2 = Table::new(&["M", "dyn HBM ratio", "XLA temp ratio", "time ratio"])
+        .numeric_cols(&[0, 1, 2, 3]);
+    let ms: Vec<usize> = {
+        let mut v: Vec<usize> = rows.iter().map(|r| r.0).collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+    for m in ms {
+        let find = |variant: &str| {
+            rows.iter().find(|r| r.0 == m && r.1 == variant)
+        };
+        if let (Some(d), Some(x)) = (find("default"), find("mixflow")) {
+            let dyn_ratio = d.2 as f64 / x.2.max(1) as f64;
+            let xla_ratio = match (d.3, x.3) {
+                (Some(a), Some(b)) if b > 0 => format!("{:.2}", a as f64 / b as f64),
+                _ => "-".into(),
+            };
+            let time_ratio = match (d.4, x.4) {
+                (Some(a), Some(b)) if b > 0.0 => format!("{:.2}", a / b),
+                _ => "-".into(),
+            };
+            t2.row(vec![
+                m.to_string(),
+                format!("{dyn_ratio:.2}"),
+                xla_ratio,
+                time_ratio,
+            ]);
+        }
+    }
+    println!("{}", t2.render());
+    let pairs = pair_ratios(&measurements);
+    if !pairs.is_empty() {
+        println!(
+            "paper shape: ratios grow with M (memory up to ~6.7x / 85% at large M)"
+        );
+    }
+    bench.report();
+}

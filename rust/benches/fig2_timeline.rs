@@ -1,0 +1,60 @@
+//! Figure 2 — device-memory footprint across the compiled schedule for one
+//! outer update: static band (params/inputs/checkpoints) + dynamic
+//! activations, default vs MixFlow-MG.  Pure analysis (no execution).
+
+use mixflow::coordinator::report::timeline_plot;
+use mixflow::hlo::{parser, MemorySimulator};
+use mixflow::runtime::Manifest;
+use mixflow::util::bench::Bench;
+use mixflow::util::stats::human_bytes;
+
+fn main() {
+    let manifest = Manifest::discover().expect("run make artifacts");
+    let mut bench = Bench::new("fig2_timeline").with_iters(0, 3);
+
+    // The Table-3 ablation pair at full optimisation settings.
+    let metas = manifest.group("table3_ablation");
+    let default = metas
+        .iter()
+        .find(|m| m.mode == "default" && m.block_remat && !m.save_inner_grads)
+        .expect("default artifact");
+    let mixflow = metas
+        .iter()
+        .find(|m| m.mode == "fwdrev" && m.block_remat && m.save_inner_grads)
+        .expect("mixflow artifact");
+
+    for meta in [default, mixflow] {
+        let text = std::fs::read_to_string(manifest.hlo_path(meta)).unwrap();
+        let mut parsed = None;
+        bench.run(&format!("parse {}", meta.variant), || {
+            parsed = Some(parser::parse_module(&text).expect("parse"));
+        });
+        let module = parsed.unwrap();
+        let mut report = None;
+        bench.run(&format!("simulate {}", meta.variant), || {
+            report = Some(MemorySimulator::new(&module).run());
+        });
+        let mem = report.unwrap();
+        println!(
+            "{}",
+            timeline_plot(
+                &format!(
+                    "Figure 2 — {} (44M-scaled MAML): dynamic memory over instruction number",
+                    meta.variant
+                ),
+                &mem.timeline,
+                110,
+                14,
+            )
+        );
+        println!(
+            "  static {} | peak dynamic {} | peak total {}\n",
+            human_bytes(mem.static_bytes()),
+            human_bytes(mem.peak_dynamic),
+            human_bytes(mem.peak_total),
+        );
+    }
+    println!("paper shape: the default variant's dynamic band dwarfs its static band;");
+    println!("mixed-mode removes the per-block backward buffers (Fig. 3 block #3).");
+    bench.report();
+}

@@ -1,0 +1,38 @@
+//! Figure 4 — the joint sweep over tasks × model sizes × T × S (Table 1
+//! scaled): sorted peak-dynamic-HBM and step-time ratios between default
+//! and MixFlow-MG, plus the §5.2 aggregate claims.
+//!
+//! Exec tier: every pair is compiled once and timed on the PJRT client.
+//! Set MIXFLOW_FIG4_NO_EXEC=1 for a fast analysis-only pass.
+
+use mixflow::coordinator::report::fig4_sorted_ratios;
+use mixflow::coordinator::runner::{pair_ratios, ExperimentRunner, RunOptions};
+use mixflow::coordinator::ResultsStore;
+use mixflow::runtime::Runtime;
+use mixflow::util::bench::Bench;
+
+fn main() {
+    let execute = std::env::var("MIXFLOW_FIG4_NO_EXEC").is_err();
+    let runtime = Runtime::new().expect("run make artifacts");
+    let mut bench = Bench::new("fig4_sweep").with_iters(0, 1);
+    let runner = ExperimentRunner::new(
+        &runtime,
+        RunOptions { timing_iters: 3, execute, seed: 0 },
+    );
+
+    let mut measurements = Vec::new();
+    bench.run("joint sweep (compile+time all pairs)", || {
+        measurements = runner.run_group("fig4_sweep");
+    });
+
+    let store = ResultsStore::discover().expect("results dir");
+    for m in &measurements {
+        store.append("fig4_sweep", m).ok();
+    }
+
+    let pairs = pair_ratios(&measurements);
+    println!("{}", fig4_sorted_ratios(&pairs));
+    println!("paper shape: ALL pairs win on memory; time wins nearly uniform;");
+    println!("memory gains vary with architecture (disentangled in Figs. 5-7).");
+    bench.report();
+}

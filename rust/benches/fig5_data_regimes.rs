@@ -1,0 +1,79 @@
+//! Figure 5 (+ Fig. 11, Table 4) — data-regime sweeps: peak-dynamic-HBM
+//! ratio along each axis (model size, sequence length, inner updates T,
+//! batch size) with the other axes fixed at the base point.
+//!
+//! Paper shape (Eq. 12): ratio ~constant in B and T, sub-linear growth in
+//! S, grows with model size.
+
+use mixflow::coordinator::report::axis_series;
+use mixflow::coordinator::runner::{pair_ratios, ExperimentRunner, PairRatios, RunOptions};
+use mixflow::coordinator::ResultsStore;
+use mixflow::runtime::Runtime;
+use mixflow::util::bench::Bench;
+
+fn main() {
+    let runtime = Runtime::new().expect("run make artifacts");
+    let mut bench = Bench::new("fig5_data_regimes").with_iters(0, 1);
+    // Paper Fig. 5 reports the peak-dynamic-HBM ratio only, so this bench
+    // is analysis-tier (no PJRT executions).
+    let runner = ExperimentRunner::new(
+        &runtime,
+        RunOptions { timing_iters: 0, execute: false, seed: 0 },
+    );
+
+    let mut measurements = Vec::new();
+    bench.run("data-regime sweep", || {
+        measurements = runner.run_group("fig5_data");
+    });
+    let store = ResultsStore::discover().expect("results dir");
+    for m in &measurements {
+        store.append("fig5_data", m).ok();
+    }
+    let pairs = pair_ratios(&measurements);
+
+    // Base point (everything else pinned): small model, S=64, B=2, T=2.
+    let base = |p: &&PairRatios| {
+        p.size_name == "small" && p.seq_len == 64 && p.batch == 2 && p.inner_steps == 2
+    };
+
+    // Model-size axis.
+    let mut size_pts: Vec<(String, &PairRatios)> = pairs
+        .iter()
+        .filter(|p| p.seq_len == 64 && p.batch == 2 && p.inner_steps == 2)
+        .map(|p| (p.size_name.clone(), p))
+        .collect();
+    size_pts.sort_by_key(|(_, p)| p.param_count);
+    println!("{}", axis_series("Figure 5a — model-size axis", "size", &size_pts));
+
+    // Sequence-length axis.
+    let mut s_pts: Vec<(String, &PairRatios)> = pairs
+        .iter()
+        .filter(|p| p.size_name == "small" && p.batch == 2 && p.inner_steps == 2)
+        .map(|p| (p.seq_len.to_string(), p))
+        .collect();
+    s_pts.sort_by_key(|(_, p)| p.seq_len);
+    println!("{}", axis_series("Figure 5b — sequence-length axis", "S", &s_pts));
+
+    // Inner-updates axis.
+    let mut t_pts: Vec<(String, &PairRatios)> = pairs
+        .iter()
+        .filter(|p| p.size_name == "small" && p.seq_len == 64 && p.batch == 2)
+        .map(|p| (p.inner_steps.to_string(), p))
+        .collect();
+    t_pts.sort_by_key(|(_, p)| p.inner_steps);
+    println!("{}", axis_series("Figure 5c — inner-updates (T) axis", "T", &t_pts));
+
+    // Batch axis.
+    let mut b_pts: Vec<(String, &PairRatios)> = pairs
+        .iter()
+        .filter(|p| p.size_name == "small" && p.seq_len == 64 && p.inner_steps == 2)
+        .map(|p| (p.batch.to_string(), p))
+        .collect();
+    b_pts.sort_by_key(|(_, p)| p.batch);
+    println!("{}", axis_series("Figure 5d — batch-size axis", "B", &b_pts));
+
+    if let Some(b) = pairs.iter().find(base) {
+        println!("base point dyn ratio: {:.2}x", b.dynamic_ratio);
+    }
+    bench.report();
+}

@@ -1,0 +1,71 @@
+//! Figure 6 (+ Table 5) — transformer-component sweeps: peak-dynamic-HBM
+//! ratio while scaling d_model, ffw_size, n_heads, n_layers one at a time.
+//!
+//! Paper shape (Eq. 12): the ratio scales LINEARLY with n_layers and is
+//! roughly flat in the other components.
+
+use mixflow::coordinator::report::axis_series;
+use mixflow::coordinator::runner::{pair_ratios, ExperimentRunner, PairRatios, RunOptions};
+use mixflow::coordinator::ResultsStore;
+use mixflow::runtime::Runtime;
+use mixflow::util::bench::Bench;
+
+fn main() {
+    let runtime = Runtime::new().expect("run make artifacts");
+    let mut bench = Bench::new("fig6_components").with_iters(0, 1);
+    let runner = ExperimentRunner::new(
+        &runtime,
+        RunOptions { timing_iters: 0, execute: false, seed: 0 },
+    );
+
+    let mut measurements = Vec::new();
+    bench.run("component sweep (analysis)", || {
+        measurements = runner.run_group("fig6_components");
+    });
+    let store = ResultsStore::discover().expect("results dir");
+    for m in &measurements {
+        store.append("fig6_components", m).ok();
+    }
+    let pairs = pair_ratios(&measurements);
+
+    for axis in ["d_model", "ffw_size", "n_heads", "n_layers"] {
+        let prefix = format!("comp_{axis}");
+        let mut pts: Vec<(String, &PairRatios)> = pairs
+            .iter()
+            .filter(|p| p.size_name.starts_with(&prefix))
+            .map(|p| {
+                (
+                    p.size_name.trim_start_matches(&prefix).to_string(),
+                    p,
+                )
+            })
+            .collect();
+        pts.sort_by_key(|(v, _)| v.parse::<u64>().unwrap_or(0));
+        if pts.is_empty() {
+            continue;
+        }
+        println!(
+            "{}",
+            axis_series(
+                &format!("Figure 6 — sweep over {axis}"),
+                axis,
+                &pts
+            )
+        );
+    }
+
+    // The headline check: gain(n_layers=16) / gain(n_layers=2) ≈ 8.
+    let layer_ratio = |v: &str| {
+        pairs
+            .iter()
+            .find(|p| p.size_name == format!("comp_n_layers{v}"))
+            .map(|p| p.dynamic_ratio)
+    };
+    if let (Some(lo), Some(hi)) = (layer_ratio("2"), layer_ratio("16")) {
+        println!(
+            "layer-scaling check: ratio(L=16)/ratio(L=2) = {:.2} (Eq. 12 predicts ~8)",
+            hi / lo
+        );
+    }
+    bench.report();
+}

@@ -1,0 +1,86 @@
+//! Figure 7 (+ Table 6) — the Chinchilla scaling ladder: peak-dynamic-HBM
+//! gain vs model size (B=4, T=2, MAML).  Analysis tier; uses the threaded
+//! memory-aware scheduler since ladder HLO files are 8 MB+ each.
+//!
+//! Paper shape: gains grow with model size (10-25x at the top of the
+//! paper's ladder).
+
+use mixflow::coordinator::runner::{analyze_artifact, pair_ratios};
+use mixflow::coordinator::scheduler::{run_pool, Job};
+use mixflow::coordinator::{Measurement, ResultsStore};
+use mixflow::runtime::Manifest;
+use mixflow::util::bench::Bench;
+use mixflow::util::table::{ratio_cell, Table};
+
+fn main() {
+    let manifest = Manifest::discover().expect("run make artifacts");
+    let mut bench = Bench::new("fig7_ladder").with_iters(0, 1);
+
+    // Fan analysis out over the scheduler (1 worker/core, 256 MiB of
+    // resident HLO text admitted at a time).
+    let metas: Vec<_> =
+        manifest.group("fig7_ladder").into_iter().cloned().collect();
+    let mut measurements: Vec<Measurement> = Vec::new();
+    bench.run("ladder analysis via scheduler", || {
+        let jobs: Vec<Job<Option<Measurement>>> = metas
+            .iter()
+            .map(|meta| {
+                let meta = meta.clone();
+                let manifest = manifest.clone();
+                let size = std::fs::metadata(manifest.hlo_path(&meta))
+                    .map(|m| m.len())
+                    .unwrap_or(1 << 20);
+                Job {
+                    name: meta.key.clone(),
+                    // Parsing + liveness costs ~20x the text size.
+                    cost_bytes: size * 20,
+                    work: Box::new(move || {
+                        analyze_artifact(&manifest, &meta, "fig7_ladder").ok()
+                    }),
+                }
+            })
+            .collect();
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        measurements = run_pool(jobs, workers, 256 << 20)
+            .into_iter()
+            .filter_map(|(_, m)| m)
+            .collect();
+    });
+
+    let store = ResultsStore::discover().expect("results dir");
+    for m in &measurements {
+        store.append("fig7_ladder", m).ok();
+    }
+
+    let mut pairs = pair_ratios(&measurements);
+    pairs.sort_by_key(|p| p.param_count);
+    println!("\nFigure 7 — Chinchilla scaling ladder: dynamic-HBM gain vs size");
+    let mut t = Table::new(&[
+        "model", "params", "layers", "dyn HBM gain", "total HBM gain",
+    ])
+    .numeric_cols(&[1, 2, 3, 4]);
+    for p in &pairs {
+        t.row(vec![
+            p.size_name.clone(),
+            p.param_count.to_string(),
+            p.n_layers.to_string(),
+            ratio_cell(p.dynamic_ratio),
+            format!("{:.2}x", p.total_ratio),
+        ]);
+    }
+    println!("{}", t.render());
+    if pairs.len() >= 2 {
+        let first = pairs.first().unwrap().dynamic_ratio;
+        let last = pairs.last().unwrap().dynamic_ratio;
+        println!(
+            "gain trend: {:.2}x at {} → {:.2}x at {} (paper: grows with scale)",
+            first,
+            pairs.first().unwrap().size_name,
+            last,
+            pairs.last().unwrap().size_name
+        );
+    }
+    bench.report();
+}

@@ -1,0 +1,48 @@
+//! L3 substrate micro-bench: HLO parse + liveness simulation + cost model
+//! throughput on real artifacts (the §Perf L3 profile target).
+
+use mixflow::hlo::{flops::CostModel, parser, MemorySimulator};
+use mixflow::runtime::Manifest;
+use mixflow::util::bench::Bench;
+
+fn main() {
+    let manifest = Manifest::discover().expect("run make artifacts");
+    let mut bench = Bench::new("hlo_analyzer").with_iters(1, 5);
+
+    // One small and one large artifact.
+    let small = manifest
+        .group("fig4_sweep")
+        .first()
+        .map(|m| manifest.hlo_path(m))
+        .expect("fig4 artifacts");
+    let large = manifest
+        .group("fig7_ladder")
+        .iter()
+        .max_by_key(|m| m.param_count)
+        .map(|m| manifest.hlo_path(m))
+        .expect("ladder artifacts");
+
+    for (label, path) in [("small", small), ("large", large)] {
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mb = text.len() as f64 / 1e6;
+        let mut module = None;
+        let s = bench.run(&format!("parse {label} ({mb:.1} MB)"), || {
+            module = Some(parser::parse_module(&text).expect("parse"));
+        });
+        println!(
+            "  parse throughput: {:.1} MB/s",
+            mb / s.median.max(1e-9)
+        );
+        let module = module.unwrap();
+        bench.run(&format!("liveness {label}"), || {
+            let _ = MemorySimulator::new(&module).run();
+        });
+        bench.run(&format!("liveness {label} (no timeline)"), || {
+            let _ = MemorySimulator::without_timeline(&module).run();
+        });
+        bench.run(&format!("cost model {label}"), || {
+            let _ = CostModel::new(&module).run();
+        });
+    }
+    bench.report();
+}

@@ -1,0 +1,66 @@
+//! Table 2 (+ Fig. 3/10) — the §4 ablation cube on the 489M-scaled model.
+//! Analysis tier: simulated memory only (the paper itself reports N/A step
+//! times for most of these rows — they OOM'd on single devices).
+
+use mixflow::coordinator::report::ablation_table;
+use mixflow::coordinator::runner::{ExperimentRunner, RunOptions};
+use mixflow::coordinator::ResultsStore;
+use mixflow::runtime::Runtime;
+use mixflow::util::bench::Bench;
+use mixflow::util::stats::human_bytes;
+
+fn main() {
+    let runtime = Runtime::new().expect("run make artifacts");
+    let mut bench = Bench::new("table2_ablation").with_iters(0, 1);
+    let runner = ExperimentRunner::new(
+        &runtime,
+        RunOptions { timing_iters: 0, execute: false, seed: 0 },
+    );
+
+    let mut measurements = Vec::new();
+    bench.run("analyse 8-combo cube (489M-scaled)", || {
+        measurements = runner.run_group("table2_ablation");
+    });
+    let store = ResultsStore::discover().expect("results dir");
+    for m in &measurements {
+        store.append("table2_ablation", m).ok();
+    }
+
+    let mut rows: Vec<(String, &mixflow::coordinator::Measurement)> =
+        measurements.iter().map(|m| (m.variant.clone(), m)).collect();
+    rows.sort_by(|a, b| a.0.cmp(&b.0));
+    println!(
+        "{}",
+        ablation_table(
+            "Table 2 — 489M-scaled transformer ablation (paper Table 2)",
+            &rows
+        )
+    );
+
+    // Fig. 3: per-optimisation stage reduction.
+    let find = |mode: &str, br: bool, sg: bool| {
+        measurements.iter().find(|m| {
+            m.variant == format!("{mode}_br{}_sg{}", br as u8, sg as u8)
+        })
+    };
+    if let (Some(none), Some(br), Some(brsg), Some(full)) = (
+        find("default", false, false),
+        find("default", true, false),
+        find("fwdrev", true, false),
+        find("fwdrev", true, true),
+    ) {
+        println!("Figure 3 — HBM after each optimisation stage:");
+        for (label, m) in [
+            ("no optimisations", none),
+            ("1 block remat", br),
+            ("3 + mixed mode", brsg),
+            ("2 + save inner grads (full MixFlow-MG)", full),
+        ] {
+            println!(
+                "  {label:42} peak dynamic {}",
+                human_bytes(m.sim_dynamic_bytes)
+            );
+        }
+    }
+    bench.report();
+}

@@ -1,0 +1,11 @@
+//! Layer-3 coordinator (DESIGN.md S15–S17): experiment configs, the
+//! per-artifact runner, a threaded memory-aware scheduler, the results
+//! store and the paper-style report renderer.
+
+pub mod report;
+pub mod results;
+pub mod runner;
+pub mod scheduler;
+
+pub use results::{Measurement, ResultsStore};
+pub use runner::{ExperimentRunner, RunOptions};

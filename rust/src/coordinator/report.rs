@@ -1,0 +1,294 @@
+//! Paper-style report rendering: each function prints the rows/series of
+//! one figure or table of the evaluation section (DESIGN.md §4 index).
+
+use crate::coordinator::runner::PairRatios;
+use crate::coordinator::Measurement;
+use crate::util::stats::{geomean, human_bytes, human_secs, percentile};
+use crate::util::table::{ratio_cell, Table};
+
+/// Figure 4: sorted peak-dynamic-HBM and step-time ratio series.
+pub fn fig4_sorted_ratios(pairs: &[PairRatios]) -> String {
+    let mut out = String::from(
+        "Figure 4 — joint sweep: ratios default/mixflow, sorted descending\n",
+    );
+    let mut t = Table::new(&[
+        "rank", "task", "size", "S", "B", "T", "dyn HBM ratio",
+        "step-time ratio",
+    ])
+    .numeric_cols(&[0, 3, 4, 5, 6, 7]);
+    for (i, p) in pairs.iter().enumerate() {
+        t.row(vec![
+            format!("{}", i + 1),
+            p.task.clone(),
+            p.size_name.clone(),
+            p.seq_len.to_string(),
+            p.batch.to_string(),
+            p.inner_steps.to_string(),
+            format!("{:.2}", p.dynamic_ratio),
+            p.time_ratio
+                .map(|r| format!("{r:.2}"))
+                .unwrap_or_else(|| "n/a".into()),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&aggregate_claims(pairs));
+    out
+}
+
+/// The §5.2 headline aggregate claims over a sweep.
+pub fn aggregate_claims(pairs: &[PairRatios]) -> String {
+    if pairs.is_empty() {
+        return "no pairs\n".into();
+    }
+    let mut dyn_ratios: Vec<f64> =
+        pairs.iter().map(|p| p.dynamic_ratio).collect();
+    dyn_ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let time_ratios: Vec<f64> =
+        pairs.iter().filter_map(|p| p.time_ratio).collect();
+    let wins = pairs.iter().filter(|p| p.dynamic_ratio > 1.0).count();
+    let frac_4x = dyn_ratios.iter().filter(|&&r| r >= 4.0).count() as f64
+        / dyn_ratios.len() as f64;
+    let mut s = String::new();
+    s.push_str(&format!(
+        "pairs={}  memory wins={}  geomean dyn ratio={:.2}x  median={:.2}x  p20={:.2}x  max={:.2}x\n",
+        pairs.len(),
+        wins,
+        geomean(&dyn_ratios),
+        percentile(&dyn_ratios, 50.0),
+        percentile(&dyn_ratios, 20.0),
+        dyn_ratios.last().copied().unwrap_or(0.0),
+    ));
+    s.push_str(&format!(
+        "fraction of configs with ≥4x (75%) memory reduction: {:.0}%\n",
+        frac_4x * 100.0
+    ));
+    if !time_ratios.is_empty() {
+        let mut tr = time_ratios.clone();
+        tr.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.push_str(&format!(
+            "step-time: geomean={:.2}x  median={:.2}x  max={:.2}x (paper: up to 1.33x ≈ 25% reduction)\n",
+            geomean(&tr),
+            percentile(&tr, 50.0),
+            tr.last().copied().unwrap_or(0.0),
+        ));
+    }
+    s
+}
+
+/// Tables 2/3: the ablation cube.  `rows` are (label, measurement).
+pub fn ablation_table(title: &str, rows: &[(String, &Measurement)]) -> String {
+    let mut t = Table::new(&[
+        "mixed mode", "block remat", "save grads", "sim dyn HBM",
+        "XLA temp", "step time",
+    ])
+    .numeric_cols(&[3, 4, 5]);
+    for (label, m) in rows {
+        // label encodes "<mode>_br<0|1>_sg<0|1>".
+        let mixed = if label.starts_with("default") { "-" } else { "+" };
+        let br = if label.contains("br1") { "+" } else { "-" };
+        let sg = if label.contains("sg1") { "+" } else { "-" };
+        t.row(vec![
+            mixed.into(),
+            br.into(),
+            sg.into(),
+            human_bytes(m.sim_dynamic_bytes),
+            m.xla_temp_bytes
+                .map(human_bytes)
+                .unwrap_or_else(|| "N/A".into()),
+            m.step_seconds
+                .map(human_secs)
+                .unwrap_or_else(|| "N/A".into()),
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+/// Figure 5/6/7 style: one swept axis → ratio series.
+pub fn axis_series(
+    title: &str,
+    axis_name: &str,
+    points: &[(String, &PairRatios)],
+) -> String {
+    let mut t = Table::new(&[
+        axis_name, "layers", "params", "dyn HBM ratio", "time ratio",
+        "default dyn", "mixflow dyn",
+    ])
+    .numeric_cols(&[1, 2, 3, 4, 5, 6]);
+    for (axis_value, p) in points {
+        t.row(vec![
+            axis_value.clone(),
+            p.n_layers.to_string(),
+            p.param_count.to_string(),
+            ratio_cell(p.dynamic_ratio),
+            p.time_ratio
+                .map(|r| format!("{r:.2}x"))
+                .unwrap_or_else(|| "n/a".into()),
+            human_bytes(p.default_dynamic),
+            human_bytes(p.mixflow_dynamic),
+        ]);
+    }
+    format!("{title}\n{}", t.render())
+}
+
+/// Figure 8: static vs dynamic decomposition per ladder rung.
+pub fn static_dynamic_table(
+    rows: &[(String, &Measurement, &Measurement)],
+) -> String {
+    let mut t = Table::new(&[
+        "model", "variant", "static", "dynamic", "dyn/static",
+        "total ratio",
+    ])
+    .numeric_cols(&[2, 3, 4, 5]);
+    for (name, d, x) in rows {
+        let total_ratio = (d.sim_dynamic_bytes + d.sim_static_bytes) as f64
+            / ((x.sim_dynamic_bytes + x.sim_static_bytes).max(1)) as f64;
+        for (variant, m) in [("default", d), ("mixflow", x)] {
+            t.row(vec![
+                name.clone(),
+                variant.into(),
+                human_bytes(m.sim_static_bytes),
+                human_bytes(m.sim_dynamic_bytes),
+                format!(
+                    "{:.2}",
+                    m.sim_dynamic_bytes as f64
+                        / m.sim_static_bytes.max(1) as f64
+                ),
+                if variant == "mixflow" {
+                    format!("{total_ratio:.2}x")
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+    }
+    format!("Figure 8 — static vs dynamic memory decomposition\n{}", t.render())
+}
+
+/// Figure 2: ASCII memory-over-instruction-number timeline.
+pub fn timeline_plot(
+    title: &str,
+    timeline: &[(usize, u64)],
+    width: usize,
+    height: usize,
+) -> String {
+    if timeline.is_empty() {
+        return format!("{title}\n(empty timeline)\n");
+    }
+    let max = timeline.iter().map(|(_, b)| *b).max().unwrap().max(1);
+    // Downsample to `width` columns, keeping per-column maxima.
+    let mut cols = vec![0u64; width];
+    for (i, (_, b)) in timeline.iter().enumerate() {
+        let c = i * width / timeline.len();
+        cols[c] = cols[c].max(*b);
+    }
+    let mut s = format!("{title}  (peak {})\n", human_bytes(max));
+    for row in (0..height).rev() {
+        let threshold = max as f64 * (row as f64 + 0.5) / height as f64;
+        let line: String = cols
+            .iter()
+            .map(|&b| if b as f64 >= threshold { '█' } else { ' ' })
+            .collect();
+        s.push_str(&format!("{:>10} │{line}\n", if row == height - 1 {
+            human_bytes(max)
+        } else if row == 0 {
+            "0 B".to_string()
+        } else {
+            String::new()
+        }));
+    }
+    s.push_str(&format!(
+        "{:>10} └{}\n{:>12}instruction number →\n",
+        "", "─".repeat(width), ""
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meas(variant: &str, dynb: u64) -> Measurement {
+        Measurement {
+            key: format!("k_{variant}_{dynb}"),
+            group: "g".into(),
+            task: "maml".into(),
+            variant: variant.into(),
+            size_name: "tiny".into(),
+            seq_len: 32,
+            batch: 2,
+            inner_steps: 2,
+            n_layers: 2,
+            param_count: 100,
+            sim_dynamic_bytes: dynb,
+            sim_static_bytes: 50,
+            xla_temp_bytes: None,
+            step_seconds: Some(0.5),
+            flops: 0.0,
+            instructions: 3,
+        }
+    }
+
+    fn pair(ratio: f64) -> PairRatios {
+        PairRatios {
+            workload: "w".into(),
+            task: "maml".into(),
+            size_name: "tiny".into(),
+            seq_len: 32,
+            batch: 2,
+            inner_steps: 2,
+            n_layers: 2,
+            param_count: 100,
+            dynamic_ratio: ratio,
+            xla_ratio: None,
+            time_ratio: Some(1.1),
+            total_ratio: ratio / 2.0,
+            default_dynamic: 1000,
+            mixflow_dynamic: (1000.0 / ratio) as u64,
+        }
+    }
+
+    #[test]
+    fn fig4_renders() {
+        let pairs = vec![pair(8.0), pair(2.0)];
+        let s = fig4_sorted_ratios(&pairs);
+        assert!(s.contains("Figure 4"));
+        assert!(s.contains("8.00"));
+        assert!(s.contains("geomean"));
+    }
+
+    #[test]
+    fn aggregate_handles_empty() {
+        assert_eq!(aggregate_claims(&[]), "no pairs\n");
+    }
+
+    #[test]
+    fn ablation_table_flags() {
+        let m = meas("default", 100);
+        let rows = vec![
+            ("default_br1_sg0".to_string(), &m),
+            ("fwdrev_br1_sg1".to_string(), &m),
+        ];
+        let s = ablation_table("Table 3", &rows);
+        assert!(s.contains("Table 3"));
+        assert!(s.lines().count() >= 6);
+    }
+
+    #[test]
+    fn timeline_plot_shape() {
+        let tl: Vec<(usize, u64)> =
+            (0..100).map(|i| (i, (i as u64 % 37) * 100)).collect();
+        let s = timeline_plot("Fig 2", &tl, 40, 8);
+        assert!(s.contains('█'));
+        assert!(s.contains("instruction number"));
+    }
+
+    #[test]
+    fn static_dynamic_renders() {
+        let d = meas("default", 400);
+        let x = meas("mixflow", 100);
+        let rows = vec![("44M".to_string(), &d, &x)];
+        let s = static_dynamic_table(&rows);
+        assert!(s.contains("44M"));
+        assert!(s.contains("mixflow"));
+    }
+}

@@ -1,0 +1,229 @@
+//! Measurement records + a JSONL results store.
+//!
+//! Every bench/e2e run appends its measurements to `results/*.jsonl` so the
+//! EXPERIMENTS.md numbers are regenerable and auditable.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One measured artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Measurement {
+    pub key: String,
+    pub group: String,
+    pub task: String,
+    pub variant: String,
+    pub size_name: String,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub inner_steps: usize,
+    pub n_layers: usize,
+    pub param_count: u64,
+    /// Simulated peak dynamic bytes (HLO liveness).
+    pub sim_dynamic_bytes: u64,
+    /// Simulated static bytes (params + constants + outputs).
+    pub sim_static_bytes: u64,
+    /// XLA CompiledMemoryStats temp bytes, when recorded at AOT time.
+    pub xla_temp_bytes: Option<u64>,
+    /// Median step seconds on the PJRT CPU client (exec tier only).
+    pub step_seconds: Option<f64>,
+    /// Cost-model FLOPs.
+    pub flops: f64,
+    /// Flattened instruction count.
+    pub instructions: usize,
+}
+
+impl Measurement {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("key", Json::Str(self.key.clone()));
+        o.insert("group", Json::Str(self.group.clone()));
+        o.insert("task", Json::Str(self.task.clone()));
+        o.insert("variant", Json::Str(self.variant.clone()));
+        o.insert("size_name", Json::Str(self.size_name.clone()));
+        o.insert("seq_len", Json::Num(self.seq_len as f64));
+        o.insert("batch", Json::Num(self.batch as f64));
+        o.insert("inner_steps", Json::Num(self.inner_steps as f64));
+        o.insert("n_layers", Json::Num(self.n_layers as f64));
+        o.insert("param_count", Json::Num(self.param_count as f64));
+        o.insert(
+            "sim_dynamic_bytes",
+            Json::Num(self.sim_dynamic_bytes as f64),
+        );
+        o.insert(
+            "sim_static_bytes",
+            Json::Num(self.sim_static_bytes as f64),
+        );
+        o.insert(
+            "xla_temp_bytes",
+            match self.xla_temp_bytes {
+                Some(b) => Json::Num(b as f64),
+                None => Json::Null,
+            },
+        );
+        o.insert(
+            "step_seconds",
+            match self.step_seconds {
+                Some(s) => Json::Num(s),
+                None => Json::Null,
+            },
+        );
+        o.insert("flops", Json::Num(self.flops));
+        o.insert("instructions", Json::Num(self.instructions as f64));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Option<Measurement> {
+        Some(Measurement {
+            key: j.get("key")?.as_str()?.to_string(),
+            group: j.get("group")?.as_str()?.to_string(),
+            task: j.get("task")?.as_str()?.to_string(),
+            variant: j.get("variant")?.as_str()?.to_string(),
+            size_name: j.get("size_name")?.as_str()?.to_string(),
+            seq_len: j.get("seq_len")?.as_u64()? as usize,
+            batch: j.get("batch")?.as_u64()? as usize,
+            inner_steps: j.get("inner_steps")?.as_u64()? as usize,
+            n_layers: j.get("n_layers")?.as_u64()? as usize,
+            param_count: j.get("param_count")?.as_u64()?,
+            sim_dynamic_bytes: j.get("sim_dynamic_bytes")?.as_u64()?,
+            sim_static_bytes: j.get("sim_static_bytes")?.as_u64()?,
+            xla_temp_bytes: j
+                .get("xla_temp_bytes")
+                .and_then(Json::as_u64),
+            step_seconds: j.get("step_seconds").and_then(Json::as_f64),
+            flops: j.get("flops")?.as_f64()?,
+            instructions: j.get("instructions")?.as_u64()? as usize,
+        })
+    }
+}
+
+/// Append-only JSONL store under `results/`.
+pub struct ResultsStore {
+    pub dir: PathBuf,
+}
+
+impl ResultsStore {
+    pub fn new(dir: &Path) -> Result<ResultsStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        Ok(ResultsStore { dir: dir.to_path_buf() })
+    }
+
+    /// Default location: `<repo>/results`.
+    pub fn discover() -> Result<ResultsStore> {
+        let base = crate::find_artifacts_dir()
+            .and_then(|a| a.parent().map(Path::to_path_buf))
+            .unwrap_or_else(|| PathBuf::from("."));
+        ResultsStore::new(&base.join("results"))
+    }
+
+    pub fn append(&self, stream: &str, m: &Measurement) -> Result<()> {
+        let path = self.dir.join(format!("{stream}.jsonl"));
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)?;
+        writeln!(f, "{}", m.to_json().compact())?;
+        Ok(())
+    }
+
+    pub fn load(&self, stream: &str) -> Result<Vec<Measurement>> {
+        let path = self.dir.join(format!("{stream}.jsonl"));
+        if !path.exists() {
+            return Ok(vec![]);
+        }
+        let text = std::fs::read_to_string(&path)?;
+        Ok(text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .filter_map(|l| Json::parse(l).ok())
+            .filter_map(|j| Measurement::from_json(&j))
+            .collect())
+    }
+
+    /// Keep only the latest record per key (reruns overwrite logically).
+    pub fn load_latest(&self, stream: &str) -> Result<Vec<Measurement>> {
+        let all = self.load(stream)?;
+        let mut latest: std::collections::HashMap<String, Measurement> =
+            std::collections::HashMap::new();
+        for m in all {
+            latest.insert(m.key.clone(), m);
+        }
+        let mut out: Vec<Measurement> = latest.into_values().collect();
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(key: &str) -> Measurement {
+        Measurement {
+            key: key.into(),
+            group: "g".into(),
+            task: "maml".into(),
+            variant: "default".into(),
+            size_name: "tiny".into(),
+            seq_len: 32,
+            batch: 2,
+            inner_steps: 2,
+            n_layers: 2,
+            param_count: 100,
+            sim_dynamic_bytes: 1000,
+            sim_static_bytes: 500,
+            xla_temp_bytes: Some(900),
+            step_seconds: Some(0.01),
+            flops: 1e6,
+            instructions: 42,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample("k1");
+        let j = m.to_json();
+        assert_eq!(Measurement::from_json(&j).unwrap(), m);
+    }
+
+    #[test]
+    fn none_fields_roundtrip() {
+        let mut m = sample("k2");
+        m.xla_temp_bytes = None;
+        m.step_seconds = None;
+        let back = Measurement::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn store_append_load_latest() {
+        let dir = std::env::temp_dir().join(format!(
+            "mixflow_results_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let store = ResultsStore::new(&dir).unwrap();
+        store.append("s", &sample("a")).unwrap();
+        let mut newer = sample("a");
+        newer.flops = 2e6;
+        store.append("s", &newer).unwrap();
+        store.append("s", &sample("b")).unwrap();
+        assert_eq!(store.load("s").unwrap().len(), 3);
+        let latest = store.load_latest("s").unwrap();
+        assert_eq!(latest.len(), 2);
+        assert_eq!(
+            latest.iter().find(|m| m.key == "a").unwrap().flops,
+            2e6
+        );
+        assert!(store.load("missing").unwrap().is_empty());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,226 @@
+//! Per-artifact experiment runner: HLO analysis + (exec tier) timed runs.
+
+use anyhow::Result;
+
+use super::results::Measurement;
+use crate::hlo::{flops::CostModel, parser, MemorySimulator};
+use crate::runtime::{ArtifactMeta, Manifest, Runtime};
+
+/// Analysis-only measurement (no PJRT, usable from worker threads).
+pub fn analyze_artifact(
+    manifest: &Manifest,
+    meta: &ArtifactMeta,
+    group: &str,
+) -> Result<Measurement> {
+    let path = manifest.hlo_path(meta);
+    let text = std::fs::read_to_string(&path)?;
+    let module = parser::parse_module(&text)
+        .map_err(|e| anyhow::anyhow!("{}: {e}", meta.key))?;
+    let mem = MemorySimulator::without_timeline(&module).run();
+    let cost = CostModel::new(&module).run();
+    Ok(Measurement {
+        key: meta.key.clone(),
+        group: group.to_string(),
+        task: meta.task.clone(),
+        variant: meta.variant.clone(),
+        size_name: meta.size_name.clone(),
+        seq_len: meta.seq_len,
+        batch: meta.batch,
+        inner_steps: meta.inner_steps,
+        n_layers: meta.n_layers,
+        param_count: meta.param_count,
+        sim_dynamic_bytes: mem.peak_dynamic,
+        sim_static_bytes: mem.static_bytes(),
+        xla_temp_bytes: meta.xla_stats.map(|s| s.temp_bytes),
+        step_seconds: None,
+        flops: if meta.flops > 0.0 { meta.flops } else { cost.flops },
+        instructions: mem.instructions,
+    })
+}
+
+/// Knobs for a run.
+#[derive(Debug, Clone, Copy)]
+pub struct RunOptions {
+    /// Timed iterations per exec-tier artifact.
+    pub timing_iters: usize,
+    /// Execute exec-tier artifacts (set false for analysis-only passes).
+    pub execute: bool,
+    /// Input seed (shared across a default/mixflow pair by construction).
+    pub seed: u64,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { timing_iters: 5, execute: true, seed: 0 }
+    }
+}
+
+/// Runs artifacts and produces [`Measurement`]s.
+pub struct ExperimentRunner<'r> {
+    pub runtime: &'r Runtime,
+    pub options: RunOptions,
+}
+
+impl<'r> ExperimentRunner<'r> {
+    pub fn new(runtime: &'r Runtime, options: RunOptions) -> Self {
+        ExperimentRunner { runtime, options }
+    }
+
+    /// Analyse (and maybe execute) one artifact.
+    pub fn run_one(&self, meta: &ArtifactMeta, group: &str) -> Result<Measurement> {
+        let mut m = analyze_artifact(&self.runtime.manifest, meta, group)?;
+        if self.options.execute && meta.tier == "exec" {
+            let loaded = self.runtime.load(&meta.key)?;
+            let inputs = loaded.default_inputs(self.options.seed)?;
+            let summary =
+                loaded.time_steps(&inputs, self.options.timing_iters)?;
+            m.step_seconds = Some(summary.median);
+        }
+        Ok(m)
+    }
+
+    /// Run a whole manifest group; skips artifacts that fail (logged) so a
+    /// single bad lowering cannot sink a sweep.
+    pub fn run_group(&self, group: &str) -> Vec<Measurement> {
+        let metas = self.runtime.manifest.group(group);
+        let mut out = Vec::with_capacity(metas.len());
+        for meta in metas {
+            match self.run_one(meta, group) {
+                Ok(m) => out.push(m),
+                Err(e) => eprintln!("[runner] {}: SKIP ({e})", meta.key),
+            }
+        }
+        out
+    }
+}
+
+/// Default-vs-mixflow ratios for one workload pair (the paper's Eqs. 10–11).
+#[derive(Debug, Clone)]
+pub struct PairRatios {
+    pub workload: String,
+    pub task: String,
+    pub size_name: String,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub inner_steps: usize,
+    pub n_layers: usize,
+    pub param_count: u64,
+    /// Simulated peak-dynamic-HBM ratio (default / mixflow), Eq. (10).
+    pub dynamic_ratio: f64,
+    /// XLA temp-bytes ratio when both sides have stats.
+    pub xla_ratio: Option<f64>,
+    /// Step-time ratio (default / mixflow), Eq. (11).
+    pub time_ratio: Option<f64>,
+    /// Total (static+dynamic) ratio — the Fig. 8(c) quantity.
+    pub total_ratio: f64,
+    pub default_dynamic: u64,
+    pub mixflow_dynamic: u64,
+}
+
+/// Pair measurements by workload signature and compute ratios.
+pub fn pair_ratios(measurements: &[Measurement]) -> Vec<PairRatios> {
+    use std::collections::HashMap;
+    let sig = |m: &Measurement| {
+        format!(
+            "{}|{}|{}|{}|{}",
+            m.task, m.size_name, m.seq_len, m.batch, m.inner_steps
+        )
+    };
+    let mut defaults: HashMap<String, &Measurement> = HashMap::new();
+    let mut mixed: HashMap<String, &Measurement> = HashMap::new();
+    for m in measurements {
+        match m.variant.as_str() {
+            "default" => {
+                defaults.insert(sig(m), m);
+            }
+            "mixflow" => {
+                mixed.insert(sig(m), m);
+            }
+            _ => {}
+        }
+    }
+    let mut out = Vec::new();
+    for (k, d) in &defaults {
+        let Some(x) = mixed.get(k) else { continue };
+        let dynamic_ratio =
+            d.sim_dynamic_bytes as f64 / (x.sim_dynamic_bytes.max(1)) as f64;
+        let total_ratio = (d.sim_dynamic_bytes + d.sim_static_bytes) as f64
+            / ((x.sim_dynamic_bytes + x.sim_static_bytes).max(1)) as f64;
+        let xla_ratio = match (d.xla_temp_bytes, x.xla_temp_bytes) {
+            (Some(a), Some(b)) if b > 0 => Some(a as f64 / b as f64),
+            _ => None,
+        };
+        let time_ratio = match (d.step_seconds, x.step_seconds) {
+            (Some(a), Some(b)) if b > 0.0 => Some(a / b),
+            _ => None,
+        };
+        out.push(PairRatios {
+            workload: k.clone(),
+            task: d.task.clone(),
+            size_name: d.size_name.clone(),
+            seq_len: d.seq_len,
+            batch: d.batch,
+            inner_steps: d.inner_steps,
+            n_layers: d.n_layers,
+            param_count: d.param_count,
+            dynamic_ratio,
+            xla_ratio,
+            time_ratio,
+            total_ratio,
+            default_dynamic: d.sim_dynamic_bytes,
+            mixflow_dynamic: x.sim_dynamic_bytes,
+        });
+    }
+    out.sort_by(|a, b| {
+        b.dynamic_ratio
+            .partial_cmp(&a.dynamic_ratio)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meas(variant: &str, dynb: u64, secs: Option<f64>) -> Measurement {
+        Measurement {
+            key: format!("k_{variant}"),
+            group: "g".into(),
+            task: "maml".into(),
+            variant: variant.into(),
+            size_name: "tiny".into(),
+            seq_len: 32,
+            batch: 2,
+            inner_steps: 2,
+            n_layers: 2,
+            param_count: 100,
+            sim_dynamic_bytes: dynb,
+            sim_static_bytes: 100,
+            xla_temp_bytes: None,
+            step_seconds: secs,
+            flops: 0.0,
+            instructions: 1,
+        }
+    }
+
+    #[test]
+    fn ratios_paired_and_sorted() {
+        let ms = vec![
+            meas("default", 1000, Some(2.0)),
+            meas("mixflow", 100, Some(1.0)),
+        ];
+        let pairs = pair_ratios(&ms);
+        assert_eq!(pairs.len(), 1);
+        let p = &pairs[0];
+        assert!((p.dynamic_ratio - 10.0).abs() < 1e-9);
+        assert_eq!(p.time_ratio, Some(2.0));
+        assert!((p.total_ratio - (1100.0 / 200.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unpaired_measurements_dropped() {
+        let ms = vec![meas("default", 1000, None)];
+        assert!(pair_ratios(&ms).is_empty());
+    }
+}

@@ -1,0 +1,244 @@
+//! FLOP / bytes-accessed cost model over HLO modules (DESIGN.md S13).
+//!
+//! Rough but self-consistent: it exists to (a) rank configurations the way
+//! the paper's step-time plots do, and (b) expose redundant-recompute
+//! regressions between default and MixFlow artifacts (the §Perf L2 check).
+
+use std::collections::HashMap;
+
+use super::ir::{Computation, Instruction, Module};
+
+/// Borrow a computation with the module's lifetime (no clones, §Perf L3).
+fn lookup<'m>(module: &'m Module, name: &str) -> Option<&'m Computation> {
+    module.comp_index.get(name).map(|&i| &module.computations[i])
+}
+
+/// Cost of a module or computation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Cost {
+    pub flops: f64,
+    /// Bytes read + written by non-alias ops (I/O pressure proxy).
+    pub bytes: f64,
+}
+
+impl Cost {
+    fn add(&mut self, other: Cost) {
+        self.flops += other.flops;
+        self.bytes += other.bytes;
+    }
+
+    fn scale(self, k: f64) -> Cost {
+        Cost { flops: self.flops * k, bytes: self.bytes * k }
+    }
+}
+
+/// Weight of transcendental elementwise ops relative to an add.
+const TRANSCENDENTAL_WEIGHT: f64 = 4.0;
+
+pub struct CostModel<'m> {
+    module: &'m Module,
+    cache: HashMap<String, Cost>,
+}
+
+impl<'m> CostModel<'m> {
+    pub fn new(module: &'m Module) -> Self {
+        CostModel { module, cache: HashMap::new() }
+    }
+
+    /// Cost of the entry computation (while bodies × trip count).
+    pub fn run(&mut self) -> Cost {
+        let entry = lookup(self.module, &self.module.entry().name)
+            .expect("entry exists");
+        self.computation_cost(entry)
+    }
+
+    fn computation_cost(&mut self, comp: &Computation) -> Cost {
+        if let Some(c) = self.cache.get(&comp.name) {
+            return *c;
+        }
+        let mut total = Cost::default();
+        for ins in &comp.instructions {
+            total.add(self.instruction_cost(comp, ins));
+        }
+        self.cache.insert(comp.name.clone(), total);
+        total
+    }
+
+    fn instruction_cost(&mut self, comp: &Computation, ins: &Instruction) -> Cost {
+        let out_elems = ins.shape.elements() as f64;
+        let out_bytes = ins.shape.bytes() as f64;
+        match ins.opcode.as_str() {
+            "parameter" | "constant" | "tuple" | "get-tuple-element"
+            | "reshape" | "bitcast" | "iota" => Cost::default(),
+            "dot" => {
+                let k = self.contracted_size(comp, ins);
+                Cost {
+                    flops: 2.0 * out_elems * k,
+                    bytes: self.operand_bytes(comp, ins) + out_bytes,
+                }
+            }
+            "reduce" | "reduce-window" => {
+                let in_elems: f64 = ins
+                    .operands
+                    .first()
+                    .and_then(|o| comp.get(o))
+                    .map(|i| i.shape.elements() as f64)
+                    .unwrap_or(out_elems);
+                Cost {
+                    flops: in_elems,
+                    bytes: self.operand_bytes(comp, ins) + out_bytes,
+                }
+            }
+            "while" => {
+                let trips = self.trip_count(ins) as f64;
+                let mut c = Cost::default();
+                for callee in ins.called_computations() {
+                    if let Some(cc) = lookup(self.module, callee) {
+                        c.add(self.computation_cost(cc));
+                    }
+                }
+                c.scale(trips)
+            }
+            "call" | "conditional" | "scatter" | "sort" | "map" => {
+                let mut c = Cost {
+                    flops: 0.0,
+                    bytes: self.operand_bytes(comp, ins) + out_bytes,
+                };
+                for callee in ins.called_computations() {
+                    if let Some(cc) = lookup(self.module, callee) {
+                        c.add(self.computation_cost(cc));
+                    }
+                }
+                c
+            }
+            "exponential" | "log" | "tanh" | "power" | "sqrt" | "rsqrt"
+            | "sine" | "cosine" | "logistic" | "atan2" | "cbrt"
+            | "exponential-minus-one" | "log-plus-one" | "erf" => Cost {
+                flops: out_elems * TRANSCENDENTAL_WEIGHT,
+                bytes: self.operand_bytes(comp, ins) + out_bytes,
+            },
+            // Data movement: bytes only.
+            "broadcast" | "transpose" | "slice" | "dynamic-slice"
+            | "dynamic-update-slice" | "concatenate" | "pad" | "gather"
+            | "reverse" | "copy" => Cost {
+                flops: 0.0,
+                bytes: self.operand_bytes(comp, ins) + out_bytes,
+            },
+            // Default: one flop per output element (add/mul/select/...).
+            _ => Cost {
+                flops: out_elems,
+                bytes: self.operand_bytes(comp, ins) + out_bytes,
+            },
+        }
+    }
+
+    fn operand_bytes(&self, comp: &Computation, ins: &Instruction) -> f64 {
+        ins.operands
+            .iter()
+            .filter_map(|o| comp.get(o))
+            .map(|i| i.shape.bytes() as f64)
+            .sum()
+    }
+
+    /// Product of the LHS contracting-dim sizes of a dot.
+    fn contracted_size(&self, comp: &Computation, ins: &Instruction) -> f64 {
+        let lhs = ins
+            .operands
+            .first()
+            .and_then(|o| comp.get(o))
+            .map(|i| i.shape.dims().to_vec())
+            .unwrap_or_default();
+        let dims = ins
+            .int_list_attr("lhs_contracting_dims")
+            .unwrap_or_default();
+        let mut k = 1f64;
+        for d in dims {
+            k *= lhs.get(d as usize).copied().unwrap_or(1) as f64;
+        }
+        k
+    }
+
+    /// Heuristic while trip count: the constant the loop counter is
+    /// compared against in the condition computation (fallback 1).
+    fn trip_count(&self, ins: &Instruction) -> u64 {
+        let Some(cond_name) = ins.attrs.get("condition") else {
+            return 1;
+        };
+        let Some(cond) = self.module.computation(cond_name) else {
+            return 1;
+        };
+        for i in &cond.instructions {
+            if i.opcode == "constant" && i.shape.dims().is_empty() {
+                if let Some(v) = constant_scalar_value(i) {
+                    if v > 0.0 && v < 1e9 {
+                        return v as u64;
+                    }
+                }
+            }
+        }
+        1
+    }
+}
+
+/// Parse `constant(5)`-style scalar payloads from the raw attr-less text.
+/// The parser stores no payload, so we re-derive from the name-matched
+/// source line when available; here we fall back to the `value` attr some
+/// printers emit, else scan the shape-free text in `attrs`.
+fn constant_scalar_value(ins: &Instruction) -> Option<f64> {
+    // jax prints `x = s32[] constant(8)` — the parser keeps the payload in
+    // attrs under the sentinel key "__payload" if present.
+    ins.attrs.get("__payload")?.trim().parse().ok()
+}
+
+/// Convenience: parse + cost.
+pub fn cost_of_text(text: &str) -> Result<Cost, super::parser::ParseError> {
+    let module = super::parser::parse_module(text)?;
+    Ok(CostModel::new(&module).run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parser::parse_module;
+
+    #[test]
+    fn dot_flops() {
+        let src = "HloModule m\n\nENTRY e {\n  a = f32[8,16]{1,0} parameter(0)\n  b = f32[16,4]{1,0} parameter(1)\n  ROOT d = f32[8,4]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n}\n";
+        let m = parse_module(src).unwrap();
+        let c = CostModel::new(&m).run();
+        assert_eq!(c.flops, 2.0 * 8.0 * 4.0 * 16.0);
+    }
+
+    #[test]
+    fn elementwise_and_transcendental() {
+        let src = "HloModule m\n\nENTRY e {\n  a = f32[10]{0} parameter(0)\n  s = f32[10]{0} sine(a)\n  ROOT z = f32[10]{0} add(s, a)\n}\n";
+        let m = parse_module(src).unwrap();
+        let c = CostModel::new(&m).run();
+        assert_eq!(c.flops, 10.0 * TRANSCENDENTAL_WEIGHT + 10.0);
+    }
+
+    #[test]
+    fn call_includes_callee() {
+        let src = "HloModule m\n\nh.1 {\n  p = f32[4]{0} parameter(0)\n  ROOT r = f32[4]{0} add(p, p)\n}\n\nENTRY e {\n  a = f32[4]{0} parameter(0)\n  ROOT k = f32[4]{0} call(a), to_apply=h.1\n}\n";
+        let m = parse_module(src).unwrap();
+        let c = CostModel::new(&m).run();
+        assert!(c.flops >= 4.0);
+    }
+
+    #[test]
+    fn reduce_counts_input() {
+        let src = "HloModule m\n\nadd.1 {\n  x = f32[] parameter(0)\n  y = f32[] parameter(1)\n  ROOT s = f32[] add(x, y)\n}\n\nENTRY e {\n  a = f32[100]{0} parameter(0)\n  z = f32[] constant(0)\n  ROOT r = f32[] reduce(a, z), dimensions={0}, to_apply=add.1\n}\n";
+        let m = parse_module(src).unwrap();
+        let c = CostModel::new(&m).run();
+        assert!(c.flops >= 100.0);
+    }
+
+    #[test]
+    fn bytes_counted_for_data_movement() {
+        let src = "HloModule m\n\nENTRY e {\n  a = f32[10]{0} parameter(0)\n  ROOT t = f32[10,10]{1,0} broadcast(a), dimensions={0}\n}\n";
+        let m = parse_module(src).unwrap();
+        let c = CostModel::new(&m).run();
+        assert_eq!(c.flops, 0.0);
+        assert_eq!(c.bytes, 40.0 + 400.0);
+    }
+}

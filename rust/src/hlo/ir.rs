@@ -1,0 +1,140 @@
+//! HLO IR data structures produced by the parser.
+
+use std::collections::HashMap;
+
+use super::shape::Shape;
+
+/// One HLO instruction.
+#[derive(Debug, Clone)]
+pub struct Instruction {
+    pub name: String,
+    pub shape: Shape,
+    pub opcode: String,
+    /// Operand instruction names (within the same computation).
+    pub operands: Vec<String>,
+    /// Raw attribute text: `key` → value (braces kept verbatim).
+    pub attrs: HashMap<String, String>,
+    pub is_root: bool,
+    /// Line number in the source text (for timelines/diagnostics).
+    pub line: usize,
+}
+
+impl Instruction {
+    /// Names of computations this instruction calls (`to_apply`,
+    /// `body`/`condition`, `branch_computations`).
+    pub fn called_computations(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        for key in ["to_apply", "body", "condition"] {
+            if let Some(v) = self.attrs.get(key) {
+                out.push(v.as_str());
+            }
+        }
+        if let Some(v) = self.attrs.get("branch_computations") {
+            // `{comp_a, comp_b}`
+            for name in v.trim_matches(['{', '}']).split(',') {
+                let name = name.trim();
+                if !name.is_empty() {
+                    out.push(name);
+                }
+            }
+        }
+        // reduce/scatter/sort carry their combinator in to_apply (already
+        // covered); `calls=` appears in some fusion prints.
+        out
+    }
+
+    /// `index=N` attribute (get-tuple-element) if present.
+    pub fn tuple_index(&self) -> Option<usize> {
+        self.attrs.get("index")?.parse().ok()
+    }
+
+    /// Parameter ordinal for `parameter(N)` instructions.
+    pub fn parameter_number(&self) -> Option<usize> {
+        if self.opcode != "parameter" {
+            return None;
+        }
+        self.operands.first()?.parse().ok()
+    }
+
+    /// Parse a `{a,b,c}` int-list attribute.
+    pub fn int_list_attr(&self, key: &str) -> Option<Vec<u64>> {
+        let v = self.attrs.get(key)?;
+        let body = v.trim().trim_matches(['{', '}']);
+        if body.trim().is_empty() {
+            return Some(vec![]);
+        }
+        body.split(',').map(|s| s.trim().parse().ok()).collect()
+    }
+}
+
+/// One computation (function) in the module.
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub is_entry: bool,
+    /// Program order (HLO text is topologically sorted).
+    pub instructions: Vec<Instruction>,
+    /// Name → index into `instructions`.
+    pub index: HashMap<String, usize>,
+}
+
+impl Computation {
+    pub fn get(&self, name: &str) -> Option<&Instruction> {
+        self.index.get(name).map(|&i| &self.instructions[i])
+    }
+
+    pub fn root(&self) -> Option<&Instruction> {
+        self.instructions
+            .iter()
+            .find(|i| i.is_root)
+            .or_else(|| self.instructions.last())
+    }
+
+    /// Parameters sorted by ordinal.
+    pub fn parameters(&self) -> Vec<&Instruction> {
+        let mut params: Vec<&Instruction> = self
+            .instructions
+            .iter()
+            .filter(|i| i.opcode == "parameter")
+            .collect();
+        params.sort_by_key(|i| i.parameter_number().unwrap_or(usize::MAX));
+        params
+    }
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    pub computations: Vec<Computation>,
+    pub comp_index: HashMap<String, usize>,
+}
+
+impl Module {
+    pub fn entry(&self) -> &Computation {
+        self.computations
+            .iter()
+            .find(|c| c.is_entry)
+            .unwrap_or_else(|| self.computations.last().expect("empty module"))
+    }
+
+    pub fn computation(&self, name: &str) -> Option<&Computation> {
+        self.comp_index.get(name).map(|&i| &self.computations[i])
+    }
+
+    /// Total instruction count across all computations.
+    pub fn instruction_count(&self) -> usize {
+        self.computations.iter().map(|c| c.instructions.len()).sum()
+    }
+
+    /// Count of instructions per opcode (Fig.-9-style graph census).
+    pub fn opcode_census(&self) -> HashMap<String, usize> {
+        let mut census = HashMap::new();
+        for c in &self.computations {
+            for i in &c.instructions {
+                *census.entry(i.opcode.clone()).or_insert(0) += 1;
+            }
+        }
+        census
+    }
+}

@@ -1,0 +1,432 @@
+//! Buffer-liveness memory simulator over HLO program order (DESIGN.md S11–S12).
+//!
+//! Model (documented approximations, each mirroring what XLA's allocator
+//! does to the corresponding op):
+//!
+//! * every non-alias instruction allocates `shape.bytes()` at its program
+//!   point and frees it after its last use (the ROOT survives to the end);
+//! * **alias ops** allocate nothing and forward liveness to their inputs:
+//!   `tuple`, `get-tuple-element`, `reshape`, `bitcast`, `copy-done`,
+//!   `dynamic-update-slice` (in-place, as in XLA while-loop stacks),
+//!   `while` (loops run in place on their carry), and non-entry
+//!   `parameter`s (they alias the caller's operands);
+//! * `call`/`while`/`conditional` add the callee's *dynamic peak* on top of
+//!   the live set while they execute (loops re-use one iteration's worth);
+//! * **static** memory = entry parameters + constants + the entry root's
+//!   output + **loop state**: entry-level buffers threaded through a
+//!   `while` carry (jax's scan checkpoints — the stacked per-inner-step
+//!   θ/υ/∇L residuals).  This is exactly the paper's "inputs, parameters,
+//!   states, checkpoints" class (§4): allocated once, written once,
+//!   resident for the whole outer step.  Everything else is **dynamic** —
+//!   the activations MixFlow-MG attacks.
+//!
+//! Because the modules come straight from `jax.lower` (no XLA memory
+//! optimisation), the simulated dynamic peak measures the *structural*
+//! requirement of the program — the quantity Eq. (12) models.
+
+use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
+
+use super::ir::{Computation, Instruction, Module};
+
+/// Borrow a computation with the *module's* lifetime (not the simulator
+/// borrow), so recursive analysis needs no clones (§Perf L3).
+fn lookup<'m>(module: &'m Module, name: &str) -> Option<&'m Computation> {
+    module.comp_index.get(name).map(|&i| &module.computations[i])
+}
+
+/// Ops that allocate no new buffer (see module docs).
+fn is_alias_op(op: &str) -> bool {
+    matches!(
+        op,
+        "tuple"
+            | "get-tuple-element"
+            | "reshape"
+            | "bitcast"
+            | "copy-done"
+            | "copy-start"
+            | "dynamic-update-slice"
+            | "while"
+            | "optimization-barrier"
+    )
+}
+
+fn is_call_op(op: &str) -> bool {
+    matches!(op, "call" | "while" | "conditional")
+}
+
+/// Per-computation analysis (memoised).
+#[derive(Debug, Clone, Default)]
+struct CompReport {
+    /// Peak dynamic bytes while this computation runs (callees included).
+    dyn_peak: u64,
+    /// Constants allocated inside (counted as static at entry level only).
+    const_bytes: u64,
+    /// Entry-level while-carry buffers (checkpoint stacks) — static class.
+    state_bytes: u64,
+    /// (source line, dynamic bytes) samples across the flattened schedule.
+    timeline: Vec<(usize, u64)>,
+}
+
+/// Result of simulating a module.
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    /// Entry parameter bytes (inputs, θ, υ, η — static).
+    pub param_bytes: u64,
+    /// Constant payload bytes across reachable computations (static).
+    pub const_bytes: u64,
+    /// Entry root output bytes.
+    pub output_bytes: u64,
+    /// Loop-state bytes: scan-carry checkpoint stacks (static, §4).
+    pub state_bytes: u64,
+    /// Peak dynamic (activation) bytes — the paper's target quantity.
+    pub peak_dynamic: u64,
+    /// Static + peak dynamic.
+    pub peak_total: u64,
+    /// (source line, dynamic bytes) across the flattened schedule —
+    /// regenerates the paper's Figure 2.
+    pub timeline: Vec<(usize, u64)>,
+    /// Total instructions analysed (flattened, calls included once).
+    pub instructions: usize,
+}
+
+impl MemoryReport {
+    pub fn static_bytes(&self) -> u64 {
+        self.param_bytes + self.const_bytes + self.output_bytes
+            + self.state_bytes
+    }
+}
+
+/// The simulator (holds the memoisation cache).
+pub struct MemorySimulator<'m> {
+    module: &'m Module,
+    cache: HashMap<String, Rc<CompReport>>,
+    /// Cap on timeline samples (big modules produce 100k+ points).
+    pub max_timeline_points: usize,
+}
+
+impl<'m> MemorySimulator<'m> {
+    pub fn new(module: &'m Module) -> Self {
+        MemorySimulator {
+            module,
+            cache: HashMap::new(),
+            max_timeline_points: 200_000,
+        }
+    }
+
+    /// Skip timeline collection (sweep analyses don't need it — §Perf L3).
+    pub fn without_timeline(module: &'m Module) -> Self {
+        let mut s = Self::new(module);
+        s.max_timeline_points = 0;
+        s
+    }
+
+    /// Simulate the entry computation.
+    pub fn run(&mut self) -> MemoryReport {
+        let entry = self.module.entry();
+        let report = self.analyze(entry, true);
+        // Entry reports are not cached, so this unwrap never clones.
+        let report = Rc::try_unwrap(report).unwrap_or_else(|rc| (*rc).clone());
+
+        let param_bytes: u64 =
+            entry.parameters().iter().map(|p| p.shape.bytes()).sum();
+        let output_bytes = entry
+            .root()
+            .map(|r| r.shape.bytes())
+            .unwrap_or(0);
+        // Constants across all reachable computations.
+        let mut const_bytes = report.const_bytes;
+        let mut seen = HashSet::new();
+        self.collect_consts(entry, &mut seen, &mut const_bytes);
+        // `analyze` already counted entry-level constants; avoid double
+        // counting by taking the recursive sweep as the single source.
+        const_bytes -= report.const_bytes;
+
+        let static_bytes =
+            param_bytes + const_bytes + output_bytes + report.state_bytes;
+        MemoryReport {
+            param_bytes,
+            const_bytes,
+            output_bytes,
+            state_bytes: report.state_bytes,
+            peak_dynamic: report.dyn_peak,
+            peak_total: static_bytes + report.dyn_peak,
+            timeline: report.timeline,
+            instructions: self.module.instruction_count(),
+        }
+    }
+
+    fn collect_consts(
+        &self,
+        comp: &Computation,
+        seen: &mut HashSet<String>,
+        total: &mut u64,
+    ) {
+        if !seen.insert(comp.name.clone()) {
+            return;
+        }
+        for ins in &comp.instructions {
+            if ins.opcode == "constant" {
+                *total += ins.shape.bytes();
+            }
+            for callee in ins.called_computations() {
+                if let Some(c) = self.module.computation(callee) {
+                    self.collect_consts(c, seen, total);
+                }
+            }
+        }
+    }
+
+    /// Analyse one computation; memoised for non-entry computations.
+    fn analyze(&mut self, comp: &Computation, is_entry: bool) -> Rc<CompReport> {
+        if let Some(cached) = self.cache.get(&comp.name) {
+            return Rc::clone(cached);
+        }
+
+        // Resolve alias chains: buffer "sources" of each instruction.
+        // sources[name] = set of allocating instruction names this value
+        // may point into.
+        let mut sources: HashMap<&str, Vec<&str>> = HashMap::new();
+        for ins in &comp.instructions {
+            if is_alias_op(&ins.opcode)
+                || (ins.opcode == "parameter" && !is_entry)
+            {
+                let mut src = Vec::new();
+                for op in &ins.operands {
+                    match sources.get(op.as_str()) {
+                        Some(s) => src.extend(s.iter().copied()),
+                        None => src.push(op.as_str()),
+                    }
+                }
+                src.sort_unstable();
+                src.dedup();
+                sources.insert(&ins.name, src);
+            }
+        }
+        let resolve = |name: &str| -> Vec<&str> {
+            match sources.get(name) {
+                Some(s) => s.clone(),
+                None => vec![],
+            }
+        };
+
+        // Entry-level while-carry roots: scan checkpoint stacks and loop
+        // counters — the paper's static "checkpoints/states" class.
+        let mut state_roots: HashSet<&str> = HashSet::new();
+        if is_entry {
+            for ins in &comp.instructions {
+                if ins.opcode == "while" {
+                    for op in &ins.operands {
+                        match sources.get(op.as_str()) {
+                            Some(rs) => state_roots.extend(rs.iter().copied()),
+                            None => {
+                                state_roots.insert(op.as_str());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Last use (by flat index) of each allocating buffer.
+        let mut last_use: HashMap<&str, usize> = HashMap::new();
+        for (idx, ins) in comp.instructions.iter().enumerate() {
+            for op in &ins.operands {
+                let roots = sources.get(op.as_str());
+                match roots {
+                    Some(rs) => {
+                        for r in rs {
+                            last_use.insert(r, idx);
+                        }
+                    }
+                    None => {
+                        last_use.insert(op.as_str(), idx);
+                    }
+                }
+            }
+        }
+        // The root's buffers survive the computation.
+        let end = comp.instructions.len();
+        if let Some(root) = comp.root() {
+            let root_roots = if sources.contains_key(root.name.as_str()) {
+                resolve(&root.name)
+            } else {
+                vec![root.name.as_str()]
+            };
+            for r in root_roots {
+                last_use.insert(r, end);
+            }
+        }
+
+        // Walk in program order.
+        let mut live: u64 = 0;
+        let mut peak: u64 = 0;
+        let mut const_bytes: u64 = 0;
+        let mut frees: HashMap<usize, Vec<u64>> = HashMap::new();
+        let mut timeline: Vec<(usize, u64)> = Vec::new();
+
+        let mut state_bytes: u64 = 0;
+        for (idx, ins) in comp.instructions.iter().enumerate() {
+            let allocates = self.allocates(ins, is_entry);
+            if ins.opcode == "constant" {
+                const_bytes += ins.shape.bytes();
+            }
+            if allocates > 0 && state_roots.contains(ins.name.as_str()) {
+                // Checkpoint stacks: resident for the whole program,
+                // accounted on the static side (paper §4).
+                state_bytes += allocates;
+            } else if allocates > 0 {
+                live += allocates;
+                let lu = last_use.get(ins.name.as_str()).copied().unwrap_or(idx);
+                frees.entry(lu).or_default().push(allocates);
+            }
+
+            // Callee dynamic peak rides on top while the call runs.
+            let mut callee_peak = 0u64;
+            for callee in ins.called_computations() {
+                if let Some(c) = lookup(self.module, callee) {
+                    let r = self.analyze(c, false);
+                    callee_peak = callee_peak.max(r.dyn_peak);
+                    const_bytes += r.const_bytes;
+                    if is_call_op(&ins.opcode)
+                        && timeline.len() < self.max_timeline_points
+                    {
+                        for (l, b) in &r.timeline {
+                            timeline.push((*l, live + b));
+                        }
+                    }
+                }
+            }
+            peak = peak.max(live + callee_peak);
+            if timeline.len() < self.max_timeline_points {
+                timeline.push((ins.line, live));
+            }
+
+            // Free buffers whose last use was this instruction.
+            if let Some(fs) = frees.remove(&idx) {
+                for b in fs {
+                    live = live.saturating_sub(b);
+                }
+            }
+        }
+
+        let report = Rc::new(CompReport {
+            dyn_peak: peak,
+            const_bytes,
+            state_bytes,
+            timeline,
+        });
+        if !is_entry {
+            self.cache.insert(comp.name.clone(), Rc::clone(&report));
+        }
+        report
+    }
+
+    /// Bytes a (non-alias) instruction allocates.
+    fn allocates(&self, ins: &Instruction, _is_entry: bool) -> u64 {
+        if is_alias_op(&ins.opcode) || ins.opcode == "constant" {
+            return 0; // constants are counted as static, not dynamic
+        }
+        if ins.opcode == "parameter" {
+            // Entry params are static; callee params alias caller buffers.
+            return 0;
+        }
+        ins.shape.bytes()
+    }
+}
+
+/// Convenience: parse + simulate.
+pub fn analyze_text(text: &str) -> Result<MemoryReport, super::parser::ParseError> {
+    let module = super::parser::parse_module(text)?;
+    let mut sim = MemorySimulator::new(&module);
+    Ok(sim.run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parser::parse_module;
+
+    fn report(src: &str) -> MemoryReport {
+        let m = parse_module(src).unwrap();
+        MemorySimulator::new(&m).run()
+    }
+
+    #[test]
+    fn simple_chain_frees_dead_buffers() {
+        // a(16B) -> b(16B) -> c(16B); a dies after b, b after c.
+        let r = report(
+            "HloModule m\n\nENTRY e {\n  p = f32[4]{0} parameter(0)\n  a = f32[4]{0} negate(p)\n  b = f32[4]{0} negate(a)\n  ROOT c = f32[4]{0} negate(b)\n}\n",
+        );
+        // At any point at most two intermediates are live (producer+consumer).
+        assert_eq!(r.peak_dynamic, 32);
+        assert_eq!(r.param_bytes, 16);
+        assert_eq!(r.output_bytes, 16);
+    }
+
+    #[test]
+    fn fanout_keeps_buffer_alive() {
+        // a used by both b and the root sum: a must stay live through both.
+        let r = report(
+            "HloModule m\n\nENTRY e {\n  p = f32[4]{0} parameter(0)\n  a = f32[4]{0} negate(p)\n  b = f32[4]{0} negate(a)\n  c = f32[4]{0} negate(b)\n  ROOT d = f32[4]{0} add(a, c)\n}\n",
+        );
+        // live at c: a + b + c = 48
+        assert_eq!(r.peak_dynamic, 48);
+    }
+
+    #[test]
+    fn tuple_and_gte_are_aliases() {
+        let r = report(
+            "HloModule m\n\nENTRY e {\n  p = f32[4]{0} parameter(0)\n  a = f32[4]{0} negate(p)\n  t = (f32[4]{0}, f32[4]{0}) tuple(a, a)\n  g = f32[4]{0} get-tuple-element(t), index=0\n  ROOT b = f32[4]{0} negate(g)\n}\n",
+        );
+        // tuple/gte add nothing: a (16) + b (16).
+        assert_eq!(r.peak_dynamic, 32);
+    }
+
+    #[test]
+    fn constants_are_static() {
+        let r = report(
+            "HloModule m\n\nENTRY e {\n  c = f32[8]{0} constant({0,0,0,0,0,0,0,0})\n  ROOT n = f32[8]{0} negate(c)\n}\n",
+        );
+        assert_eq!(r.const_bytes, 32);
+        assert_eq!(r.peak_dynamic, 32); // just the negate output
+    }
+
+    #[test]
+    fn callee_peak_rides_on_live_set() {
+        let src = "HloModule m\n\nbig.1 {\n  bp = f32[4]{0} parameter(0)\n  t1 = f32[100]{0} broadcast(bp), dimensions={}\n  r1 = f32[] reduce-sum-placeholder(t1)\n  ROOT bo = f32[4]{0} broadcast(r1), dimensions={}\n}\n\nENTRY e {\n  p = f32[4]{0} parameter(0)\n  a = f32[4]{0} negate(p)\n  k = f32[4]{0} call(a), to_apply=big.1\n  ROOT z = f32[4]{0} add(a, k)\n}\n";
+        let r = report(src);
+        // callee peak = 400 (t1) + 4 (r1) + 16 (bo)... t1 dies after r1:
+        // walk: t1 live 400 → r1 +4 then free t1 → bo +16 ⇒ peak 404.
+        // entry: a(16) live + callee 404 + k(16 alloc before? k allocs 16
+        // at its own step) → peak = 16 + 16 + 404 = 436.
+        assert_eq!(r.peak_dynamic, 436);
+    }
+
+    #[test]
+    fn while_output_aliases_carry() {
+        let src = "HloModule m\n\ncond.1 {\n  cp = (s32[], f32[64]{0}) parameter(0)\n  i = s32[] get-tuple-element(cp), index=0\n  lim = s32[] constant(3)\n  ROOT lt = pred[] compare(i, lim), direction=LT\n}\n\nbody.1 {\n  bp = (s32[], f32[64]{0}) parameter(0)\n  i = s32[] get-tuple-element(bp), index=0\n  one = s32[] constant(1)\n  i2 = s32[] add(i, one)\n  x = f32[64]{0} get-tuple-element(bp), index=1\n  x2 = f32[64]{0} negate(x)\n  ROOT t = (s32[], f32[64]{0}) tuple(i2, x2)\n}\n\nENTRY e {\n  z = s32[] constant(0)\n  p = f32[64]{0} parameter(0)\n  init = (s32[], f32[64]{0}) tuple(z, p)\n  w = (s32[], f32[64]{0}) while(init), condition=cond.1, body=body.1\n  ROOT out = f32[64]{0} get-tuple-element(w), index=1\n}\n";
+        let r = report(src);
+        // body dyn peak: i2(4) + x2(256) = 260; while aliases its carry.
+        assert_eq!(r.peak_dynamic, 260);
+        assert_eq!(r.param_bytes, 256);
+    }
+
+    #[test]
+    fn timeline_covers_schedule() {
+        let r = report(
+            "HloModule m\n\nENTRY e {\n  p = f32[4]{0} parameter(0)\n  a = f32[4]{0} negate(p)\n  ROOT b = f32[4]{0} negate(a)\n}\n",
+        );
+        assert_eq!(r.timeline.len(), 3);
+        let max = r.timeline.iter().map(|(_, b)| *b).max().unwrap();
+        assert!(max <= r.peak_dynamic);
+    }
+
+    #[test]
+    fn static_bytes_sums_parts() {
+        let r = report(
+            "HloModule m\n\nENTRY e {\n  p = f32[4]{0} parameter(0)\n  ROOT a = f32[4]{0} negate(p)\n}\n",
+        );
+        assert_eq!(r.static_bytes(), r.param_bytes + r.const_bytes + r.output_bytes);
+    }
+}

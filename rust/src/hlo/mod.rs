@@ -1,0 +1,28 @@
+//! HLO-text analysis substrate (DESIGN.md S9–S13).
+//!
+//! The paper measured peak HBM on H100/TPUv5p fleets; our stand-in is a
+//! structural analysis of the very HLO modules the runtime executes:
+//!
+//! * [`parser`] — HLO text → [`ir::Module`] (computations, instructions,
+//!   operands, attributes, called-computation links).
+//! * [`shape`] — dtype/shape grammar + byte sizes.
+//! * [`memory`] — buffer-liveness simulator over the program order:
+//!   peak memory, static/dynamic split, and the Fig.-2-style timeline.
+//! * [`flops`] — FLOP/byte cost model per instruction (step-time model).
+//!
+//! HLO text straight out of `jax.lower` is *unoptimised*: its liveness is
+//! exactly the "what must a memory-naive runtime hold" quantity, which is
+//! the structural asymmetry MixFlow-MG attacks (stored inner-backward
+//! activations vs streamed JVPs).  Ratios between default/mixflow modules
+//! are therefore comparable to the paper's measured HBM ratios even though
+//! the absolute bytes differ from a post-XLA allocation.
+
+pub mod flops;
+pub mod ir;
+pub mod memory;
+pub mod parser;
+pub mod shape;
+
+pub use ir::{Computation, Instruction, Module};
+pub use memory::{MemoryReport, MemorySimulator};
+pub use shape::Shape;

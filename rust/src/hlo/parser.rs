@@ -1,0 +1,359 @@
+//! HLO text parser: `HloModule::ToString()` output → [`ir::Module`].
+//!
+//! The format is line-oriented and topologically sorted:
+//!
+//! ```text
+//! HloModule jit_fn, entry_computation_layout={...}
+//!
+//! comp_name {
+//!   a = f32[4]{0} parameter(0)
+//!   ROOT b = f32[4]{0} add(a, a), metadata={...}
+//! }
+//!
+//! ENTRY main.42 {
+//!   ...
+//! }
+//! ```
+//!
+//! We parse names, shapes, opcodes, operand lists and attributes; constant
+//! literal payloads are kept as raw text (their *shape* carries the bytes
+//! the memory model needs).
+
+use std::collections::HashMap;
+
+use super::ir::{Computation, Instruction, Module};
+use super::shape::Shape;
+
+/// Parse error with line information.
+#[derive(Debug, thiserror::Error)]
+#[error("hlo parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Parse a full HLO module from text.
+pub fn parse_module(text: &str) -> Result<Module, ParseError> {
+    let mut module_name = String::from("unknown");
+    let mut computations = Vec::new();
+    let mut current: Option<(String, bool, Vec<Instruction>)> = None;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("HloModule ") {
+            module_name = rest
+                .split([',', ' '])
+                .next()
+                .unwrap_or("unknown")
+                .to_string();
+            continue;
+        }
+        if current.is_none() {
+            // Expect a computation header: `[ENTRY ]name [(...)] ... {`
+            if let Some(header) = line.strip_suffix('{') {
+                let header = header.trim();
+                let (is_entry, name_part) = match header.strip_prefix("ENTRY ")
+                {
+                    Some(rest) => (true, rest.trim()),
+                    None => (false, header),
+                };
+                // Name ends at whitespace or '(' (param list prints for
+                // some versions).
+                let name = name_part
+                    .split(|c: char| c.is_whitespace() || c == '(')
+                    .next()
+                    .unwrap_or(name_part)
+                    .trim_start_matches('%')
+                    .to_string();
+                if name.is_empty() {
+                    return Err(err(lineno + 1, "empty computation name"));
+                }
+                current = Some((name, is_entry, Vec::new()));
+                continue;
+            }
+            return Err(err(
+                lineno + 1,
+                format!("expected computation header, got: {line}"),
+            ));
+        }
+        if line == "}" {
+            let (name, is_entry, instructions) = current.take().unwrap();
+            let index = instructions
+                .iter()
+                .enumerate()
+                .map(|(i, ins)| (ins.name.clone(), i))
+                .collect();
+            computations.push(Computation {
+                name,
+                is_entry,
+                instructions,
+                index,
+            });
+            continue;
+        }
+        let (_, _, instructions) = current.as_mut().unwrap();
+        instructions.push(parse_instruction(line, lineno + 1)?);
+    }
+    if current.is_some() {
+        return Err(err(usize::MAX, "unterminated computation"));
+    }
+    if computations.is_empty() {
+        return Err(err(0, "no computations found"));
+    }
+    let comp_index = computations
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (c.name.clone(), i))
+        .collect();
+    Ok(Module { name: module_name, computations, comp_index })
+}
+
+/// Parse one instruction line.
+fn parse_instruction(line: &str, lineno: usize) -> Result<Instruction, ParseError> {
+    let (is_root, rest) = match line.strip_prefix("ROOT ") {
+        Some(r) => (true, r),
+        None => (false, line),
+    };
+    let eq = rest
+        .find(" = ")
+        .ok_or_else(|| err(lineno, format!("no ' = ' in: {line}")))?;
+    let name = rest[..eq].trim().trim_start_matches('%').to_string();
+    let after = &rest[eq + 3..];
+
+    let (shape, after_shape) = Shape::parse_prefix(after)
+        .ok_or_else(|| err(lineno, format!("bad shape in: {after}")))?;
+    let after_shape = after_shape.trim_start();
+
+    // Opcode up to '('.
+    let paren = after_shape
+        .find('(')
+        .ok_or_else(|| err(lineno, format!("no '(' in: {after_shape}")))?;
+    let opcode = after_shape[..paren].trim().to_string();
+    if opcode.is_empty() || !opcode.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_') {
+        return Err(err(lineno, format!("bad opcode: {opcode:?}")));
+    }
+
+    // Operand list: balanced-parenthesis scan from `paren`.
+    let body_start = paren + 1;
+    let mut depth = 1usize;
+    let mut in_string = false;
+    let bytes = after_shape.as_bytes();
+    let mut i = body_start;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if in_string {
+            if c == '"' {
+                in_string = false;
+            }
+        } else {
+            match c {
+                '"' => in_string = true,
+                '(' | '{' | '[' => depth += 1,
+                ')' | '}' | ']' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    if depth != 0 {
+        return Err(err(lineno, "unbalanced parens in operand list"));
+    }
+    let operand_text = &after_shape[body_start..i];
+    let attr_text = after_shape[i + 1..].trim_start_matches(',').trim();
+
+    // Constants keep their payload raw (stashed under "__payload" so the
+    // cost model can read scalar loop bounds); everything else splits
+    // operands at top-level commas.
+    let mut payload: Option<String> = None;
+    let operands = if opcode == "constant" {
+        payload = Some(operand_text.trim().to_string());
+        Vec::new()
+    } else {
+        split_top_level(operand_text)
+            .into_iter()
+            .map(|s| {
+                super::shape::skip_index_comment(s.trim())
+                    .trim_start_matches('%')
+                    .to_string()
+            })
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+
+    let mut attrs = parse_attrs(attr_text);
+    if let Some(p) = payload {
+        attrs.insert("__payload".to_string(), p);
+    }
+    Ok(Instruction {
+        name,
+        shape,
+        opcode,
+        operands,
+        attrs,
+        is_root,
+        line: lineno,
+    })
+}
+
+/// Split on commas not nested inside (), {}, [] or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_string = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        if in_string {
+            if c == '"' {
+                in_string = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_string = true,
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        out.push(&s[start..]);
+    }
+    out.into_iter().filter(|p| !p.trim().is_empty()).collect()
+}
+
+/// Parse `key=value, key={...}, key="..."` attribute lists.
+fn parse_attrs(s: &str) -> HashMap<String, String> {
+    let mut attrs = HashMap::new();
+    for part in split_top_level(s) {
+        let part = part.trim();
+        if let Some((k, v)) = part.split_once('=') {
+            attrs.insert(
+                k.trim().to_string(),
+                v.trim().trim_start_matches('%').to_string(),
+            );
+        }
+    }
+    attrs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::shape::DType;
+
+    const SAMPLE: &str = r#"HloModule jit_f, entry_computation_layout={(f32[4]{0})->f32[4]{0}}
+
+helper.1 {
+  p = f32[4]{0} parameter(0)
+  c = f32[] constant(2)
+  b = f32[4]{0} broadcast(c), dimensions={}
+  ROOT m = f32[4]{0} multiply(p, b)
+}
+
+ENTRY main.5 {
+  x = f32[4]{0} parameter(0)
+  call.1 = f32[4]{0} call(x), to_apply=helper.1
+  t = (f32[4]{0}, f32[4]{0}) tuple(call.1, x)
+  g = f32[4]{0} get-tuple-element(t), index=0
+  ROOT out = f32[4]{0} add(g, x)
+}
+"#;
+
+    #[test]
+    fn parses_sample_module() {
+        let m = parse_module(SAMPLE).unwrap();
+        assert_eq!(m.name, "jit_f");
+        assert_eq!(m.computations.len(), 2);
+        assert_eq!(m.entry().name, "main.5");
+        assert_eq!(m.instruction_count(), 9);
+    }
+
+    #[test]
+    fn instruction_details() {
+        let m = parse_module(SAMPLE).unwrap();
+        let e = m.entry();
+        let call = e.get("call.1").unwrap();
+        assert_eq!(call.opcode, "call");
+        assert_eq!(call.operands, ["x"]);
+        assert_eq!(call.called_computations(), ["helper.1"]);
+        let g = e.get("g").unwrap();
+        assert_eq!(g.tuple_index(), Some(0));
+        assert!(e.root().unwrap().name == "out");
+    }
+
+    #[test]
+    fn parameter_numbers_and_shapes() {
+        let m = parse_module(SAMPLE).unwrap();
+        let h = m.computation("helper.1").unwrap();
+        let p = h.parameters();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].parameter_number(), Some(0));
+        assert_eq!(p[0].shape.dtype(), Some(DType::F32));
+    }
+
+    #[test]
+    fn constant_payload_not_operands() {
+        let line = "c.1 = f32[2,2]{1,0} constant({ { 1, 2 }, { 3, 4 } })";
+        let i = parse_instruction(line, 1).unwrap();
+        assert_eq!(i.opcode, "constant");
+        assert!(i.operands.is_empty());
+        assert_eq!(i.shape.bytes(), 16);
+    }
+
+    #[test]
+    fn attrs_with_braces() {
+        let line = "d = f32[2,3]{1,0} dot(a, b), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name=\"jit(f)/dot\"}";
+        let i = parse_instruction(line, 1).unwrap();
+        assert_eq!(i.operands, ["a", "b"]);
+        assert_eq!(i.int_list_attr("lhs_contracting_dims"), Some(vec![1]));
+        assert!(i.attrs.contains_key("metadata"));
+    }
+
+    #[test]
+    fn while_attrs() {
+        let line = "w = (s32[], f32[4]{0}) while(init), condition=cond.1, body=body.2";
+        let i = parse_instruction(line, 1).unwrap();
+        let called = i.called_computations();
+        assert!(called.contains(&"body.2"));
+        assert!(called.contains(&"cond.1"));
+    }
+
+    #[test]
+    fn tuple_shape_with_index_comments() {
+        let line = "t = (f32[2]{0}, /*index=1*/s32[]) tuple(a, b)";
+        let i = parse_instruction(line, 1).unwrap();
+        assert_eq!(i.shape.bytes(), 12);
+        assert_eq!(i.operands, ["a", "b"]);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse_module("ENTRY broken {\n  nonsense\n}\n").is_err());
+        assert!(parse_module("").is_err());
+        assert!(parse_instruction("x = q9[3] foo(a)", 1).is_err());
+    }
+
+    #[test]
+    fn opcode_census() {
+        let m = parse_module(SAMPLE).unwrap();
+        let census = m.opcode_census();
+        assert_eq!(census["parameter"], 2);
+        assert_eq!(census["call"], 1);
+    }
+}

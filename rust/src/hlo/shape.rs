@@ -1,0 +1,304 @@
+//! HLO shape/dtype grammar and byte-size model.
+//!
+//! Grammar (as printed by `HloModule::ToString`):
+//! `f32[4,32]{1,0}` — element type, dims, optional layout;
+//! `(f32[2]{0}, s32[])` — tuples; `pred[]` — scalars; `token[]`.
+
+use std::fmt;
+
+/// Element types we encounter in jax-lowered modules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    BF16,
+    F16,
+    F32,
+    F64,
+    C64,
+    C128,
+    Token,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "pred" => DType::Pred,
+            "s8" => DType::S8,
+            "s16" => DType::S16,
+            "s32" => DType::S32,
+            "s64" => DType::S64,
+            "u8" => DType::U8,
+            "u16" => DType::U16,
+            "u32" => DType::U32,
+            "u64" => DType::U64,
+            "bf16" => DType::BF16,
+            "f16" => DType::F16,
+            "f32" => DType::F32,
+            "f64" => DType::F64,
+            "c64" => DType::C64,
+            "c128" => DType::C128,
+            "token" => DType::Token,
+            _ => return None,
+        })
+    }
+
+    /// Bytes per element.
+    pub fn size(self) -> u64 {
+        match self {
+            DType::Pred | DType::S8 | DType::U8 => 1,
+            DType::S16 | DType::U16 | DType::BF16 | DType::F16 => 2,
+            DType::S32 | DType::U32 | DType::F32 => 4,
+            DType::S64 | DType::U64 | DType::F64 | DType::C64 => 8,
+            DType::C128 => 16,
+            DType::Token => 0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::Pred => "pred",
+            DType::S8 => "s8",
+            DType::S16 => "s16",
+            DType::S32 => "s32",
+            DType::S64 => "s64",
+            DType::U8 => "u8",
+            DType::U16 => "u16",
+            DType::U32 => "u32",
+            DType::U64 => "u64",
+            DType::BF16 => "bf16",
+            DType::F16 => "f16",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::C64 => "c64",
+            DType::C128 => "c128",
+            DType::Token => "token",
+        }
+    }
+}
+
+/// An HLO shape: array or tuple.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Shape {
+    Array { dtype: DType, dims: Vec<u64> },
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn scalar(dtype: DType) -> Shape {
+        Shape::Array { dtype, dims: vec![] }
+    }
+
+    pub fn array(dtype: DType, dims: &[u64]) -> Shape {
+        Shape::Array { dtype, dims: dims.to_vec() }
+    }
+
+    /// Number of elements (arrays only; tuples sum their members).
+    pub fn elements(&self) -> u64 {
+        match self {
+            Shape::Array { dims, .. } => dims.iter().product(),
+            Shape::Tuple(items) => items.iter().map(Shape::elements).sum(),
+        }
+    }
+
+    /// Total payload bytes (tuple pointer tables ignored).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Shape::Array { dtype, dims } => {
+                dtype.size() * dims.iter().product::<u64>()
+            }
+            Shape::Tuple(items) => items.iter().map(Shape::bytes).sum(),
+        }
+    }
+
+    pub fn is_tuple(&self) -> bool {
+        matches!(self, Shape::Tuple(_))
+    }
+
+    pub fn tuple_element(&self, idx: usize) -> Option<&Shape> {
+        match self {
+            Shape::Tuple(items) => items.get(idx),
+            _ => None,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        match self {
+            Shape::Array { dims, .. } => dims.len(),
+            Shape::Tuple(_) => 0,
+        }
+    }
+
+    pub fn dims(&self) -> &[u64] {
+        match self {
+            Shape::Array { dims, .. } => dims,
+            Shape::Tuple(_) => &[],
+        }
+    }
+
+    pub fn dtype(&self) -> Option<DType> {
+        match self {
+            Shape::Array { dtype, .. } => Some(*dtype),
+            Shape::Tuple(_) => None,
+        }
+    }
+
+    /// Parse a shape at the start of `s`; returns (shape, rest).
+    ///
+    /// Accepts optional layout `{...}` suffixes after arrays (ignored) and
+    /// nested tuples.
+    pub fn parse_prefix(s: &str) -> Option<(Shape, &str)> {
+        let s = s.trim_start();
+        if let Some(rest) = s.strip_prefix('(') {
+            let mut items = Vec::new();
+            let mut cur = rest.trim_start();
+            if let Some(r) = cur.strip_prefix(')') {
+                return Some((Shape::Tuple(items), r));
+            }
+            loop {
+                // Tuple element indices can appear as comments.
+                let trimmed = skip_index_comment(cur);
+                let (shape, rest) = Shape::parse_prefix(trimmed)?;
+                items.push(shape);
+                let rest = rest.trim_start();
+                if let Some(r) = rest.strip_prefix(',') {
+                    cur = r.trim_start();
+                } else if let Some(r) = rest.strip_prefix(')') {
+                    return Some((Shape::Tuple(items), r));
+                } else {
+                    return None;
+                }
+            }
+        }
+        // Array: dtype ident then optional [dims] then optional {layout}.
+        let end = s
+            .find(|c: char| !c.is_ascii_alphanumeric())
+            .unwrap_or(s.len());
+        let dtype = DType::parse(&s[..end])?;
+        let mut rest = &s[end..];
+        let mut dims = Vec::new();
+        if let Some(r) = rest.strip_prefix('[') {
+            let close = r.find(']')?;
+            let body = &r[..close];
+            if !body.trim().is_empty() {
+                for d in body.split(',') {
+                    dims.push(d.trim().parse().ok()?);
+                }
+            }
+            rest = &r[close + 1..];
+        }
+        if let Some(r) = rest.strip_prefix('{') {
+            let close = r.find('}')?;
+            rest = &r[close + 1..];
+        }
+        Some((Shape::Array { dtype, dims }, rest))
+    }
+
+    /// Parse a complete shape string.
+    pub fn parse(s: &str) -> Option<Shape> {
+        let (shape, rest) = Shape::parse_prefix(s)?;
+        rest.trim().is_empty().then_some(shape)
+    }
+}
+
+/// Skip `/*index=N*/` comments the HLO printer inserts in long tuples.
+pub fn skip_index_comment(s: &str) -> &str {
+    let t = s.trim_start();
+    if let Some(rest) = t.strip_prefix("/*") {
+        if let Some(end) = rest.find("*/") {
+            return rest[end + 2..].trim_start();
+        }
+    }
+    t
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Shape::Array { dtype, dims } => {
+                write!(f, "{}[", dtype.name())?;
+                for (i, d) in dims.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{d}")?;
+                }
+                write!(f, "]")
+            }
+            Shape::Tuple(items) => {
+                write!(f, "(")?;
+                for (i, s) in items.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{s}")?;
+                }
+                write!(f, ")")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_arrays() {
+        let s = Shape::parse("f32[4,32]{1,0}").unwrap();
+        assert_eq!(s, Shape::array(DType::F32, &[4, 32]));
+        assert_eq!(s.bytes(), 4 * 32 * 4);
+        assert_eq!(Shape::parse("pred[]").unwrap().bytes(), 1);
+        assert_eq!(Shape::parse("s32[]").unwrap().rank(), 0);
+    }
+
+    #[test]
+    fn parses_tuples_with_comments() {
+        let s = Shape::parse(
+            "(f32[2]{0}, s32[], /*index=2*/f32[3,3]{1,0})",
+        )
+        .unwrap();
+        assert_eq!(s.bytes(), 8 + 4 + 36);
+        assert_eq!(s.tuple_element(2).unwrap().elements(), 9);
+    }
+
+    #[test]
+    fn parses_nested_tuple() {
+        let s = Shape::parse("((f32[2]{0}), (s32[], pred[]))").unwrap();
+        assert!(s.is_tuple());
+        assert_eq!(s.bytes(), 8 + 4 + 1);
+    }
+
+    #[test]
+    fn empty_tuple() {
+        assert_eq!(Shape::parse("()").unwrap(), Shape::Tuple(vec![]));
+    }
+
+    #[test]
+    fn bf16_and_u8_sizes() {
+        assert_eq!(Shape::parse("bf16[10]").unwrap().bytes(), 20);
+        assert_eq!(Shape::parse("u8[10]{0}").unwrap().bytes(), 10);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Shape::parse("q99[3]").is_none());
+        assert!(Shape::parse("f32[3").is_none());
+        assert!(Shape::parse("f32[3] extra").is_none());
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for s in ["f32[4,32]", "(f32[2], s32[])", "pred[]"] {
+            let shape = Shape::parse(s).unwrap();
+            assert_eq!(Shape::parse(&shape.to_string()).unwrap(), shape);
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! # MixFlow-MG — Scalable Meta-Learning via Mixed-Mode Differentiation
+//!
+//! Rust Layer-3 coordinator for the ICML 2025 paper's system.  The crate
+//! loads HLO-text artifacts AOT-compiled from the JAX/Pallas layers
+//! (`python/compile/`), executes them on the PJRT CPU client, analyses
+//! their memory behaviour with a buffer-liveness simulator, and regenerates
+//! every table and figure of the paper's evaluation (DESIGN.md §4).
+//!
+//! Module map:
+//! * [`util`] — offline-environment substrates: JSON, CLI args, PRNG,
+//!   ASCII tables, micro-bench harness, property-test harness.
+//! * [`hlo`] — HLO text parser → IR, shapes, scheduling, buffer liveness,
+//!   the peak-memory simulator (static/dynamic split, Fig. 2 timelines)
+//!   and a FLOP cost model.
+//! * [`runtime`] — PJRT client wrapper: artifact manifest, compile cache,
+//!   literal construction, timed execution.
+//! * [`coordinator`] — experiment configs, sweep grids, the threaded
+//!   runner, results store, and the paper-style report renderer.
+//! * [`meta`] — the end-to-end meta-training driver (synthetic corpus +
+//!   outer loop over `train_step` artifacts).
+
+pub mod coordinator;
+pub mod hlo;
+pub mod meta;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifacts directory relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory from the current working directory,
+/// walking up so examples/benches work from any workspace subdir.
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(env) = std::env::var("MIXFLOW_ARTIFACTS") {
+        let p = std::path::PathBuf::from(env);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

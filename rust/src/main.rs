@@ -1,0 +1,328 @@
+//! `mixflow` CLI — the Layer-3 coordinator entry point.
+//!
+//! Subcommands:
+//! * `info`                 — manifest summary (artifacts, groups, sizes)
+//! * `analyze <key>`        — HLO memory/cost analysis of one artifact
+//! * `run <key>`            — execute one exec-tier artifact, report timing
+//! * `sweep --group <g>`    — run a figure group, print paper-style ratios
+//! * `train --task <t>`     — E2E meta-training loop (loss curve)
+//! * `report --group <g>`   — re-render reports from stored results
+//! * `verify`               — numerics cross-check default vs mixflow
+
+use anyhow::{anyhow, Result};
+use mixflow::coordinator::report as rpt;
+use mixflow::coordinator::runner::{pair_ratios, ExperimentRunner, RunOptions};
+use mixflow::coordinator::ResultsStore;
+use mixflow::hlo::{flops::CostModel, parser, MemorySimulator};
+use mixflow::meta::MetaTrainer;
+use mixflow::runtime::{Manifest, Runtime};
+use mixflow::util::args::ArgSpec;
+use mixflow::util::stats::{human_bytes, human_secs};
+use mixflow::util::table::Table;
+
+fn main() {
+    let spec = ArgSpec::new(
+        "mixflow",
+        "MixFlow-MG coordinator: run + analyse AOT meta-gradient artifacts",
+    )
+    .positional("command", "info|analyze|run|sweep|train|report|verify")
+    .flag("key", None, "artifact key (analyze/run)")
+    .flag("group", None, "manifest group (sweep/report)")
+    .flag("task", Some("maml"), "task for train (maml|learning_lr|loss_weighting)")
+    .flag("steps", Some("100"), "outer steps for train")
+    .flag("iters", Some("5"), "timing iterations")
+    .flag("seed", Some("0"), "input seed")
+    .switch("no-exec", "analysis only (skip PJRT execution)")
+    .switch("timeline", "print the Fig.2-style memory timeline (analyze)");
+
+    let args = match spec.parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &mixflow::util::args::Args) -> Result<()> {
+    match args.positional(0).unwrap_or("") {
+        "info" => cmd_info(),
+        "analyze" => cmd_analyze(
+            args.get("key").ok_or_else(|| anyhow!("--key required"))?,
+            args.get_bool("timeline"),
+        ),
+        "run" => cmd_run(
+            args.get("key").ok_or_else(|| anyhow!("--key required"))?,
+            args.get_usize("iters").map_err(|e| anyhow!(e))?,
+            args.get_usize("seed").map_err(|e| anyhow!(e))? as u64,
+        ),
+        "sweep" => cmd_sweep(
+            args.get("group")
+                .ok_or_else(|| anyhow!("--group required"))?,
+            !args.get_bool("no-exec"),
+            args.get_usize("iters").map_err(|e| anyhow!(e))?,
+        ),
+        "train" => cmd_train(
+            args.get("task").unwrap(),
+            args.get_usize("steps").map_err(|e| anyhow!(e))?,
+            args.get_usize("seed").map_err(|e| anyhow!(e))? as u64,
+        ),
+        "report" => cmd_report(
+            args.get("group")
+                .ok_or_else(|| anyhow!("--group required"))?,
+        ),
+        "verify" => cmd_verify(args.get_usize("seed").unwrap_or(0) as u64),
+        "exec-file" => cmd_exec_file(
+            args.get("key").ok_or_else(|| anyhow!("--key <path> required"))?,
+        ),
+        other => Err(anyhow!(
+            "unknown command {other:?} (try --help)"
+        )),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    let manifest = Manifest::discover()?;
+    println!(
+        "artifacts dir: {} (jax {})",
+        manifest.dir.display(),
+        manifest.jax_version
+    );
+    let mut t = Table::new(&["group", "artifacts", "exec", "pairs"])
+        .numeric_cols(&[1, 2, 3]);
+    let mut groups: Vec<_> = manifest.groups.keys().collect();
+    groups.sort();
+    for g in groups {
+        let metas = manifest.group(g);
+        let exec = metas.iter().filter(|m| m.tier == "exec").count();
+        let pairs = manifest.pairs(&metas).len();
+        t.row(vec![
+            g.clone(),
+            metas.len().to_string(),
+            exec.to_string(),
+            pairs.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("total artifacts: {}", manifest.artifacts.len());
+    Ok(())
+}
+
+fn cmd_analyze(key: &str, timeline: bool) -> Result<()> {
+    let manifest = Manifest::discover()?;
+    let meta = manifest.get(key)?;
+    let text = std::fs::read_to_string(manifest.hlo_path(meta))?;
+    let module = parser::parse_module(&text).map_err(|e| anyhow!("{e}"))?;
+    let mem = MemorySimulator::new(&module).run();
+    let cost = CostModel::new(&module).run();
+    println!("artifact: {key}");
+    println!("  kind={} task={} variant={} tier={}", meta.kind, meta.task, meta.variant, meta.tier);
+    println!("  instructions (flattened): {}", mem.instructions);
+    println!("  params:    {}", human_bytes(mem.param_bytes));
+    println!("  constants: {}", human_bytes(mem.const_bytes));
+    println!("  outputs:   {}", human_bytes(mem.output_bytes));
+    println!("  static:    {}", human_bytes(mem.static_bytes()));
+    println!("  peak dynamic: {}", human_bytes(mem.peak_dynamic));
+    println!("  peak total:   {}", human_bytes(mem.peak_total));
+    println!("  est. flops: {:.3e}  bytes accessed: {:.3e}", cost.flops, cost.bytes);
+    if let Some(stats) = meta.xla_stats {
+        println!(
+            "  XLA compiled stats: temp={} args={} out={}",
+            human_bytes(stats.temp_bytes),
+            human_bytes(stats.argument_bytes),
+            human_bytes(stats.output_bytes)
+        );
+    }
+    if timeline {
+        println!(
+            "{}",
+            rpt::timeline_plot(
+                &format!("Figure 2 — memory timeline for {key}"),
+                &mem.timeline,
+                100,
+                16
+            )
+        );
+    }
+    Ok(())
+}
+
+fn cmd_run(key: &str, iters: usize, seed: u64) -> Result<()> {
+    let runtime = Runtime::new()?;
+    let loaded = runtime.load(key)?;
+    println!(
+        "compiled {key} in {} on {}",
+        human_secs(loaded.compile_seconds),
+        runtime.platform()
+    );
+    let inputs = loaded.default_inputs(seed)?;
+    // Sanity: surface NaN/Inf in the outputs (a silent-corruption guard).
+    let outputs = loaded.execute(&inputs)?;
+    let mut nan = 0usize;
+    let mut total = 0usize;
+    for lit in &outputs {
+        if let Ok(v) = lit.to_vec::<f32>() {
+            nan += v.iter().filter(|x| !x.is_finite()).count();
+            total += v.len();
+        }
+    }
+    println!(
+        "outputs: {} literals, {} / {total} non-finite f32 values{}",
+        outputs.len(),
+        nan,
+        if nan > 0 { "  <-- NUMERICS PROBLEM" } else { "" }
+    );
+    let summary = loaded.time_steps(&inputs, iters)?;
+    println!(
+        "step time: median={} mean={} p95={} (n={})",
+        human_secs(summary.median),
+        human_secs(summary.mean),
+        human_secs(summary.p95),
+        summary.n
+    );
+    Ok(())
+}
+
+fn cmd_sweep(group: &str, execute: bool, iters: usize) -> Result<()> {
+    let runtime = Runtime::new()?;
+    let runner = ExperimentRunner::new(
+        &runtime,
+        RunOptions { timing_iters: iters, execute, seed: 0 },
+    );
+    let measurements = runner.run_group(group);
+    let store = ResultsStore::discover()?;
+    for m in &measurements {
+        store.append(group, m)?;
+    }
+    let pairs = pair_ratios(&measurements);
+    println!("{}", rpt::fig4_sorted_ratios(&pairs));
+    Ok(())
+}
+
+fn cmd_train(task: &str, steps: usize, seed: u64) -> Result<()> {
+    let runtime = Runtime::new()?;
+    // Find the e2e train artifact for this task.
+    let key = runtime
+        .manifest
+        .group("e2e")
+        .iter()
+        .find(|m| m.task == task)
+        .map(|m| m.key.clone())
+        .ok_or_else(|| anyhow!("no e2e train_step artifact for {task}"))?;
+    println!("training {key} for {steps} outer steps...");
+    let mut trainer = MetaTrainer::new(&runtime, &key, seed);
+    let report = trainer.train(steps)?;
+    let (head, tail) = report.improvement(10);
+    println!(
+        "steps={} wall={} ({:.2} steps/s)",
+        report.steps,
+        human_secs(report.seconds),
+        report.steps_per_second
+    );
+    for (i, l) in report.losses.iter().enumerate() {
+        if i % (steps / 20).max(1) == 0 || i + 1 == report.losses.len() {
+            println!("  step {i:>4}  val_loss {l:.4}");
+        }
+    }
+    println!("mean first-10 loss {head:.4} → mean last-10 loss {tail:.4}");
+    Ok(())
+}
+
+fn cmd_report(group: &str) -> Result<()> {
+    let store = ResultsStore::discover()?;
+    let measurements = store.load_latest(group)?;
+    if measurements.is_empty() {
+        return Err(anyhow!(
+            "no stored results for {group}; run `mixflow sweep --group {group}` first"
+        ));
+    }
+    let pairs = pair_ratios(&measurements);
+    println!("{}", rpt::fig4_sorted_ratios(&pairs));
+    Ok(())
+}
+
+/// Debug tool: compile an arbitrary HLO text file, synthesise inputs from
+/// its entry parameter shapes (f32 → 0.05·N(0,1), s32 → tokens <128), run
+/// once and report output finiteness.
+fn cmd_exec_file(path: &str) -> Result<()> {
+    use mixflow::hlo::parser;
+    use mixflow::util::prng::Prng;
+    let text = std::fs::read_to_string(path)?;
+    let module = parser::parse_module(&text).map_err(|e| anyhow!("{e}"))?;
+    let entry = module.entry();
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let mut rng = Prng::new(0);
+    let mut inputs = Vec::new();
+    for p in entry.parameters() {
+        let dims: Vec<i64> =
+            p.shape.dims().iter().map(|&d| d as i64).collect();
+        let n: usize = p.shape.elements() as usize;
+        let lit = match p.shape.dtype() {
+            Some(mixflow::hlo::shape::DType::F32) => {
+                xla::Literal::vec1(&rng.normal_vec(n, 0.05)).reshape(&dims)?
+            }
+            Some(mixflow::hlo::shape::DType::S32) => {
+                xla::Literal::vec1(&rng.token_vec(n, 128)).reshape(&dims)?
+            }
+            other => return Err(anyhow!("unhandled dtype {other:?}")),
+        };
+        inputs.push(lit);
+    }
+    let result = exe.execute::<xla::Literal>(&inputs)?[0][0]
+        .to_literal_sync()?;
+    let outs = result.to_tuple()?;
+    for (i, o) in outs.iter().enumerate() {
+        if let Ok(v) = o.to_vec::<f32>() {
+            let bad = v.iter().filter(|x| !x.is_finite()).count();
+            println!(
+                "out[{i}] n={} nonfinite={bad} head={:?}",
+                v.len(),
+                &v[..v.len().min(4)]
+            );
+        } else {
+            println!("out[{i}] (non-f32)");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_verify(seed: u64) -> Result<()> {
+    let runtime = Runtime::new()?;
+    let metas = runtime.manifest.group("fig4_sweep");
+    let pairs = runtime.manifest.pairs(&metas);
+    let take = pairs.len().min(3);
+    println!("verifying {take} default/mixflow pairs produce identical meta-gradients...");
+    for (d, x) in pairs.into_iter().take(take) {
+        let ld = runtime.load(&d.key)?;
+        let lx = runtime.load(&x.key)?;
+        let inputs = ld.default_inputs(seed)?;
+        let od = ld.execute(&inputs)?;
+        let ox = lx.execute(&inputs)?;
+        let mut max_diff = 0f32;
+        for (a, b) in od.iter().zip(ox.iter()) {
+            let va = a.to_vec::<f32>()?;
+            let vb = b.to_vec::<f32>()?;
+            for (x, y) in va.iter().zip(vb.iter()) {
+                max_diff = max_diff.max((x - y).abs());
+            }
+        }
+        let ok = max_diff < 1e-3;
+        println!(
+            "  {} vs {}: max |Δ| = {max_diff:.2e} {}",
+            d.key,
+            x.key,
+            if ok { "OK" } else { "MISMATCH" }
+        );
+        if !ok {
+            return Err(anyhow!("meta-gradient mismatch"));
+        }
+    }
+    println!("verify OK");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+//! End-to-end meta-training driver (DESIGN.md S18).
+
+pub mod trainer;
+
+pub use trainer::{MetaTrainer, TrainReport};

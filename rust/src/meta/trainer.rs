@@ -1,0 +1,181 @@
+//! Outer-loop meta-training over a `train_step` artifact.
+//!
+//! One artifact = one full outer update (inner unroll + MixFlow-MG
+//! backward + meta-Adam on η), so this loop is the entire serving surface:
+//! feed state + fresh synthetic batches, read back (η', meta-opt', loss).
+//! Python is nowhere on this path — the initial state comes from the
+//! `.init.npz` the AOT pipeline wrote.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::runtime::inputs::corpus_batch;
+use crate::runtime::Runtime;
+use crate::util::prng::Prng;
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub artifact: String,
+    pub losses: Vec<f64>,
+    pub steps: usize,
+    pub seconds: f64,
+    pub steps_per_second: f64,
+}
+
+impl TrainReport {
+    /// Mean loss over the first/last `k` steps — the E2E success signal.
+    pub fn improvement(&self, k: usize) -> (f64, f64) {
+        let k = k.min(self.losses.len() / 2).max(1);
+        let head: f64 =
+            self.losses[..k].iter().sum::<f64>() / k as f64;
+        let tail: f64 = self.losses[self.losses.len() - k..]
+            .iter()
+            .sum::<f64>()
+            / k as f64;
+        (head, tail)
+    }
+}
+
+/// Drives the outer loop for one train-step artifact.
+pub struct MetaTrainer<'r> {
+    runtime: &'r Runtime,
+    key: String,
+    rng: Prng,
+}
+
+impl<'r> MetaTrainer<'r> {
+    pub fn new(runtime: &'r Runtime, key: &str, seed: u64) -> Self {
+        MetaTrainer { runtime, key: key.to_string(), rng: Prng::new(seed) }
+    }
+
+    /// Run `steps` outer updates, logging the validation loss each step.
+    pub fn train(&mut self, steps: usize) -> Result<TrainReport> {
+        let loaded = self.runtime.load(&self.key)?;
+        let meta = &loaded.meta;
+        if meta.kind != "train_step" {
+            return Err(anyhow!("{} is not a train_step artifact", self.key));
+        }
+        let n_state = meta
+            .extra_u64("num_state_leaves")
+            .ok_or_else(|| anyhow!("missing num_state_leaves"))?
+            as usize;
+        let n_eta = meta.extra_u64("num_eta_leaves").unwrap_or(0) as usize;
+        let n_meta_opt =
+            meta.extra_u64("num_meta_opt_leaves").unwrap_or(0) as usize;
+        if meta.inputs.len() != n_state + 2 {
+            return Err(anyhow!(
+                "expected {} state leaves + xs + val, manifest has {} inputs",
+                n_state,
+                meta.inputs.len()
+            ));
+        }
+
+        // State: η, meta-opt, θ₀, inner-opt — from the AOT init dump.
+        let mut state = self.runtime.load_init_state(meta)?;
+        if state.len() != n_state {
+            return Err(anyhow!(
+                "init npz has {} leaves, manifest says {n_state}",
+                state.len()
+            ));
+        }
+        let xs_spec = meta.inputs[n_state].clone();
+        let val_spec = meta.inputs[n_state + 1].clone();
+        let vocab = meta.vocab_size as u32;
+
+        let mut losses = Vec::with_capacity(steps);
+        let t0 = std::time::Instant::now();
+        for _step in 0..steps {
+            let xs = corpus_batch(&xs_spec, &mut self.rng, vocab)?;
+            let val = corpus_batch(&val_spec, &mut self.rng, vocab)?;
+            let mut inputs: Vec<Literal> = Vec::with_capacity(state.len() + 2);
+            inputs.append(&mut state);
+            inputs.push(xs);
+            inputs.push(val);
+            let mut outputs = loaded.execute(&inputs)?;
+            if std::env::var("MIXFLOW_TRAIN_DEBUG").is_ok() && _step == 0 {
+                for i in [0, 24, 26, 54, 82, 106, 109, 136, 160, 164, 165] {
+                    let Some(lit) = inputs.get(i) else { continue };
+                    let v = lit.to_vec::<f32>().unwrap_or_default();
+                    let vi = lit.to_vec::<i32>().unwrap_or_default();
+                    eprintln!(
+                        "[debug] in[{i}] n={} f32head={:?} i32head={:?}",
+                        lit.element_count(),
+                        &v[..v.len().min(3)],
+                        &vi[..vi.len().min(4)]
+                    );
+                }
+                for (i, lit) in outputs.iter().enumerate() {
+                    if let Ok(v) = lit.to_vec::<f32>() {
+                        let nan = v.iter().filter(|x| x.is_nan()).count();
+                        if nan > 0 || i < 3 {
+                            eprintln!(
+                                "[debug] out[{i}] n={} nan={nan} head={:?}",
+                                v.len(),
+                                &v[..v.len().min(3)]
+                            );
+                        }
+                    }
+                }
+            }
+            // Outputs: η' (n_eta), meta-opt' (n_meta_opt), loss.
+            let loss = outputs
+                .last()
+                .ok_or_else(|| anyhow!("empty outputs"))?
+                .to_vec::<f32>()?
+                .first()
+                .copied()
+                .ok_or_else(|| anyhow!("empty loss literal"))? as f64;
+            losses.push(loss);
+            // Re-assemble state: updated η + meta-opt, constant θ₀/opt₀.
+            let mut new_state: Vec<Literal> =
+                outputs.drain(..n_eta + n_meta_opt).collect();
+            // θ₀ and inner-opt leaves are inputs[n_eta+n_meta_opt..n_state]
+            // — recover them from the consumed inputs vector.
+            let tail = inputs.drain(n_eta + n_meta_opt..n_state);
+            new_state.extend(tail);
+            state = new_state;
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        Ok(TrainReport {
+            artifact: self.key.clone(),
+            steps,
+            steps_per_second: steps as f64 / seconds.max(1e-9),
+            seconds,
+            losses,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improvement_splits_head_tail() {
+        let r = TrainReport {
+            artifact: "a".into(),
+            losses: vec![4.0, 4.0, 2.0, 1.0],
+            steps: 4,
+            seconds: 1.0,
+            steps_per_second: 4.0,
+        };
+        let (head, tail) = r.improvement(2);
+        assert_eq!(head, 4.0);
+        assert_eq!(tail, 1.5);
+    }
+
+    #[test]
+    fn improvement_short_series() {
+        let r = TrainReport {
+            artifact: "a".into(),
+            losses: vec![3.0, 1.0],
+            steps: 2,
+            seconds: 1.0,
+            steps_per_second: 2.0,
+        };
+        let (head, tail) = r.improvement(10);
+        assert_eq!(head, 3.0);
+        assert_eq!(tail, 1.0);
+    }
+}

@@ -1,0 +1,380 @@
+//! `artifacts/manifest.json` loader — the contract with `python/compile/aot.py`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape+dtype of one flattened input/output leaf.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // numpy name: "float32", "int32", ...
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        let per = match self.dtype.as_str() {
+            "float64" | "int64" | "uint64" => 8,
+            "float32" | "int32" | "uint32" => 4,
+            "float16" | "bfloat16" | "int16" => 2,
+            "int8" | "uint8" | "bool" => 1,
+            _ => 4,
+        };
+        self.elements() * per
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().unwrap_or(0) as usize)
+            .collect();
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// XLA `CompiledMemoryStats` recorded at AOT time (stats groups only).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct XlaStats {
+    pub temp_bytes: u64,
+    pub argument_bytes: u64,
+    pub output_bytes: u64,
+    pub alias_bytes: u64,
+}
+
+/// One artifact's metadata (mirrors `compile.aot.Artifact`).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub key: String,
+    pub kind: String,
+    pub task: String,
+    pub variant: String,
+    pub mode: String,
+    pub block_remat: bool,
+    pub save_inner_grads: bool,
+    pub tier: String,
+    pub file: String,
+    pub inner_steps: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab_size: usize,
+    pub param_count: u64,
+    pub size_name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub xla_stats: Option<XlaStats>,
+    pub flops: f64,
+    pub extra: HashMap<String, Json>,
+}
+
+impl ArtifactMeta {
+    pub fn is_mixflow(&self) -> bool {
+        self.mode != "default"
+    }
+
+    /// `extra` field as u64 (train_step leaf counts etc).
+    pub fn extra_u64(&self, key: &str) -> Option<u64> {
+        self.extra.get(key).and_then(Json::as_u64)
+    }
+
+    pub fn extra_str(&self, key: &str) -> Option<&str> {
+        self.extra.get(key).and_then(Json::as_str)
+    }
+
+    fn from_json(key: &str, j: &Json) -> Result<ArtifactMeta> {
+        let s = |k: &str| -> String {
+            j.get(k).and_then(Json::as_str).unwrap_or("").to_string()
+        };
+        let b = |k: &str| j.get(k).and_then(Json::as_bool).unwrap_or(false);
+        let u = |k: &str| j.get(k).and_then(Json::as_u64).unwrap_or(0) as usize;
+        let inputs = j
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .get("outputs")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let xla_stats = j.get("xla_stats").and_then(|x| {
+            if x.is_null() {
+                None
+            } else {
+                Some(XlaStats {
+                    temp_bytes: x.get("temp_bytes")?.as_u64()?,
+                    argument_bytes: x.get("argument_bytes")?.as_u64()?,
+                    output_bytes: x.get("output_bytes")?.as_u64()?,
+                    alias_bytes: x
+                        .get("alias_bytes")
+                        .and_then(Json::as_u64)
+                        .unwrap_or(0),
+                })
+            }
+        });
+        let model = j.get("model");
+        let model_u = |k: &str| -> usize {
+            model
+                .and_then(|m| m.get(k))
+                .and_then(Json::as_u64)
+                .unwrap_or(0) as usize
+        };
+        let extra = match j.get("extra") {
+            Some(Json::Obj(map, order)) => order
+                .iter()
+                .map(|k| (k.clone(), map[k].clone()))
+                .collect(),
+            _ => HashMap::new(),
+        };
+        Ok(ArtifactMeta {
+            key: key.to_string(),
+            kind: s("kind"),
+            task: s("task"),
+            variant: s("variant"),
+            mode: s("mode"),
+            block_remat: b("block_remat"),
+            save_inner_grads: b("save_inner_grads"),
+            tier: s("tier"),
+            file: s("file"),
+            inner_steps: u("inner_steps"),
+            batch: u("batch"),
+            seq_len: u("seq_len"),
+            vocab_size: u("vocab_size"),
+            param_count: model
+                .and_then(|m| m.get("param_count"))
+                .and_then(Json::as_u64)
+                .unwrap_or(0),
+            size_name: model
+                .and_then(|m| m.get("size_name"))
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            n_layers: model_u("n_layers"),
+            d_model: model_u("d_model"),
+            inputs,
+            outputs,
+            xla_stats,
+            flops: j
+                .path(&["cost", "flops"])
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
+            extra,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    /// Figure/table group → artifact keys.
+    pub groups: HashMap<String, Vec<String>>,
+    pub jax_version: String,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let mut artifacts = HashMap::new();
+        if let Some(arts) = j.get("artifacts") {
+            for key in arts.keys() {
+                artifacts.insert(
+                    key.clone(),
+                    ArtifactMeta::from_json(key, arts.get(key).unwrap())?,
+                );
+            }
+        }
+        let mut groups = HashMap::new();
+        if let Some(gs) = j.get("groups") {
+            for g in gs.keys() {
+                let keys = gs
+                    .get(g)
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|k| k.as_str().map(str::to_string))
+                    .collect();
+                groups.insert(g.clone(), keys);
+            }
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            groups,
+            jax_version: j
+                .get("jax_version")
+                .and_then(Json::as_str)
+                .unwrap_or("?")
+                .to_string(),
+        })
+    }
+
+    /// Load from the auto-discovered artifacts directory.
+    pub fn discover() -> Result<Manifest> {
+        let dir = crate::find_artifacts_dir().ok_or_else(|| {
+            anyhow!(
+                "no artifacts/manifest.json found — run `make artifacts` \
+                 (or set MIXFLOW_ARTIFACTS)"
+            )
+        })?;
+        Manifest::load(&dir)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact {key} not in manifest"))
+    }
+
+    /// Artifact keys in a group, sorted for determinism.
+    pub fn group(&self, name: &str) -> Vec<&ArtifactMeta> {
+        let mut keys = self.groups.get(name).cloned().unwrap_or_default();
+        keys.sort();
+        keys.dedup();
+        keys.iter().filter_map(|k| self.artifacts.get(k)).collect()
+    }
+
+    /// Absolute path to an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Pair up default/mixflow variants within a group by their workload
+    /// signature (everything but the variant fields).
+    pub fn pairs<'a>(
+        &self,
+        metas: &[&'a ArtifactMeta],
+    ) -> Vec<(&'a ArtifactMeta, &'a ArtifactMeta)> {
+        let sig = |m: &ArtifactMeta| {
+            (
+                m.task.clone(),
+                m.size_name.clone(),
+                m.seq_len,
+                m.batch,
+                m.inner_steps,
+                m.extra_str("use_pallas").map(|_| 0),
+            )
+        };
+        let mut defaults: HashMap<_, &ArtifactMeta> = HashMap::new();
+        let mut mixed: HashMap<_, &ArtifactMeta> = HashMap::new();
+        for m in metas {
+            if m.variant == "default" {
+                defaults.insert(sig(m), *m);
+            } else if m.variant == "mixflow" {
+                mixed.insert(sig(m), *m);
+            }
+        }
+        let mut out: Vec<_> = defaults
+            .into_iter()
+            .filter_map(|(k, d)| mixed.get(&k).map(|m| (d, *m)))
+            .collect();
+        out.sort_by(|a, b| a.0.key.cmp(&b.0.key));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> &'static str {
+        r#"{
+ "jax_version": "0.8.2",
+ "artifacts": {
+  "a_default": {
+   "kind": "meta_grad", "task": "maml", "variant": "default",
+   "mode": "default", "block_remat": true, "save_inner_grads": false,
+   "tier": "exec", "file": "a.hlo.txt",
+   "model": {"size_name": "tiny", "param_count": 100, "n_layers": 2, "d_model": 32},
+   "inner_steps": 2, "batch": 2, "seq_len": 32, "vocab_size": 128,
+   "inputs": [{"shape": [4, 33], "dtype": "int32"}],
+   "outputs": [{"shape": [128, 32], "dtype": "float32"}],
+   "xla_stats": {"temp_bytes": 1000, "argument_bytes": 10, "output_bytes": 5},
+   "cost": {"flops": 123.0},
+   "extra": {"use_pallas": false}
+  },
+  "a_mixflow": {
+   "kind": "meta_grad", "task": "maml", "variant": "mixflow",
+   "mode": "fwdrev", "block_remat": true, "save_inner_grads": true,
+   "tier": "exec", "file": "b.hlo.txt",
+   "model": {"size_name": "tiny", "param_count": 100, "n_layers": 2, "d_model": 32},
+   "inner_steps": 2, "batch": 2, "seq_len": 32, "vocab_size": 128,
+   "inputs": [], "outputs": [], "xla_stats": null, "cost": null,
+   "extra": {}
+  }
+ },
+ "groups": {"g1": ["a_default", "a_mixflow"]}
+}"#
+    }
+
+    fn load_sample() -> Manifest {
+        let dir = std::env::temp_dir().join(format!(
+            "mixflow_manifest_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest())
+            .unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let m = load_sample();
+        assert_eq!(m.jax_version, "0.8.2");
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("a_default").unwrap();
+        assert_eq!(a.task, "maml");
+        assert!(!a.is_mixflow());
+        assert_eq!(a.inputs[0].shape, vec![4, 33]);
+        assert_eq!(a.inputs[0].bytes(), 4 * 33 * 4);
+        assert_eq!(a.xla_stats.unwrap().temp_bytes, 1000);
+        assert_eq!(a.flops, 123.0);
+        assert_eq!(a.n_layers, 2);
+    }
+
+    #[test]
+    fn groups_and_pairs() {
+        let m = load_sample();
+        let metas = m.group("g1");
+        assert_eq!(metas.len(), 2);
+        let pairs = m.pairs(&metas);
+        assert_eq!(pairs.len(), 1);
+        assert_eq!(pairs[0].0.variant, "default");
+        assert_eq!(pairs[0].1.variant, "mixflow");
+        assert!(pairs[0].1.is_mixflow());
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let m = load_sample();
+        assert!(m.get("nope").is_err());
+        assert!(m.group("nope").is_empty());
+    }
+}

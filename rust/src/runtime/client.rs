@@ -1,0 +1,154 @@
+//! PJRT client wrapper: HLO-text loading, compile caching, timed execution.
+//!
+//! Start-to-finish path (adapted from /opt/xla-example/load_hlo):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.  Compiles are cached per artifact key
+//! (XLA CPU compiles cost seconds-to-minutes; the hot path must never
+//! recompile — §Perf L3).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use super::inputs;
+use crate::util::stats::Summary;
+
+/// A compiled artifact ready to execute.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: PjRtLoadedExecutable,
+    /// Wall-clock seconds spent in `client.compile`.
+    pub compile_seconds: f64,
+}
+
+impl LoadedArtifact {
+    /// Execute once; returns the flattened output literals.
+    ///
+    /// The AOT pipeline lowers with `return_tuple=True`, so PJRT hands back
+    /// a single tuple literal which we decompose to match
+    /// `meta.outputs` order.
+    pub fn execute(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let result = self.exe.execute::<Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and time; returns (outputs, seconds).
+    pub fn execute_timed(
+        &self,
+        inputs: &[Literal],
+    ) -> Result<(Vec<Literal>, f64)> {
+        let t0 = Instant::now();
+        let result = self.exe.execute::<Literal>(inputs)?;
+        // Block until the result is on host — PJRT executions are async.
+        let lit = result[0][0].to_literal_sync()?;
+        let secs = t0.elapsed().as_secs_f64();
+        Ok((lit.to_tuple()?, secs))
+    }
+
+    /// Median-of-N step time with one warmup run (paper Eq. 11's
+    /// denominator / numerator).
+    pub fn time_steps(&self, inputs: &[Literal], iters: usize) -> Result<Summary> {
+        let _ = self.execute(inputs)?; // warmup
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let (_, s) = self.execute_timed(inputs)?;
+            samples.push(s);
+        }
+        Ok(Summary::of(&samples))
+    }
+
+    /// Synthesised default inputs for this artifact (seeded).
+    pub fn default_inputs(&self, seed: u64) -> Result<Vec<Literal>> {
+        inputs::inputs_for(&self.meta, seed)
+    }
+}
+
+/// The runtime: one PJRT CPU client + a compile cache.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
+}
+
+impl Runtime {
+    /// Create against the discovered artifacts directory.
+    pub fn new() -> Result<Runtime> {
+        Runtime::with_manifest(Manifest::discover()?)
+    }
+
+    pub fn with_manifest(manifest: Manifest) -> Result<Runtime> {
+        let client =
+            PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by key (cached).
+    pub fn load(&self, key: &str) -> Result<Rc<LoadedArtifact>> {
+        if let Some(hit) = self.cache.borrow().get(key) {
+            return Ok(hit.clone());
+        }
+        let meta = self.manifest.get(key)?.clone();
+        let path = self.manifest.hlo_path(&meta);
+        let loaded = Rc::new(self.compile_file(&path, meta)?);
+        self.cache
+            .borrow_mut()
+            .insert(key.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Compile an HLO text file outside the manifest (tools/tests).
+    pub fn compile_file(
+        &self,
+        path: &Path,
+        meta: ArtifactMeta,
+    ) -> Result<LoadedArtifact> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedArtifact {
+            meta,
+            exe,
+            compile_seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Load the initial state npz of a train-step artifact.
+    pub fn load_init_state(&self, meta: &ArtifactMeta) -> Result<Vec<Literal>> {
+        use xla::FromRawBytes;
+        let file = meta
+            .extra_str("init_file")
+            .ok_or_else(|| anyhow!("{} has no init_file", meta.key))?;
+        let path = self.manifest.dir.join(file);
+        let mut named = Literal::read_npz(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            &(),
+        )?;
+        // Keys are "in_0000"... — sort restores leaf order.
+        named.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(named.into_iter().map(|(_, l)| l).collect())
+    }
+
+    /// Number of artifacts compiled so far (cache introspection).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

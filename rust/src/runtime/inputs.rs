@@ -1,0 +1,180 @@
+//! Synthesise PJRT input literals from manifest tensor specs.
+//!
+//! Float leaves get small-scale normals (parameters/optimiser state — the
+//! values do not change the memory/step-time structure, DESIGN.md §2);
+//! int32 leaves are token batches drawn uniformly from `[0, vocab)`.
+//! Deterministic per (artifact key, seed) so default/mixflow pairs see
+//! identical inputs — required by the numerics cross-check test.
+
+use anyhow::{anyhow, Result};
+use xla::{ElementType, Literal};
+
+use super::artifacts::{ArtifactMeta, TensorSpec};
+use crate::util::prng::Prng;
+
+/// Map numpy dtype names to the xla crate's element types.
+pub fn element_type(dtype: &str) -> Result<ElementType> {
+    Ok(match dtype {
+        "float32" => ElementType::F32,
+        "float64" => ElementType::F64,
+        "float16" => ElementType::F16,
+        "bfloat16" => ElementType::Bf16,
+        "int32" => ElementType::S32,
+        "int64" => ElementType::S64,
+        "uint32" => ElementType::U32,
+        "uint8" => ElementType::U8,
+        "bool" => ElementType::Pred,
+        other => return Err(anyhow!("unsupported dtype {other}")),
+    })
+}
+
+/// Build one literal for `spec`.
+pub fn literal_for_spec(
+    spec: &TensorSpec,
+    rng: &mut Prng,
+    vocab: u32,
+    float_std: f32,
+) -> Result<Literal> {
+    let n = spec.elements();
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    match spec.dtype.as_str() {
+        "float32" => {
+            // |N(0,σ)|: some float leaves are Adam second-moment state,
+            // which must be non-negative (√v) — and parameters don't care.
+            let mut data = rng.normal_vec(n, float_std);
+            for x in &mut data {
+                *x = x.abs();
+            }
+            reshape(Literal::vec1(&data), &dims)
+        }
+        "int32" => {
+            let vocab = vocab.max(2);
+            let data = rng.token_vec(n, vocab);
+            reshape(Literal::vec1(&data), &dims)
+        }
+        other => Err(anyhow!("unsupported input dtype {other}")),
+    }
+}
+
+fn reshape(lit: Literal, dims: &[i64]) -> Result<Literal> {
+    if dims.is_empty() {
+        // vec1 of length 1 → scalar via reshape to [].
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(dims)?)
+    }
+}
+
+/// All inputs for an artifact, deterministic in `seed`.
+pub fn inputs_for(meta: &ArtifactMeta, seed: u64) -> Result<Vec<Literal>> {
+    // Seed from the *workload* (not the variant!) so a default/mixflow
+    // pair receives identical data.
+    let workload = format!(
+        "{}_{}_{}_{}_{}",
+        meta.task, meta.size_name, meta.seq_len, meta.batch,
+        meta.inner_steps
+    );
+    let mut h = 0xcbf29ce484222325u64;
+    for b in workload.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    let mut rng = Prng::new(h ^ seed);
+    meta.inputs
+        .iter()
+        .map(|spec| {
+            literal_for_spec(spec, &mut rng, meta.vocab_size as u32, 0.05)
+        })
+        .collect()
+}
+
+/// Fresh token batches for a train-step artifact's data inputs
+/// (`xs [T,B,S+1]` and `val [B,S+1]`, the trailing int32 leaves).
+pub fn token_batch(
+    spec: &TensorSpec,
+    rng: &mut Prng,
+    vocab: u32,
+) -> Result<Literal> {
+    literal_for_spec(spec, rng, vocab, 0.0)
+}
+
+/// A *learnable* synthetic batch: windows of the deterministic corpus
+/// `tok[t] = (a·t + b·(t/7) + phase) mod vocab` — structured enough that
+/// the E2E meta-training loss curve must fall (DESIGN.md E2E deliverable).
+pub fn corpus_batch(
+    spec: &TensorSpec,
+    rng: &mut Prng,
+    vocab: u32,
+) -> Result<Literal> {
+    let vocab = vocab.max(2);
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let seq = *spec.shape.last().unwrap_or(&1);
+    let rows = spec.elements() / seq.max(1);
+    let mut data = Vec::with_capacity(spec.elements());
+    for _ in 0..rows {
+        let start = rng.next_below(vocab * 4) as u64;
+        let stride = 1 + rng.next_below(3) as u64;
+        for t in 0..seq as u64 {
+            data.push(((start + stride * t) % vocab as u64) as i32);
+        }
+    }
+    Ok(Literal::vec1(&data).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(shape: &[usize], dtype: &str) -> TensorSpec {
+        TensorSpec { shape: shape.to_vec(), dtype: dtype.into() }
+    }
+
+    #[test]
+    fn float_literal_shape_and_determinism() {
+        let s = spec(&[2, 3], "float32");
+        let mut r1 = Prng::new(1);
+        let mut r2 = Prng::new(1);
+        let a = literal_for_spec(&s, &mut r1, 0, 1.0).unwrap();
+        let b = literal_for_spec(&s, &mut r2, 0, 1.0).unwrap();
+        assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+        assert_eq!(a.element_count(), 6);
+    }
+
+    #[test]
+    fn int_literal_in_vocab() {
+        let s = spec(&[4, 8], "int32");
+        let mut r = Prng::new(2);
+        let l = literal_for_spec(&s, &mut r, 16, 0.0).unwrap();
+        for t in l.to_vec::<i32>().unwrap() {
+            assert!((0..16).contains(&t));
+        }
+    }
+
+    #[test]
+    fn scalar_spec() {
+        let s = spec(&[], "float32");
+        let mut r = Prng::new(3);
+        let l = literal_for_spec(&s, &mut r, 0, 1.0).unwrap();
+        assert_eq!(l.element_count(), 1);
+    }
+
+    #[test]
+    fn corpus_rows_are_arithmetic() {
+        let s = spec(&[2, 10], "int32");
+        let mut r = Prng::new(4);
+        let l = corpus_batch(&s, &mut r, 32).unwrap();
+        let v = l.to_vec::<i32>().unwrap();
+        for row in v.chunks(10) {
+            let d = (row[1] - row[0]).rem_euclid(32);
+            for w in row.windows(2) {
+                assert_eq!((w[1] - w[0]).rem_euclid(32), d);
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_dtype_errors() {
+        let s = spec(&[2], "complex64");
+        let mut r = Prng::new(5);
+        assert!(literal_for_spec(&s, &mut r, 0, 1.0).is_err());
+    }
+}

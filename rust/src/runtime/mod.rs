@@ -1,0 +1,9 @@
+//! PJRT runtime (DESIGN.md S14): artifact manifest, compile cache, input
+//! synthesis, timed execution.
+
+pub mod artifacts;
+pub mod client;
+pub mod inputs;
+
+pub use artifacts::{ArtifactMeta, Manifest, TensorSpec};
+pub use client::{LoadedArtifact, Runtime};

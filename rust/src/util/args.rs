@@ -1,0 +1,230 @@
+//! Declarative CLI flag parser (`clap` substitute, DESIGN.md §5).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One declared flag.
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// A tiny declarative argument parser.
+#[derive(Debug, Default)]
+pub struct ArgSpec {
+    program: String,
+    about: String,
+    flags: Vec<Spec>,
+    positionals: Vec<(String, String)>, // (name, help)
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: &str, about: &str) -> ArgSpec {
+        ArgSpec {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a value flag with an optional default.
+    pub fn flag(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.flags.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(str::to_string),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (false unless present).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (required, in order).
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program, self.about, self.program);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [flags]\n\nFLAGS:\n");
+        for f in &self.flags {
+            let head = if f.is_bool {
+                format!("  --{}", f.name)
+            } else {
+                format!("  --{} <v>", f.name)
+            };
+            let dflt = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:28} {}{dflt}\n", f.help));
+        }
+        for (p, h) in &self.positionals {
+            s.push_str(&format!("  <{p}>  {h}\n"));
+        }
+        s
+    }
+
+    /// Parse from an iterator (std::env::args().skip(1) in main).
+    pub fn parse<I: IntoIterator<Item = String>>(
+        &self,
+        argv: I,
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        for f in &self.flags {
+            if f.is_bool {
+                out.bools.insert(f.name.clone(), false);
+            } else if let Some(d) = &f.default {
+                out.values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}"))?;
+                if spec.is_bool {
+                    if inline.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    out.bools.insert(name, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{name} needs a value"))?,
+                    };
+                    out.values.insert(name, v);
+                }
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        if out.positionals.len() < self.positionals.len() {
+            return Err(format!(
+                "missing positional <{}>\n\n{}",
+                self.positionals[out.positionals.len()].0,
+                self.help_text()
+            ));
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .ok_or_else(|| format!("--{name} not set"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .ok_or_else(|| format!("--{name} not set"))?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("prog", "test")
+            .flag("steps", Some("10"), "number of steps")
+            .flag("name", None, "a name")
+            .switch("verbose", "talk more")
+            .positional("cmd", "command")
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_values() {
+        let a = spec().parse(sv(&["run"])).unwrap();
+        assert_eq!(a.get("steps"), Some("10"));
+        assert_eq!(a.get("name"), None);
+        assert!(!a.get_bool("verbose"));
+        assert_eq!(a.positional(0), Some("run"));
+    }
+
+    #[test]
+    fn parses_all_forms() {
+        let a = spec()
+            .parse(sv(&["run", "--steps", "5", "--name=x", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 5);
+        assert_eq!(a.get("name"), Some("x"));
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(spec().parse(sv(&["run", "--nope"])).is_err());
+        assert!(spec().parse(sv(&["run", "--steps"])).is_err());
+        assert!(spec().parse(sv(&[])).is_err()); // missing positional
+        assert!(spec().parse(sv(&["run", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let h = spec().parse(sv(&["--help"])).unwrap_err();
+        assert!(h.contains("--steps"));
+        assert!(h.contains("default: 10"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Micro-benchmark harness (criterion substitute, DESIGN.md §5).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary that builds a
+//! [`Bench`] and calls [`Bench::run`] per measured closure.  The harness
+//! does warmup, adaptive iteration counts, and reports mean/median/p95 —
+//! enough fidelity for the paper's step-time *ratios*.
+
+use std::time::Instant;
+
+use super::stats::{human_secs, Summary};
+
+/// Configuration for one benchmark binary.
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard cap on wall-clock per measurement (seconds); once exceeded the
+    /// sample set is truncated (PJRT executions can be slow).
+    pub max_seconds: f64,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            warmup_iters: 1,
+            measure_iters: 10,
+            max_seconds: 30.0,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(mut self, warmup: usize, measure: usize) -> Bench {
+        self.warmup_iters = warmup;
+        self.measure_iters = measure;
+        self
+    }
+
+    pub fn with_budget(mut self, seconds: f64) -> Bench {
+        self.max_seconds = seconds;
+        self
+    }
+
+    /// Measure `f` and record under `label`. Returns the summary.
+    pub fn run<F: FnMut()>(&mut self, label: &str, mut f: F) -> Summary {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.measure_iters);
+        let budget_start = Instant::now();
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if budget_start.elapsed().as_secs_f64() > self.max_seconds
+                && samples.len() >= 3
+            {
+                break;
+            }
+        }
+        let summary = Summary::of(&samples);
+        eprintln!(
+            "[bench {}] {label}: median={} mean={} p95={} (n={})",
+            self.name,
+            human_secs(summary.median),
+            human_secs(summary.mean),
+            human_secs(summary.p95),
+            summary.n,
+        );
+        self.results.push((label.to_string(), summary.clone()));
+        summary
+    }
+
+    /// Record an externally-measured summary (e.g. timed PJRT executions).
+    pub fn record(&mut self, label: &str, summary: Summary) {
+        self.results.push((label.to_string(), summary));
+    }
+
+    pub fn results(&self) -> &[(String, Summary)] {
+        &self.results
+    }
+
+    /// Final report block (also what `cargo bench` output captures).
+    pub fn report(&self) {
+        println!("\n== bench: {} ==", self.name);
+        for (label, s) in &self.results {
+            println!(
+                "{label:48} median {:>12} mean {:>12} p95 {:>12} n={}",
+                human_secs(s.median),
+                human_secs(s.mean),
+                human_secs(s.p95),
+                s.n
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_records() {
+        let mut b = Bench::new("t").with_iters(0, 5);
+        let s = b.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.n, 5);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn respects_budget() {
+        let mut b = Bench::new("t").with_iters(0, 1000).with_budget(0.05);
+        let s = b.run("sleepy", || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        });
+        assert!(s.n < 1000);
+        assert!(s.n >= 3);
+    }
+}

@@ -1,0 +1,14 @@
+//! Offline-environment substrates (DESIGN.md §5).
+//!
+//! The build image has no crates.io access beyond the vendored set, so the
+//! pieces a production coordinator would normally pull in (`serde_json`,
+//! `clap`, `rand`, `criterion`, `proptest`) are implemented here, each with
+//! its own unit/property tests.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,146 @@
+//! Deterministic PRNG (SplitMix64 + xoshiro256**) — `rand` substitute.
+//!
+//! Used for synthetic token corpora and float inputs; determinism across
+//! runs is required so default/mixflow artifact pairs see identical data
+//! (DESIGN.md §6 item 2).
+
+/// xoshiro256** seeded via SplitMix64 (Blackman & Vigna).
+#[derive(Debug, Clone)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+impl Prng {
+    /// Seed deterministically from a single u64.
+    pub fn new(seed: u64) -> Prng {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Prng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream (`jax.random.fold_in` analogue).
+    pub fn fold_in(&self, data: u64) -> Prng {
+        let mut h = 0xcbf29ce484222325u64; // FNV offset
+        for &w in &self.s {
+            h = (h ^ w).wrapping_mul(0x100000001b3);
+        }
+        Prng::new(h ^ data.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit precision.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire-style, unbiased enough for
+    /// synthetic data; bound must be > 0).
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0);
+        ((self.next_u64() >> 32) as u32) % bound
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn next_normal(&mut self) -> f32 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos())
+            as f32
+    }
+
+    /// Vector of normals scaled by `std`.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.next_normal() * std).collect()
+    }
+
+    /// Vector of token ids in `[0, vocab)`.
+    pub fn token_vec(&mut self, n: usize, vocab: u32) -> Vec<i32> {
+        (0..n).map(|_| self.next_below(vocab) as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fold_in_independent() {
+        let base = Prng::new(7);
+        let mut a = base.fold_in(0);
+        let mut b = base.fold_in(1);
+        assert_ne!(a.next_u64(), b.next_u64());
+        // and reproducible
+        let mut a2 = base.fold_in(0);
+        assert_eq!(Prng::new(7).fold_in(0).next_u64(), a2.next_u64());
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut p = Prng::new(3);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| p.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let mut p = Prng::new(9);
+        for t in p.token_vec(1000, 128) {
+            assert!((0..128).contains(&t));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut p = Prng::new(11);
+        let v = p.normal_vec(20_000, 1.0);
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        let var: f32 =
+            v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+                / v.len() as f32;
+        assert!(mean.abs() < 0.03, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+}

@@ -1,0 +1,129 @@
+//! ASCII table rendering for paper-style report rows.
+
+/// A simple left/right-aligned column table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    /// True = right-align (numeric) column.
+    numeric: Vec<bool>,
+}
+
+impl Table {
+    /// Create with header names; columns default to left-aligned.
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            numeric: vec![false; header.len()],
+        }
+    }
+
+    /// Mark columns (by index) right-aligned.
+    pub fn numeric_cols(mut self, cols: &[usize]) -> Table {
+        for &c in cols {
+            if c < self.numeric.len() {
+                self.numeric[c] = true;
+            }
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let sep = |l: char, m: char, r: char| {
+            let mut s = String::new();
+            s.push(l);
+            for (i, w) in widths.iter().enumerate() {
+                s.push_str(&"─".repeat(w + 2));
+                s.push(if i + 1 == ncols { r } else { m });
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("│");
+            for (i, cell) in cells.iter().enumerate() {
+                let pad = widths[i] - cell.chars().count();
+                if self.numeric[i] {
+                    s.push_str(&format!(" {}{} │", " ".repeat(pad), cell));
+                } else {
+                    s.push_str(&format!(" {}{} │", cell, " ".repeat(pad)));
+                }
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = sep('┌', '┬', '┐');
+        out.push_str(&fmt_row(&self.header));
+        out.push_str(&sep('├', '┼', '┤'));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out.push_str(&sep('└', '┴', '┘'));
+        out
+    }
+}
+
+/// Render a ratio as the paper does ("4.2x (76%)": factor + reduction).
+pub fn ratio_cell(ratio: f64) -> String {
+    if !ratio.is_finite() || ratio <= 0.0 {
+        return "n/a".to_string();
+    }
+    let reduction = (1.0 - 1.0 / ratio) * 100.0;
+    format!("{ratio:.2}x ({reduction:.0}%)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "value"]).numeric_cols(&[1]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["long-name".into(), "123.45".into()]);
+        let r = t.render();
+        assert!(r.contains("long-name"));
+        assert!(r.contains("123.45"));
+        // All lines equal width.
+        let lens: Vec<usize> =
+            r.lines().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{r}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(ratio_cell(4.0), "4.00x (75%)");
+        assert_eq!(ratio_cell(f64::NAN), "n/a");
+        assert_eq!(ratio_cell(0.0), "n/a");
+    }
+}
