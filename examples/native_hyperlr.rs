@@ -1,0 +1,33 @@
+//! Hyperparameter learning E2E, native edition (paper §5.2 task 1): the
+//! same meta-learned per-leaf learning-rate task as `examples/hyperlr.rs`,
+//! but every gradient — inner, outer, and the second-order MixFlow-MG
+//! products — is computed by the pure-Rust autodiff engine.  No PJRT, no
+//! artifacts, no Python toolchain.
+//!
+//! ```bash
+//! cargo run --release --example native_hyperlr -- [steps]
+//! ```
+
+use mixflow::meta::{print_train_summary, NativeMetaTrainer, NativeTask};
+
+fn main() {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    println!("meta-learning per-leaf learning rates (native autodiff)");
+    let mut trainer = NativeMetaTrainer::new(NativeTask::HyperLr, 7);
+    let report = trainer.train(steps);
+    print_train_summary(&report, trainer.last_memory.as_ref());
+    println!(
+        "learned log-LR multipliers: {:?}",
+        trainer
+            .eta()
+            .iter()
+            .map(|e| (e.data[0] * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+    let (head, tail) = report.improvement(10);
+    assert!(tail < head, "learned LRs must improve the validation loss");
+    println!("native_hyperlr OK");
+}

@@ -1,0 +1,329 @@
+//! Hypergradients for bilevel problems: naive reverse-over-reverse vs
+//! MixFlow-MG forward-over-reverse (the paper's core contribution, Eq. 8).
+//!
+//! The inner loop is `T` steps of SGD with a per-leaf learning-rate tensor
+//! produced by the problem (constant, or a function of η):
+//!
+//! ```text
+//! θ_{t+1} = θ_t − P(η) ⊙ ∇_θ L_t(θ_t, η)
+//! F(η)    = L_val(θ_T)
+//! ```
+//!
+//! [`naive_hypergrad`] records all `T` steps — each containing its own
+//! in-graph gradient — on ONE tape and backpropagates through everything:
+//! the reverse-over-reverse baseline whose live tape grows ∝ T (plus the
+//! appended second-order subgraphs).
+//!
+//! [`mixflow_hypergrad`] checkpoints only θ_t values on the way forward,
+//! then walks the unroll backwards with the adjoint recursion
+//!
+//! ```text
+//! u    = P(η) ⊙ λ_{t+1}
+//! λ_t  = λ_{t+1} − (∂²L/∂θ²) u                 (HVP)
+//! dη  −=  (∂²L/∂θ∂η)ᵀ u  +  (∂P/∂η)ᵀ (∇_θL ⊙ λ_{t+1})
+//! ```
+//!
+//! where both second-order products come from ONE forward-over-reverse
+//! dual sweep ([`Tape::jvp`] seeded with `u` over the step's gradient
+//! nodes).  Each step's tape is dropped before the next is built, so peak
+//! memory is one step's tape + tangents + the θ checkpoints.
+
+use super::tape::{NodeId, Tape};
+use super::tensor::Tensor;
+
+/// A bilevel (meta-learning) problem: builds inner/outer losses as tape
+/// graphs over θ and η leaf nodes.  `step` indexes the inner batch.
+pub trait BilevelProblem {
+    /// Initial inner parameters θ₀ (leaf templates).
+    fn theta0(&self) -> Vec<Tensor>;
+    /// Initial meta-parameters η₀.
+    fn eta0(&self) -> Vec<Tensor>;
+    /// Inner unroll length T.
+    fn unroll(&self) -> usize;
+    /// Training loss at inner step `step` (scalar node).
+    fn inner_loss(
+        &self,
+        tape: &mut Tape,
+        theta: &[NodeId],
+        eta: &[NodeId],
+        step: usize,
+    ) -> NodeId;
+    /// Validation loss at θ_T (scalar node).
+    fn outer_loss(&self, tape: &mut Tape, theta: &[NodeId]) -> NodeId;
+    /// Per-leaf learning-rate tensors P(η), broadcast to each θ leaf's
+    /// shape.  Constant nodes for η-independent inner optimisers.
+    fn lr_nodes(&self, tape: &mut Tape, eta: &[NodeId]) -> Vec<NodeId>;
+    /// Draw fresh train/val batches (between outer steps).
+    fn resample(&mut self);
+}
+
+/// Where the bytes went, for the naive-vs-MixFlow comparison.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemoryReport {
+    /// Peak live tape bytes (naive: the single monolithic tape; mixflow:
+    /// the largest per-step tape + its JVP tangent overlay).
+    pub tape_bytes: usize,
+    /// θ checkpoint bytes (mixflow only).
+    pub checkpoint_bytes: usize,
+    /// Node count of the biggest live tape.
+    pub nodes: usize,
+}
+
+impl MemoryReport {
+    /// Total live-memory proxy: tape + checkpoints.
+    pub fn total_bytes(&self) -> usize {
+        self.tape_bytes + self.checkpoint_bytes
+    }
+}
+
+/// A hypergradient result.
+#[derive(Debug, Clone)]
+pub struct Hypergrad {
+    /// dF/dη, one tensor per η leaf.
+    pub d_eta: Vec<Tensor>,
+    /// F(η) = validation loss after the unroll.
+    pub outer_loss: f64,
+    pub memory: MemoryReport,
+}
+
+fn leaves(tape: &mut Tape, values: &[Tensor]) -> Vec<NodeId> {
+    values.iter().map(|v| tape.leaf(v.clone())).collect()
+}
+
+/// Reverse-over-reverse baseline: one monolithic tape through the whole
+/// unroll, then `grad` straight through every per-step gradient subgraph.
+pub fn naive_hypergrad<P: BilevelProblem + ?Sized>(
+    problem: &P,
+    theta0: &[Tensor],
+    eta: &[Tensor],
+) -> Hypergrad {
+    let mut tape = Tape::new();
+    let mut theta = leaves(&mut tape, theta0);
+    let eta_ids = leaves(&mut tape, eta);
+    for t in 0..problem.unroll() {
+        let loss = problem.inner_loss(&mut tape, &theta, &eta_ids, t);
+        let grads = tape.grad(loss, &theta);
+        let lrs = problem.lr_nodes(&mut tape, &eta_ids);
+        theta = theta
+            .iter()
+            .zip(lrs.iter().zip(grads.iter()))
+            .map(|(&th, (&lr, &g))| {
+                let step = tape.mul(lr, g);
+                tape.sub(th, step)
+            })
+            .collect();
+    }
+    let outer = problem.outer_loss(&mut tape, &theta);
+    let d_eta_ids = tape.grad(outer, &eta_ids);
+    let d_eta = d_eta_ids.iter().map(|&id| tape.value(id).clone()).collect();
+    let stats = tape.stats();
+    Hypergrad {
+        d_eta,
+        outer_loss: tape.value(outer).item(),
+        memory: MemoryReport {
+            tape_bytes: stats.bytes,
+            checkpoint_bytes: 0,
+            nodes: stats.nodes,
+        },
+    }
+}
+
+/// One inner SGD step on a throwaway tape; returns (θ_{t+1} values, tape
+/// stats of the step).
+fn inner_step_values<P: BilevelProblem + ?Sized>(
+    problem: &P,
+    theta: &[Tensor],
+    eta: &[Tensor],
+    step: usize,
+) -> (Vec<Tensor>, usize) {
+    let mut tape = Tape::new();
+    let theta_ids = leaves(&mut tape, theta);
+    let eta_ids = leaves(&mut tape, eta);
+    let loss = problem.inner_loss(&mut tape, &theta_ids, &eta_ids, step);
+    let grads = tape.grad(loss, &theta_ids);
+    let lrs = problem.lr_nodes(&mut tape, &eta_ids);
+    let mut next = Vec::with_capacity(theta.len());
+    for ((&th, &lr), &g) in theta_ids.iter().zip(lrs.iter()).zip(grads.iter())
+    {
+        let delta = tape.mul(lr, g);
+        let id = tape.sub(th, delta);
+        next.push(tape.value(id).clone());
+    }
+    let bytes = tape.stats().bytes;
+    (next, bytes)
+}
+
+/// MixFlow-MG: forward-over-reverse mixed-mode hypergradient with
+/// per-step tape reuse (the paper's Algorithm 1 shape).
+pub fn mixflow_hypergrad<P: BilevelProblem + ?Sized>(
+    problem: &P,
+    theta0: &[Tensor],
+    eta: &[Tensor],
+) -> Hypergrad {
+    let unroll = problem.unroll();
+
+    // Forward: checkpoint θ_t values only; every step tape is dropped.
+    let mut checkpoints: Vec<Vec<Tensor>> = vec![theta0.to_vec()];
+    let mut peak_tape = 0usize;
+    let mut peak_nodes = 0usize;
+    for t in 0..unroll {
+        let (next, bytes) =
+            inner_step_values(problem, &checkpoints[t], eta, t);
+        peak_tape = peak_tape.max(bytes);
+        checkpoints.push(next);
+    }
+    let checkpoint_bytes: usize = checkpoints
+        .iter()
+        .map(|c| c.iter().map(Tensor::bytes).sum::<usize>())
+        .sum();
+
+    // λ = ∇_θ L_val(θ_T) from a small outer tape.
+    let (mut lambda, outer_loss) = {
+        let mut tape = Tape::new();
+        let theta_ids = leaves(&mut tape, &checkpoints[unroll]);
+        let outer = problem.outer_loss(&mut tape, &theta_ids);
+        let grads = tape.grad(outer, &theta_ids);
+        peak_tape = peak_tape.max(tape.stats().bytes);
+        peak_nodes = peak_nodes.max(tape.stats().nodes);
+        (
+            grads
+                .iter()
+                .map(|&id| tape.value(id).clone())
+                .collect::<Vec<_>>(),
+            tape.value(outer).item(),
+        )
+    };
+
+    let mut d_eta: Vec<Tensor> =
+        eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
+
+    // Backward sweep: rebuild one step's tape at a time.
+    for t in (0..unroll).rev() {
+        let mut tape = Tape::new();
+        let theta_ids = leaves(&mut tape, &checkpoints[t]);
+        let eta_ids = leaves(&mut tape, eta);
+        let loss = problem.inner_loss(&mut tape, &theta_ids, &eta_ids, t);
+        // One reverse sweep for both ∇_θL and ∇_ηL.
+        let mut wrt = theta_ids.clone();
+        wrt.extend(eta_ids.iter().copied());
+        let grads = tape.grad(loss, &wrt);
+        let (g_theta_ids, g_eta_ids) = grads.split_at(theta_ids.len());
+        let lr_ids = problem.lr_nodes(&mut tape, &eta_ids);
+
+        // u = P(η) ⊙ λ
+        let u: Vec<Tensor> = lr_ids
+            .iter()
+            .zip(lambda.iter())
+            .map(|(&lr, la)| tape.value(lr).zip(la, |p, q| p * q))
+            .collect();
+
+        // Forward-over-reverse: tangents of the gradient nodes, seeded
+        // with tangent(θ) = u.  Tangent of ∇_θL is the HVP; tangent of
+        // ∇_ηL is the mixed ∂² product.
+        let seeds: Vec<(NodeId, Tensor)> = theta_ids
+            .iter()
+            .copied()
+            .zip(u.iter().cloned())
+            .collect();
+        let mut targets: Vec<NodeId> = g_theta_ids.to_vec();
+        targets.extend(g_eta_ids.iter().copied());
+        let (tangents, tangent_bytes) = tape.jvp(&seeds, &targets);
+        let (hvp, mixed) = tangents.split_at(theta_ids.len());
+
+        // lr-path term: (∂P/∂η)ᵀ (∇_θL ⊙ λ), a micro reverse sweep over
+        // the (tiny) P(η) subgraph.  Zero when P is constant.
+        let gl: Vec<Tensor> = g_theta_ids
+            .iter()
+            .zip(lambda.iter())
+            .map(|(&g, la)| tape.value(g).zip(la, |p, q| p * q))
+            .collect();
+        let mut s_lr: Option<NodeId> = None;
+        for (&lr, glv) in lr_ids.iter().zip(gl.iter()) {
+            let c = tape.constant(glv.clone());
+            let prod = tape.mul(lr, c);
+            let dot = tape.sum(prod);
+            s_lr = Some(match s_lr {
+                Some(prev) => tape.add(prev, dot),
+                None => dot,
+            });
+        }
+        let lr_eta: Vec<Tensor> = match s_lr {
+            Some(s) => {
+                let ids = tape.grad(s, &eta_ids);
+                ids.iter().map(|&id| tape.value(id).clone()).collect()
+            }
+            None => eta.iter().map(|e| Tensor::zeros(&e.shape)).collect(),
+        };
+
+        for i in 0..d_eta.len() {
+            let updated = d_eta[i]
+                .zip(&mixed[i], |p, q| p - q)
+                .zip(&lr_eta[i], |p, q| p - q);
+            d_eta[i] = updated;
+        }
+        lambda = lambda
+            .iter()
+            .zip(hvp.iter())
+            .map(|(la, h)| la.zip(h, |p, q| p - q))
+            .collect();
+
+        peak_tape = peak_tape.max(tape.stats().bytes + tangent_bytes);
+        peak_nodes = peak_nodes.max(tape.stats().nodes);
+    }
+
+    Hypergrad {
+        d_eta,
+        outer_loss,
+        memory: MemoryReport {
+            tape_bytes: peak_tape,
+            checkpoint_bytes,
+            nodes: peak_nodes,
+        },
+    }
+}
+
+/// Central finite differences over every η element — the slow oracle the
+/// tests compare both hypergradient paths against.
+pub fn fd_hypergrad<P: BilevelProblem + ?Sized>(
+    problem: &P,
+    theta0: &[Tensor],
+    eta: &[Tensor],
+    h: f64,
+) -> Vec<Tensor> {
+    let outer_at = |eta_v: &[Tensor]| -> f64 {
+        let mut theta: Vec<Tensor> = theta0.to_vec();
+        for t in 0..problem.unroll() {
+            theta = inner_step_values(problem, &theta, eta_v, t).0;
+        }
+        let mut tape = Tape::new();
+        let ids = leaves(&mut tape, &theta);
+        let outer = problem.outer_loss(&mut tape, &ids);
+        tape.value(outer).item()
+    };
+    let mut out = Vec::with_capacity(eta.len());
+    for (li, leaf) in eta.iter().enumerate() {
+        let mut g = Tensor::zeros(&leaf.shape);
+        for j in 0..leaf.elements() {
+            let mut plus: Vec<Tensor> = eta.to_vec();
+            plus[li].data[j] += h;
+            let mut minus: Vec<Tensor> = eta.to_vec();
+            minus[li].data[j] -= h;
+            g.data[j] = (outer_at(&plus) - outer_at(&minus)) / (2.0 * h);
+        }
+        out.push(g);
+    }
+    out
+}
+
+/// Max |Δ| between two η-gradient pytrees, normalised by the largest
+/// reference entry (for tolerance checks).
+pub fn rel_err(a: &[Tensor], b: &[Tensor]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num: f64 = 0.0;
+    let mut den: f64 = 1.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        num = num.max(x.max_abs_diff(y));
+        den = den.max(1.0 + y.max_abs());
+    }
+    num / den
+}

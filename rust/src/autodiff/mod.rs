@@ -1,0 +1,31 @@
+//! Native Rust autodiff engine with MixFlow-MG mixed-mode hypergradients.
+//!
+//! This subsystem makes the Rust layer able to *compute* meta-gradients on
+//! its own — no JAX, no AOT artifacts, no PJRT.  It is the ground-truth
+//! oracle for the HLO buffer-liveness simulator ([`crate::hlo::memory`])
+//! and the engine behind [`crate::meta::native`].
+//!
+//! * [`tensor`] — dense f64 tensors over flat buffers.
+//! * [`tape`] — Wengert-list reverse mode whose adjoint pass is itself a
+//!   graph (so grad-of-grad works), plus a forward-mode JVP overlay.
+//! * [`mixflow`] — the [`mixflow::BilevelProblem`] trait and two
+//!   hypergradient paths: [`mixflow::naive_hypergrad`]
+//!   (reverse-over-reverse, monolithic tape) and
+//!   [`mixflow::mixflow_hypergrad`] (forward-over-reverse, per-step tape
+//!   reuse — the paper's contribution), both instrumented with tape-byte
+//!   counters.
+//! * [`problems`] — the paper's hyper-LR and loss-weighting tasks.
+//!
+//! See `rust/src/autodiff/README.md` for the derivation.
+
+pub mod mixflow;
+pub mod problems;
+pub mod tape;
+pub mod tensor;
+
+pub use mixflow::{
+    fd_hypergrad, mixflow_hypergrad, naive_hypergrad, BilevelProblem,
+    Hypergrad, MemoryReport,
+};
+pub use tape::{NodeId, Op, Tape, TapeStats};
+pub use tensor::Tensor;

@@ -1,0 +1,377 @@
+//! The paper's §5.2 bilevel tasks, scaled to the native engine:
+//!
+//! * [`HyperLrProblem`] — meta-learned per-leaf learning rates
+//!   (Bengio 2000): η is a log-scale LR multiplier per θ leaf, entering
+//!   the unroll only through the inner optimiser `P(η) = α₀·exp(η)`.
+//! * [`LossWeightingProblem`] — a meta-learned example-weighting net
+//!   (Hu et al. 2023): half of each training batch comes from a noise
+//!   cluster with random labels, and η parametrises a linear+sigmoid
+//!   weight over inputs; the mixed ∂²L/∂η∂θ term is dense here.
+//!
+//! Both use a 2-layer tanh MLP classifier on a Gaussian-mixture corpus
+//! drawn from [`crate::util::prng::Prng`], deterministic per seed.
+
+use super::mixflow::BilevelProblem;
+use super::tape::{NodeId, Tape};
+use super::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// Gaussian-mixture classification data (plus an optional noise cluster).
+struct MixtureData {
+    rng: Prng,
+    d: usize,
+    classes: usize,
+    means: Vec<f64>,      // classes × d
+    noise_mean: Vec<f64>, // d
+}
+
+impl MixtureData {
+    fn new(seed: u64, d: usize, classes: usize) -> MixtureData {
+        let mut rng = Prng::new(seed);
+        let means = rng.normal_vec_f64(classes * d, 2.0);
+        let noise_mean = rng.normal_vec_f64(d, 2.0);
+        MixtureData { rng, d, classes, means, noise_mean }
+    }
+
+    /// `m` examples; the first `m·corrupt_frac` are drawn from the noise
+    /// cluster with uniformly random labels.
+    fn batch(&mut self, m: usize, corrupt_frac: f64) -> (Tensor, Vec<usize>) {
+        let mut labels: Vec<usize> = (0..m)
+            .map(|_| self.rng.next_below(self.classes as u32) as usize)
+            .collect();
+        let mut x = vec![0.0; m * self.d];
+        for i in 0..m {
+            for j in 0..self.d {
+                x[i * self.d + j] = self.means[labels[i] * self.d + j]
+                    + 0.4 * self.rng.next_normal_f64();
+            }
+        }
+        let corrupt = ((m as f64) * corrupt_frac) as usize;
+        for i in 0..corrupt {
+            for j in 0..self.d {
+                x[i * self.d + j] =
+                    self.noise_mean[j] + 0.4 * self.rng.next_normal_f64();
+            }
+            labels[i] = self.rng.next_below(self.classes as u32) as usize;
+        }
+        (Tensor::new(vec![m, self.d], x), labels)
+    }
+}
+
+/// Per-example cross-entropy `[m]` of a 2-layer tanh MLP.
+///
+/// `theta = [W1 (d×h), b1 (h), W2 (h×c), b2 (c)]`; `x_id` must be a node
+/// holding the `[m,d]` input batch.
+pub fn mlp_ce_vec(
+    tape: &mut Tape,
+    x_id: NodeId,
+    theta: &[NodeId],
+    labels: &[usize],
+) -> NodeId {
+    let m = tape.shape(x_id)[0];
+    let (w1, b1, w2, b2) = (theta[0], theta[1], theta[2], theta[3]);
+    let xw = tape.matmul(x_id, w1, false, false);
+    let b1b = tape.col_broadcast(b1, m);
+    let pre = tape.add(xw, b1b);
+    let h = tape.tanh(pre);
+    let hw = tape.matmul(h, w2, false, false);
+    let b2b = tape.col_broadcast(b2, m);
+    let z = tape.add(hw, b2b);
+    let lse = tape.logsumexp_rows(z);
+    let picked = tape.gather_cols(z, labels.to_vec());
+    tape.sub(lse, picked)
+}
+
+fn mean_ce(
+    tape: &mut Tape,
+    batch: &(Tensor, Vec<usize>),
+    theta: &[NodeId],
+) -> NodeId {
+    let x_id = tape.constant(batch.0.clone());
+    let ce = mlp_ce_vec(tape, x_id, theta, &batch.1);
+    let s = tape.sum(ce);
+    tape.scale(s, 1.0 / batch.1.len() as f64)
+}
+
+fn init_theta(d: usize, hidden: usize, classes: usize, rng: &mut Prng) -> Vec<Tensor> {
+    vec![
+        Tensor::randn(&[d, hidden], 0.5, rng),
+        Tensor::zeros(&[hidden]),
+        Tensor::randn(&[hidden, classes], 0.5, rng),
+        Tensor::zeros(&[classes]),
+    ]
+}
+
+/// Meta-learned per-leaf learning rates (paper §5.2 task 1).
+pub struct HyperLrProblem {
+    data: MixtureData,
+    theta_init: Vec<Tensor>,
+    unroll: usize,
+    alpha0: f64,
+    batch: usize,
+    train: Vec<(Tensor, Vec<usize>)>,
+    val: (Tensor, Vec<usize>),
+}
+
+impl HyperLrProblem {
+    pub fn new(seed: u64) -> HyperLrProblem {
+        HyperLrProblem::with_config(seed, 6, 12, 4, 12, 8, 0.08)
+    }
+
+    pub fn with_config(
+        seed: u64,
+        d: usize,
+        hidden: usize,
+        classes: usize,
+        batch: usize,
+        unroll: usize,
+        alpha0: f64,
+    ) -> HyperLrProblem {
+        let data = MixtureData::new(seed, d, classes);
+        let mut init_rng = Prng::new(seed).fold_in(0xA11CE);
+        let theta_init = init_theta(d, hidden, classes, &mut init_rng);
+        let mut p = HyperLrProblem {
+            data,
+            theta_init,
+            unroll,
+            alpha0,
+            batch,
+            train: Vec::new(),
+            val: (Tensor::zeros(&[1, d]), vec![0]),
+        };
+        p.resample();
+        p
+    }
+
+    /// Same task with a different unroll length (memory benches).
+    pub fn with_unroll(seed: u64, unroll: usize) -> HyperLrProblem {
+        HyperLrProblem::with_config(seed, 6, 12, 4, 12, unroll, 0.08)
+    }
+}
+
+impl BilevelProblem for HyperLrProblem {
+    fn theta0(&self) -> Vec<Tensor> {
+        self.theta_init.clone()
+    }
+
+    fn eta0(&self) -> Vec<Tensor> {
+        self.theta_init.iter().map(|_| Tensor::scalar(0.0)).collect()
+    }
+
+    fn unroll(&self) -> usize {
+        self.unroll
+    }
+
+    fn inner_loss(
+        &self,
+        tape: &mut Tape,
+        theta: &[NodeId],
+        _eta: &[NodeId],
+        step: usize,
+    ) -> NodeId {
+        mean_ce(tape, &self.train[step % self.train.len()], theta)
+    }
+
+    fn outer_loss(&self, tape: &mut Tape, theta: &[NodeId]) -> NodeId {
+        mean_ce(tape, &self.val, theta)
+    }
+
+    fn lr_nodes(&self, tape: &mut Tape, eta: &[NodeId]) -> Vec<NodeId> {
+        self.theta_init
+            .iter()
+            .enumerate()
+            .map(|(i, leaf)| {
+                let e = tape.exp(eta[i]);
+                let s = tape.scale(e, self.alpha0);
+                tape.broadcast(s, &leaf.shape)
+            })
+            .collect()
+    }
+
+    fn resample(&mut self) {
+        self.train = (0..self.unroll)
+            .map(|_| self.data.batch(self.batch, 0.0))
+            .collect();
+        self.val = self.data.batch(self.batch * 2, 0.0);
+    }
+}
+
+/// Meta-learned example weighting under label noise (paper §5.2 task 3).
+pub struct LossWeightingProblem {
+    data: MixtureData,
+    theta_init: Vec<Tensor>,
+    d: usize,
+    unroll: usize,
+    alpha0: f64,
+    batch: usize,
+    corrupt_frac: f64,
+    train: Vec<(Tensor, Vec<usize>)>,
+    val: (Tensor, Vec<usize>),
+}
+
+impl LossWeightingProblem {
+    pub fn new(seed: u64) -> LossWeightingProblem {
+        LossWeightingProblem::with_config(seed, 6, 12, 4, 16, 8, 0.15, 0.5)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_config(
+        seed: u64,
+        d: usize,
+        hidden: usize,
+        classes: usize,
+        batch: usize,
+        unroll: usize,
+        alpha0: f64,
+        corrupt_frac: f64,
+    ) -> LossWeightingProblem {
+        let data = MixtureData::new(seed, d, classes);
+        let mut init_rng = Prng::new(seed).fold_in(0xB0B);
+        let theta_init = init_theta(d, hidden, classes, &mut init_rng);
+        let mut p = LossWeightingProblem {
+            data,
+            theta_init,
+            d,
+            unroll,
+            alpha0,
+            batch,
+            corrupt_frac,
+            train: Vec::new(),
+            val: (Tensor::zeros(&[1, d]), vec![0]),
+        };
+        p.resample();
+        p
+    }
+
+    pub fn with_unroll(seed: u64, unroll: usize) -> LossWeightingProblem {
+        LossWeightingProblem::with_config(seed, 6, 12, 4, 16, unroll, 0.15, 0.5)
+    }
+}
+
+impl BilevelProblem for LossWeightingProblem {
+    fn theta0(&self) -> Vec<Tensor> {
+        self.theta_init.clone()
+    }
+
+    fn eta0(&self) -> Vec<Tensor> {
+        vec![Tensor::zeros(&[self.d, 1]), Tensor::scalar(0.0)]
+    }
+
+    fn unroll(&self) -> usize {
+        self.unroll
+    }
+
+    fn inner_loss(
+        &self,
+        tape: &mut Tape,
+        theta: &[NodeId],
+        eta: &[NodeId],
+        step: usize,
+    ) -> NodeId {
+        let batch = &self.train[step % self.train.len()];
+        let m = batch.1.len();
+        let x_id = tape.constant(batch.0.clone());
+        let ce = mlp_ce_vec(tape, x_id, theta, &batch.1);
+        // w = σ(x·v + c) via σ(z) = ½(1 + tanh(z/2)) — in (0, 1).
+        let z2 = tape.matmul(x_id, eta[0], false, false);
+        let z = tape.reshape(z2, vec![m]);
+        let cb = tape.broadcast(eta[1], &[m]);
+        let zc = tape.add(z, cb);
+        let half = tape.scale(zc, 0.5);
+        let th = tape.tanh(half);
+        let sh = tape.scale(th, 0.5);
+        let w = tape.offset(sh, 0.5);
+        let wce = tape.mul(w, ce);
+        let s = tape.sum(wce);
+        tape.scale(s, 1.0 / m as f64)
+    }
+
+    fn outer_loss(&self, tape: &mut Tape, theta: &[NodeId]) -> NodeId {
+        mean_ce(tape, &self.val, theta)
+    }
+
+    fn lr_nodes(&self, tape: &mut Tape, _eta: &[NodeId]) -> Vec<NodeId> {
+        self.theta_init
+            .iter()
+            .map(|leaf| {
+                let a = tape.constant(Tensor::scalar(self.alpha0));
+                tape.broadcast(a, &leaf.shape)
+            })
+            .collect()
+    }
+
+    fn resample(&mut self) {
+        self.train = (0..self.unroll)
+            .map(|_| self.data.batch(self.batch, self.corrupt_frac))
+            .collect();
+        self.val = self.data.batch(self.batch * 2, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_deterministic_and_in_range() {
+        let mut a = MixtureData::new(3, 4, 5);
+        let mut b = MixtureData::new(3, 4, 5);
+        let (xa, ya) = a.batch(6, 0.0);
+        let (xb, yb) = b.batch(6, 0.0);
+        assert_eq!(xa, xb);
+        assert_eq!(ya, yb);
+        assert_eq!(xa.shape, vec![6, 4]);
+        assert!(ya.iter().all(|&y| y < 5));
+    }
+
+    #[test]
+    fn inner_loss_is_finite_scalar() {
+        let prob = HyperLrProblem::new(11);
+        let mut tape = Tape::new();
+        let theta: Vec<NodeId> = prob
+            .theta0()
+            .into_iter()
+            .map(|t| tape.leaf(t))
+            .collect();
+        let eta: Vec<NodeId> =
+            prob.eta0().into_iter().map(|t| tape.leaf(t)).collect();
+        let l = prob.inner_loss(&mut tape, &theta, &eta, 0);
+        assert!(tape.value(l).item().is_finite());
+        assert!(tape.value(l).item() > 0.0, "CE must be positive");
+    }
+
+    #[test]
+    fn weighting_loss_depends_on_eta() {
+        // ∇_η of the weighted inner loss must be non-zero (dense mixed
+        // term is the whole point of the task).
+        let prob = LossWeightingProblem::new(17);
+        let mut tape = Tape::new();
+        let theta: Vec<NodeId> = prob
+            .theta0()
+            .into_iter()
+            .map(|t| tape.leaf(t))
+            .collect();
+        let eta: Vec<NodeId> =
+            prob.eta0().into_iter().map(|t| tape.leaf(t)).collect();
+        let l = prob.inner_loss(&mut tape, &theta, &eta, 0);
+        let g = tape.grad(l, &eta);
+        let total: f64 = g.iter().map(|&id| tape.value(id).max_abs()).sum();
+        assert!(total > 1e-8, "eta gradient unexpectedly zero");
+    }
+
+    #[test]
+    fn lr_nodes_match_leaf_shapes() {
+        let prob = HyperLrProblem::new(2);
+        let mut tape = Tape::new();
+        let eta: Vec<NodeId> =
+            prob.eta0().into_iter().map(|t| tape.leaf(t)).collect();
+        let lrs = prob.lr_nodes(&mut tape, &eta);
+        for (lr, leaf) in lrs.iter().zip(prob.theta0().iter()) {
+            assert_eq!(tape.shape(*lr), leaf.shape);
+            // η = 0 → multiplier exp(0)·α₀ = α₀ everywhere.
+            for v in &tape.value(*lr).data {
+                assert!((v - 0.08).abs() < 1e-12);
+            }
+        }
+    }
+}

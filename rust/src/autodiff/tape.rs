@@ -1,0 +1,725 @@
+//! Wengert-list tape: eager op evaluation, graph-mode reverse
+//! differentiation, and a forward-mode JVP overlay.
+//!
+//! The two properties the MixFlow-MG composition rests on:
+//!
+//! 1. **Closure under differentiation** — [`Tape::grad`] *appends* the
+//!    adjoint computation to the same tape as ordinary ops, so calling
+//!    `grad` on a function of gradient nodes yields reverse-over-reverse
+//!    (the naive hypergradient baseline) with no special cases.
+//! 2. **Dual overlay** — [`Tape::jvp`] sweeps tangents forward through
+//!    every recorded node, including appended gradient nodes.  Seeding
+//!    the θ-leaves with a direction `v` makes the tangent of a `∇_θ L`
+//!    node the Hessian-vector product `∂²L/∂θ² · v`, and the tangent of
+//!    a `∇_η L` node the mixed product `(∂²L/∂θ∂η)ᵀ · v` — exactly the
+//!    forward-over-reverse quantities of the paper's Eq. (8).
+//!
+//! Every node's value buffer is counted in [`TapeStats::bytes`]; the JVP
+//! overlay reports the tangent bytes it materialises (zero tangents are
+//! never stored, mirroring the paper's Ω-sparsity exploitation).
+
+use super::tensor::Tensor;
+
+/// Index of a node on the tape.
+pub type NodeId = usize;
+
+/// Primitive operations.  The set is closed under both `grad` (VJPs are
+/// expressed via these same ops) and `jvp` (linearisations are computed
+/// from stored primal values).
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Differentiable input.
+    Leaf,
+    /// Non-differentiable input (data, labels, seeds).
+    Const,
+    Add(NodeId, NodeId),
+    Sub(NodeId, NodeId),
+    Mul(NodeId, NodeId),
+    /// `x * c` for a compile-time constant `c`.
+    Scale(NodeId, f64),
+    /// `x + c` elementwise.
+    Offset(NodeId, f64),
+    Matmul { a: NodeId, b: NodeId, ta: bool, tb: bool },
+    Relu(NodeId),
+    /// Heaviside step of the input (0/1 mask); derivative defined as 0,
+    /// matching JAX's convention for `relu'` at a kink.
+    Step(NodeId),
+    Tanh(NodeId),
+    Exp(NodeId),
+    /// Sum of all elements → scalar.
+    Sum(NodeId),
+    /// Scalar → filled tensor of the given shape.
+    Broadcast(NodeId, Vec<usize>),
+    /// `[m,n] → [m]`, summing each row.
+    RowSum(NodeId),
+    /// `[m] → [m,n]`, repeating each entry across a row.
+    RowBroadcast(NodeId, usize),
+    /// `[m,n] → [n]`, summing each column.
+    ColSum(NodeId),
+    /// `[n] → [m,n]`, repeating the vector as every row.
+    ColBroadcast(NodeId, usize),
+    SoftmaxRows(NodeId),
+    LogSumExpRows(NodeId),
+    /// `[m,n] → [m]`: element `(i, idx[i])` per row.
+    GatherCols(NodeId, Vec<usize>),
+    /// `[m] → [m,n]`: value `i` placed at `(i, idx[i])`, zero elsewhere.
+    ScatterCols(NodeId, Vec<usize>, usize),
+    Reshape(NodeId, Vec<usize>),
+}
+
+struct Node {
+    op: Op,
+    value: Tensor,
+}
+
+/// Size/occupancy counters for one tape.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TapeStats {
+    pub nodes: usize,
+    /// Total bytes of all node value buffers currently on the tape.
+    pub bytes: usize,
+}
+
+/// The Wengert list.
+pub struct Tape {
+    nodes: Vec<Node>,
+    bytes: usize,
+}
+
+impl Default for Tape {
+    fn default() -> Self {
+        Tape::new()
+    }
+}
+
+// ---- value-level kernels shared by eager eval and the JVP overlay ------
+
+fn t_sum(v: &Tensor) -> Tensor {
+    Tensor::scalar(v.data.iter().sum())
+}
+
+fn t_row_sum(v: &Tensor) -> Tensor {
+    let (m, n) = v.dims2();
+    let data = (0..m).map(|i| v.data[i * n..(i + 1) * n].iter().sum()).collect();
+    Tensor::new(vec![m], data)
+}
+
+fn t_row_broadcast(v: &Tensor, n: usize) -> Tensor {
+    assert_eq!(v.shape.len(), 1, "row_broadcast wants a vector");
+    let m = v.shape[0];
+    let mut data = Vec::with_capacity(m * n);
+    for i in 0..m {
+        data.extend(std::iter::repeat(v.data[i]).take(n));
+    }
+    Tensor::new(vec![m, n], data)
+}
+
+fn t_col_sum(v: &Tensor) -> Tensor {
+    let (m, n) = v.dims2();
+    let mut data = vec![0.0; n];
+    for i in 0..m {
+        for j in 0..n {
+            data[j] += v.data[i * n + j];
+        }
+    }
+    Tensor::new(vec![n], data)
+}
+
+fn t_col_broadcast(v: &Tensor, m: usize) -> Tensor {
+    assert_eq!(v.shape.len(), 1, "col_broadcast wants a vector");
+    let n = v.shape[0];
+    let mut data = Vec::with_capacity(m * n);
+    for _ in 0..m {
+        data.extend_from_slice(&v.data);
+    }
+    Tensor::new(vec![m, n], data)
+}
+
+fn t_softmax_rows(z: &Tensor) -> Tensor {
+    let (m, n) = z.dims2();
+    let mut out = vec![0.0; m * n];
+    for i in 0..m {
+        let row = &z.data[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut denom = 0.0;
+        for j in 0..n {
+            let e = (row[j] - mx).exp();
+            out[i * n + j] = e;
+            denom += e;
+        }
+        for j in 0..n {
+            out[i * n + j] /= denom;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+fn t_logsumexp_rows(z: &Tensor) -> Tensor {
+    let (m, n) = z.dims2();
+    let data = (0..m)
+        .map(|i| {
+            let row = &z.data[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            mx + row.iter().map(|x| (x - mx).exp()).sum::<f64>().ln()
+        })
+        .collect();
+    Tensor::new(vec![m], data)
+}
+
+fn t_gather_cols(z: &Tensor, idx: &[usize]) -> Tensor {
+    let (m, n) = z.dims2();
+    assert_eq!(idx.len(), m, "gather index length");
+    let data = idx
+        .iter()
+        .enumerate()
+        .map(|(i, &j)| {
+            assert!(j < n, "gather index {j} out of {n}");
+            z.data[i * n + j]
+        })
+        .collect();
+    Tensor::new(vec![m], data)
+}
+
+fn t_scatter_cols(v: &Tensor, idx: &[usize], n: usize) -> Tensor {
+    assert_eq!(v.shape.len(), 1, "scatter wants a vector");
+    let m = v.shape[0];
+    assert_eq!(idx.len(), m, "scatter index length");
+    let mut data = vec![0.0; m * n];
+    for (i, &j) in idx.iter().enumerate() {
+        data[i * n + j] = v.data[i];
+    }
+    Tensor::new(vec![m, n], data)
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape { nodes: Vec::new(), bytes: 0 }
+    }
+
+    /// Value of a node.
+    pub fn value(&self, id: NodeId) -> &Tensor {
+        &self.nodes[id].value
+    }
+
+    /// Shape of a node (cloned).
+    pub fn shape(&self, id: NodeId) -> Vec<usize> {
+        self.nodes[id].value.shape.clone()
+    }
+
+    pub fn stats(&self) -> TapeStats {
+        TapeStats { nodes: self.nodes.len(), bytes: self.bytes }
+    }
+
+    fn push(&mut self, op: Op, value: Tensor) -> NodeId {
+        self.bytes += value.bytes();
+        self.nodes.push(Node { op, value });
+        self.nodes.len() - 1
+    }
+
+    // ---- builders ------------------------------------------------------
+
+    /// Differentiable input.
+    pub fn leaf(&mut self, value: Tensor) -> NodeId {
+        self.push(Op::Leaf, value)
+    }
+
+    /// Non-differentiable input.
+    pub fn constant(&mut self, value: Tensor) -> NodeId {
+        self.push(Op::Const, value)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let value = self.value(a).zip(self.value(b), |x, y| x + y);
+        self.push(Op::Add(a, b), value)
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let value = self.value(a).zip(self.value(b), |x, y| x - y);
+        self.push(Op::Sub(a, b), value)
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let value = self.value(a).zip(self.value(b), |x, y| x * y);
+        self.push(Op::Mul(a, b), value)
+    }
+
+    pub fn scale(&mut self, a: NodeId, c: f64) -> NodeId {
+        let value = self.value(a).map(|x| x * c);
+        self.push(Op::Scale(a, c), value)
+    }
+
+    pub fn offset(&mut self, a: NodeId, c: f64) -> NodeId {
+        let value = self.value(a).map(|x| x + c);
+        self.push(Op::Offset(a, c), value)
+    }
+
+    pub fn matmul(&mut self, a: NodeId, b: NodeId, ta: bool, tb: bool) -> NodeId {
+        let value = self.value(a).matmul(self.value(b), ta, tb);
+        self.push(Op::Matmul { a, b, ta, tb }, value)
+    }
+
+    pub fn relu(&mut self, a: NodeId) -> NodeId {
+        let value = self.value(a).map(|x| x.max(0.0));
+        self.push(Op::Relu(a), value)
+    }
+
+    pub fn step(&mut self, a: NodeId) -> NodeId {
+        let value = self.value(a).map(|x| if x > 0.0 { 1.0 } else { 0.0 });
+        self.push(Op::Step(a), value)
+    }
+
+    pub fn tanh(&mut self, a: NodeId) -> NodeId {
+        let value = self.value(a).map(f64::tanh);
+        self.push(Op::Tanh(a), value)
+    }
+
+    pub fn exp(&mut self, a: NodeId) -> NodeId {
+        let value = self.value(a).map(f64::exp);
+        self.push(Op::Exp(a), value)
+    }
+
+    pub fn sum(&mut self, a: NodeId) -> NodeId {
+        let value = t_sum(self.value(a));
+        self.push(Op::Sum(a), value)
+    }
+
+    /// Scalar → any shape.
+    pub fn broadcast(&mut self, a: NodeId, shape: &[usize]) -> NodeId {
+        let v = self.value(a);
+        assert!(
+            v.shape.is_empty(),
+            "broadcast wants a rank-0 scalar, got {:?}",
+            v.shape
+        );
+        let value = Tensor::full(shape, v.item());
+        self.push(Op::Broadcast(a, shape.to_vec()), value)
+    }
+
+    pub fn row_sum(&mut self, a: NodeId) -> NodeId {
+        let value = t_row_sum(self.value(a));
+        self.push(Op::RowSum(a), value)
+    }
+
+    pub fn row_broadcast(&mut self, a: NodeId, n: usize) -> NodeId {
+        let value = t_row_broadcast(self.value(a), n);
+        self.push(Op::RowBroadcast(a, n), value)
+    }
+
+    pub fn col_sum(&mut self, a: NodeId) -> NodeId {
+        let value = t_col_sum(self.value(a));
+        self.push(Op::ColSum(a), value)
+    }
+
+    pub fn col_broadcast(&mut self, a: NodeId, m: usize) -> NodeId {
+        let value = t_col_broadcast(self.value(a), m);
+        self.push(Op::ColBroadcast(a, m), value)
+    }
+
+    pub fn softmax_rows(&mut self, a: NodeId) -> NodeId {
+        let value = t_softmax_rows(self.value(a));
+        self.push(Op::SoftmaxRows(a), value)
+    }
+
+    pub fn logsumexp_rows(&mut self, a: NodeId) -> NodeId {
+        let value = t_logsumexp_rows(self.value(a));
+        self.push(Op::LogSumExpRows(a), value)
+    }
+
+    pub fn gather_cols(&mut self, a: NodeId, idx: Vec<usize>) -> NodeId {
+        let value = t_gather_cols(self.value(a), &idx);
+        self.push(Op::GatherCols(a, idx), value)
+    }
+
+    pub fn scatter_cols(&mut self, a: NodeId, idx: Vec<usize>, n: usize) -> NodeId {
+        let value = t_scatter_cols(self.value(a), &idx, n);
+        self.push(Op::ScatterCols(a, idx, n), value)
+    }
+
+    pub fn reshape(&mut self, a: NodeId, shape: Vec<usize>) -> NodeId {
+        let v = self.value(a);
+        assert_eq!(
+            v.elements(),
+            shape.iter().product::<usize>(),
+            "reshape {:?} → {shape:?}",
+            v.shape
+        );
+        let value = Tensor::new(shape.clone(), v.data.clone());
+        self.push(Op::Reshape(a, shape), value)
+    }
+
+    /// Mean of all elements (composite: `sum` then `scale`).
+    pub fn mean(&mut self, a: NodeId) -> NodeId {
+        let n = self.value(a).elements();
+        let s = self.sum(a);
+        self.scale(s, 1.0 / n as f64)
+    }
+
+    // ---- reverse mode ---------------------------------------------------
+
+    fn acc(&mut self, adj: &mut [Option<NodeId>], id: NodeId, contrib: NodeId) {
+        adj[id] = Some(match adj[id] {
+            Some(prev) => self.add(prev, contrib),
+            None => contrib,
+        });
+    }
+
+    /// Gradient of scalar node `y` with respect to `wrt`, appended to the
+    /// tape as new nodes (graph-mode reverse).  Nodes unreachable from `y`
+    /// get zero gradients.  Because the adjoint computation is itself made
+    /// of tape ops, a later `grad` (or [`Tape::jvp`]) can differentiate
+    /// straight through it.
+    pub fn grad(&mut self, y: NodeId, wrt: &[NodeId]) -> Vec<NodeId> {
+        assert_eq!(self.value(y).elements(), 1, "grad of a non-scalar");
+        let mut adj: Vec<Option<NodeId>> = vec![None; y + 1];
+        let seed_shape = self.shape(y);
+        let seed = self.constant(Tensor::full(&seed_shape, 1.0));
+        adj[y] = Some(seed);
+        for i in (0..=y).rev() {
+            let Some(g) = adj[i] else { continue };
+            let op = self.nodes[i].op.clone();
+            match op {
+                Op::Leaf | Op::Const | Op::Step(_) => {}
+                Op::Add(a, b) => {
+                    self.acc(&mut adj, a, g);
+                    self.acc(&mut adj, b, g);
+                }
+                Op::Sub(a, b) => {
+                    self.acc(&mut adj, a, g);
+                    let neg = self.scale(g, -1.0);
+                    self.acc(&mut adj, b, neg);
+                }
+                Op::Mul(a, b) => {
+                    let ca = self.mul(g, b);
+                    let cb = self.mul(g, a);
+                    self.acc(&mut adj, a, ca);
+                    self.acc(&mut adj, b, cb);
+                }
+                Op::Scale(a, c) => {
+                    let s = self.scale(g, c);
+                    self.acc(&mut adj, a, s);
+                }
+                Op::Offset(a, _) => self.acc(&mut adj, a, g),
+                Op::Matmul { a, b, ta, tb } => {
+                    let da = if !ta {
+                        self.matmul(g, b, false, !tb)
+                    } else {
+                        self.matmul(b, g, tb, true)
+                    };
+                    let db = if !tb {
+                        self.matmul(a, g, !ta, false)
+                    } else {
+                        self.matmul(g, a, true, ta)
+                    };
+                    self.acc(&mut adj, a, da);
+                    self.acc(&mut adj, b, db);
+                }
+                Op::Relu(a) => {
+                    let mask = self.step(a);
+                    let c = self.mul(g, mask);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::Tanh(a) => {
+                    // d tanh = (1 − y²): g − g·y², reusing this node as y.
+                    let y2 = self.mul(i, i);
+                    let gy2 = self.mul(g, y2);
+                    let c = self.sub(g, gy2);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::Exp(a) => {
+                    let c = self.mul(g, i);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::Sum(a) => {
+                    let sh = self.shape(a);
+                    let c = self.broadcast(g, &sh);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::Broadcast(a, _) => {
+                    let c = self.sum(g);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::RowSum(a) => {
+                    let n = self.shape(a)[1];
+                    let c = self.row_broadcast(g, n);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::RowBroadcast(a, _) => {
+                    let c = self.row_sum(g);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::ColSum(a) => {
+                    let m = self.shape(a)[0];
+                    let c = self.col_broadcast(g, m);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::ColBroadcast(a, _) => {
+                    let c = self.col_sum(g);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::SoftmaxRows(a) => {
+                    // dz = s ⊙ (g − rowbcast(rowsum(g ⊙ s))), s = this node.
+                    let n = self.shape(a)[1];
+                    let gs = self.mul(g, i);
+                    let rs = self.row_sum(gs);
+                    let rb = self.row_broadcast(rs, n);
+                    let diff = self.sub(g, rb);
+                    let c = self.mul(i, diff);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::LogSumExpRows(a) => {
+                    let n = self.shape(a)[1];
+                    let s = self.softmax_rows(a);
+                    let rb = self.row_broadcast(g, n);
+                    let c = self.mul(rb, s);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::GatherCols(a, idx) => {
+                    let n = self.shape(a)[1];
+                    let c = self.scatter_cols(g, idx, n);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::ScatterCols(a, idx, _) => {
+                    let c = self.gather_cols(g, idx);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::Reshape(a, _) => {
+                    let sh = self.shape(a);
+                    let c = self.reshape(g, sh);
+                    self.acc(&mut adj, a, c);
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(wrt.len());
+        for &w in wrt {
+            match adj.get(w).copied().flatten() {
+                Some(id) => out.push(id),
+                None => {
+                    let sh = self.shape(w);
+                    let z = self.constant(Tensor::zeros(&sh));
+                    out.push(z);
+                }
+            }
+        }
+        out
+    }
+
+    // ---- forward mode ---------------------------------------------------
+
+    /// Forward tangent sweep over the whole tape (dual-number overlay).
+    ///
+    /// `seeds` assigns tangents to leaf/const nodes; every other tangent is
+    /// derived by the op linearisations.  Returns the tangents of
+    /// `targets` (zeros where no tangent flows) and the total bytes of
+    /// tangent buffers materialised — the memory cost of the overlay.
+    pub fn jvp(
+        &self,
+        seeds: &[(NodeId, Tensor)],
+        targets: &[NodeId],
+    ) -> (Vec<Tensor>, usize) {
+        for (id, t) in seeds {
+            assert_eq!(
+                t.shape,
+                self.nodes[*id].value.shape,
+                "seed shape mismatch at node {id}"
+            );
+        }
+        let mut tan: Vec<Option<Tensor>> = vec![None; self.nodes.len()];
+        let mut bytes = 0usize;
+        for i in 0..self.nodes.len() {
+            let out: Option<Tensor> = match &self.nodes[i].op {
+                Op::Leaf | Op::Const => seeds
+                    .iter()
+                    .find(|(id, _)| *id == i)
+                    .map(|(_, t)| t.clone()),
+                Op::Step(_) => None,
+                Op::Add(a, b) => match (&tan[*a], &tan[*b]) {
+                    (Some(x), Some(y)) => Some(x.zip(y, |p, q| p + q)),
+                    (Some(x), None) => Some(x.clone()),
+                    (None, Some(y)) => Some(y.clone()),
+                    (None, None) => None,
+                },
+                Op::Sub(a, b) => match (&tan[*a], &tan[*b]) {
+                    (Some(x), Some(y)) => Some(x.zip(y, |p, q| p - q)),
+                    (Some(x), None) => Some(x.clone()),
+                    (None, Some(y)) => Some(y.map(|q| -q)),
+                    (None, None) => None,
+                },
+                Op::Mul(a, b) => {
+                    let va = &self.nodes[*a].value;
+                    let vb = &self.nodes[*b].value;
+                    match (&tan[*a], &tan[*b]) {
+                        (Some(x), Some(y)) => {
+                            let left = x.zip(vb, |p, q| p * q);
+                            let right = va.zip(y, |p, q| p * q);
+                            Some(left.zip(&right, |p, q| p + q))
+                        }
+                        (Some(x), None) => Some(x.zip(vb, |p, q| p * q)),
+                        (None, Some(y)) => Some(va.zip(y, |p, q| p * q)),
+                        (None, None) => None,
+                    }
+                }
+                Op::Scale(a, c) => tan[*a].as_ref().map(|t| t.map(|x| x * c)),
+                Op::Offset(a, _) => tan[*a].clone(),
+                Op::Matmul { a, b, ta, tb } => {
+                    let va = &self.nodes[*a].value;
+                    let vb = &self.nodes[*b].value;
+                    let left =
+                        tan[*a].as_ref().map(|t| t.matmul(vb, *ta, *tb));
+                    let right =
+                        tan[*b].as_ref().map(|t| va.matmul(t, *ta, *tb));
+                    match (left, right) {
+                        (Some(x), Some(y)) => Some(x.zip(&y, |p, q| p + q)),
+                        (x, None) => x,
+                        (None, y) => y,
+                    }
+                }
+                Op::Relu(a) => tan[*a].as_ref().map(|t| {
+                    t.zip(&self.nodes[*a].value, |p, x| {
+                        if x > 0.0 {
+                            p
+                        } else {
+                            0.0
+                        }
+                    })
+                }),
+                Op::Tanh(a) => tan[*a].as_ref().map(|t| {
+                    t.zip(&self.nodes[i].value, |p, y| p * (1.0 - y * y))
+                }),
+                Op::Exp(a) => tan[*a]
+                    .as_ref()
+                    .map(|t| t.zip(&self.nodes[i].value, |p, y| p * y)),
+                Op::Sum(a) => tan[*a].as_ref().map(t_sum),
+                Op::Broadcast(a, shape) => tan[*a]
+                    .as_ref()
+                    .map(|t| Tensor::full(shape, t.item())),
+                Op::RowSum(a) => tan[*a].as_ref().map(t_row_sum),
+                Op::RowBroadcast(a, n) => {
+                    tan[*a].as_ref().map(|t| t_row_broadcast(t, *n))
+                }
+                Op::ColSum(a) => tan[*a].as_ref().map(t_col_sum),
+                Op::ColBroadcast(a, m) => {
+                    tan[*a].as_ref().map(|t| t_col_broadcast(t, *m))
+                }
+                Op::SoftmaxRows(a) => tan[*a].as_ref().map(|t| {
+                    // ṡ = s ⊙ (ż − rowbcast(rowsum(s ⊙ ż)))
+                    let s = &self.nodes[i].value;
+                    let st = s.zip(t, |p, q| p * q);
+                    let rb = t_row_broadcast(&t_row_sum(&st), s.shape[1]);
+                    let inner = t.zip(&rb, |p, q| p - q);
+                    s.zip(&inner, |p, q| p * q)
+                }),
+                Op::LogSumExpRows(a) => tan[*a].as_ref().map(|t| {
+                    let s = t_softmax_rows(&self.nodes[*a].value);
+                    t_row_sum(&s.zip(t, |p, q| p * q))
+                }),
+                Op::GatherCols(a, idx) => {
+                    tan[*a].as_ref().map(|t| t_gather_cols(t, idx))
+                }
+                Op::ScatterCols(a, idx, n) => {
+                    tan[*a].as_ref().map(|t| t_scatter_cols(t, idx, *n))
+                }
+                Op::Reshape(a, shape) => tan[*a]
+                    .as_ref()
+                    .map(|t| Tensor::new(shape.clone(), t.data.clone())),
+            };
+            if let Some(t) = out {
+                bytes += t.bytes();
+                tan[i] = Some(t);
+            }
+        }
+        let out = targets
+            .iter()
+            .map(|&t| match &tan[t] {
+                Some(x) => x.clone(),
+                None => Tensor::zeros(&self.nodes[t].value.shape),
+            })
+            .collect();
+        (out, bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_of_square_sum() {
+        // f(x) = Σ x² → ∇f = 2x
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::new(vec![3], vec![1.0, -2.0, 3.0]));
+        let sq = tape.mul(x, x);
+        let y = tape.sum(sq);
+        let g = tape.grad(y, &[x]);
+        assert_eq!(tape.value(g[0]).data, vec![2.0, -4.0, 6.0]);
+    }
+
+    #[test]
+    fn grad_unreachable_is_zero() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::scalar(1.0));
+        let z = tape.leaf(Tensor::new(vec![2], vec![5.0, 5.0]));
+        let y = tape.mul(x, x);
+        let g = tape.grad(y, &[z]);
+        assert_eq!(tape.value(g[0]).data, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn grad_matmul_sum_is_row_col_counts() {
+        // f = Σ (A·B) → dA = 1·Bᵀ, dB = Aᵀ·1
+        let mut tape = Tape::new();
+        let a = tape.leaf(Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]));
+        let b = tape.leaf(Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]));
+        let c = tape.matmul(a, b, false, false);
+        let y = tape.sum(c);
+        let g = tape.grad(y, &[a, b]);
+        // dA[i,k] = Σ_j B[k,j]
+        assert_eq!(tape.value(g[0]).data, vec![11., 15., 11., 15.]);
+        // dB[k,j] = Σ_i A[i,k]
+        assert_eq!(tape.value(g[1]).data, vec![4., 4., 6., 6.]);
+    }
+
+    #[test]
+    fn jvp_matches_linearity() {
+        // y = 3x + 2 → tangent 3v
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::new(vec![2], vec![1.0, 2.0]));
+        let s = tape.scale(x, 3.0);
+        let y = tape.offset(s, 2.0);
+        let (tans, bytes) =
+            tape.jvp(&[(x, Tensor::new(vec![2], vec![1.0, -1.0]))], &[y]);
+        assert_eq!(tans[0].data, vec![3.0, -3.0]);
+        assert!(bytes > 0);
+    }
+
+    #[test]
+    fn jvp_zero_tangents_not_materialised() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::new(vec![4], vec![1.0; 4]));
+        let c = tape.constant(Tensor::new(vec![4], vec![2.0; 4]));
+        let _y = tape.mul(x, c);
+        // No seeds → nothing materialised.
+        let (tans, bytes) = tape.jvp(&[], &[_y]);
+        assert_eq!(bytes, 0);
+        assert_eq!(tans[0].data, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut tape = Tape::new();
+        let z = tape.constant(Tensor::new(vec![2, 3], vec![1., 2., 3., -1., 0., 1.]));
+        let s = tape.softmax_rows(z);
+        let rows = t_row_sum(tape.value(s));
+        for r in rows.data {
+            assert!((r - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn bytes_accumulate() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::zeros(&[8]));
+        let _ = tape.scale(x, 2.0);
+        assert_eq!(tape.stats().bytes, 2 * 8 * 8);
+        assert_eq!(tape.stats().nodes, 2);
+    }
+}

@@ -1,0 +1,200 @@
+//! Dense f64 tensors over flat buffers — the value type of the native
+//! autodiff engine.  Scalars are rank-0 (`shape == []`), vectors rank-1,
+//! matrices rank-2 row-major.  Shapes are checked eagerly with panics:
+//! a shape error is a bug in graph construction, never a data condition.
+
+use crate::util::prng::Prng;
+
+/// Bytes per element (everything is f64).
+pub const ELEM_BYTES: usize = 8;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f64>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn scalar(x: f64) -> Tensor {
+        Tensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], x: f64) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![x; shape.iter().product()] }
+    }
+
+    /// N(0, std²) entries.
+    pub fn randn(shape: &[usize], std: f64, rng: &mut Prng) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.normal_vec_f64(shape.iter().product(), std),
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * ELEM_BYTES
+    }
+
+    /// The single value of a rank-0/one-element tensor.
+    pub fn item(&self) -> f64 {
+        assert_eq!(self.data.len(), 1, "item() on shape {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Rank-2 dimensions.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected matrix, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise combine with an identically-shaped tensor.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        assert_eq!(
+            self.shape, other.shape,
+            "zip shape mismatch {:?} vs {:?}",
+            self.shape, other.shape
+        );
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    /// `C = op(A, ta) · op(B, tb)` with `op(X, true) = Xᵀ`; plain loops —
+    /// the native engine's models are small enough that clarity wins.
+    pub fn matmul(&self, other: &Tensor, ta: bool, tb: bool) -> Tensor {
+        let (ar, ac) = self.dims2();
+        let (br, bc) = other.dims2();
+        let (m, k) = if ta { (ac, ar) } else { (ar, ac) };
+        let (kb, n) = if tb { (bc, br) } else { (br, bc) };
+        assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
+        let a = |i: usize, j: usize| {
+            if ta {
+                self.data[j * ac + i]
+            } else {
+                self.data[i * ac + j]
+            }
+        };
+        let b = |i: usize, j: usize| {
+            if tb {
+                other.data[j * bc + i]
+            } else {
+                other.data[i * bc + j]
+            }
+        };
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                let ail = a(i, l);
+                if ail == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[i * n + j] += ail * b(l, j);
+                }
+            }
+        }
+        Tensor { shape: vec![m, n], data: out }
+    }
+
+    /// Max |entry| difference to another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().map(|x| x.abs()).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_item() {
+        let t = Tensor::scalar(3.5);
+        assert_eq!(t.shape, Vec::<usize>::new());
+        assert_eq!(t.item(), 3.5);
+        assert_eq!(Tensor::zeros(&[2, 3]).elements(), 6);
+        assert_eq!(Tensor::full(&[4], 2.0).data, vec![2.0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn matmul_all_transpose_combos() {
+        // A = [[1,2],[3,4],[5,6]] (3x2), B = [[1,0],[0,1]] picks columns.
+        let a = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let id = Tensor::new(vec![2, 2], vec![1., 0., 0., 1.]);
+        assert_eq!(a.matmul(&id, false, false).data, a.data);
+        assert_eq!(a.matmul(&id, false, true).data, a.data);
+        // Aᵀ·A = [[35,44],[44,56]]
+        let ata = a.matmul(&a, true, false);
+        assert_eq!(ata.shape, vec![2, 2]);
+        assert_eq!(ata.data, vec![35., 44., 44., 56.]);
+        // A·Aᵀ diag = [5, 25, 61]
+        let aat = a.matmul(&a, false, true);
+        assert_eq!(aat.shape, vec![3, 3]);
+        assert_eq!(aat.data[0], 5.0);
+        assert_eq!(aat.data[4], 25.0);
+        assert_eq!(aat.data[8], 61.0);
+        // (Aᵀ)ᵀ·(Aᵀ)ᵀ—ᵀ combo: Aᵀ·(Aᵀ)ᵀ == AᵀA via (true, true) on (A, Aᵀ)
+        let at = Tensor::new(vec![2, 3], vec![1., 3., 5., 2., 4., 6.]);
+        let both = a.matmul(&at, true, true);
+        assert_eq!(both.data, ata.data);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Prng::new(9);
+        let mut r2 = Prng::new(9);
+        let a = Tensor::randn(&[3, 3], 0.5, &mut r1);
+        let b = Tensor::randn(&[3, 3], 0.5, &mut r2);
+        assert_eq!(a, b);
+    }
+}

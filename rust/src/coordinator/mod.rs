@@ -8,4 +8,5 @@ pub mod runner;
 pub mod scheduler;
 
 pub use results::{Measurement, ResultsStore};
+#[cfg(feature = "pjrt")]
 pub use runner::{ExperimentRunner, RunOptions};

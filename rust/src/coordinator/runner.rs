@@ -4,7 +4,9 @@ use anyhow::Result;
 
 use super::results::Measurement;
 use crate::hlo::{flops::CostModel, parser, MemorySimulator};
-use crate::runtime::{ArtifactMeta, Manifest, Runtime};
+#[cfg(feature = "pjrt")]
+use crate::runtime::Runtime;
+use crate::runtime::{ArtifactMeta, Manifest};
 
 /// Analysis-only measurement (no PJRT, usable from worker threads).
 pub fn analyze_artifact(
@@ -39,6 +41,7 @@ pub fn analyze_artifact(
 }
 
 /// Knobs for a run.
+#[cfg(feature = "pjrt")]
 #[derive(Debug, Clone, Copy)]
 pub struct RunOptions {
     /// Timed iterations per exec-tier artifact.
@@ -49,6 +52,7 @@ pub struct RunOptions {
     pub seed: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl Default for RunOptions {
     fn default() -> Self {
         RunOptions { timing_iters: 5, execute: true, seed: 0 }
@@ -56,11 +60,13 @@ impl Default for RunOptions {
 }
 
 /// Runs artifacts and produces [`Measurement`]s.
+#[cfg(feature = "pjrt")]
 pub struct ExperimentRunner<'r> {
     pub runtime: &'r Runtime,
     pub options: RunOptions,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'r> ExperimentRunner<'r> {
     pub fn new(runtime: &'r Runtime, options: RunOptions) -> Self {
         ExperimentRunner { runtime, options }

@@ -12,13 +12,26 @@
 //! * [`hlo`] — HLO text parser → IR, shapes, scheduling, buffer liveness,
 //!   the peak-memory simulator (static/dynamic split, Fig. 2 timelines)
 //!   and a FLOP cost model.
-//! * [`runtime`] — PJRT client wrapper: artifact manifest, compile cache,
-//!   literal construction, timed execution.
+//! * [`autodiff`] — the native differentiation engine: f64 tensors, a
+//!   Wengert-list tape with graph-mode reverse (so grad-of-grad works), a
+//!   forward-mode JVP overlay, and the `naive_hypergrad` /
+//!   `mixflow_hypergrad` bilevel paths with tape-byte instrumentation.
+//!   The first path in the repo where the whole meta-gradient is computed
+//!   by Rust alone.
+//! * [`runtime`] — artifact manifest (always available) + the PJRT client
+//!   wrapper: compile cache, literal construction, timed execution
+//!   (feature `pjrt`).
 //! * [`coordinator`] — experiment configs, sweep grids, the threaded
-//!   runner, results store, and the paper-style report renderer.
-//! * [`meta`] — the end-to-end meta-training driver (synthetic corpus +
-//!   outer loop over `train_step` artifacts).
+//!   runner, results store, and the paper-style report renderer (the
+//!   executing runner needs feature `pjrt`).
+//! * [`meta`] — the end-to-end meta-training drivers: `trainer` over
+//!   `train_step` artifacts (feature `pjrt`) and `native` over the
+//!   autodiff engine (always available).
+//!
+//! Feature `pjrt` links an `xla` crate for artifact execution; without it
+//! the crate builds, tests and serves the native path on any toolchain.
 
+pub mod autodiff;
 pub mod coordinator;
 pub mod hlo;
 pub mod meta;

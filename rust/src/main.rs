@@ -3,21 +3,28 @@
 //! Subcommands:
 //! * `info`                 — manifest summary (artifacts, groups, sizes)
 //! * `analyze <key>`        — HLO memory/cost analysis of one artifact
-//! * `run <key>`            — execute one exec-tier artifact, report timing
-//! * `sweep --group <g>`    — run a figure group, print paper-style ratios
-//! * `train --task <t>`     — E2E meta-training loop (loss curve)
+//! * `native --task <t>`    — native meta-training via the Rust autodiff
+//!   engine (no PJRT, no artifacts); `--mode naive|mixflow`
+//! * `run <key>`            — execute one exec-tier artifact (pjrt)
+//! * `sweep --group <g>`    — run a figure group, print ratios (pjrt)
+//! * `train --task <t>`     — artifact E2E meta-training loop (pjrt)
 //! * `report --group <g>`   — re-render reports from stored results
-//! * `verify`               — numerics cross-check default vs mixflow
+//! * `verify`               — numerics cross-check default vs mixflow (pjrt)
+//!
+//! Commands marked (pjrt) need the `pjrt` cargo feature; without it they
+//! exit with an explanatory error instead of failing to build.
 
 use anyhow::{anyhow, Result};
 use mixflow::coordinator::report as rpt;
-use mixflow::coordinator::runner::{pair_ratios, ExperimentRunner, RunOptions};
+use mixflow::coordinator::runner::pair_ratios;
 use mixflow::coordinator::ResultsStore;
 use mixflow::hlo::{flops::CostModel, parser, MemorySimulator};
-use mixflow::meta::MetaTrainer;
-use mixflow::runtime::{Manifest, Runtime};
+use mixflow::meta::{
+    print_train_summary, HypergradMode, NativeMetaTrainer, NativeTask,
+};
+use mixflow::runtime::Manifest;
 use mixflow::util::args::ArgSpec;
-use mixflow::util::stats::{human_bytes, human_secs};
+use mixflow::util::stats::human_bytes;
 use mixflow::util::table::Table;
 
 fn main() {
@@ -25,11 +32,13 @@ fn main() {
         "mixflow",
         "MixFlow-MG coordinator: run + analyse AOT meta-gradient artifacts",
     )
-    .positional("command", "info|analyze|run|sweep|train|report|verify")
+    .positional("command", "info|analyze|native|run|sweep|train|report|verify")
     .flag("key", None, "artifact key (analyze/run)")
     .flag("group", None, "manifest group (sweep/report)")
-    .flag("task", Some("maml"), "task for train (maml|learning_lr|loss_weighting)")
-    .flag("steps", Some("100"), "outer steps for train")
+    .flag("task", Some("maml"), "task for train/native (maml|learning_lr|loss_weighting|hyperlr)")
+    .flag("steps", Some("100"), "outer steps for train/native")
+    .flag("unroll", Some("8"), "inner unroll length for native")
+    .flag("mode", Some("mixflow"), "hypergradient path for native (naive|mixflow)")
     .flag("iters", Some("5"), "timing iterations")
     .flag("seed", Some("0"), "input seed")
     .switch("no-exec", "analysis only (skip PJRT execution)")
@@ -54,6 +63,13 @@ fn dispatch(args: &mixflow::util::args::Args) -> Result<()> {
         "analyze" => cmd_analyze(
             args.get("key").ok_or_else(|| anyhow!("--key required"))?,
             args.get_bool("timeline"),
+        ),
+        "native" => cmd_native(
+            args.get("task").unwrap(),
+            args.get_usize("steps").map_err(|e| anyhow!(e))?,
+            args.get_usize("unroll").map_err(|e| anyhow!(e))?,
+            args.get("mode").unwrap(),
+            args.get_usize("seed").map_err(|e| anyhow!(e))? as u64,
         ),
         "run" => cmd_run(
             args.get("key").ok_or_else(|| anyhow!("--key required"))?,
@@ -151,84 +167,37 @@ fn cmd_analyze(key: &str, timeline: bool) -> Result<()> {
     Ok(())
 }
 
-fn cmd_run(key: &str, iters: usize, seed: u64) -> Result<()> {
-    let runtime = Runtime::new()?;
-    let loaded = runtime.load(key)?;
+/// Native meta-training: the autodiff engine end-to-end, Python and PJRT
+/// nowhere on the path.
+fn cmd_native(
+    task: &str,
+    steps: usize,
+    unroll: usize,
+    mode: &str,
+    seed: u64,
+) -> Result<()> {
+    // The flag's global default is the artifact task "maml"; the native
+    // engine's nearest equivalent workload is the hyper-LR task.
+    let task = if task == "maml" {
+        NativeTask::HyperLr
+    } else {
+        NativeTask::parse(task).ok_or_else(|| {
+            anyhow!(
+                "--task must be hyperlr|learning_lr|loss_weighting for native"
+            )
+        })?
+    };
+    let mode = HypergradMode::parse(mode)
+        .ok_or_else(|| anyhow!("--mode must be naive|mixflow"))?;
     println!(
-        "compiled {key} in {} on {}",
-        human_secs(loaded.compile_seconds),
-        runtime.platform()
+        "native meta-training: task={} mode={} unroll={unroll} steps={steps}",
+        task.name(),
+        mode.name()
     );
-    let inputs = loaded.default_inputs(seed)?;
-    // Sanity: surface NaN/Inf in the outputs (a silent-corruption guard).
-    let outputs = loaded.execute(&inputs)?;
-    let mut nan = 0usize;
-    let mut total = 0usize;
-    for lit in &outputs {
-        if let Ok(v) = lit.to_vec::<f32>() {
-            nan += v.iter().filter(|x| !x.is_finite()).count();
-            total += v.len();
-        }
-    }
-    println!(
-        "outputs: {} literals, {} / {total} non-finite f32 values{}",
-        outputs.len(),
-        nan,
-        if nan > 0 { "  <-- NUMERICS PROBLEM" } else { "" }
-    );
-    let summary = loaded.time_steps(&inputs, iters)?;
-    println!(
-        "step time: median={} mean={} p95={} (n={})",
-        human_secs(summary.median),
-        human_secs(summary.mean),
-        human_secs(summary.p95),
-        summary.n
-    );
-    Ok(())
-}
-
-fn cmd_sweep(group: &str, execute: bool, iters: usize) -> Result<()> {
-    let runtime = Runtime::new()?;
-    let runner = ExperimentRunner::new(
-        &runtime,
-        RunOptions { timing_iters: iters, execute, seed: 0 },
-    );
-    let measurements = runner.run_group(group);
-    let store = ResultsStore::discover()?;
-    for m in &measurements {
-        store.append(group, m)?;
-    }
-    let pairs = pair_ratios(&measurements);
-    println!("{}", rpt::fig4_sorted_ratios(&pairs));
-    Ok(())
-}
-
-fn cmd_train(task: &str, steps: usize, seed: u64) -> Result<()> {
-    let runtime = Runtime::new()?;
-    // Find the e2e train artifact for this task.
-    let key = runtime
-        .manifest
-        .group("e2e")
-        .iter()
-        .find(|m| m.task == task)
-        .map(|m| m.key.clone())
-        .ok_or_else(|| anyhow!("no e2e train_step artifact for {task}"))?;
-    println!("training {key} for {steps} outer steps...");
-    let mut trainer = MetaTrainer::new(&runtime, &key, seed);
-    let report = trainer.train(steps)?;
-    let (head, tail) = report.improvement(10);
-    println!(
-        "steps={} wall={} ({:.2} steps/s)",
-        report.steps,
-        human_secs(report.seconds),
-        report.steps_per_second
-    );
-    for (i, l) in report.losses.iter().enumerate() {
-        if i % (steps / 20).max(1) == 0 || i + 1 == report.losses.len() {
-            println!("  step {i:>4}  val_loss {l:.4}");
-        }
-    }
-    println!("mean first-10 loss {head:.4} → mean last-10 loss {tail:.4}");
+    let mut trainer =
+        NativeMetaTrainer::with_unroll(task, seed, unroll).with_mode(mode);
+    let report = trainer.train(steps);
+    print_train_summary(&report, trainer.last_memory.as_ref());
     Ok(())
 }
 
@@ -245,84 +214,199 @@ fn cmd_report(group: &str) -> Result<()> {
     Ok(())
 }
 
-/// Debug tool: compile an arbitrary HLO text file, synthesise inputs from
-/// its entry parameter shapes (f32 → 0.05·N(0,1), s32 → tokens <128), run
-/// once and report output finiteness.
-fn cmd_exec_file(path: &str) -> Result<()> {
-    use mixflow::hlo::parser;
-    use mixflow::util::prng::Prng;
-    let text = std::fs::read_to_string(path)?;
-    let module = parser::parse_module(&text).map_err(|e| anyhow!("{e}"))?;
-    let entry = module.entry();
-    let client = xla::PjRtClient::cpu()?;
-    let proto = xla::HloModuleProto::from_text_file(path)?;
-    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
-    let mut rng = Prng::new(0);
-    let mut inputs = Vec::new();
-    for p in entry.parameters() {
-        let dims: Vec<i64> =
-            p.shape.dims().iter().map(|&d| d as i64).collect();
-        let n: usize = p.shape.elements() as usize;
-        let lit = match p.shape.dtype() {
-            Some(mixflow::hlo::shape::DType::F32) => {
-                xla::Literal::vec1(&rng.normal_vec(n, 0.05)).reshape(&dims)?
-            }
-            Some(mixflow::hlo::shape::DType::S32) => {
-                xla::Literal::vec1(&rng.token_vec(n, 128)).reshape(&dims)?
-            }
-            other => return Err(anyhow!("unhandled dtype {other:?}")),
-        };
-        inputs.push(lit);
-    }
-    let result = exe.execute::<xla::Literal>(&inputs)?[0][0]
-        .to_literal_sync()?;
-    let outs = result.to_tuple()?;
-    for (i, o) in outs.iter().enumerate() {
-        if let Ok(v) = o.to_vec::<f32>() {
-            let bad = v.iter().filter(|x| !x.is_finite()).count();
-            println!(
-                "out[{i}] n={} nonfinite={bad} head={:?}",
-                v.len(),
-                &v[..v.len().min(4)]
-            );
-        } else {
-            println!("out[{i}] (non-f32)");
-        }
-    }
-    Ok(())
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> Result<()> {
+    Err(anyhow!(
+        "`{cmd}` needs PJRT execution; rebuild with `--features pjrt` \
+         (and a real xla toolchain, see rust/vendor/xla-stub/README.md)"
+    ))
 }
 
-fn cmd_verify(seed: u64) -> Result<()> {
-    let runtime = Runtime::new()?;
-    let metas = runtime.manifest.group("fig4_sweep");
-    let pairs = runtime.manifest.pairs(&metas);
-    let take = pairs.len().min(3);
-    println!("verifying {take} default/mixflow pairs produce identical meta-gradients...");
-    for (d, x) in pairs.into_iter().take(take) {
-        let ld = runtime.load(&d.key)?;
-        let lx = runtime.load(&x.key)?;
-        let inputs = ld.default_inputs(seed)?;
-        let od = ld.execute(&inputs)?;
-        let ox = lx.execute(&inputs)?;
-        let mut max_diff = 0f32;
-        for (a, b) in od.iter().zip(ox.iter()) {
-            let va = a.to_vec::<f32>()?;
-            let vb = b.to_vec::<f32>()?;
-            for (x, y) in va.iter().zip(vb.iter()) {
-                max_diff = max_diff.max((x - y).abs());
+#[cfg(not(feature = "pjrt"))]
+fn cmd_run(_key: &str, _iters: usize, _seed: u64) -> Result<()> {
+    pjrt_unavailable("run")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_sweep(_group: &str, _execute: bool, _iters: usize) -> Result<()> {
+    pjrt_unavailable("sweep")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_task: &str, _steps: usize, _seed: u64) -> Result<()> {
+    pjrt_unavailable("train")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_verify(_seed: u64) -> Result<()> {
+    pjrt_unavailable("verify")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_exec_file(_path: &str) -> Result<()> {
+    pjrt_unavailable("exec-file")
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_cmds {
+    use super::*;
+    use anyhow::{anyhow, Result};
+    use mixflow::coordinator::runner::{ExperimentRunner, RunOptions};
+    use mixflow::meta::MetaTrainer;
+    use mixflow::runtime::Runtime;
+    use mixflow::util::stats::human_secs;
+
+    pub fn cmd_run(key: &str, iters: usize, seed: u64) -> Result<()> {
+        let runtime = Runtime::new()?;
+        let loaded = runtime.load(key)?;
+        println!(
+            "compiled {key} in {} on {}",
+            human_secs(loaded.compile_seconds),
+            runtime.platform()
+        );
+        let inputs = loaded.default_inputs(seed)?;
+        // Sanity: surface NaN/Inf in the outputs (a silent-corruption guard).
+        let outputs = loaded.execute(&inputs)?;
+        let mut nan = 0usize;
+        let mut total = 0usize;
+        for lit in &outputs {
+            if let Ok(v) = lit.to_vec::<f32>() {
+                nan += v.iter().filter(|x| !x.is_finite()).count();
+                total += v.len();
             }
         }
-        let ok = max_diff < 1e-3;
         println!(
-            "  {} vs {}: max |Δ| = {max_diff:.2e} {}",
-            d.key,
-            x.key,
-            if ok { "OK" } else { "MISMATCH" }
+            "outputs: {} literals, {} / {total} non-finite f32 values{}",
+            outputs.len(),
+            nan,
+            if nan > 0 { "  <-- NUMERICS PROBLEM" } else { "" }
         );
-        if !ok {
-            return Err(anyhow!("meta-gradient mismatch"));
-        }
+        let summary = loaded.time_steps(&inputs, iters)?;
+        println!(
+            "step time: median={} mean={} p95={} (n={})",
+            human_secs(summary.median),
+            human_secs(summary.mean),
+            human_secs(summary.p95),
+            summary.n
+        );
+        Ok(())
     }
-    println!("verify OK");
-    Ok(())
+
+    pub fn cmd_sweep(group: &str, execute: bool, iters: usize) -> Result<()> {
+        let runtime = Runtime::new()?;
+        let runner = ExperimentRunner::new(
+            &runtime,
+            RunOptions { timing_iters: iters, execute, seed: 0 },
+        );
+        let measurements = runner.run_group(group);
+        let store = ResultsStore::discover()?;
+        for m in &measurements {
+            store.append(group, m)?;
+        }
+        let pairs = pair_ratios(&measurements);
+        println!("{}", rpt::fig4_sorted_ratios(&pairs));
+        Ok(())
+    }
+
+    pub fn cmd_train(task: &str, steps: usize, seed: u64) -> Result<()> {
+        let runtime = Runtime::new()?;
+        // Find the e2e train artifact for this task.
+        let key = runtime
+            .manifest
+            .group("e2e")
+            .iter()
+            .find(|m| m.task == task)
+            .map(|m| m.key.clone())
+            .ok_or_else(|| anyhow!("no e2e train_step artifact for {task}"))?;
+        println!("training {key} for {steps} outer steps...");
+        let mut trainer = MetaTrainer::new(&runtime, &key, seed);
+        let report = trainer.train(steps)?;
+        print_train_summary(&report, None);
+        Ok(())
+    }
+
+    /// Debug tool: compile an arbitrary HLO text file, synthesise inputs from
+    /// its entry parameter shapes (f32 → 0.05·N(0,1), s32 → tokens <128), run
+    /// once and report output finiteness.
+    pub fn cmd_exec_file(path: &str) -> Result<()> {
+        use mixflow::hlo::parser;
+        use mixflow::util::prng::Prng;
+        let text = std::fs::read_to_string(path)?;
+        let module = parser::parse_module(&text).map_err(|e| anyhow!("{e}"))?;
+        let entry = module.entry();
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+        let mut rng = Prng::new(0);
+        let mut inputs = Vec::new();
+        for p in entry.parameters() {
+            let dims: Vec<i64> =
+                p.shape.dims().iter().map(|&d| d as i64).collect();
+            let n: usize = p.shape.elements() as usize;
+            let lit = match p.shape.dtype() {
+                Some(mixflow::hlo::shape::DType::F32) => {
+                    xla::Literal::vec1(&rng.normal_vec(n, 0.05)).reshape(&dims)?
+                }
+                Some(mixflow::hlo::shape::DType::S32) => {
+                    xla::Literal::vec1(&rng.token_vec(n, 128)).reshape(&dims)?
+                }
+                other => return Err(anyhow!("unhandled dtype {other:?}")),
+            };
+            inputs.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&inputs)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        for (i, o) in outs.iter().enumerate() {
+            if let Ok(v) = o.to_vec::<f32>() {
+                let bad = v.iter().filter(|x| !x.is_finite()).count();
+                println!(
+                    "out[{i}] n={} nonfinite={bad} head={:?}",
+                    v.len(),
+                    &v[..v.len().min(4)]
+                );
+            } else {
+                println!("out[{i}] (non-f32)");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn cmd_verify(seed: u64) -> Result<()> {
+        let runtime = Runtime::new()?;
+        let metas = runtime.manifest.group("fig4_sweep");
+        let pairs = runtime.manifest.pairs(&metas);
+        let take = pairs.len().min(3);
+        println!("verifying {take} default/mixflow pairs produce identical meta-gradients...");
+        for (d, x) in pairs.into_iter().take(take) {
+            let ld = runtime.load(&d.key)?;
+            let lx = runtime.load(&x.key)?;
+            let inputs = ld.default_inputs(seed)?;
+            let od = ld.execute(&inputs)?;
+            let ox = lx.execute(&inputs)?;
+            let mut max_diff = 0f32;
+            for (a, b) in od.iter().zip(ox.iter()) {
+                let va = a.to_vec::<f32>()?;
+                let vb = b.to_vec::<f32>()?;
+                for (x, y) in va.iter().zip(vb.iter()) {
+                    max_diff = max_diff.max((x - y).abs());
+                }
+            }
+            let ok = max_diff < 1e-3;
+            println!(
+                "  {} vs {}: max |Δ| = {max_diff:.2e} {}",
+                d.key,
+                x.key,
+                if ok { "OK" } else { "MISMATCH" }
+            );
+            if !ok {
+                return Err(anyhow!("meta-gradient mismatch"));
+            }
+        }
+        println!("verify OK");
+        Ok(())
+    }
 }
+
+#[cfg(feature = "pjrt")]
+use pjrt_cmds::{cmd_exec_file, cmd_run, cmd_sweep, cmd_train, cmd_verify};

@@ -1,5 +1,90 @@
-//! End-to-end meta-training driver (DESIGN.md S18).
+//! End-to-end meta-training drivers (DESIGN.md S18).
+//!
+//! Two serving surfaces produce the same [`TrainReport`]:
+//! * [`trainer`] (feature `pjrt`) — outer loop over AOT-compiled
+//!   `train_step` artifacts executed on the PJRT client.
+//! * [`native`] — the pure-Rust path: bilevel tasks differentiated by
+//!   [`crate::autodiff`], no Python toolchain or artifacts anywhere.
 
+pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod trainer;
 
-pub use trainer::{MetaTrainer, TrainReport};
+pub use native::{
+    print_train_summary, HypergradMode, NativeMetaTrainer, NativeTask,
+};
+#[cfg(feature = "pjrt")]
+pub use trainer::MetaTrainer;
+
+/// Result of a training run (shared by the artifact and native drivers).
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub artifact: String,
+    pub losses: Vec<f64>,
+    pub steps: usize,
+    pub seconds: f64,
+    pub steps_per_second: f64,
+}
+
+impl TrainReport {
+    /// Mean loss over the first/last `k` steps — the E2E success signal.
+    /// NaN for an empty run (no steps executed).
+    pub fn improvement(&self, k: usize) -> (f64, f64) {
+        if self.losses.is_empty() {
+            return (f64::NAN, f64::NAN);
+        }
+        let k = k.min(self.losses.len() / 2).max(1);
+        let head: f64 = self.losses[..k].iter().sum::<f64>() / k as f64;
+        let tail: f64 = self.losses[self.losses.len() - k..]
+            .iter()
+            .sum::<f64>()
+            / k as f64;
+        (head, tail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn improvement_splits_head_tail() {
+        let r = TrainReport {
+            artifact: "a".into(),
+            losses: vec![4.0, 4.0, 2.0, 1.0],
+            steps: 4,
+            seconds: 1.0,
+            steps_per_second: 4.0,
+        };
+        let (head, tail) = r.improvement(2);
+        assert_eq!(head, 4.0);
+        assert_eq!(tail, 1.5);
+    }
+
+    #[test]
+    fn improvement_empty_is_nan() {
+        let r = TrainReport {
+            artifact: "a".into(),
+            losses: vec![],
+            steps: 0,
+            seconds: 0.0,
+            steps_per_second: 0.0,
+        };
+        let (head, tail) = r.improvement(10);
+        assert!(head.is_nan() && tail.is_nan());
+    }
+
+    #[test]
+    fn improvement_short_series() {
+        let r = TrainReport {
+            artifact: "a".into(),
+            losses: vec![3.0, 1.0],
+            steps: 2,
+            seconds: 1.0,
+            steps_per_second: 2.0,
+        };
+        let (head, tail) = r.improvement(10);
+        assert_eq!(head, 3.0);
+        assert_eq!(tail, 1.0);
+    }
+}

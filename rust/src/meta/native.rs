@@ -1,0 +1,260 @@
+//! Native end-to-end meta-training: the paper's bilevel tasks served by
+//! [`crate::autodiff`] alone — no PJRT, no artifacts, no Python anywhere.
+//!
+//! Mirrors the artifact driver's surface: an outer Adam loop over η whose
+//! per-step hypergradient comes from either `mixflow_hypergrad`
+//! (forward-over-reverse, the default) or `naive_hypergrad`
+//! (reverse-over-reverse baseline), producing the same
+//! [`super::TrainReport`].
+
+use std::time::Instant;
+
+use crate::autodiff::mixflow::{
+    mixflow_hypergrad, naive_hypergrad, BilevelProblem, MemoryReport,
+};
+use crate::autodiff::problems::{HyperLrProblem, LossWeightingProblem};
+use crate::autodiff::tensor::Tensor;
+
+use super::TrainReport;
+
+/// Which hypergradient path drives the outer loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HypergradMode {
+    /// Reverse-over-reverse over one monolithic tape.
+    Naive,
+    /// Forward-over-reverse with per-step tape reuse (MixFlow-MG).
+    Mixflow,
+}
+
+impl HypergradMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HypergradMode::Naive => "naive",
+            HypergradMode::Mixflow => "mixflow",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<HypergradMode> {
+        match s {
+            "naive" => Some(HypergradMode::Naive),
+            "mixflow" => Some(HypergradMode::Mixflow),
+            _ => None,
+        }
+    }
+}
+
+/// The native bilevel tasks (paper §5.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NativeTask {
+    HyperLr,
+    LossWeighting,
+}
+
+impl NativeTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NativeTask::HyperLr => "hyperlr",
+            NativeTask::LossWeighting => "loss_weighting",
+        }
+    }
+
+    /// Accepts both the native names and the artifact task names.
+    pub fn parse(s: &str) -> Option<NativeTask> {
+        match s {
+            "hyperlr" | "learning_lr" => Some(NativeTask::HyperLr),
+            "loss_weighting" => Some(NativeTask::LossWeighting),
+            _ => None,
+        }
+    }
+}
+
+/// Outer-loop driver: Adam on η over native hypergradients.
+pub struct NativeMetaTrainer {
+    problem: Box<dyn BilevelProblem>,
+    task: NativeTask,
+    mode: HypergradMode,
+    meta_lr: f64,
+    eta: Vec<Tensor>,
+    adam_m: Vec<Tensor>,
+    adam_v: Vec<Tensor>,
+    adam_t: i32,
+    /// Memory report of the most recent hypergradient computation.
+    pub last_memory: Option<MemoryReport>,
+}
+
+impl NativeMetaTrainer {
+    pub fn new(task: NativeTask, seed: u64) -> NativeMetaTrainer {
+        NativeMetaTrainer::with_unroll(task, seed, 8)
+    }
+
+    /// Build with an explicit inner-unroll length.
+    pub fn with_unroll(
+        task: NativeTask,
+        seed: u64,
+        unroll: usize,
+    ) -> NativeMetaTrainer {
+        let problem: Box<dyn BilevelProblem> = match task {
+            NativeTask::HyperLr => {
+                Box::new(HyperLrProblem::with_unroll(seed, unroll))
+            }
+            NativeTask::LossWeighting => {
+                Box::new(LossWeightingProblem::with_unroll(seed, unroll))
+            }
+        };
+        let eta = problem.eta0();
+        let adam_m = eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
+        let adam_v = eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
+        NativeMetaTrainer {
+            problem,
+            task,
+            mode: HypergradMode::Mixflow,
+            meta_lr: 0.05,
+            eta,
+            adam_m,
+            adam_v,
+            adam_t: 0,
+            last_memory: None,
+        }
+    }
+
+    pub fn with_mode(mut self, mode: HypergradMode) -> NativeMetaTrainer {
+        self.mode = mode;
+        self
+    }
+
+    pub fn with_meta_lr(mut self, lr: f64) -> NativeMetaTrainer {
+        self.meta_lr = lr;
+        self
+    }
+
+    /// Current meta-parameters.
+    pub fn eta(&self) -> &[Tensor] {
+        &self.eta
+    }
+
+    /// Run `steps` outer updates; each draws fresh batches, computes the
+    /// hypergradient and applies one Adam step to η.
+    pub fn train(&mut self, steps: usize) -> TrainReport {
+        let mut losses = Vec::with_capacity(steps);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            self.problem.resample();
+            let theta0 = self.problem.theta0();
+            let h = match self.mode {
+                HypergradMode::Mixflow => {
+                    mixflow_hypergrad(self.problem.as_ref(), &theta0, &self.eta)
+                }
+                HypergradMode::Naive => {
+                    naive_hypergrad(self.problem.as_ref(), &theta0, &self.eta)
+                }
+            };
+            losses.push(h.outer_loss);
+            self.last_memory = Some(h.memory);
+            self.adam_step(&h.d_eta);
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        TrainReport {
+            artifact: format!(
+                "native/{}/{}",
+                self.task.name(),
+                self.mode.name()
+            ),
+            steps,
+            steps_per_second: steps as f64 / seconds.max(1e-9),
+            seconds,
+            losses,
+        }
+    }
+
+    fn adam_step(&mut self, grad: &[Tensor]) {
+        const B1: f64 = 0.9;
+        const B2: f64 = 0.999;
+        const EPS: f64 = 1e-8;
+        self.adam_t += 1;
+        let bc1 = 1.0 - B1.powi(self.adam_t);
+        let bc2 = 1.0 - B2.powi(self.adam_t);
+        for i in 0..self.eta.len() {
+            for j in 0..self.eta[i].data.len() {
+                let g = grad[i].data[j];
+                self.adam_m[i].data[j] =
+                    B1 * self.adam_m[i].data[j] + (1.0 - B1) * g;
+                self.adam_v[i].data[j] =
+                    B2 * self.adam_v[i].data[j] + (1.0 - B2) * g * g;
+                let mh = self.adam_m[i].data[j] / bc1;
+                let vh = self.adam_v[i].data[j] / bc2;
+                self.eta[i].data[j] -= self.meta_lr * mh / (vh.sqrt() + EPS);
+            }
+        }
+    }
+}
+
+/// Render a native run the way the examples and the `native` CLI command
+/// present it: sampled loss curve, throughput, head→tail improvement, and
+/// the hypergradient memory split.  One implementation so the three call
+/// sites cannot drift apart.
+pub fn print_train_summary(
+    report: &TrainReport,
+    memory: Option<&MemoryReport>,
+) {
+    use crate::util::stats::{human_bytes, human_secs};
+    let n = report.losses.len();
+    for (i, l) in report.losses.iter().enumerate() {
+        if i % (n / 15).max(1) == 0 || i + 1 == n {
+            println!("  step {i:>4}  val_loss {l:.4}");
+        }
+    }
+    let (head, tail) = report.improvement(10);
+    println!(
+        "\n{} outer steps in {} ({:.2} steps/s); loss {head:.4} → {tail:.4}",
+        report.steps,
+        human_secs(report.seconds),
+        report.steps_per_second
+    );
+    if let Some(mem) = memory {
+        println!(
+            "hypergrad memory: tape {} + checkpoints {} = {}",
+            human_bytes(mem.tape_bytes as u64),
+            human_bytes(mem.checkpoint_bytes as u64),
+            human_bytes(mem.total_bytes() as u64)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(NativeTask::parse("hyperlr"), Some(NativeTask::HyperLr));
+        assert_eq!(
+            NativeTask::parse("learning_lr"),
+            Some(NativeTask::HyperLr)
+        );
+        assert_eq!(
+            NativeTask::parse("loss_weighting"),
+            Some(NativeTask::LossWeighting)
+        );
+        assert_eq!(NativeTask::parse("nope"), None);
+        assert_eq!(
+            HypergradMode::parse("mixflow"),
+            Some(HypergradMode::Mixflow)
+        );
+        assert_eq!(HypergradMode::parse("naive"), Some(HypergradMode::Naive));
+    }
+
+    #[test]
+    fn one_outer_step_updates_eta() {
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(NativeTask::HyperLr, 3, 2);
+        let before: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        let report = trainer.train(1);
+        assert_eq!(report.losses.len(), 1);
+        assert!(report.losses[0].is_finite());
+        let after: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        assert_ne!(before, after, "Adam step must move eta");
+        assert!(trainer.last_memory.is_some());
+    }
+}

@@ -9,33 +9,10 @@
 use anyhow::{anyhow, Result};
 use xla::Literal;
 
+use super::TrainReport;
 use crate::runtime::inputs::corpus_batch;
 use crate::runtime::Runtime;
 use crate::util::prng::Prng;
-
-/// Result of a training run.
-#[derive(Debug, Clone)]
-pub struct TrainReport {
-    pub artifact: String,
-    pub losses: Vec<f64>,
-    pub steps: usize,
-    pub seconds: f64,
-    pub steps_per_second: f64,
-}
-
-impl TrainReport {
-    /// Mean loss over the first/last `k` steps — the E2E success signal.
-    pub fn improvement(&self, k: usize) -> (f64, f64) {
-        let k = k.min(self.losses.len() / 2).max(1);
-        let head: f64 =
-            self.losses[..k].iter().sum::<f64>() / k as f64;
-        let tail: f64 = self.losses[self.losses.len() - k..]
-            .iter()
-            .sum::<f64>()
-            / k as f64;
-        (head, tail)
-    }
-}
 
 /// Drives the outer loop for one train-step artifact.
 pub struct MetaTrainer<'r> {
@@ -83,6 +60,17 @@ impl<'r> MetaTrainer<'r> {
         let val_spec = meta.inputs[n_state + 1].clone();
         let vocab = meta.vocab_size as u32;
 
+        // Leaf-segment boundaries derived from the manifest counts; the
+        // debug dump below walks these instead of hardcoded indices so it
+        // stays correct for artifacts with any leaf layout.
+        let segments: [(&str, usize, usize); 5] = [
+            ("eta", 0, n_eta),
+            ("meta_opt", n_eta, n_eta + n_meta_opt),
+            ("theta0/inner_opt", n_eta + n_meta_opt, n_state),
+            ("xs", n_state, n_state + 1),
+            ("val", n_state + 1, n_state + 2),
+        ];
+
         let mut losses = Vec::with_capacity(steps);
         let t0 = std::time::Instant::now();
         for _step in 0..steps {
@@ -94,16 +82,27 @@ impl<'r> MetaTrainer<'r> {
             inputs.push(val);
             let mut outputs = loaded.execute(&inputs)?;
             if std::env::var("MIXFLOW_TRAIN_DEBUG").is_ok() && _step == 0 {
-                for i in [0, 24, 26, 54, 82, 106, 109, 136, 160, 164, 165] {
-                    let Some(lit) = inputs.get(i) else { continue };
-                    let v = lit.to_vec::<f32>().unwrap_or_default();
-                    let vi = lit.to_vec::<i32>().unwrap_or_default();
-                    eprintln!(
-                        "[debug] in[{i}] n={} f32head={:?} i32head={:?}",
-                        lit.element_count(),
-                        &v[..v.len().min(3)],
-                        &vi[..vi.len().min(4)]
-                    );
+                for &(name, lo, hi) in &segments {
+                    if lo >= hi {
+                        continue;
+                    }
+                    // First and last leaf of each manifest segment.
+                    let mut picks = vec![lo];
+                    if hi - 1 > lo {
+                        picks.push(hi - 1);
+                    }
+                    for i in picks {
+                        let Some(lit) = inputs.get(i) else { continue };
+                        let v = lit.to_vec::<f32>().unwrap_or_default();
+                        let vi = lit.to_vec::<i32>().unwrap_or_default();
+                        eprintln!(
+                            "[debug] in[{i}] ({name}) n={} f32head={:?} \
+                             i32head={:?}",
+                            lit.element_count(),
+                            &v[..v.len().min(3)],
+                            &vi[..vi.len().min(4)]
+                        );
+                    }
                 }
                 for (i, lit) in outputs.iter().enumerate() {
                     if let Ok(v) = lit.to_vec::<f32>() {
@@ -144,38 +143,5 @@ impl<'r> MetaTrainer<'r> {
             seconds,
             losses,
         })
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn improvement_splits_head_tail() {
-        let r = TrainReport {
-            artifact: "a".into(),
-            losses: vec![4.0, 4.0, 2.0, 1.0],
-            steps: 4,
-            seconds: 1.0,
-            steps_per_second: 4.0,
-        };
-        let (head, tail) = r.improvement(2);
-        assert_eq!(head, 4.0);
-        assert_eq!(tail, 1.5);
-    }
-
-    #[test]
-    fn improvement_short_series() {
-        let r = TrainReport {
-            artifact: "a".into(),
-            losses: vec![3.0, 1.0],
-            steps: 2,
-            seconds: 1.0,
-            steps_per_second: 2.0,
-        };
-        let (head, tail) = r.improvement(10);
-        assert_eq!(head, 3.0);
-        assert_eq!(tail, 1.0);
     }
 }

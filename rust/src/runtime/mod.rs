@@ -1,9 +1,16 @@
 //! PJRT runtime (DESIGN.md S14): artifact manifest, compile cache, input
 //! synthesis, timed execution.
+//!
+//! The manifest loader ([`artifacts`]) is pure host-side JSON and always
+//! available; the PJRT client wrapper and literal synthesis need the `xla`
+//! crate and are gated behind the `pjrt` feature.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod inputs;
 
 pub use artifacts::{ArtifactMeta, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use client::{LoadedArtifact, Runtime};

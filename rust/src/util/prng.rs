@@ -65,12 +65,22 @@ impl Prng {
         ((self.next_u64() >> 32) as u32) % bound
     }
 
-    /// Standard normal via Box–Muller.
-    pub fn next_normal(&mut self) -> f32 {
+    /// Standard normal via Box–Muller, full f64 precision (the native
+    /// autodiff engine runs in f64).
+    pub fn next_normal_f64(&mut self) -> f64 {
         let u1 = self.next_f64().max(1e-12);
         let u2 = self.next_f64();
-        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos())
-            as f32
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Vector of f64 normals scaled by `std`.
+    pub fn normal_vec_f64(&mut self, n: usize, std: f64) -> Vec<f64> {
+        (0..n).map(|_| self.next_normal_f64() * std).collect()
+    }
+
+    /// Standard normal via Box–Muller (f32 view of the same f64 stream).
+    pub fn next_normal(&mut self) -> f32 {
+        self.next_normal_f64() as f32
     }
 
     /// Vector of normals scaled by `std`.

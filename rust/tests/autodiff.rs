@@ -1,0 +1,429 @@
+//! Integration tests for the native autodiff engine: finite-difference
+//! checks for every op, property-tested naive ≈ mixflow hypergradient
+//! agreement, the tape-memory regression, and native E2E training.
+
+use mixflow::autodiff::mixflow::{
+    fd_hypergrad, mixflow_hypergrad, naive_hypergrad, rel_err,
+};
+use mixflow::autodiff::problems::{HyperLrProblem, LossWeightingProblem};
+use mixflow::autodiff::tape::{NodeId, Tape};
+use mixflow::autodiff::tensor::Tensor;
+use mixflow::autodiff::BilevelProblem;
+use mixflow::meta::{HypergradMode, NativeMetaTrainer, NativeTask};
+use mixflow::util::prng::Prng;
+use mixflow::util::proptest;
+
+/// Check ∇(build) against central finite differences, and the JVP against
+/// the FD directional derivative.  `build` must produce a scalar node.
+fn fd_check(
+    name: &str,
+    x0: &Tensor,
+    build: impl Fn(&mut Tape, NodeId) -> NodeId,
+) {
+    let h = 1e-6;
+    let tol = 1e-5;
+    let mut tape = Tape::new();
+    let x = tape.leaf(x0.clone());
+    let y = build(&mut tape, x);
+    assert_eq!(tape.value(y).elements(), 1, "{name}: loss not scalar");
+    let g = tape.grad(y, &[x]);
+    let grad = tape.value(g[0]).clone();
+
+    let eval = |data: &Tensor| -> f64 {
+        let mut t = Tape::new();
+        let l = t.leaf(data.clone());
+        let out = build(&mut t, l);
+        t.value(out).item()
+    };
+    let mut fd = Tensor::zeros(&x0.shape);
+    for j in 0..x0.elements() {
+        let mut plus = x0.clone();
+        plus.data[j] += h;
+        let mut minus = x0.clone();
+        minus.data[j] -= h;
+        fd.data[j] = (eval(&plus) - eval(&minus)) / (2.0 * h);
+    }
+    let err = grad.max_abs_diff(&fd);
+    assert!(err < tol, "{name}: VJP err {err:.3e}");
+
+    // JVP vs FD directional derivative.
+    let mut rng = Prng::new(0xD1CE);
+    let v = Tensor::randn(&x0.shape, 1.0, &mut rng);
+    let (tangents, _) = tape.jvp(&[(x, v.clone())], &[y]);
+    let fd_dir: f64 = fd
+        .data
+        .iter()
+        .zip(v.data.iter())
+        .map(|(a, b)| a * b)
+        .sum();
+    let jvp_err = (tangents[0].item() - fd_dir).abs();
+    assert!(
+        jvp_err < tol * (1.0 + fd_dir.abs()),
+        "{name}: JVP err {jvp_err:.3e}"
+    );
+}
+
+#[test]
+fn fd_checks_elementwise_ops() {
+    let mut rng = Prng::new(1);
+    let a = Tensor::randn(&[3, 5], 1.0, &mut rng);
+    fd_check("add", &a, |t, x| {
+        let c = t.constant(Tensor::full(&[3, 5], 0.3));
+        let s = t.add(x, c);
+        t.sum(s)
+    });
+    fd_check("sub", &a, |t, x| {
+        let c = t.constant(Tensor::full(&[3, 5], 0.3));
+        let s = t.sub(c, x);
+        t.sum(s)
+    });
+    fd_check("mul_cube", &a, |t, x| {
+        let sq = t.mul(x, x);
+        let cube = t.mul(sq, x);
+        t.sum(cube)
+    });
+    fd_check("scale_offset", &a, |t, x| {
+        let s = t.scale(x, 2.5);
+        let o = t.offset(s, 1.0);
+        t.sum(o)
+    });
+    fd_check("relu", &a, |t, x| {
+        let r = t.relu(x);
+        t.sum(r)
+    });
+    fd_check("tanh", &a, |t, x| {
+        let y = t.tanh(x);
+        t.sum(y)
+    });
+    fd_check("exp", &a, |t, x| {
+        let s = t.scale(x, 0.3);
+        let e = t.exp(s);
+        t.sum(e)
+    });
+}
+
+#[test]
+fn fd_checks_matmul_all_transposes() {
+    let mut rng = Prng::new(2);
+    let a = Tensor::randn(&[3, 5], 1.0, &mut rng);
+    let bnn = Tensor::randn(&[5, 4], 1.0, &mut rng);
+    let btn = Tensor::randn(&[3, 4], 1.0, &mut rng);
+    let bnt = Tensor::randn(&[4, 5], 1.0, &mut rng);
+    let btt = Tensor::randn(&[4, 3], 1.0, &mut rng);
+    fd_check("matmul_nn", &a, |t, x| {
+        let b = t.constant(bnn.clone());
+        let c = t.matmul(x, b, false, false);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    fd_check("matmul_tn", &a, |t, x| {
+        let b = t.constant(btn.clone());
+        let c = t.matmul(x, b, true, false);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    fd_check("matmul_nt", &a, |t, x| {
+        let b = t.constant(bnt.clone());
+        let c = t.matmul(x, b, false, true);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    fd_check("matmul_tt", &a, |t, x| {
+        let b = t.constant(btt.clone());
+        let c = t.matmul(x, b, true, true);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    // And with the differentiated operand on the right.
+    fd_check("matmul_rhs", &a, |t, x| {
+        let b = t.constant(bnt.clone());
+        let c = t.matmul(b, x, false, false);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+}
+
+#[test]
+fn fd_checks_reductions_and_broadcasts() {
+    let mut rng = Prng::new(3);
+    let a = Tensor::randn(&[3, 5], 1.0, &mut rng);
+    fd_check("row_sum", &a, |t, x| {
+        let r = t.row_sum(x);
+        let y = t.tanh(r);
+        t.sum(y)
+    });
+    fd_check("col_sum", &a, |t, x| {
+        let c = t.col_sum(x);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    fd_check("row_broadcast", &a, |t, x| {
+        let r = t.row_sum(x);
+        let b = t.row_broadcast(r, 7);
+        let y = t.tanh(b);
+        t.sum(y)
+    });
+    fd_check("col_broadcast", &a, |t, x| {
+        let c = t.col_sum(x);
+        let b = t.col_broadcast(c, 7);
+        let y = t.tanh(b);
+        t.sum(y)
+    });
+    fd_check("broadcast_scalar", &a, |t, x| {
+        let s = t.sum(x);
+        let sc = t.scale(s, 0.1);
+        let b = t.broadcast(sc, &[2, 3]);
+        let y = t.tanh(b);
+        t.sum(y)
+    });
+    fd_check("reshape", &a, |t, x| {
+        let r = t.reshape(x, vec![5, 3]);
+        let y = t.tanh(r);
+        t.sum(y)
+    });
+    fd_check("mean", &a, |t, x| {
+        let sq = t.mul(x, x);
+        t.mean(sq)
+    });
+}
+
+#[test]
+fn fd_checks_softmax_family() {
+    let mut rng = Prng::new(4);
+    let z = Tensor::randn(&[3, 4], 1.0, &mut rng);
+    let w = Tensor::randn(&[3, 4], 0.5, &mut rng);
+    let idx = vec![1usize, 0, 3];
+    fd_check("softmax_rows", &z, |t, x| {
+        let s = t.softmax_rows(x);
+        let c = t.constant(w.clone());
+        let p = t.mul(s, c);
+        t.sum(p)
+    });
+    fd_check("logsumexp_rows", &z, |t, x| {
+        let l = t.logsumexp_rows(x);
+        t.sum(l)
+    });
+    fd_check("gather_cols", &z, |t, x| {
+        let g = t.gather_cols(x, idx.clone());
+        let y = t.tanh(g);
+        t.sum(y)
+    });
+    fd_check("scatter_cols", &z, |t, x| {
+        let g = t.gather_cols(x, idx.clone());
+        let s = t.scatter_cols(g, idx.clone(), 4);
+        let y = t.tanh(s);
+        t.sum(y)
+    });
+    fd_check("cross_entropy", &z, |t, x| {
+        let lse = t.logsumexp_rows(x);
+        let picked = t.gather_cols(x, idx.clone());
+        let ce = t.sub(lse, picked);
+        let s = t.sum(ce);
+        t.scale(s, 1.0 / 3.0)
+    });
+}
+
+#[test]
+fn grad_of_grad_matches_fd() {
+    // s(x) = ½‖∇f(x)‖² for f = Σ tanh(xW)²; ∇s needs reverse-over-reverse.
+    let mut rng = Prng::new(5);
+    let w = Tensor::randn(&[4, 3], 0.5, &mut rng);
+    let x0 = Tensor::randn(&[2, 4], 1.0, &mut rng);
+
+    let half_grad_norm = |tape: &mut Tape, x: NodeId, w: &Tensor| -> NodeId {
+        let wc = tape.constant(w.clone());
+        let xw = tape.matmul(x, wc, false, false);
+        let th = tape.tanh(xw);
+        let sq = tape.mul(th, th);
+        let f = tape.sum(sq);
+        let g = tape.grad(f, &[x]);
+        let gg = tape.mul(g[0], g[0]);
+        let s = tape.sum(gg);
+        tape.scale(s, 0.5)
+    };
+
+    let mut tape = Tape::new();
+    let x = tape.leaf(x0.clone());
+    let s = half_grad_norm(&mut tape, x, &w);
+    let gg = tape.grad(s, &[x]);
+    let got = tape.value(gg[0]).clone();
+
+    let eval = |data: &Tensor| -> f64 {
+        let mut t = Tape::new();
+        let l = t.leaf(data.clone());
+        let out = half_grad_norm(&mut t, l, &w);
+        t.value(out).item()
+    };
+    let h = 1e-6;
+    let mut fd = Tensor::zeros(&x0.shape);
+    for j in 0..x0.elements() {
+        let mut plus = x0.clone();
+        plus.data[j] += h;
+        let mut minus = x0.clone();
+        minus.data[j] -= h;
+        fd.data[j] = (eval(&plus) - eval(&minus)) / (2.0 * h);
+    }
+    let err = got.max_abs_diff(&fd) / (1.0 + fd.max_abs());
+    assert!(err < 1e-5, "grad-of-grad rel err {err:.3e}");
+}
+
+#[test]
+fn forward_over_reverse_hvp_matches_fd() {
+    let mut rng = Prng::new(6);
+    let w = Tensor::randn(&[4, 3], 0.5, &mut rng);
+    let x0 = Tensor::randn(&[2, 4], 1.0, &mut rng);
+    let v = Tensor::randn(&[2, 4], 1.0, &mut rng);
+
+    let grad_at = |data: &Tensor| -> Tensor {
+        let mut t = Tape::new();
+        let x = t.leaf(data.clone());
+        let wc = t.constant(w.clone());
+        let xw = t.matmul(x, wc, false, false);
+        let th = t.tanh(xw);
+        let sq = t.mul(th, th);
+        let f = t.sum(sq);
+        let g = t.grad(f, &[x]);
+        t.value(g[0]).clone()
+    };
+
+    // HVP via the dual overlay: tangent of the gradient nodes.
+    let mut tape = Tape::new();
+    let x = tape.leaf(x0.clone());
+    let wc = tape.constant(w.clone());
+    let xw = tape.matmul(x, wc, false, false);
+    let th = tape.tanh(xw);
+    let sq = tape.mul(th, th);
+    let f = tape.sum(sq);
+    let g = tape.grad(f, &[x]);
+    let (tangents, tangent_bytes) = tape.jvp(&[(x, v.clone())], &[g[0]]);
+    assert!(tangent_bytes > 0);
+
+    let h = 1e-6;
+    let mut plus = x0.clone();
+    let mut minus = x0.clone();
+    for j in 0..x0.elements() {
+        plus.data[j] += h * v.data[j];
+        minus.data[j] -= h * v.data[j];
+    }
+    let gp = grad_at(&plus);
+    let gm = grad_at(&minus);
+    let fd_hvp = gp.zip(&gm, |a, b| (a - b) / (2.0 * h));
+    let err = tangents[0].max_abs_diff(&fd_hvp) / (1.0 + fd_hvp.max_abs());
+    assert!(err < 1e-5, "HVP rel err {err:.3e}");
+}
+
+#[test]
+fn hypergrads_match_fd_oracle() {
+    // Small instances; both tasks, both paths, against central differences.
+    let hyper = HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08);
+    let theta0 = hyper.theta0();
+    let eta = hyper.eta0();
+    let naive = naive_hypergrad(&hyper, &theta0, &eta);
+    let mixed = mixflow_hypergrad(&hyper, &theta0, &eta);
+    let fd = fd_hypergrad(&hyper, &theta0, &eta, 1e-5);
+    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "hyperlr naive vs fd");
+    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "hyperlr mixflow vs fd");
+
+    let weight = LossWeightingProblem::with_config(13, 3, 4, 3, 4, 3, 0.15, 0.5);
+    let theta0 = weight.theta0();
+    let eta = weight.eta0();
+    let naive = naive_hypergrad(&weight, &theta0, &eta);
+    let mixed = mixflow_hypergrad(&weight, &theta0, &eta);
+    let fd = fd_hypergrad(&weight, &theta0, &eta, 1e-5);
+    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "weighting naive vs fd");
+    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "weighting mixflow vs fd");
+}
+
+#[test]
+fn property_naive_equals_mixflow_on_random_instances() {
+    proptest::check("naive≈mixflow", 12, |g| {
+        let seed = g.rng.next_u64();
+        let d = g.usize(2, 4);
+        let hidden = g.usize(2, 5);
+        let classes = g.usize(2, 4);
+        let batch = g.usize(2, 5);
+        let unroll = g.usize(1, 4);
+        let alpha = g.f64(0.02, 0.12);
+        let (naive, mixed) = if g.bool() {
+            let p = HyperLrProblem::with_config(
+                seed, d, hidden, classes, batch, unroll, alpha,
+            );
+            let theta0 = p.theta0();
+            let eta = p.eta0();
+            (
+                naive_hypergrad(&p, &theta0, &eta),
+                mixflow_hypergrad(&p, &theta0, &eta),
+            )
+        } else {
+            let p = LossWeightingProblem::with_config(
+                seed,
+                d,
+                hidden,
+                classes,
+                batch,
+                unroll,
+                alpha,
+                g.f64(0.0, 0.6),
+            );
+            let theta0 = p.theta0();
+            let eta = p.eta0();
+            (
+                naive_hypergrad(&p, &theta0, &eta),
+                mixflow_hypergrad(&p, &theta0, &eta),
+            )
+        };
+        let err = rel_err(&naive.d_eta, &mixed.d_eta);
+        if err < 1e-6 {
+            Ok(())
+        } else {
+            Err(format!("naive vs mixflow diverged: rel err {err:.3e}"))
+        }
+    });
+}
+
+#[test]
+fn mixflow_tape_memory_beats_naive_for_long_unrolls() {
+    let mut prev_ratio = 0.0;
+    for unroll in [4usize, 8, 16] {
+        let p = HyperLrProblem::with_unroll(1, unroll);
+        let theta0 = p.theta0();
+        let eta = p.eta0();
+        let naive = naive_hypergrad(&p, &theta0, &eta);
+        let mixed = mixflow_hypergrad(&p, &theta0, &eta);
+        let nb = naive.memory.total_bytes();
+        let mb = mixed.memory.total_bytes();
+        assert!(
+            mb < nb,
+            "unroll {unroll}: mixflow {mb} bytes not below naive {nb}"
+        );
+        let ratio = nb as f64 / mb as f64;
+        assert!(
+            ratio > prev_ratio,
+            "memory ratio must widen with unroll ({prev_ratio:.2} → {ratio:.2})"
+        );
+        prev_ratio = ratio;
+    }
+}
+
+#[test]
+fn native_training_improves_validation_loss() {
+    let mut trainer = NativeMetaTrainer::new(NativeTask::HyperLr, 7);
+    let report = trainer.train(50);
+    assert_eq!(report.losses.len(), 50);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let (head, tail) = report.improvement(10);
+    assert!(
+        tail < head,
+        "50 native outer steps must improve val loss ({head:.4} → {tail:.4})"
+    );
+}
+
+#[test]
+fn naive_mode_trains_too() {
+    let mut trainer = NativeMetaTrainer::with_unroll(NativeTask::HyperLr, 7, 4)
+        .with_mode(HypergradMode::Naive);
+    let report = trainer.train(20);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let (head, tail) = report.improvement(5);
+    assert!(tail < head, "naive path must also train ({head:.4} → {tail:.4})");
+}

@@ -1,0 +1,188 @@
+//! Vendored minimal `anyhow` substitute.
+//!
+//! The offline build image has no crates.io access, so this crate provides
+//! the small slice of the real `anyhow` API the coordinator uses: the
+//! [`Error`] type with a context chain, the [`anyhow!`]/[`bail!`] macros,
+//! the [`Context`] extension trait and the [`Result`] alias.  Formatting
+//! mirrors anyhow: `{}` prints the outermost message, `{:#}` the whole
+//! chain joined by `: `, and `{:?}` a report with a `Caused by:` section.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` alias, like the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with a chain of context messages.
+///
+/// `chain[0]` is the outermost (most recently attached) message; the last
+/// entries are the root cause and its sources.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_message(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+
+    /// All messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.to_message())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_message())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which keeps this blanket conversion coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T, E> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("got {n} and {}", 4);
+        assert_eq!(e.to_string(), "got 3 and 4");
+    }
+
+    #[test]
+    fn from_std_error_and_chain() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "gone");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        let e2 = Err::<(), Error>(e)
+            .with_context(|| format!("step {}", 2))
+            .unwrap_err();
+        assert_eq!(format!("{e2:#}"), "step 2: reading manifest: gone");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn inner(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged {}", 1);
+            }
+            Ok(7)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        assert_eq!(inner(true).unwrap_err().to_string(), "flagged 1");
+    }
+}

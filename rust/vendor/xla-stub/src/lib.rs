@@ -1,0 +1,242 @@
+//! Compile-only stub of the `xla-rs` PJRT bindings (see README.md).
+//!
+//! Host-side [`Literal`] construction works for real; every device-side
+//! entry point returns [`Error`] explaining that the stub is linked.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion
+/// into `anyhow::Error` (it implements `std::error::Error`).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} is unavailable: mixflow was built against the bundled \
+         compile-only XLA stub (feature `pjrt` without a real XLA \
+         toolchain); see rust/vendor/xla-stub/README.md"
+    )))
+}
+
+/// Element types the manifest loader maps numpy dtypes onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Typed storage behind a [`Literal`].
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Storage {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::F64(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::I64(v) => v.len(),
+        }
+    }
+}
+
+/// Rust scalar types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn store(v: Vec<Self>) -> Storage;
+    #[doc(hidden)]
+    fn load(s: &Storage) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($ty:ty, $variant:ident) => {
+        impl NativeType for $ty {
+            fn store(v: Vec<Self>) -> Storage {
+                Storage::$variant(v)
+            }
+            fn load(s: &Storage) -> Option<Vec<Self>> {
+                match s {
+                    Storage::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32);
+native!(f64, F64);
+native!(i32, I32);
+native!(i64, I64);
+
+/// Host literal: flat typed buffer + dims.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            storage: T::store(data.to_vec()),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.storage.len()
+    }
+
+    /// Same buffer under new dims (element counts must agree).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as `Vec<T>`; errors on a dtype mismatch like xla-rs.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.storage)
+            .ok_or_else(|| Error("to_vec: literal dtype mismatch".into()))
+    }
+
+    /// Decompose a tuple literal — only real executions produce tuples,
+    /// so the stub can never satisfy this.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// npz loading trait (mirrors xla-rs `FromRawBytes`).
+pub trait FromRawBytes: Sized {
+    type Context;
+    fn read_npz(path: &str, ctx: &Self::Context) -> Result<Vec<(String, Self)>>;
+}
+
+impl FromRawBytes for Literal {
+    type Context = ();
+    fn read_npz(_path: &str, _ctx: &()) -> Result<Vec<(String, Literal)>> {
+        unavailable("Literal::read_npz")
+    }
+}
+
+/// Parsed HLO module handle.
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// Computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device buffer handle returned by `execute`.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(
+        &self,
+        _computation: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn device_paths_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        assert!(Literal::read_npz("x", &()).is_err());
+    }
+}
