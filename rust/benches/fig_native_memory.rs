@@ -1,13 +1,16 @@
 //! Native reproduction of the paper's naive-vs-MixFlow memory gap
 //! (Figures 1/4 shape) — no artifacts, no PJRT, no Python.
 //!
-//! For each unroll length T, computes the hyper-LR hypergradient twice —
-//! reverse-over-reverse on one monolithic tape vs MixFlow-MG
-//! forward-over-reverse with per-step tape reuse — and reports the live
-//! tape bytes each path needs.  Also cross-checks the two paths agree
-//! numerically, and (when an artifact manifest is discoverable) prints
-//! the `hlo::memory` simulator's default/mixflow ratios next to the
-//! native ones so the simulator's trend has a ground-truth oracle.
+//! For each configuration — the hyper-LR MLP task with a plain-SGD inner
+//! loop, and the attention + layernorm task driven by an Adam inner
+//! optimiser (the setup the paper actually benchmarks) — and each unroll
+//! length T, computes the hypergradient twice: reverse-over-reverse on
+//! one monolithic tape vs MixFlow-MG forward-over-reverse with per-step
+//! tape reuse, and reports the live tape bytes each path needs.  Also
+//! cross-checks the two paths agree numerically, and (when an artifact
+//! manifest is discoverable) prints the `hlo::memory` simulator's
+//! default/mixflow ratios next to the native ones so the simulator's
+//! trend has a ground-truth oracle.
 //!
 //! ```bash
 //! cargo run --release --bin fig_native_memory
@@ -16,14 +19,28 @@
 use mixflow::autodiff::mixflow::{
     mixflow_hypergrad, naive_hypergrad, rel_err, BilevelProblem,
 };
-use mixflow::autodiff::problems::HyperLrProblem;
+use mixflow::autodiff::optim::InnerOptimiser;
+use mixflow::autodiff::problems::{AttentionProblem, HyperLrProblem};
 use mixflow::util::stats::human_bytes;
 use mixflow::util::table::Table;
 
-fn main() {
-    println!(
-        "Figure (native) — tape memory: reverse-over-reverse vs MixFlow-MG"
-    );
+type ProblemBuilder = fn(usize) -> Box<dyn BilevelProblem>;
+
+fn build_hyperlr_sgd(unroll: usize) -> Box<dyn BilevelProblem> {
+    Box::new(HyperLrProblem::with_unroll(1, unroll))
+}
+
+fn build_attention_adam(unroll: usize) -> Box<dyn BilevelProblem> {
+    Box::new(
+        AttentionProblem::with_unroll(1, unroll)
+            .with_optimiser(InnerOptimiser::adam()),
+    )
+}
+
+/// One naive-vs-MixFlow table over the unroll ladder; false if the
+/// memory gap or the numeric agreement breaks anywhere.
+fn run_config(label: &str, build: ProblemBuilder) -> bool {
+    println!("\n[{label}]");
     let unrolls = [2usize, 4, 8, 16];
     let mut t = Table::new(&[
         "unroll T",
@@ -35,24 +52,24 @@ fn main() {
     ])
     .numeric_cols(&[0, 1, 2, 3, 4, 5]);
 
-    let mut all_ok = true;
+    let mut ok = true;
     for &unroll in &unrolls {
-        let problem = HyperLrProblem::with_unroll(1, unroll);
+        let problem = build(unroll);
         let theta0 = problem.theta0();
         let eta = problem.eta0();
-        let naive = naive_hypergrad(&problem, &theta0, &eta);
-        let mixed = mixflow_hypergrad(&problem, &theta0, &eta);
+        let naive = naive_hypergrad(problem.as_ref(), &theta0, &eta);
+        let mixed = mixflow_hypergrad(problem.as_ref(), &theta0, &eta);
         let err = rel_err(&naive.d_eta, &mixed.d_eta);
         let naive_bytes = naive.memory.total_bytes();
         let mixed_bytes = mixed.memory.total_bytes();
         if unroll >= 4 && mixed_bytes >= naive_bytes {
-            all_ok = false;
+            ok = false;
         }
         // Same bound the naive≈mixflow property test enforces; the two
         // paths order f64 ops differently, so exact agreement is
         // platform-dependent.
         if err > 1e-6 {
-            all_ok = false;
+            ok = false;
         }
         t.row(vec![
             unroll.to_string(),
@@ -64,9 +81,27 @@ fn main() {
         ]);
     }
     println!("{}", t.render());
+    ok
+}
+
+fn main() {
+    println!(
+        "Figure (native) — tape memory: reverse-over-reverse vs MixFlow-MG"
+    );
+    let configs: [(&str, ProblemBuilder); 2] = [
+        ("hyperlr · sgd inner optimiser", build_hyperlr_sgd),
+        ("attention+layernorm · adam inner optimiser", build_attention_adam),
+    ];
+    let mut all_ok = true;
+    for (label, build) in configs {
+        if !run_config(label, build) {
+            all_ok = false;
+        }
+    }
     println!(
         "paper shape: the naive tape grows ~linearly in T while MixFlow-MG \
-         holds one step's tape + O(T) checkpoints — the ratio widens with T."
+         holds one step's tape + O(T) checkpoints (θ plus optimiser \
+         moments) — the ratio widens with T on both configurations."
     );
 
     // Cross-check against the HLO buffer-liveness simulator when real

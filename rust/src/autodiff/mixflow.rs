@@ -1,34 +1,43 @@
 //! Hypergradients for bilevel problems: naive reverse-over-reverse vs
 //! MixFlow-MG forward-over-reverse (the paper's core contribution, Eq. 8).
 //!
-//! The inner loop is `T` steps of SGD with a per-leaf learning-rate tensor
-//! produced by the problem (constant, or a function of η):
+//! The inner loop is `T` steps of a differentiable optimiser
+//! ([`crate::autodiff::optim::InnerOptimiser`]) with a per-leaf
+//! learning-rate tensor produced by the problem:
 //!
 //! ```text
-//! θ_{t+1} = θ_t − P(η) ⊙ ∇_θ L_t(θ_t, η)
-//! F(η)    = L_val(θ_T)
+//! (θ_{t+1}, s_{t+1}) = Φ_t(θ_t, s_t, η)      s = optimiser moments
+//! F(η)               = L_val(θ_T)
 //! ```
 //!
 //! [`naive_hypergrad`] records all `T` steps — each containing its own
-//! in-graph gradient — on ONE tape and backpropagates through everything:
-//! the reverse-over-reverse baseline whose live tape grows ∝ T (plus the
-//! appended second-order subgraphs).
+//! in-graph gradient *and* in-graph optimiser update — on ONE tape and
+//! backpropagates through everything: the reverse-over-reverse baseline
+//! whose live tape grows ∝ T (plus the appended second-order subgraphs).
 //!
-//! [`mixflow_hypergrad`] checkpoints only θ_t values on the way forward,
-//! then walks the unroll backwards with the adjoint recursion
+//! [`mixflow_hypergrad`] checkpoints only `(θ_t, s_t)` values on the way
+//! forward, then walks the unroll backwards with the general adjoint
+//! recursion over the joint state.  Splitting the transition as
+//! `Φ_t = φ(θ, s, g, η)` with `g = ∇_θ L_t(θ, η)` treated as an input:
 //!
 //! ```text
-//! u    = P(η) ⊙ λ_{t+1}
-//! λ_t  = λ_{t+1} − (∂²L/∂θ²) u                 (HVP)
-//! dη  −=  (∂²L/∂θ∂η)ᵀ u  +  (∂P/∂η)ᵀ (∇_θL ⊙ λ_{t+1})
+//! (λθ', λs')          adjoints arriving from step t+1
+//! (dθ, ds, w, dη₀)  = φᵀ-VJP of ⟨λ, Φ outputs⟩  (g frozen — tiny graph)
+//! λθ  = dθ + (∂²L/∂θ²) w                        (HVP)
+//! λs  = ds
+//! dη += dη₀ + (∂²L/∂θ∂η)ᵀ w                     (mixed term)
 //! ```
 //!
-//! where both second-order products come from ONE forward-over-reverse
-//! dual sweep ([`Tape::jvp`] seeded with `u` over the step's gradient
-//! nodes).  Each step's tape is dropped before the next is built, so peak
-//! memory is one step's tape + tangents + the θ checkpoints.
+//! Both second-order products come from ONE forward-over-reverse dual
+//! sweep ([`Tape::jvp`] seeded with `tangent(θ) = w` over the step's live
+//! gradient nodes).  `dη₀` already contains the `(∂P/∂η)ᵀ` learning-rate
+//! path because `P(η)` is built in-graph.  Each step's tape is dropped
+//! before the next is built, so peak memory is one step's tape + tangents
+//! + the `(θ, s)` checkpoints.  For plain SGD this reduces exactly to the
+//! hand-derived `λ_t = λ_{t+1} − (∂²L/∂θ²)(P⊙λ_{t+1})` recursion.
 
-use super::tape::{NodeId, Tape};
+use super::optim::InnerOptimiser;
+use super::tape::{NodeId, Tape, TapeStats};
 use super::tensor::Tensor;
 
 /// A bilevel (meta-learning) problem: builds inner/outer losses as tape
@@ -53,6 +62,10 @@ pub trait BilevelProblem {
     /// Per-leaf learning-rate tensors P(η), broadcast to each θ leaf's
     /// shape.  Constant nodes for η-independent inner optimisers.
     fn lr_nodes(&self, tape: &mut Tape, eta: &[NodeId]) -> Vec<NodeId>;
+    /// The inner-loop optimiser driving the θ updates.
+    fn optimiser(&self) -> InnerOptimiser;
+    /// Swap the inner-loop optimiser (drivers configure this from CLI).
+    fn set_optimiser(&mut self, opt: InnerOptimiser);
     /// Draw fresh train/val batches (between outer steps).
     fn resample(&mut self);
 }
@@ -63,9 +76,11 @@ pub struct MemoryReport {
     /// Peak live tape bytes (naive: the single monolithic tape; mixflow:
     /// the largest per-step tape + its JVP tangent overlay).
     pub tape_bytes: usize,
-    /// θ checkpoint bytes (mixflow only).
+    /// `(θ_t, state_t)` checkpoint bytes (mixflow only), slot-major
+    /// state after the θ leaves at each step.
     pub checkpoint_bytes: usize,
-    /// Node count of the biggest live tape.
+    /// Node count of the biggest live tape, forward *and* backward
+    /// sweeps included.
     pub nodes: usize,
 }
 
@@ -91,27 +106,26 @@ fn leaves(tape: &mut Tape, values: &[Tensor]) -> Vec<NodeId> {
 }
 
 /// Reverse-over-reverse baseline: one monolithic tape through the whole
-/// unroll, then `grad` straight through every per-step gradient subgraph.
+/// unroll — gradients *and* optimiser-state updates in-graph — then
+/// `grad` straight through every per-step second-order subgraph.
 pub fn naive_hypergrad<P: BilevelProblem + ?Sized>(
     problem: &P,
     theta0: &[Tensor],
     eta: &[Tensor],
 ) -> Hypergrad {
+    let opt = problem.optimiser();
     let mut tape = Tape::new();
     let mut theta = leaves(&mut tape, theta0);
+    let mut state = leaves(&mut tape, &opt.init_state(theta0));
     let eta_ids = leaves(&mut tape, eta);
     for t in 0..problem.unroll() {
         let loss = problem.inner_loss(&mut tape, &theta, &eta_ids, t);
         let grads = tape.grad(loss, &theta);
         let lrs = problem.lr_nodes(&mut tape, &eta_ids);
-        theta = theta
-            .iter()
-            .zip(lrs.iter().zip(grads.iter()))
-            .map(|(&th, (&lr, &g))| {
-                let step = tape.mul(lr, g);
-                tape.sub(th, step)
-            })
-            .collect();
+        let (next_theta, next_state) =
+            opt.step(&mut tape, &theta, &state, &lrs, &grads, t);
+        theta = next_theta;
+        state = next_state;
     }
     let outer = problem.outer_loss(&mut tape, &theta);
     let d_eta_ids = tape.grad(outer, &eta_ids);
@@ -128,70 +142,80 @@ pub fn naive_hypergrad<P: BilevelProblem + ?Sized>(
     }
 }
 
-/// One inner SGD step on a throwaway tape; returns (θ_{t+1} values, tape
-/// stats of the step).
-fn inner_step_values<P: BilevelProblem + ?Sized>(
+/// One inner optimiser step on a throwaway tape; returns the `θ_{t+1}`
+/// and `state_{t+1}` values plus the step tape's [`TapeStats`] (both its
+/// byte and node counters feed the [`MemoryReport`] peak).
+pub fn inner_step_values<P: BilevelProblem + ?Sized>(
     problem: &P,
     theta: &[Tensor],
+    state: &[Tensor],
     eta: &[Tensor],
     step: usize,
-) -> (Vec<Tensor>, usize) {
+) -> (Vec<Tensor>, Vec<Tensor>, TapeStats) {
+    let opt = problem.optimiser();
     let mut tape = Tape::new();
     let theta_ids = leaves(&mut tape, theta);
+    let state_ids = leaves(&mut tape, state);
     let eta_ids = leaves(&mut tape, eta);
     let loss = problem.inner_loss(&mut tape, &theta_ids, &eta_ids, step);
     let grads = tape.grad(loss, &theta_ids);
     let lrs = problem.lr_nodes(&mut tape, &eta_ids);
-    let mut next = Vec::with_capacity(theta.len());
-    for ((&th, &lr), &g) in theta_ids.iter().zip(lrs.iter()).zip(grads.iter())
-    {
-        let delta = tape.mul(lr, g);
-        let id = tape.sub(th, delta);
-        next.push(tape.value(id).clone());
-    }
-    let bytes = tape.stats().bytes;
-    (next, bytes)
+    let (next_theta, next_state) =
+        opt.step(&mut tape, &theta_ids, &state_ids, &lrs, &grads, step);
+    let theta_out =
+        next_theta.iter().map(|&id| tape.value(id).clone()).collect();
+    let state_out =
+        next_state.iter().map(|&id| tape.value(id).clone()).collect();
+    (theta_out, state_out, tape.stats())
 }
 
 /// MixFlow-MG: forward-over-reverse mixed-mode hypergradient with
-/// per-step tape reuse (the paper's Algorithm 1 shape).
+/// per-step tape reuse (the paper's Algorithm 1 shape), the adjoint
+/// carried jointly over `(θ, optimiser state)`.
 pub fn mixflow_hypergrad<P: BilevelProblem + ?Sized>(
     problem: &P,
     theta0: &[Tensor],
     eta: &[Tensor],
 ) -> Hypergrad {
     let unroll = problem.unroll();
+    let opt = problem.optimiser();
+    let nt = theta0.len();
 
-    // Forward: checkpoint θ_t values only; every step tape is dropped.
-    let mut checkpoints: Vec<Vec<Tensor>> = vec![theta0.to_vec()];
+    // Forward: checkpoint (θ_t, state_t) values only; every step tape is
+    // dropped.  Both stats counters fold into the peak — the forward
+    // sweep's node counts used to be silently ignored.
+    let mut theta_ckpt: Vec<Vec<Tensor>> = vec![theta0.to_vec()];
+    let mut state_ckpt: Vec<Vec<Tensor>> = vec![opt.init_state(theta0)];
     let mut peak_tape = 0usize;
     let mut peak_nodes = 0usize;
     for t in 0..unroll {
-        let (next, bytes) =
-            inner_step_values(problem, &checkpoints[t], eta, t);
-        peak_tape = peak_tape.max(bytes);
-        checkpoints.push(next);
+        let (next_theta, next_state, stats) =
+            inner_step_values(problem, &theta_ckpt[t], &state_ckpt[t], eta, t);
+        peak_tape = peak_tape.max(stats.bytes);
+        peak_nodes = peak_nodes.max(stats.nodes);
+        theta_ckpt.push(next_theta);
+        state_ckpt.push(next_state);
     }
-    let checkpoint_bytes: usize = checkpoints
+    let checkpoint_bytes: usize = theta_ckpt
         .iter()
+        .chain(state_ckpt.iter())
         .map(|c| c.iter().map(Tensor::bytes).sum::<usize>())
         .sum();
 
-    // λ = ∇_θ L_val(θ_T) from a small outer tape.
+    // λ_T = (∇_θ L_val(θ_T), 0 state adjoint) from a small outer tape.
     let (mut lambda, outer_loss) = {
         let mut tape = Tape::new();
-        let theta_ids = leaves(&mut tape, &checkpoints[unroll]);
+        let theta_ids = leaves(&mut tape, &theta_ckpt[unroll]);
         let outer = problem.outer_loss(&mut tape, &theta_ids);
         let grads = tape.grad(outer, &theta_ids);
         peak_tape = peak_tape.max(tape.stats().bytes);
         peak_nodes = peak_nodes.max(tape.stats().nodes);
-        (
-            grads
-                .iter()
-                .map(|&id| tape.value(id).clone())
-                .collect::<Vec<_>>(),
-            tape.value(outer).item(),
-        )
+        let mut lambda: Vec<Tensor> =
+            grads.iter().map(|&id| tape.value(id).clone()).collect();
+        lambda.extend(
+            state_ckpt[unroll].iter().map(|s| Tensor::zeros(&s.shape)),
+        );
+        (lambda, tape.value(outer).item())
     };
 
     let mut d_eta: Vec<Tensor> =
@@ -200,72 +224,89 @@ pub fn mixflow_hypergrad<P: BilevelProblem + ?Sized>(
     // Backward sweep: rebuild one step's tape at a time.
     for t in (0..unroll).rev() {
         let mut tape = Tape::new();
-        let theta_ids = leaves(&mut tape, &checkpoints[t]);
+        let theta_ids = leaves(&mut tape, &theta_ckpt[t]);
+        let state_ids = leaves(&mut tape, &state_ckpt[t]);
         let eta_ids = leaves(&mut tape, eta);
+        let ns = state_ids.len();
         let loss = problem.inner_loss(&mut tape, &theta_ids, &eta_ids, t);
-        // One reverse sweep for both ∇_θL and ∇_ηL.
-        let mut wrt = theta_ids.clone();
-        wrt.extend(eta_ids.iter().copied());
-        let grads = tape.grad(loss, &wrt);
-        let (g_theta_ids, g_eta_ids) = grads.split_at(theta_ids.len());
-        let lr_ids = problem.lr_nodes(&mut tape, &eta_ids);
+        // One reverse sweep for the *live* ∇_θL and ∇_ηL nodes — the
+        // targets of the dual sweep below.
+        let mut gwrt = theta_ids.clone();
+        gwrt.extend(eta_ids.iter().copied());
+        let live = tape.grad(loss, &gwrt);
+        let (g_theta_live, g_eta_live) = live.split_at(nt);
 
-        // u = P(η) ⊙ λ
-        let u: Vec<Tensor> = lr_ids
+        // Stop-gradient copies of ∇_θL: the optimiser update is built
+        // over these constants, so the reverse sweep of c below is the
+        // φ-level VJP — first-order, over the tiny update subgraph only.
+        let g_const: Vec<NodeId> = g_theta_live
             .iter()
-            .zip(lambda.iter())
-            .map(|(&lr, la)| tape.value(lr).zip(la, |p, q| p * q))
+            .map(|&g| {
+                let v = tape.value(g).clone();
+                tape.constant(v)
+            })
             .collect();
+        let lr_ids = problem.lr_nodes(&mut tape, &eta_ids);
+        let (theta_next, state_next) =
+            opt.step(&mut tape, &theta_ids, &state_ids, &lr_ids, &g_const, t);
 
-        // Forward-over-reverse: tangents of the gradient nodes, seeded
-        // with tangent(θ) = u.  Tangent of ∇_θL is the HVP; tangent of
-        // ∇_ηL is the mixed ∂² product.
+        // c = Σ ⟨λ, Φ outputs⟩; ∇c gives every direct adjoint at once.
+        let outs: Vec<NodeId> = theta_next
+            .iter()
+            .chain(state_next.iter())
+            .copied()
+            .collect();
+        assert_eq!(outs.len(), lambda.len(), "λ / Φ output arity");
+        let mut c: Option<NodeId> = None;
+        for (&o, lam) in outs.iter().zip(lambda.iter()) {
+            let l = tape.constant(lam.clone());
+            let p = tape.mul(l, o);
+            let s = tape.sum(p);
+            c = Some(match c {
+                Some(prev) => tape.add(prev, s),
+                None => s,
+            });
+        }
+        let c = c.expect("optimiser step produced no outputs");
+        let mut wrt: Vec<NodeId> = theta_ids.clone();
+        wrt.extend(state_ids.iter().copied());
+        wrt.extend(g_const.iter().copied());
+        wrt.extend(eta_ids.iter().copied());
+        let adj = tape.grad(c, &wrt);
+        let d_theta_direct = &adj[..nt];
+        let d_state = &adj[nt..nt + ns];
+        let w_ids = &adj[nt + ns..nt + ns + nt];
+        let d_eta_direct = &adj[nt + ns + nt..];
+
+        // Forward-over-reverse: tangents of the live gradient nodes,
+        // seeded with tangent(θ) = w.  Tangent of ∇_θL is the HVP;
+        // tangent of ∇_ηL is the mixed ∂² product.
         let seeds: Vec<(NodeId, Tensor)> = theta_ids
             .iter()
             .copied()
-            .zip(u.iter().cloned())
+            .zip(w_ids.iter().map(|&id| tape.value(id).clone()))
             .collect();
-        let mut targets: Vec<NodeId> = g_theta_ids.to_vec();
-        targets.extend(g_eta_ids.iter().copied());
+        let mut targets: Vec<NodeId> = g_theta_live.to_vec();
+        targets.extend(g_eta_live.iter().copied());
         let (tangents, tangent_bytes) = tape.jvp(&seeds, &targets);
-        let (hvp, mixed) = tangents.split_at(theta_ids.len());
+        let (hvp, mixed) = tangents.split_at(nt);
 
-        // lr-path term: (∂P/∂η)ᵀ (∇_θL ⊙ λ), a micro reverse sweep over
-        // the (tiny) P(η) subgraph.  Zero when P is constant.
-        let gl: Vec<Tensor> = g_theta_ids
-            .iter()
-            .zip(lambda.iter())
-            .map(|(&g, la)| tape.value(g).zip(la, |p, q| p * q))
-            .collect();
-        let mut s_lr: Option<NodeId> = None;
-        for (&lr, glv) in lr_ids.iter().zip(gl.iter()) {
-            let c = tape.constant(glv.clone());
-            let prod = tape.mul(lr, c);
-            let dot = tape.sum(prod);
-            s_lr = Some(match s_lr {
-                Some(prev) => tape.add(prev, dot),
-                None => dot,
-            });
+        let mut new_lambda = Vec::with_capacity(nt + ns);
+        for i in 0..nt {
+            new_lambda.push(
+                tape.value(d_theta_direct[i]).zip(&hvp[i], |p, q| p + q),
+            );
         }
-        let lr_eta: Vec<Tensor> = match s_lr {
-            Some(s) => {
-                let ids = tape.grad(s, &eta_ids);
-                ids.iter().map(|&id| tape.value(id).clone()).collect()
-            }
-            None => eta.iter().map(|e| Tensor::zeros(&e.shape)).collect(),
-        };
-
+        for &id in d_state {
+            new_lambda.push(tape.value(id).clone());
+        }
+        lambda = new_lambda;
         for i in 0..d_eta.len() {
             let updated = d_eta[i]
-                .zip(&mixed[i], |p, q| p - q)
-                .zip(&lr_eta[i], |p, q| p - q);
+                .zip(tape.value(d_eta_direct[i]), |p, q| p + q)
+                .zip(&mixed[i], |p, q| p + q);
             d_eta[i] = updated;
         }
-        lambda = lambda
-            .iter()
-            .zip(hvp.iter())
-            .map(|(la, h)| la.zip(h, |p, q| p - q))
-            .collect();
 
         peak_tape = peak_tape.max(tape.stats().bytes + tangent_bytes);
         peak_nodes = peak_nodes.max(tape.stats().nodes);
@@ -283,17 +324,24 @@ pub fn mixflow_hypergrad<P: BilevelProblem + ?Sized>(
 }
 
 /// Central finite differences over every η element — the slow oracle the
-/// tests compare both hypergradient paths against.
+/// tests compare both hypergradient paths against.  Uses the same
+/// in-graph update builder, so stateful optimisers are held to the same
+/// oracle as SGD.
 pub fn fd_hypergrad<P: BilevelProblem + ?Sized>(
     problem: &P,
     theta0: &[Tensor],
     eta: &[Tensor],
     h: f64,
 ) -> Vec<Tensor> {
+    let opt = problem.optimiser();
     let outer_at = |eta_v: &[Tensor]| -> f64 {
         let mut theta: Vec<Tensor> = theta0.to_vec();
+        let mut state = opt.init_state(theta0);
         for t in 0..problem.unroll() {
-            theta = inner_step_values(problem, &theta, eta_v, t).0;
+            let (next_theta, next_state, _) =
+                inner_step_values(problem, &theta, &state, eta_v, t);
+            theta = next_theta;
+            state = next_state;
         }
         let mut tape = Tape::new();
         let ids = leaves(&mut tape, &theta);

@@ -8,24 +8,30 @@
 //! * [`tensor`] — dense f64 tensors over flat buffers.
 //! * [`tape`] — Wengert-list reverse mode whose adjoint pass is itself a
 //!   graph (so grad-of-grad works), plus a forward-mode JVP overlay.
+//! * [`optim`] — differentiable inner-loop optimisers (SGD, momentum,
+//!   Adam) whose per-step update — moment state and bias correction
+//!   included — is built in-graph on the step tape.
 //! * [`mixflow`] — the [`mixflow::BilevelProblem`] trait and two
 //!   hypergradient paths: [`mixflow::naive_hypergrad`]
 //!   (reverse-over-reverse, monolithic tape) and
 //!   [`mixflow::mixflow_hypergrad`] (forward-over-reverse, per-step tape
-//!   reuse — the paper's contribution), both instrumented with tape-byte
-//!   counters.
-//! * [`problems`] — the paper's hyper-LR and loss-weighting tasks.
+//!   reuse — the paper's contribution, with the adjoint carried jointly
+//!   over θ and optimiser state), both instrumented with tape counters.
+//! * [`problems`] — the paper's hyper-LR and loss-weighting tasks plus a
+//!   self-attention + layernorm workload.
 //!
 //! See `rust/src/autodiff/README.md` for the derivation.
 
 pub mod mixflow;
+pub mod optim;
 pub mod problems;
 pub mod tape;
 pub mod tensor;
 
 pub use mixflow::{
-    fd_hypergrad, mixflow_hypergrad, naive_hypergrad, BilevelProblem,
-    Hypergrad, MemoryReport,
+    fd_hypergrad, inner_step_values, mixflow_hypergrad, naive_hypergrad,
+    BilevelProblem, Hypergrad, MemoryReport,
 };
+pub use optim::InnerOptimiser;
 pub use tape::{NodeId, Op, Tape, TapeStats};
 pub use tensor::Tensor;

@@ -1,0 +1,232 @@
+//! Differentiable inner-loop optimisers.
+//!
+//! MixFlow-MG's Eq. (8) composition must carry the adjoint through the
+//! *whole* inner transition `s_{t+1} = Φ_t(s_t, η)`, where the state
+//! `s_t = (θ_t, state_t)` includes optimiser moments — the paper's
+//! headline workloads run Adam inside the unroll, not plain SGD.  So the
+//! per-step update here is built **in-graph** on the step tape: every
+//! moment update, bias correction and the `m̂/(√v̂+ε)` quotient are tape
+//! nodes, which makes them differentiable by both hypergradient paths
+//! with no special cases — `naive_hypergrad` backpropagates straight
+//! through them, and `mixflow_hypergrad` takes their φ-level VJP.
+//!
+//! State is stored slot-major: `state[slot · n_leaves + leaf]`, i.e. all
+//! first moments, then all second moments.  Checkpoints in the MixFlow
+//! backward sweep use the same layout.
+
+use super::tape::{NodeId, Tape};
+use super::tensor::Tensor;
+
+/// A differentiable inner-loop optimiser: `θ_{t+1} = θ_t − P(η) ⊙ u_t`
+/// where the update direction `u_t` may depend on moment state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InnerOptimiser {
+    /// `u = ∇L` — stateless.
+    Sgd,
+    /// Heavy-ball: `m' = β·m + ∇L`, `u = m'` — one state slot.
+    Momentum { beta: f64 },
+    /// Adam with bias correction: `u = m̂/(√v̂ + ε)` — two state slots.
+    Adam { beta1: f64, beta2: f64, eps: f64 },
+}
+
+impl InnerOptimiser {
+    /// Momentum with the conventional β = 0.9.
+    pub fn momentum() -> InnerOptimiser {
+        InnerOptimiser::Momentum { beta: 0.9 }
+    }
+
+    /// Adam with the conventional (0.9, 0.999, 1e-8).
+    pub fn adam() -> InnerOptimiser {
+        InnerOptimiser::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InnerOptimiser::Sgd => "sgd",
+            InnerOptimiser::Momentum { .. } => "momentum",
+            InnerOptimiser::Adam { .. } => "adam",
+        }
+    }
+
+    /// Case- and whitespace-insensitive name lookup.
+    pub fn parse(s: &str) -> Option<InnerOptimiser> {
+        match s.trim().to_lowercase().as_str() {
+            "sgd" => Some(InnerOptimiser::Sgd),
+            "momentum" | "sgdm" => Some(InnerOptimiser::momentum()),
+            "adam" => Some(InnerOptimiser::adam()),
+            _ => None,
+        }
+    }
+
+    /// Number of per-leaf state tensors (0 for SGD, 1 momentum, 2 Adam).
+    pub fn state_slots(&self) -> usize {
+        match self {
+            InnerOptimiser::Sgd => 0,
+            InnerOptimiser::Momentum { .. } => 1,
+            InnerOptimiser::Adam { .. } => 2,
+        }
+    }
+
+    /// Zero-initialised state, slot-major over the θ leaf shapes.
+    pub fn init_state(&self, theta0: &[Tensor]) -> Vec<Tensor> {
+        let mut out = Vec::with_capacity(self.state_slots() * theta0.len());
+        for _ in 0..self.state_slots() {
+            out.extend(theta0.iter().map(|t| Tensor::zeros(&t.shape)));
+        }
+        out
+    }
+
+    /// Build one update step in-graph.  `t` is the 0-based unroll index
+    /// (Adam's bias correction uses `t + 1`).  Returns
+    /// `(θ_{t+1}, state_{t+1})` with the state slot-major like `state`.
+    pub fn step(
+        &self,
+        tape: &mut Tape,
+        theta: &[NodeId],
+        state: &[NodeId],
+        lrs: &[NodeId],
+        grads: &[NodeId],
+        t: usize,
+    ) -> (Vec<NodeId>, Vec<NodeId>) {
+        let n = theta.len();
+        assert_eq!(lrs.len(), n, "one lr node per θ leaf");
+        assert_eq!(grads.len(), n, "one gradient node per θ leaf");
+        assert_eq!(
+            state.len(),
+            self.state_slots() * n,
+            "state must be slot-major over θ leaves"
+        );
+        match *self {
+            InnerOptimiser::Sgd => {
+                let mut new_theta = Vec::with_capacity(n);
+                for i in 0..n {
+                    let delta = tape.mul(lrs[i], grads[i]);
+                    new_theta.push(tape.sub(theta[i], delta));
+                }
+                (new_theta, Vec::new())
+            }
+            InnerOptimiser::Momentum { beta } => {
+                let mut new_theta = Vec::with_capacity(n);
+                let mut new_m = Vec::with_capacity(n);
+                for i in 0..n {
+                    let decayed = tape.scale(state[i], beta);
+                    let m_new = tape.add(decayed, grads[i]);
+                    let delta = tape.mul(lrs[i], m_new);
+                    new_theta.push(tape.sub(theta[i], delta));
+                    new_m.push(m_new);
+                }
+                (new_theta, new_m)
+            }
+            InnerOptimiser::Adam { beta1, beta2, eps } => {
+                let bc1 = 1.0 - beta1.powi(t as i32 + 1);
+                let bc2 = 1.0 - beta2.powi(t as i32 + 1);
+                let mut new_theta = Vec::with_capacity(n);
+                let mut new_m = Vec::with_capacity(n);
+                let mut new_v = Vec::with_capacity(n);
+                for i in 0..n {
+                    let (m, v) = (state[i], state[n + i]);
+                    let m_decayed = tape.scale(m, beta1);
+                    let g_scaled = tape.scale(grads[i], 1.0 - beta1);
+                    let m_new = tape.add(m_decayed, g_scaled);
+                    let v_decayed = tape.scale(v, beta2);
+                    let g_sq = tape.mul(grads[i], grads[i]);
+                    let g_sq_scaled = tape.scale(g_sq, 1.0 - beta2);
+                    let v_new = tape.add(v_decayed, g_sq_scaled);
+                    let m_hat = tape.scale(m_new, 1.0 / bc1);
+                    let v_hat = tape.scale(v_new, 1.0 / bc2);
+                    // ε_root inside the sqrt keeps the update
+                    // differentiable at v̂ = 0 (a zero gradient element
+                    // would otherwise send Sqrt's VJP to 0/0 = NaN) —
+                    // the standard guard for unrolled/meta Adam.
+                    let v_hat_safe = tape.offset(v_hat, 1e-12);
+                    let root = tape.sqrt(v_hat_safe);
+                    let denom = tape.offset(root, eps);
+                    let update = tape.div(m_hat, denom);
+                    let delta = tape.mul(lrs[i], update);
+                    new_theta.push(tape.sub(theta[i], delta));
+                    new_m.push(m_new);
+                    new_v.push(v_new);
+                }
+                new_m.extend(new_v);
+                (new_theta, new_m)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_step(
+        opt: InnerOptimiser,
+        theta0: f64,
+        g: f64,
+        lr: f64,
+        t: usize,
+    ) -> (Vec<Tensor>, Vec<Tensor>) {
+        let mut tape = Tape::new();
+        let th = tape.leaf(Tensor::scalar(theta0));
+        let state_t = opt.init_state(&[Tensor::scalar(theta0)]);
+        let state: Vec<NodeId> =
+            state_t.iter().map(|s| tape.leaf(s.clone())).collect();
+        let lr_id = tape.constant(Tensor::scalar(lr));
+        let g_id = tape.constant(Tensor::scalar(g));
+        let (nt, ns) = opt.step(&mut tape, &[th], &state, &[lr_id], &[g_id], t);
+        (
+            nt.iter().map(|&id| tape.value(id).clone()).collect(),
+            ns.iter().map(|&id| tape.value(id).clone()).collect(),
+        )
+    }
+
+    #[test]
+    fn sgd_step_matches_closed_form() {
+        let (theta, state) = one_step(InnerOptimiser::Sgd, 1.0, 0.5, 0.1, 0);
+        assert!((theta[0].item() - 0.95).abs() < 1e-12);
+        assert!(state.is_empty());
+    }
+
+    #[test]
+    fn momentum_first_step_equals_sgd() {
+        // m₀ = 0 → m₁ = g, so step 0 matches SGD exactly.
+        let (theta, state) =
+            one_step(InnerOptimiser::momentum(), 1.0, 0.5, 0.1, 0);
+        assert!((theta[0].item() - 0.95).abs() < 1e-12);
+        assert!((state[0].item() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // Bias correction makes m̂ = g and v̂ = g² at t = 0, so the first
+        // update is lr·g/(|g| + ε) ≈ lr·sign(g).
+        let (theta, state) = one_step(InnerOptimiser::adam(), 1.0, 0.5, 0.1, 0);
+        assert!((theta[0].item() - 0.9).abs() < 1e-6);
+        assert!((state[0].item() - 0.05).abs() < 1e-12, "m = (1−β1)g");
+        assert!((state[1].item() - 0.00025).abs() < 1e-12, "v = (1−β2)g²");
+    }
+
+    #[test]
+    fn parse_is_case_and_space_insensitive() {
+        assert_eq!(InnerOptimiser::parse("sgd"), Some(InnerOptimiser::Sgd));
+        assert_eq!(
+            InnerOptimiser::parse(" Adam\n"),
+            Some(InnerOptimiser::adam())
+        );
+        assert_eq!(
+            InnerOptimiser::parse("MOMENTUM"),
+            Some(InnerOptimiser::momentum())
+        );
+        assert_eq!(InnerOptimiser::parse("rmsprop"), None);
+    }
+
+    #[test]
+    fn state_layout_is_slot_major() {
+        let theta = vec![Tensor::zeros(&[2]), Tensor::zeros(&[3])];
+        let s = InnerOptimiser::adam().init_state(&theta);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0].shape, vec![2]); // m for leaf 0
+        assert_eq!(s[1].shape, vec![3]); // m for leaf 1
+        assert_eq!(s[2].shape, vec![2]); // v for leaf 0
+        assert_eq!(s[3].shape, vec![3]); // v for leaf 1
+    }
+}

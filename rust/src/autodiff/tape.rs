@@ -40,12 +40,19 @@ pub enum Op {
     /// `x + c` elementwise.
     Offset(NodeId, f64),
     Matmul { a: NodeId, b: NodeId, ta: bool, tb: bool },
+    /// Elementwise `a / b`.  Both operands differentiable (Adam's
+    /// `m̂/(√v̂+ε)` and layernorm's `(x−μ)/σ` need the denominator path).
+    Div(NodeId, NodeId),
     Relu(NodeId),
     /// Heaviside step of the input (0/1 mask); derivative defined as 0,
     /// matching JAX's convention for `relu'` at a kink.
     Step(NodeId),
     Tanh(NodeId),
     Exp(NodeId),
+    /// Elementwise `√x`; the input must stay positive wherever a gradient
+    /// flows (Adam guards with an ε_root offset before the sqrt,
+    /// layernorm with `σ² + ε`).
+    Sqrt(NodeId),
     /// Sum of all elements → scalar.
     Sum(NodeId),
     /// Scalar → filled tensor of the given shape.
@@ -243,6 +250,11 @@ impl Tape {
         self.push(Op::Mul(a, b), value)
     }
 
+    pub fn div(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let value = self.value(a).zip(self.value(b), |x, y| x / y);
+        self.push(Op::Div(a, b), value)
+    }
+
     pub fn scale(&mut self, a: NodeId, c: f64) -> NodeId {
         let value = self.value(a).map(|x| x * c);
         self.push(Op::Scale(a, c), value)
@@ -276,6 +288,11 @@ impl Tape {
     pub fn exp(&mut self, a: NodeId) -> NodeId {
         let value = self.value(a).map(f64::exp);
         self.push(Op::Exp(a), value)
+    }
+
+    pub fn sqrt(&mut self, a: NodeId) -> NodeId {
+        let value = self.value(a).map(f64::sqrt);
+        self.push(Op::Sqrt(a), value)
     }
 
     pub fn sum(&mut self, a: NodeId) -> NodeId {
@@ -354,6 +371,23 @@ impl Tape {
         self.scale(s, 1.0 / n as f64)
     }
 
+    /// Row-wise layer normalisation `(x − μ) / √(σ² + ε)` of an `[m,n]`
+    /// input (composite over row reductions, `sqrt` and `div`).
+    pub fn layernorm_rows(&mut self, a: NodeId, eps: f64) -> NodeId {
+        let n = self.value(a).dims2().1;
+        let mu_sum = self.row_sum(a);
+        let mu = self.scale(mu_sum, 1.0 / n as f64);
+        let mu_b = self.row_broadcast(mu, n);
+        let centered = self.sub(a, mu_b);
+        let sq = self.mul(centered, centered);
+        let var_sum = self.row_sum(sq);
+        let var = self.scale(var_sum, 1.0 / n as f64);
+        let var_eps = self.offset(var, eps);
+        let std = self.sqrt(var_eps);
+        let std_b = self.row_broadcast(std, n);
+        self.div(centered, std_b)
+    }
+
     // ---- reverse mode ---------------------------------------------------
 
     fn acc(&mut self, adj: &mut [Option<NodeId>], id: NodeId, contrib: NodeId) {
@@ -394,6 +428,16 @@ impl Tape {
                     self.acc(&mut adj, a, ca);
                     self.acc(&mut adj, b, cb);
                 }
+                Op::Div(a, b) => {
+                    // y = a/b: da = g/b, db = −g·y/b (reusing this node
+                    // as y, the same trick as tanh/exp).
+                    let da = self.div(g, b);
+                    self.acc(&mut adj, a, da);
+                    let gy = self.mul(g, i);
+                    let gyb = self.div(gy, b);
+                    let db = self.scale(gyb, -1.0);
+                    self.acc(&mut adj, b, db);
+                }
                 Op::Scale(a, c) => {
                     let s = self.scale(g, c);
                     self.acc(&mut adj, a, s);
@@ -427,6 +471,12 @@ impl Tape {
                 }
                 Op::Exp(a) => {
                     let c = self.mul(g, i);
+                    self.acc(&mut adj, a, c);
+                }
+                Op::Sqrt(a) => {
+                    // y = √a: da = g/(2y), reusing this node as y.
+                    let gy = self.div(g, i);
+                    let c = self.scale(gy, 0.5);
                     self.acc(&mut adj, a, c);
                 }
                 Op::Sum(a) => {
@@ -505,12 +555,15 @@ impl Tape {
 
     // ---- forward mode ---------------------------------------------------
 
-    /// Forward tangent sweep over the whole tape (dual-number overlay).
+    /// Forward tangent sweep over the tape (dual-number overlay).
     ///
     /// `seeds` assigns tangents to leaf/const nodes; every other tangent is
     /// derived by the op linearisations.  Returns the tangents of
     /// `targets` (zeros where no tangent flows) and the total bytes of
     /// tangent buffers materialised — the memory cost of the overlay.
+    /// Nodes after the last target can never influence it, so the sweep
+    /// stops there: subgraphs recorded later (e.g. the optimiser update
+    /// and its adjoint in the MixFlow backward step) cost nothing.
     pub fn jvp(
         &self,
         seeds: &[(NodeId, Tensor)],
@@ -523,9 +576,13 @@ impl Tape {
                 "seed shape mismatch at node {id}"
             );
         }
+        let stop = match targets.iter().max() {
+            Some(&last) => last + 1,
+            None => 0,
+        };
         let mut tan: Vec<Option<Tensor>> = vec![None; self.nodes.len()];
         let mut bytes = 0usize;
-        for i in 0..self.nodes.len() {
+        for i in 0..stop {
             let out: Option<Tensor> = match &self.nodes[i].op {
                 Op::Leaf | Op::Const => seeds
                     .iter()
@@ -555,6 +612,24 @@ impl Tape {
                         }
                         (Some(x), None) => Some(x.zip(vb, |p, q| p * q)),
                         (None, Some(y)) => Some(va.zip(y, |p, q| p * q)),
+                        (None, None) => None,
+                    }
+                }
+                Op::Div(a, b) => {
+                    // ẏ = (ȧ − y·ḃ)/b, using this node's value as y.
+                    let vy = &self.nodes[i].value;
+                    let vb = &self.nodes[*b].value;
+                    match (&tan[*a], &tan[*b]) {
+                        (Some(x), Some(bt)) => {
+                            let ybt = vy.zip(bt, |y, q| y * q);
+                            let num = x.zip(&ybt, |p, s| p - s);
+                            Some(num.zip(vb, |p, q| p / q))
+                        }
+                        (Some(x), None) => Some(x.zip(vb, |p, q| p / q)),
+                        (None, Some(bt)) => {
+                            let ybt = vy.zip(bt, |y, q| y * q);
+                            Some(ybt.zip(vb, |p, q| -p / q))
+                        }
                         (None, None) => None,
                     }
                 }
@@ -588,6 +663,9 @@ impl Tape {
                 Op::Exp(a) => tan[*a]
                     .as_ref()
                     .map(|t| t.zip(&self.nodes[i].value, |p, y| p * y)),
+                Op::Sqrt(a) => tan[*a].as_ref().map(|t| {
+                    t.zip(&self.nodes[i].value, |p, y| p / (2.0 * y))
+                }),
                 Op::Sum(a) => tan[*a].as_ref().map(t_sum),
                 Op::Broadcast(a, shape) => tan[*a]
                     .as_ref()
@@ -711,6 +789,42 @@ mod tests {
         let rows = t_row_sum(tape.value(s));
         for r in rows.data {
             assert!((r - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn div_sqrt_values_and_grads() {
+        // f(x) = Σ 1/√x → ∇f = −½ x^{−3/2}
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::new(vec![2], vec![4.0, 1.0]));
+        let r = tape.sqrt(x);
+        let one = tape.constant(Tensor::full(&[2], 1.0));
+        let inv = tape.div(one, r);
+        assert_eq!(tape.value(inv).data, vec![0.5, 1.0]);
+        let y = tape.sum(inv);
+        let g = tape.grad(y, &[x]);
+        let want = [-0.5 * 4.0f64.powf(-1.5), -0.5];
+        for (got, w) in tape.value(g[0]).data.iter().zip(want.iter()) {
+            assert!((got - w).abs() < 1e-12, "{got} vs {w}");
+        }
+    }
+
+    #[test]
+    fn layernorm_rows_zero_mean_unit_var() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::new(vec![2, 4], vec![
+            1.0, 2.0, 3.0, 4.0, -1.0, 0.0, 5.0, 2.0,
+        ]));
+        let y = tape.layernorm_rows(x, 1e-8);
+        let v = tape.value(y);
+        let (m, n) = v.dims2();
+        for i in 0..m {
+            let row = &v.data[i * n..(i + 1) * n];
+            let mu: f64 = row.iter().sum::<f64>() / n as f64;
+            let var: f64 =
+                row.iter().map(|a| (a - mu) * (a - mu)).sum::<f64>() / n as f64;
+            assert!(mu.abs() < 1e-9, "row mean {mu}");
+            assert!((var - 1.0).abs() < 1e-6, "row var {var}");
         }
     }
 

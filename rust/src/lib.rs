@@ -14,8 +14,9 @@
 //!   and a FLOP cost model.
 //! * [`autodiff`] — the native differentiation engine: f64 tensors, a
 //!   Wengert-list tape with graph-mode reverse (so grad-of-grad works), a
-//!   forward-mode JVP overlay, and the `naive_hypergrad` /
-//!   `mixflow_hypergrad` bilevel paths with tape-byte instrumentation.
+//!   forward-mode JVP overlay, differentiable inner optimisers (SGD,
+//!   momentum, Adam — updates built in-graph), and the `naive_hypergrad`
+//!   / `mixflow_hypergrad` bilevel paths with tape-byte instrumentation.
 //!   The first path in the repo where the whole meta-gradient is computed
 //!   by Rust alone.
 //! * [`runtime`] — artifact manifest (always available) + the PJRT client

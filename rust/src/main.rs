@@ -4,7 +4,8 @@
 //! * `info`                 — manifest summary (artifacts, groups, sizes)
 //! * `analyze <key>`        — HLO memory/cost analysis of one artifact
 //! * `native --task <t>`    — native meta-training via the Rust autodiff
-//!   engine (no PJRT, no artifacts); `--mode naive|mixflow`
+//!   engine (no PJRT, no artifacts); `--mode naive|mixflow`,
+//!   `--inner-opt sgd|momentum|adam` (tasks include `attention`)
 //! * `run <key>`            — execute one exec-tier artifact (pjrt)
 //! * `sweep --group <g>`    — run a figure group, print ratios (pjrt)
 //! * `train --task <t>`     — artifact E2E meta-training loop (pjrt)
@@ -15,6 +16,7 @@
 //! exit with an explanatory error instead of failing to build.
 
 use anyhow::{anyhow, Result};
+use mixflow::autodiff::InnerOptimiser;
 use mixflow::coordinator::report as rpt;
 use mixflow::coordinator::runner::pair_ratios;
 use mixflow::coordinator::ResultsStore;
@@ -35,10 +37,11 @@ fn main() {
     .positional("command", "info|analyze|native|run|sweep|train|report|verify")
     .flag("key", None, "artifact key (analyze/run)")
     .flag("group", None, "manifest group (sweep/report)")
-    .flag("task", Some("maml"), "task for train/native (maml|learning_lr|loss_weighting|hyperlr)")
+    .flag("task", Some("maml"), "task for train/native (maml|learning_lr|loss_weighting|hyperlr|attention)")
     .flag("steps", Some("100"), "outer steps for train/native")
     .flag("unroll", Some("8"), "inner unroll length for native")
     .flag("mode", Some("mixflow"), "hypergradient path for native (naive|mixflow)")
+    .flag("inner-opt", Some("sgd"), "inner-loop optimiser for native (sgd|momentum|adam)")
     .flag("iters", Some("5"), "timing iterations")
     .flag("seed", Some("0"), "input seed")
     .switch("no-exec", "analysis only (skip PJRT execution)")
@@ -69,6 +72,7 @@ fn dispatch(args: &mixflow::util::args::Args) -> Result<()> {
             args.get_usize("steps").map_err(|e| anyhow!(e))?,
             args.get_usize("unroll").map_err(|e| anyhow!(e))?,
             args.get("mode").unwrap(),
+            args.get("inner-opt").unwrap(),
             args.get_usize("seed").map_err(|e| anyhow!(e))? as u64,
         ),
         "run" => cmd_run(
@@ -174,28 +178,40 @@ fn cmd_native(
     steps: usize,
     unroll: usize,
     mode: &str,
+    inner_opt: &str,
     seed: u64,
 ) -> Result<()> {
     // The flag's global default is the artifact task "maml"; the native
     // engine's nearest equivalent workload is the hyper-LR task.
-    let task = if task == "maml" {
+    let task = if task.trim().eq_ignore_ascii_case("maml") {
         NativeTask::HyperLr
     } else {
         NativeTask::parse(task).ok_or_else(|| {
             anyhow!(
-                "--task must be hyperlr|learning_lr|loss_weighting for native"
+                "--task {task:?} is not a native task; valid values: \
+                 hyperlr|learning_lr|loss_weighting|attention"
             )
         })?
     };
-    let mode = HypergradMode::parse(mode)
-        .ok_or_else(|| anyhow!("--mode must be naive|mixflow"))?;
+    let mode = HypergradMode::parse(mode).ok_or_else(|| {
+        anyhow!("--mode {mode:?} invalid; valid values: naive|mixflow")
+    })?;
+    let inner_opt = InnerOptimiser::parse(inner_opt).ok_or_else(|| {
+        anyhow!(
+            "--inner-opt {inner_opt:?} invalid; valid values: \
+             sgd|momentum|adam"
+        )
+    })?;
     println!(
-        "native meta-training: task={} mode={} unroll={unroll} steps={steps}",
+        "native meta-training: task={} mode={} inner-opt={} unroll={unroll} \
+         steps={steps}",
         task.name(),
-        mode.name()
+        mode.name(),
+        inner_opt.name()
     );
-    let mut trainer =
-        NativeMetaTrainer::with_unroll(task, seed, unroll).with_mode(mode);
+    let mut trainer = NativeMetaTrainer::with_unroll(task, seed, unroll)
+        .with_mode(mode)
+        .with_inner_opt(inner_opt);
     let report = trainer.train(steps);
     print_train_summary(&report, trainer.last_memory.as_ref());
     Ok(())

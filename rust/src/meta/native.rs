@@ -12,7 +12,10 @@ use std::time::Instant;
 use crate::autodiff::mixflow::{
     mixflow_hypergrad, naive_hypergrad, BilevelProblem, MemoryReport,
 };
-use crate::autodiff::problems::{HyperLrProblem, LossWeightingProblem};
+use crate::autodiff::optim::InnerOptimiser;
+use crate::autodiff::problems::{
+    AttentionProblem, HyperLrProblem, LossWeightingProblem,
+};
 use crate::autodiff::tensor::Tensor;
 
 use super::TrainReport;
@@ -34,8 +37,9 @@ impl HypergradMode {
         }
     }
 
+    /// Case- and whitespace-insensitive (`--mode Mixflow` must work).
     pub fn parse(s: &str) -> Option<HypergradMode> {
-        match s {
+        match s.trim().to_lowercase().as_str() {
             "naive" => Some(HypergradMode::Naive),
             "mixflow" => Some(HypergradMode::Mixflow),
             _ => None,
@@ -48,6 +52,7 @@ impl HypergradMode {
 pub enum NativeTask {
     HyperLr,
     LossWeighting,
+    Attention,
 }
 
 impl NativeTask {
@@ -55,14 +60,17 @@ impl NativeTask {
         match self {
             NativeTask::HyperLr => "hyperlr",
             NativeTask::LossWeighting => "loss_weighting",
+            NativeTask::Attention => "attention",
         }
     }
 
-    /// Accepts both the native names and the artifact task names.
+    /// Accepts both the native names and the artifact task names,
+    /// case- and whitespace-insensitively.
     pub fn parse(s: &str) -> Option<NativeTask> {
-        match s {
+        match s.trim().to_lowercase().as_str() {
             "hyperlr" | "learning_lr" => Some(NativeTask::HyperLr),
             "loss_weighting" => Some(NativeTask::LossWeighting),
+            "attention" | "attn" => Some(NativeTask::Attention),
             _ => None,
         }
     }
@@ -100,6 +108,9 @@ impl NativeMetaTrainer {
             NativeTask::LossWeighting => {
                 Box::new(LossWeightingProblem::with_unroll(seed, unroll))
             }
+            NativeTask::Attention => {
+                Box::new(AttentionProblem::with_unroll(seed, unroll))
+            }
         };
         let eta = problem.eta0();
         let adam_m = eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
@@ -119,6 +130,12 @@ impl NativeMetaTrainer {
 
     pub fn with_mode(mut self, mode: HypergradMode) -> NativeMetaTrainer {
         self.mode = mode;
+        self
+    }
+
+    /// Select the inner-loop optimiser (SGD default, momentum, Adam).
+    pub fn with_inner_opt(mut self, opt: InnerOptimiser) -> NativeMetaTrainer {
+        self.problem.set_optimiser(opt);
         self
     }
 
@@ -155,9 +172,10 @@ impl NativeMetaTrainer {
         let seconds = t0.elapsed().as_secs_f64();
         TrainReport {
             artifact: format!(
-                "native/{}/{}",
+                "native/{}/{}/{}",
                 self.task.name(),
-                self.mode.name()
+                self.mode.name(),
+                self.problem.optimiser().name()
             ),
             steps,
             steps_per_second: steps as f64 / seconds.max(1e-9),
@@ -235,12 +253,55 @@ mod tests {
             NativeTask::parse("loss_weighting"),
             Some(NativeTask::LossWeighting)
         );
+        assert_eq!(
+            NativeTask::parse("attention"),
+            Some(NativeTask::Attention)
+        );
         assert_eq!(NativeTask::parse("nope"), None);
         assert_eq!(
             HypergradMode::parse("mixflow"),
             Some(HypergradMode::Mixflow)
         );
         assert_eq!(HypergradMode::parse("naive"), Some(HypergradMode::Naive));
+    }
+
+    #[test]
+    fn parse_is_case_and_whitespace_insensitive() {
+        // Regression: `--mode Mixflow` / padded values used to be
+        // rejected by the exact-match parsers.
+        assert_eq!(
+            HypergradMode::parse("Mixflow"),
+            Some(HypergradMode::Mixflow)
+        );
+        assert_eq!(
+            HypergradMode::parse(" NAIVE\t"),
+            Some(HypergradMode::Naive)
+        );
+        assert_eq!(NativeTask::parse("HyperLR"), Some(NativeTask::HyperLr));
+        assert_eq!(
+            NativeTask::parse("  Attention\n"),
+            Some(NativeTask::Attention)
+        );
+        assert_eq!(
+            NativeTask::parse("Loss_Weighting"),
+            Some(NativeTask::LossWeighting)
+        );
+        assert_eq!(HypergradMode::parse("mix flow"), None);
+    }
+
+    #[test]
+    fn attention_adam_outer_step_updates_eta() {
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(NativeTask::Attention, 5, 2)
+                .with_inner_opt(InnerOptimiser::adam());
+        let before: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        let report = trainer.train(1);
+        assert!(report.losses[0].is_finite());
+        assert!(report.artifact.ends_with("attention/mixflow/adam"));
+        let after: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        assert_ne!(before, after, "Adam step must move eta");
     }
 
     #[test]

@@ -3,9 +3,13 @@
 //! agreement, the tape-memory regression, and native E2E training.
 
 use mixflow::autodiff::mixflow::{
-    fd_hypergrad, mixflow_hypergrad, naive_hypergrad, rel_err,
+    fd_hypergrad, inner_step_values, mixflow_hypergrad, naive_hypergrad,
+    rel_err,
 };
-use mixflow::autodiff::problems::{HyperLrProblem, LossWeightingProblem};
+use mixflow::autodiff::optim::InnerOptimiser;
+use mixflow::autodiff::problems::{
+    AttentionProblem, HyperLrProblem, LossWeightingProblem,
+};
 use mixflow::autodiff::tape::{NodeId, Tape};
 use mixflow::autodiff::tensor::Tensor;
 use mixflow::autodiff::BilevelProblem;
@@ -99,6 +103,55 @@ fn fd_checks_elementwise_ops() {
         let s = t.scale(x, 0.3);
         let e = t.exp(s);
         t.sum(e)
+    });
+}
+
+#[test]
+fn fd_checks_div_sqrt_layernorm() {
+    let mut rng = Prng::new(21);
+    let a = Tensor::randn(&[3, 5], 1.0, &mut rng);
+    let denom = Tensor::randn(&[3, 5], 1.0, &mut rng).map(|v| 1.0 + v.abs());
+    let weight = Tensor::randn(&[3, 5], 0.5, &mut rng);
+    fd_check("sqrt", &a, |t, x| {
+        // √(x² + 0.5): keeps the argument positive for any probe point.
+        let sq = t.mul(x, x);
+        let o = t.offset(sq, 0.5);
+        let r = t.sqrt(o);
+        t.sum(r)
+    });
+    fd_check("div_numerator", &a, |t, x| {
+        let c = t.constant(denom.clone());
+        let d = t.div(x, c);
+        t.sum(d)
+    });
+    fd_check("div_denominator", &a, |t, x| {
+        // 1/(x² + 1): denominator bounded away from zero.
+        let num = t.constant(weight.clone());
+        let sq = t.mul(x, x);
+        let o = t.offset(sq, 1.0);
+        let d = t.div(num, o);
+        t.sum(d)
+    });
+    fd_check("div_both_sides", &a, |t, x| {
+        let sq = t.mul(x, x);
+        let o = t.offset(sq, 1.0);
+        let d = t.div(x, o);
+        t.sum(d)
+    });
+    fd_check("layernorm_rows", &a, |t, x| {
+        let ln = t.layernorm_rows(x, 1e-3);
+        let y = t.tanh(ln);
+        t.sum(y)
+    });
+    fd_check("adam_like_quotient", &a, |t, x| {
+        // m̂/(√v̂ + ε) with m̂, v̂ both functions of x — the exact shape
+        // the in-graph Adam update puts on the step tape.
+        let sq = t.mul(x, x);
+        let o = t.offset(sq, 1e-3);
+        let root = t.sqrt(o);
+        let den = t.offset(root, 1e-8);
+        let d = t.div(x, den);
+        t.sum(d)
     });
 }
 
@@ -335,8 +388,68 @@ fn hypergrads_match_fd_oracle() {
 }
 
 #[test]
+fn hypergrads_match_fd_oracle_stateful_optimisers() {
+    // The optimiser-state adjoint path (m/v moments, bias correction)
+    // must be held to the same FD oracle as plain SGD.
+    let momentum = HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08)
+        .with_optimiser(InnerOptimiser::momentum());
+    let theta0 = momentum.theta0();
+    let eta = momentum.eta0();
+    let naive = naive_hypergrad(&momentum, &theta0, &eta);
+    let mixed = mixflow_hypergrad(&momentum, &theta0, &eta);
+    let fd = fd_hypergrad(&momentum, &theta0, &eta, 1e-5);
+    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "momentum naive vs fd");
+    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "momentum mixflow vs fd");
+
+    let adam = HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08)
+        .with_optimiser(InnerOptimiser::adam());
+    let naive = naive_hypergrad(&adam, &theta0, &eta);
+    let mixed = mixflow_hypergrad(&adam, &theta0, &eta);
+    let fd = fd_hypergrad(&adam, &theta0, &eta, 1e-5);
+    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "adam naive vs fd");
+    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "adam mixflow vs fd");
+    assert!(
+        rel_err(&naive.d_eta, &mixed.d_eta) < 1e-6,
+        "adam naive vs mixflow"
+    );
+
+    // Adam under a dense mixed ∂²L/∂η∂θ term (η inside the inner loss).
+    let weight = LossWeightingProblem::with_config(13, 3, 4, 3, 4, 3, 0.15, 0.5)
+        .with_optimiser(InnerOptimiser::adam());
+    let theta0 = weight.theta0();
+    let eta = weight.eta0();
+    let naive = naive_hypergrad(&weight, &theta0, &eta);
+    let mixed = mixflow_hypergrad(&weight, &theta0, &eta);
+    let fd = fd_hypergrad(&weight, &theta0, &eta, 1e-5);
+    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "weighting+adam naive vs fd");
+    assert!(
+        rel_err(&mixed.d_eta, &fd) < 1e-4,
+        "weighting+adam mixflow vs fd"
+    );
+}
+
+#[test]
+fn hypergrads_match_fd_oracle_attention_adam() {
+    // The paper's benchmark shape: attention + layernorm inner model,
+    // Adam inner optimiser.
+    let prob = AttentionProblem::with_config(19, 3, 4, 3, 3, 0.05)
+        .with_optimiser(InnerOptimiser::adam());
+    let theta0 = prob.theta0();
+    let eta = prob.eta0();
+    let naive = naive_hypergrad(&prob, &theta0, &eta);
+    let mixed = mixflow_hypergrad(&prob, &theta0, &eta);
+    let fd = fd_hypergrad(&prob, &theta0, &eta, 1e-5);
+    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "attention naive vs fd");
+    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "attention mixflow vs fd");
+    assert!(
+        rel_err(&naive.d_eta, &mixed.d_eta) < 1e-6,
+        "attention naive vs mixflow"
+    );
+}
+
+#[test]
 fn property_naive_equals_mixflow_on_random_instances() {
-    proptest::check("naive≈mixflow", 12, |g| {
+    proptest::check("naive≈mixflow", 18, |g| {
         let seed = g.rng.next_u64();
         let d = g.usize(2, 4);
         let hidden = g.usize(2, 5);
@@ -344,39 +457,50 @@ fn property_naive_equals_mixflow_on_random_instances() {
         let batch = g.usize(2, 5);
         let unroll = g.usize(1, 4);
         let alpha = g.f64(0.02, 0.12);
-        let (naive, mixed) = if g.bool() {
-            let p = HyperLrProblem::with_config(
-                seed, d, hidden, classes, batch, unroll, alpha,
-            );
-            let theta0 = p.theta0();
-            let eta = p.eta0();
-            (
-                naive_hypergrad(&p, &theta0, &eta),
-                mixflow_hypergrad(&p, &theta0, &eta),
-            )
-        } else {
-            let p = LossWeightingProblem::with_config(
-                seed,
-                d,
-                hidden,
-                classes,
-                batch,
-                unroll,
-                alpha,
-                g.f64(0.0, 0.6),
-            );
-            let theta0 = p.theta0();
-            let eta = p.eta0();
-            (
-                naive_hypergrad(&p, &theta0, &eta),
-                mixflow_hypergrad(&p, &theta0, &eta),
-            )
+        let opt = *g.choose(&[
+            InnerOptimiser::Sgd,
+            InnerOptimiser::momentum(),
+            InnerOptimiser::adam(),
+        ]);
+        let problem: Box<dyn BilevelProblem> = match g.usize(0, 2) {
+            0 => Box::new(
+                HyperLrProblem::with_config(
+                    seed, d, hidden, classes, batch, unroll, alpha,
+                )
+                .with_optimiser(opt),
+            ),
+            1 => Box::new(
+                LossWeightingProblem::with_config(
+                    seed,
+                    d,
+                    hidden,
+                    classes,
+                    batch,
+                    unroll,
+                    alpha,
+                    g.f64(0.0, 0.6),
+                )
+                .with_optimiser(opt),
+            ),
+            _ => Box::new(
+                AttentionProblem::with_config(
+                    seed, d, batch, classes, unroll, alpha,
+                )
+                .with_optimiser(opt),
+            ),
         };
+        let theta0 = problem.theta0();
+        let eta = problem.eta0();
+        let naive = naive_hypergrad(problem.as_ref(), &theta0, &eta);
+        let mixed = mixflow_hypergrad(problem.as_ref(), &theta0, &eta);
         let err = rel_err(&naive.d_eta, &mixed.d_eta);
         if err < 1e-6 {
             Ok(())
         } else {
-            Err(format!("naive vs mixflow diverged: rel err {err:.3e}"))
+            Err(format!(
+                "naive vs mixflow diverged ({} inner opt): rel err {err:.3e}",
+                problem.optimiser().name()
+            ))
         }
     });
 }
@@ -406,6 +530,59 @@ fn mixflow_tape_memory_beats_naive_for_long_unrolls() {
 }
 
 #[test]
+fn adam_attention_tape_memory_beats_naive_for_long_unrolls() {
+    // The paper's headline configuration: the gap must reproduce with
+    // moment-state checkpoints included, and widen with unroll.
+    let mut prev_ratio = 0.0;
+    for unroll in [4usize, 8, 16] {
+        let p = AttentionProblem::with_unroll(1, unroll)
+            .with_optimiser(InnerOptimiser::adam());
+        let theta0 = p.theta0();
+        let eta = p.eta0();
+        let naive = naive_hypergrad(&p, &theta0, &eta);
+        let mixed = mixflow_hypergrad(&p, &theta0, &eta);
+        let nb = naive.memory.total_bytes();
+        let mb = mixed.memory.total_bytes();
+        assert!(
+            mb < nb,
+            "unroll {unroll}: adam+attention mixflow {mb} bytes not below \
+             naive {nb}"
+        );
+        let ratio = nb as f64 / mb as f64;
+        assert!(
+            ratio > prev_ratio,
+            "memory ratio must widen with unroll ({prev_ratio:.2} → {ratio:.2})"
+        );
+        prev_ratio = ratio;
+    }
+}
+
+#[test]
+fn forward_sweep_stats_fold_into_memory_report() {
+    // Regression: the forward sweep used to return only bytes, so
+    // MemoryReport.nodes silently ignored forward-pass step tapes.
+    let p = HyperLrProblem::with_config(5, 3, 4, 3, 4, 2, 0.08)
+        .with_optimiser(InnerOptimiser::adam());
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let state = p.optimiser().init_state(&theta0);
+    let (next_theta, next_state, stats) =
+        inner_step_values(&p, &theta0, &state, &eta, 0);
+    assert_eq!(next_theta.len(), theta0.len());
+    assert_eq!(next_state.len(), state.len());
+    assert!(stats.nodes > 0, "forward step tape must report node count");
+    assert!(stats.bytes > 0, "forward step tape must report bytes");
+    let mixed = mixflow_hypergrad(&p, &theta0, &eta);
+    assert!(
+        mixed.memory.nodes >= stats.nodes,
+        "MemoryReport.nodes ({}) must fold in the forward-sweep step tape \
+         ({})",
+        mixed.memory.nodes,
+        stats.nodes
+    );
+}
+
+#[test]
 fn native_training_improves_validation_loss() {
     let mut trainer = NativeMetaTrainer::new(NativeTask::HyperLr, 7);
     let report = trainer.train(50);
@@ -426,4 +603,24 @@ fn naive_mode_trains_too() {
     assert!(report.losses.iter().all(|l| l.is_finite()));
     let (head, tail) = report.improvement(5);
     assert!(tail < head, "naive path must also train ({head:.4} → {tail:.4})");
+}
+
+#[test]
+fn attention_adam_native_training_improves_validation_loss() {
+    // `mixflow native --task attention --inner-opt adam` end-to-end.
+    // α₀ starts deliberately small, so the meta level must grow the LRs.
+    let mut trainer =
+        NativeMetaTrainer::with_unroll(NativeTask::Attention, 7, 6)
+            .with_inner_opt(InnerOptimiser::adam());
+    let report = trainer.train(50);
+    assert_eq!(report.losses.len(), 50);
+    assert!(report.losses.iter().all(|l| l.is_finite()));
+    let (head, tail) = report.improvement(10);
+    assert!(
+        tail < head,
+        "attention+adam outer steps must improve val loss \
+         ({head:.4} → {tail:.4})"
+    );
+    let mem = trainer.last_memory.expect("memory report recorded");
+    assert!(mem.tape_bytes > 0 && mem.checkpoint_bytes > 0 && mem.nodes > 0);
 }
