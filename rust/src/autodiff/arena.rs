@@ -1,0 +1,141 @@
+//! Length-keyed free-list arena for tensor backing buffers.
+//!
+//! The native engine's hot loops (per-step tapes in
+//! [`super::mixflow::mixflow_hypergrad`], the adjoint sweep, the JVP
+//! overlay) build and drop the *same* tensor shapes T times per
+//! hypergradient.  Allocating a fresh `Vec<f64>` per node made the
+//! allocator the bottleneck.  The arena parks uniquely-owned buffers when
+//! a tape is [`reset`](super::tape::Tape::reset) and hands them back out
+//! keyed by exact element count, so steady-state step tapes run with
+//! (almost) zero allocator traffic.
+//!
+//! Safety invariant: every `Arc` parked on the free list has a strong
+//! count of exactly 1 — [`BufferArena::recycle`] refuses shared buffers
+//! (checkpoints, returned hypergradients, aliased views keep theirs
+//! alive), and [`BufferArena::take`] hands each parked buffer out at most
+//! once.  A violation would panic in the tape's `Arc::get_mut`, never
+//! silently corrupt values.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::tensor::Tensor;
+
+/// Traffic counters for one arena (surfaced in
+/// [`super::mixflow::MemoryReport`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArenaStats {
+    /// Buffers allocated fresh from the system allocator.
+    pub allocs: usize,
+    /// Buffers served from the free list instead of the allocator.
+    pub reuses: usize,
+    /// Buffers returned to the free list so far.
+    pub recycled: usize,
+    /// Bytes currently parked on the free list.
+    pub free_bytes: usize,
+    /// Buffers currently parked on the free list.
+    pub free_buffers: usize,
+}
+
+/// The free list itself: `element count → parked buffers`.
+#[derive(Default)]
+pub struct BufferArena {
+    free: HashMap<usize, Vec<Arc<Vec<f64>>>>,
+    allocs: usize,
+    reuses: usize,
+    recycled: usize,
+}
+
+impl BufferArena {
+    pub fn new() -> BufferArena {
+        BufferArena::default()
+    }
+
+    /// Hand out a uniquely-owned buffer of exactly `len` elements.  The
+    /// contents are unspecified (stale values from a recycled buffer):
+    /// every kernel writing into it must overwrite all elements.
+    pub fn take(&mut self, len: usize) -> Arc<Vec<f64>> {
+        match self.free.get_mut(&len).and_then(|v| v.pop()) {
+            Some(buf) => {
+                self.reuses += 1;
+                buf
+            }
+            None => {
+                self.allocs += 1;
+                Arc::new(vec![0.0; len])
+            }
+        }
+    }
+
+    /// Return a tensor's backing buffer to the free list if this tensor
+    /// was the last reference to it.  Shared buffers — checkpoints,
+    /// hypergradient outputs, aliased views — are simply dropped here and
+    /// stay alive through their other handles.
+    pub fn recycle(&mut self, t: Tensor) {
+        let arc = t.into_data().into_arc();
+        if Arc::strong_count(&arc) == 1 {
+            self.recycled += 1;
+            self.free.entry(arc.len()).or_default().push(arc);
+        }
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        let mut free_bytes = 0usize;
+        let mut free_buffers = 0usize;
+        for bucket in self.free.values() {
+            free_buffers += bucket.len();
+            free_bytes += bucket
+                .iter()
+                .map(|b| b.len() * super::tensor::ELEM_BYTES)
+                .sum::<usize>();
+        }
+        ArenaStats {
+            allocs: self.allocs,
+            reuses: self.reuses,
+            recycled: self.recycled,
+            free_bytes,
+            free_buffers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_take_reuses_the_buffer() {
+        let mut arena = BufferArena::new();
+        let t = Tensor::from_shared(vec![4], arena.take(4));
+        assert_eq!(arena.stats().allocs, 1);
+        arena.recycle(t);
+        assert_eq!(arena.stats().free_buffers, 1);
+        let _again = arena.take(4);
+        let s = arena.stats();
+        assert_eq!(s.reuses, 1);
+        assert_eq!(s.free_buffers, 0);
+    }
+
+    #[test]
+    fn shared_buffers_are_not_recycled() {
+        let mut arena = BufferArena::new();
+        let t = Tensor::from_shared(vec![3], arena.take(3));
+        let keep = t.clone(); // second handle to the same allocation
+        arena.recycle(t);
+        assert_eq!(arena.stats().free_buffers, 0, "shared buffer parked");
+        assert_eq!(keep.elements(), 3);
+    }
+
+    #[test]
+    fn lengths_are_keyed_exactly() {
+        let mut arena = BufferArena::new();
+        let t = Tensor::from_shared(vec![8], arena.take(8));
+        arena.recycle(t);
+        let _other = arena.take(4); // different length: fresh alloc
+        let s = arena.stats();
+        assert_eq!(s.allocs, 2);
+        assert_eq!(s.reuses, 0);
+        assert_eq!(s.free_buffers, 1, "len-8 buffer still parked");
+        assert_eq!(s.free_bytes, 64);
+    }
+}

@@ -31,10 +31,20 @@
 //! Both second-order products come from ONE forward-over-reverse dual
 //! sweep ([`Tape::jvp`] seeded with `tangent(θ) = w` over the step's live
 //! gradient nodes).  `dη₀` already contains the `(∂P/∂η)ᵀ` learning-rate
-//! path because `P(η)` is built in-graph.  Each step's tape is dropped
-//! before the next is built, so peak memory is one step's tape + tangents
-//! + the `(θ, s)` checkpoints.  For plain SGD this reduces exactly to the
-//! hand-derived `λ_t = λ_{t+1} − (∂²L/∂θ²)(P⊙λ_{t+1})` recursion.
+//! path because `P(η)` is built in-graph.  All step tapes — forward,
+//! backward and remat recompute — share ONE [`Tape`] that is
+//! [`Tape::reset`] between steps, so buffers recirculate through the
+//! tape's arena instead of hitting the allocator T times.  For plain SGD
+//! this reduces exactly to the hand-derived
+//! `λ_t = λ_{t+1} − (∂²L/∂θ²)(P⊙λ_{t+1})` recursion.
+//!
+//! [`CheckpointPolicy`] adds the paper's block-rematerialisation knob on
+//! top: `Remat { segment: K }` stores `(θ_t, s_t)` only every K steps and
+//! recomputes the intra-segment states during the backward sweep — live
+//! checkpoints drop from `T` to `~T/K + K` at the cost of one extra
+//! forward pass.  `K = 1` reproduces full checkpointing bit-for-bit.
+
+use std::time::Instant;
 
 use super::optim::InnerOptimiser;
 use super::tape::{NodeId, Tape, TapeStats};
@@ -70,18 +80,86 @@ pub trait BilevelProblem {
     fn resample(&mut self);
 }
 
-/// Where the bytes went, for the naive-vs-MixFlow comparison.
+/// How the MixFlow backward sweep trades checkpoint memory for
+/// recompute — the paper's segment-wise rematerialisation knob (the same
+/// truncation/checkpointing trade-off studied by Shaban et al. and
+/// Franceschi et al.).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CheckpointPolicy {
+    /// Checkpoint `(θ_t, s_t)` at every step (segment length 1): minimum
+    /// recompute, `T + 1` live checkpoints.
+    #[default]
+    Full,
+    /// Store `(θ_t, s_t)` only every `segment` steps; the backward sweep
+    /// re-runs the forward inside each segment to rebuild the missing
+    /// states.  Live checkpoints drop to `~T/K + K` for `K = segment`,
+    /// at the cost of roughly one extra forward pass.  `segment = 1` is
+    /// exactly [`CheckpointPolicy::Full`], bit-for-bit.
+    Remat { segment: usize },
+}
+
+impl CheckpointPolicy {
+    /// Segment length K (1 for [`CheckpointPolicy::Full`]).
+    pub fn segment(&self) -> usize {
+        match self {
+            CheckpointPolicy::Full => 1,
+            CheckpointPolicy::Remat { segment } => (*segment).max(1),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CheckpointPolicy::Full => "full".to_string(),
+            CheckpointPolicy::Remat { segment } => format!("remat{segment}"),
+        }
+    }
+
+    /// Case- and whitespace-insensitive: `full` or `1` parse to `Full`,
+    /// an integer `K ≥ 2` to `Remat { segment: K }`.  The names this
+    /// type prints round-trip too: `remat4` parses like `4` (matching
+    /// the other CLI enums, whose printed names all re-parse).
+    pub fn parse(s: &str) -> Option<CheckpointPolicy> {
+        let t = s.trim().to_lowercase();
+        if t == "full" || t == "1" {
+            return Some(CheckpointPolicy::Full);
+        }
+        match t.strip_prefix("remat").unwrap_or(t.as_str()).parse::<usize>() {
+            Ok(1) => Some(CheckpointPolicy::Full),
+            Ok(k) if k >= 2 => Some(CheckpointPolicy::Remat { segment: k }),
+            _ => None,
+        }
+    }
+}
+
+/// Where the bytes (and the wall-clock) went, for the naive-vs-MixFlow
+/// comparison.  The byte counters map onto the paper's Table 1 split of
+/// activation memory vs checkpoint memory — see the "Memory model"
+/// section of `rust/src/autodiff/README.md`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MemoryReport {
     /// Peak live tape bytes (naive: the single monolithic tape; mixflow:
     /// the largest per-step tape + its JVP tangent overlay).
     pub tape_bytes: usize,
-    /// `(θ_t, state_t)` checkpoint bytes (mixflow only), slot-major
-    /// state after the θ leaves at each step.
+    /// Peak live `(θ_t, state_t)` bytes (mixflow only): stored
+    /// checkpoints plus any transient states rematerialised inside the
+    /// backward segment, at the worst moment.
     pub checkpoint_bytes: usize,
     /// Node count of the biggest live tape, forward *and* backward
     /// sweeps included.
     pub nodes: usize,
+    /// Peak bytes live simultaneously: step tape + JVP tangents + live
+    /// checkpoint/state values at the worst single moment, counting each
+    /// physical buffer once (step-tape leaves alias the checkpoints they
+    /// were seeded from, so the overlap is deduplicated).
+    pub peak_bytes: usize,
+    /// Buffers drawn fresh from the allocator by the tape's arena.
+    pub arena_allocs: usize,
+    /// Buffers served from the arena free list instead of the allocator.
+    pub arena_reuses: usize,
+    /// Wall-clock of the forward unroll (mixflow) / graph build (naive).
+    pub forward_seconds: f64,
+    /// Wall-clock of the adjoint sweep, remat recompute included.
+    pub backward_seconds: f64,
 }
 
 impl MemoryReport {
@@ -101,8 +179,18 @@ pub struct Hypergrad {
     pub memory: MemoryReport,
 }
 
+/// Leaf nodes for a slice of values.  `Tensor::clone` is an O(1) buffer
+/// alias (copy-on-write), so this shares the caller's storage with the
+/// tape instead of copying every input per call.
 fn leaves(tape: &mut Tape, values: &[Tensor]) -> Vec<NodeId> {
     values.iter().map(|v| tape.leaf(v.clone())).collect()
+}
+
+/// θ leaves plus slot-major optimiser-state leaves, as one call.
+type StatePair = (Vec<Tensor>, Vec<Tensor>);
+
+fn pair_bytes(theta: &[Tensor], state: &[Tensor]) -> usize {
+    theta.iter().chain(state.iter()).map(Tensor::bytes).sum()
 }
 
 /// Reverse-over-reverse baseline: one monolithic tape through the whole
@@ -115,6 +203,7 @@ pub fn naive_hypergrad<P: BilevelProblem + ?Sized>(
 ) -> Hypergrad {
     let opt = problem.optimiser();
     let mut tape = Tape::new();
+    let t_fwd = Instant::now();
     let mut theta = leaves(&mut tape, theta0);
     let mut state = leaves(&mut tape, &opt.init_state(theta0));
     let eta_ids = leaves(&mut tape, eta);
@@ -128,9 +217,13 @@ pub fn naive_hypergrad<P: BilevelProblem + ?Sized>(
         state = next_state;
     }
     let outer = problem.outer_loss(&mut tape, &theta);
+    let forward_seconds = t_fwd.elapsed().as_secs_f64();
+    let t_bwd = Instant::now();
     let d_eta_ids = tape.grad(outer, &eta_ids);
     let d_eta = d_eta_ids.iter().map(|&id| tape.value(id).clone()).collect();
+    let backward_seconds = t_bwd.elapsed().as_secs_f64();
     let stats = tape.stats();
+    let arena = tape.arena_stats();
     Hypergrad {
         d_eta,
         outer_loss: tape.value(outer).item(),
@@ -138,30 +231,38 @@ pub fn naive_hypergrad<P: BilevelProblem + ?Sized>(
             tape_bytes: stats.bytes,
             checkpoint_bytes: 0,
             nodes: stats.nodes,
+            peak_bytes: stats.bytes,
+            arena_allocs: arena.allocs,
+            arena_reuses: arena.reuses,
+            forward_seconds,
+            backward_seconds,
         },
     }
 }
 
-/// One inner optimiser step on a throwaway tape; returns the `θ_{t+1}`
-/// and `state_{t+1}` values plus the step tape's [`TapeStats`] (both its
-/// byte and node counters feed the [`MemoryReport`] peak).
-pub fn inner_step_values<P: BilevelProblem + ?Sized>(
+/// One inner optimiser step recorded on `tape` (which is [`Tape::reset`]
+/// first, recycling the previous step's buffers through the tape's
+/// arena); returns the `θ_{t+1}` and `state_{t+1}` values plus the step
+/// tape's [`TapeStats`] (both its byte and node counters feed the
+/// [`MemoryReport`] peak).
+pub fn inner_step_values_into<P: BilevelProblem + ?Sized>(
     problem: &P,
+    tape: &mut Tape,
     theta: &[Tensor],
     state: &[Tensor],
     eta: &[Tensor],
     step: usize,
 ) -> (Vec<Tensor>, Vec<Tensor>, TapeStats) {
     let opt = problem.optimiser();
-    let mut tape = Tape::new();
-    let theta_ids = leaves(&mut tape, theta);
-    let state_ids = leaves(&mut tape, state);
-    let eta_ids = leaves(&mut tape, eta);
-    let loss = problem.inner_loss(&mut tape, &theta_ids, &eta_ids, step);
+    tape.reset();
+    let theta_ids = leaves(tape, theta);
+    let state_ids = leaves(tape, state);
+    let eta_ids = leaves(tape, eta);
+    let loss = problem.inner_loss(tape, &theta_ids, &eta_ids, step);
     let grads = tape.grad(loss, &theta_ids);
-    let lrs = problem.lr_nodes(&mut tape, &eta_ids);
+    let lrs = problem.lr_nodes(tape, &eta_ids);
     let (next_theta, next_state) =
-        opt.step(&mut tape, &theta_ids, &state_ids, &lrs, &grads, step);
+        opt.step(tape, &theta_ids, &state_ids, &lrs, &grads, step);
     let theta_out =
         next_theta.iter().map(|&id| tape.value(id).clone()).collect();
     let state_out =
@@ -169,164 +270,279 @@ pub fn inner_step_values<P: BilevelProblem + ?Sized>(
     (theta_out, state_out, tape.stats())
 }
 
-/// MixFlow-MG: forward-over-reverse mixed-mode hypergradient with
-/// per-step tape reuse (the paper's Algorithm 1 shape), the adjoint
-/// carried jointly over `(θ, optimiser state)`.
+/// [`inner_step_values_into`] on a throwaway tape — kept for callers that
+/// only need a single step (the arena benefit needs a reused tape).
+pub fn inner_step_values<P: BilevelProblem + ?Sized>(
+    problem: &P,
+    theta: &[Tensor],
+    state: &[Tensor],
+    eta: &[Tensor],
+    step: usize,
+) -> (Vec<Tensor>, Vec<Tensor>, TapeStats) {
+    let mut tape = Tape::new();
+    inner_step_values_into(problem, &mut tape, theta, state, eta, step)
+}
+
+/// MixFlow-MG with full per-step checkpointing — equivalent to
+/// [`mixflow_hypergrad_with`] under [`CheckpointPolicy::Full`].
 pub fn mixflow_hypergrad<P: BilevelProblem + ?Sized>(
     problem: &P,
     theta0: &[Tensor],
     eta: &[Tensor],
 ) -> Hypergrad {
+    mixflow_hypergrad_with(problem, theta0, eta, CheckpointPolicy::Full)
+}
+
+/// MixFlow-MG: forward-over-reverse mixed-mode hypergradient with
+/// per-step tape reuse (the paper's Algorithm 1 shape), the adjoint
+/// carried jointly over `(θ, optimiser state)`, under the given
+/// checkpoint policy.
+///
+/// With `Remat { segment: K }` the forward sweep stores `(θ_t, s_t)`
+/// only at `t ≡ 0 (mod K)`; the backward sweep then re-runs the forward
+/// inside each segment (newest segment first) to rebuild the missing
+/// states, consumes them in reverse, and drops the whole segment before
+/// moving to the next.  `K = 1` takes exactly the full-checkpoint path —
+/// same float-op sequence, bit-for-bit equal hypergradients.
+pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
+    problem: &P,
+    theta0: &[Tensor],
+    eta: &[Tensor],
+    policy: CheckpointPolicy,
+) -> Hypergrad {
     let unroll = problem.unroll();
     let opt = problem.optimiser();
     let nt = theta0.len();
+    let k = policy.segment().clamp(1, unroll.max(1));
 
-    // Forward: checkpoint (θ_t, state_t) values only; every step tape is
-    // dropped.  Both stats counters fold into the peak — the forward
-    // sweep's node counts used to be silently ignored.
-    let mut theta_ckpt: Vec<Vec<Tensor>> = vec![theta0.to_vec()];
-    let mut state_ckpt: Vec<Vec<Tensor>> = vec![opt.init_state(theta0)];
+    // ONE tape for every step — forward, λ seeding, remat recompute and
+    // backward all reset-and-reuse it, so buffers recirculate through
+    // its arena instead of being reallocated T times.
+    let mut tape = Tape::new();
     let mut peak_tape = 0usize;
     let mut peak_nodes = 0usize;
+    let mut live_state = 0usize; // bytes of live (θ, s) checkpoint values
+    let mut peak_state = 0usize;
+    let mut peak_total = 0usize;
+
+    // ---- forward: checkpoint (θ_t, s_t) at segment boundaries ----------
+    let t_fwd = Instant::now();
+    let mut ckpt: Vec<Option<StatePair>> = Vec::new();
+    let mut theta = theta0.to_vec();
+    let mut state = opt.init_state(theta0);
     for t in 0..unroll {
+        // The step tape's (θ, s) leaves are O(1) aliases; when the pair
+        // is also checkpointed it sits in `live_state` AND in the tape's
+        // byte counter, so the physical-peak accounting subtracts the
+        // overlap once.
+        let mut overlap = 0usize;
+        if t % k == 0 {
+            let pb = pair_bytes(&theta, &state);
+            live_state += pb;
+            peak_state = peak_state.max(live_state);
+            // O(1) clones: the checkpoint aliases the live values.
+            ckpt.push(Some((theta.clone(), state.clone())));
+            overlap = pb;
+        }
         let (next_theta, next_state, stats) =
-            inner_step_values(problem, &theta_ckpt[t], &state_ckpt[t], eta, t);
+            inner_step_values_into(problem, &mut tape, &theta, &state, eta, t);
         peak_tape = peak_tape.max(stats.bytes);
         peak_nodes = peak_nodes.max(stats.nodes);
-        theta_ckpt.push(next_theta);
-        state_ckpt.push(next_state);
+        peak_total = peak_total.max(stats.bytes + (live_state - overlap));
+        theta = next_theta;
+        state = next_state;
     }
-    let checkpoint_bytes: usize = theta_ckpt
-        .iter()
-        .chain(state_ckpt.iter())
-        .map(|c| c.iter().map(Tensor::bytes).sum::<usize>())
-        .sum();
+    // (θ_T, s_T) stays live through the λ seeding below.
+    let final_bytes = pair_bytes(&theta, &state);
+    live_state += final_bytes;
+    peak_state = peak_state.max(live_state);
+    let forward_seconds = t_fwd.elapsed().as_secs_f64();
 
-    // λ_T = (∇_θ L_val(θ_T), 0 state adjoint) from a small outer tape.
+    // ---- λ_T = (∇_θ L_val(θ_T), 0 state adjoint) -----------------------
+    let t_bwd = Instant::now();
     let (mut lambda, outer_loss) = {
-        let mut tape = Tape::new();
-        let theta_ids = leaves(&mut tape, &theta_ckpt[unroll]);
+        tape.reset();
+        let theta_ids = leaves(&mut tape, &theta);
         let outer = problem.outer_loss(&mut tape, &theta_ids);
         let grads = tape.grad(outer, &theta_ids);
+        // θ_T leaves alias the live final pair — counted once.
+        let overlap: usize = theta.iter().map(Tensor::bytes).sum();
         peak_tape = peak_tape.max(tape.stats().bytes);
         peak_nodes = peak_nodes.max(tape.stats().nodes);
+        peak_total =
+            peak_total.max(tape.stats().bytes + (live_state - overlap));
         let mut lambda: Vec<Tensor> =
             grads.iter().map(|&id| tape.value(id).clone()).collect();
-        lambda.extend(
-            state_ckpt[unroll].iter().map(|s| Tensor::zeros(&s.shape)),
-        );
+        lambda.extend(state.iter().map(|s| Tensor::zeros(&s.shape)));
         (lambda, tape.value(outer).item())
     };
+    drop(theta);
+    drop(state);
+    live_state -= final_bytes;
 
     let mut d_eta: Vec<Tensor> =
         eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
 
-    // Backward sweep: rebuild one step's tape at a time.
-    for t in (0..unroll).rev() {
-        let mut tape = Tape::new();
-        let theta_ids = leaves(&mut tape, &theta_ckpt[t]);
-        let state_ids = leaves(&mut tape, &state_ckpt[t]);
-        let eta_ids = leaves(&mut tape, eta);
-        let ns = state_ids.len();
-        let loss = problem.inner_loss(&mut tape, &theta_ids, &eta_ids, t);
-        // One reverse sweep for the *live* ∇_θL and ∇_ηL nodes — the
-        // targets of the dual sweep below.
-        let mut gwrt = theta_ids.clone();
-        gwrt.extend(eta_ids.iter().copied());
-        let live = tape.grad(loss, &gwrt);
-        let (g_theta_live, g_eta_live) = live.split_at(nt);
-
-        // Stop-gradient copies of ∇_θL: the optimiser update is built
-        // over these constants, so the reverse sweep of c below is the
-        // φ-level VJP — first-order, over the tiny update subgraph only.
-        let g_const: Vec<NodeId> = g_theta_live
-            .iter()
-            .map(|&g| {
-                let v = tape.value(g).clone();
-                tape.constant(v)
-            })
-            .collect();
-        let lr_ids = problem.lr_nodes(&mut tape, &eta_ids);
-        let (theta_next, state_next) =
-            opt.step(&mut tape, &theta_ids, &state_ids, &lr_ids, &g_const, t);
-
-        // c = Σ ⟨λ, Φ outputs⟩; ∇c gives every direct adjoint at once.
-        let outs: Vec<NodeId> = theta_next
-            .iter()
-            .chain(state_next.iter())
-            .copied()
-            .collect();
-        assert_eq!(outs.len(), lambda.len(), "λ / Φ output arity");
-        let mut c: Option<NodeId> = None;
-        for (&o, lam) in outs.iter().zip(lambda.iter()) {
-            let l = tape.constant(lam.clone());
-            let p = tape.mul(l, o);
-            let s = tape.sum(p);
-            c = Some(match c {
-                Some(prev) => tape.add(prev, s),
-                None => s,
-            });
+    // ---- backward sweep, newest segment first --------------------------
+    for j in (0..ckpt.len()).rev() {
+        let seg_start = j * k;
+        let seg_end = (seg_start + k).min(unroll);
+        let seed = ckpt[j].take().expect("segment checkpoint stored once");
+        // Rematerialise the intra-segment states (θ_t, s_t) for
+        // t ∈ [seg_start, seg_end); with K = 1 this is just the stored
+        // checkpoint and no recompute happens.
+        let mut seg: Vec<StatePair> = Vec::with_capacity(seg_end - seg_start);
+        seg.push(seed);
+        for t in seg_start..seg_end - 1 {
+            let (th, st, stats, overlap) = {
+                let (prev_th, prev_st) = seg.last().expect("segment seeded");
+                let overlap = pair_bytes(prev_th, prev_st);
+                let (th, st, stats) = inner_step_values_into(
+                    problem, &mut tape, prev_th, prev_st, eta, t,
+                );
+                (th, st, stats, overlap)
+            };
+            // Physical peak while this recompute tape is live: the new
+            // pair still aliases the tape's output nodes (inside
+            // stats.bytes), so it joins the state ledger only after the
+            // peak candidate is taken; the previous pair's leaf aliases
+            // are deduplicated via `overlap`.
+            peak_tape = peak_tape.max(stats.bytes);
+            peak_nodes = peak_nodes.max(stats.nodes);
+            peak_total = peak_total.max(stats.bytes + (live_state - overlap));
+            live_state += pair_bytes(&th, &st);
+            peak_state = peak_state.max(live_state);
+            seg.push((th, st));
         }
-        let c = c.expect("optimiser step produced no outputs");
-        let mut wrt: Vec<NodeId> = theta_ids.clone();
-        wrt.extend(state_ids.iter().copied());
-        wrt.extend(g_const.iter().copied());
-        wrt.extend(eta_ids.iter().copied());
-        let adj = tape.grad(c, &wrt);
-        let d_theta_direct = &adj[..nt];
-        let d_state = &adj[nt..nt + ns];
-        let w_ids = &adj[nt + ns..nt + ns + nt];
-        let d_eta_direct = &adj[nt + ns + nt..];
 
-        // Forward-over-reverse: tangents of the live gradient nodes,
-        // seeded with tangent(θ) = w.  Tangent of ∇_θL is the HVP;
-        // tangent of ∇_ηL is the mixed ∂² product.
-        let seeds: Vec<(NodeId, Tensor)> = theta_ids
-            .iter()
-            .copied()
-            .zip(w_ids.iter().map(|&id| tape.value(id).clone()))
-            .collect();
-        let mut targets: Vec<NodeId> = g_theta_live.to_vec();
-        targets.extend(g_eta_live.iter().copied());
-        let (tangents, tangent_bytes) = tape.jvp(&seeds, &targets);
-        let (hvp, mixed) = tangents.split_at(nt);
+        for t in (seg_start..seg_end).rev() {
+            let (theta_t, state_t) = &seg[t - seg_start];
+            // This step's (θ_t, s_t) leaves alias the segment state
+            // already counted in `live_state`.
+            let overlap = pair_bytes(theta_t, state_t);
+            tape.reset();
+            let theta_ids = leaves(&mut tape, theta_t);
+            let state_ids = leaves(&mut tape, state_t);
+            let eta_ids = leaves(&mut tape, eta);
+            let ns = state_ids.len();
+            let loss = problem.inner_loss(&mut tape, &theta_ids, &eta_ids, t);
+            // One reverse sweep for the *live* ∇_θL and ∇_ηL nodes — the
+            // targets of the dual sweep below.
+            let mut gwrt = theta_ids.clone();
+            gwrt.extend(eta_ids.iter().copied());
+            let live = tape.grad(loss, &gwrt);
+            let (g_theta_live, g_eta_live) = live.split_at(nt);
 
-        let mut new_lambda = Vec::with_capacity(nt + ns);
-        for i in 0..nt {
-            new_lambda.push(
-                tape.value(d_theta_direct[i]).zip(&hvp[i], |p, q| p + q),
+            // Stop-gradient copies of ∇_θL: the optimiser update is built
+            // over these constants, so the reverse sweep of c below is the
+            // φ-level VJP — first-order, over the tiny update subgraph
+            // only.  (The "copy" is an O(1) buffer alias.)
+            let g_const: Vec<NodeId> = g_theta_live
+                .iter()
+                .map(|&g| {
+                    let v = tape.value(g).clone();
+                    tape.constant(v)
+                })
+                .collect();
+            let lr_ids = problem.lr_nodes(&mut tape, &eta_ids);
+            let (theta_next, state_next) = opt.step(
+                &mut tape, &theta_ids, &state_ids, &lr_ids, &g_const, t,
+            );
+
+            // c = Σ ⟨λ, Φ outputs⟩; ∇c gives every direct adjoint at once.
+            let outs: Vec<NodeId> = theta_next
+                .iter()
+                .chain(state_next.iter())
+                .copied()
+                .collect();
+            assert_eq!(outs.len(), lambda.len(), "λ / Φ output arity");
+            let mut c: Option<NodeId> = None;
+            for (&o, lam) in outs.iter().zip(lambda.iter()) {
+                let l = tape.constant(lam.clone());
+                let p = tape.mul(l, o);
+                let s = tape.sum(p);
+                c = Some(match c {
+                    Some(prev) => tape.add(prev, s),
+                    None => s,
+                });
+            }
+            let c = c.expect("optimiser step produced no outputs");
+            let mut wrt: Vec<NodeId> = theta_ids.clone();
+            wrt.extend(state_ids.iter().copied());
+            wrt.extend(g_const.iter().copied());
+            wrt.extend(eta_ids.iter().copied());
+            let adj = tape.grad(c, &wrt);
+            let d_theta_direct = &adj[..nt];
+            let d_state = &adj[nt..nt + ns];
+            let w_ids = &adj[nt + ns..nt + ns + nt];
+            let d_eta_direct = &adj[nt + ns + nt..];
+
+            // Forward-over-reverse: tangents of the live gradient nodes,
+            // seeded with tangent(θ) = w.  Tangent of ∇_θL is the HVP;
+            // tangent of ∇_ηL is the mixed ∂² product.
+            let seeds: Vec<(NodeId, Tensor)> = theta_ids
+                .iter()
+                .copied()
+                .zip(w_ids.iter().map(|&id| tape.value(id).clone()))
+                .collect();
+            let mut targets: Vec<NodeId> = g_theta_live.to_vec();
+            targets.extend(g_eta_live.iter().copied());
+            let (tangents, tangent_bytes) = tape.jvp(&seeds, &targets);
+            let (hvp, mixed) = tangents.split_at(nt);
+
+            let mut new_lambda = Vec::with_capacity(nt + ns);
+            for i in 0..nt {
+                new_lambda.push(
+                    tape.value(d_theta_direct[i]).zip(&hvp[i], |p, q| p + q),
+                );
+            }
+            for &id in d_state {
+                new_lambda.push(tape.value(id).clone());
+            }
+            lambda = new_lambda;
+            for i in 0..d_eta.len() {
+                let updated = d_eta[i]
+                    .zip(tape.value(d_eta_direct[i]), |p, q| p + q)
+                    .zip(&mixed[i], |p, q| p + q);
+                d_eta[i] = updated;
+            }
+
+            peak_tape = peak_tape.max(tape.stats().bytes + tangent_bytes);
+            peak_nodes = peak_nodes.max(tape.stats().nodes);
+            peak_total = peak_total.max(
+                tape.stats().bytes + tangent_bytes + (live_state - overlap),
             );
         }
-        for &id in d_state {
-            new_lambda.push(tape.value(id).clone());
-        }
-        lambda = new_lambda;
-        for i in 0..d_eta.len() {
-            let updated = d_eta[i]
-                .zip(tape.value(d_eta_direct[i]), |p, q| p + q)
-                .zip(&mixed[i], |p, q| p + q);
-            d_eta[i] = updated;
-        }
 
-        peak_tape = peak_tape.max(tape.stats().bytes + tangent_bytes);
-        peak_nodes = peak_nodes.max(tape.stats().nodes);
+        // Whole segment consumed: its states (stored + rematerialised)
+        // go dead together.
+        for (th, st) in seg.drain(..) {
+            live_state -= pair_bytes(&th, &st);
+        }
     }
+    let backward_seconds = t_bwd.elapsed().as_secs_f64();
 
+    let arena = tape.arena_stats();
     Hypergrad {
         d_eta,
         outer_loss,
         memory: MemoryReport {
             tape_bytes: peak_tape,
-            checkpoint_bytes,
+            checkpoint_bytes: peak_state,
             nodes: peak_nodes,
+            peak_bytes: peak_total,
+            arena_allocs: arena.allocs,
+            arena_reuses: arena.reuses,
+            forward_seconds,
+            backward_seconds,
         },
     }
 }
 
 /// Central finite differences over every η element — the slow oracle the
 /// tests compare both hypergradient paths against.  Uses the same
-/// in-graph update builder, so stateful optimisers are held to the same
-/// oracle as SGD.
+/// in-graph update builder (on one reused tape), so stateful optimisers
+/// are held to the same oracle as SGD.
 pub fn fd_hypergrad<P: BilevelProblem + ?Sized>(
     problem: &P,
     theta0: &[Tensor],
@@ -334,16 +550,18 @@ pub fn fd_hypergrad<P: BilevelProblem + ?Sized>(
     h: f64,
 ) -> Vec<Tensor> {
     let opt = problem.optimiser();
-    let outer_at = |eta_v: &[Tensor]| -> f64 {
+    let mut tape = Tape::new();
+    let mut outer_at = |eta_v: &[Tensor]| -> f64 {
         let mut theta: Vec<Tensor> = theta0.to_vec();
         let mut state = opt.init_state(theta0);
         for t in 0..problem.unroll() {
-            let (next_theta, next_state, _) =
-                inner_step_values(problem, &theta, &state, eta_v, t);
+            let (next_theta, next_state, _) = inner_step_values_into(
+                problem, &mut tape, &theta, &state, eta_v, t,
+            );
             theta = next_theta;
             state = next_state;
         }
-        let mut tape = Tape::new();
+        tape.reset();
         let ids = leaves(&mut tape, &theta);
         let outer = problem.outer_loss(&mut tape, &ids);
         tape.value(outer).item()
@@ -374,4 +592,54 @@ pub fn rel_err(a: &[Tensor], b: &[Tensor]) -> f64 {
         den = den.max(1.0 + y.max_abs());
     }
     num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_policy_parses_like_the_other_cli_enums() {
+        assert_eq!(CheckpointPolicy::parse("full"), Some(CheckpointPolicy::Full));
+        assert_eq!(CheckpointPolicy::parse("1"), Some(CheckpointPolicy::Full));
+        assert_eq!(
+            CheckpointPolicy::parse(" FULL\n"),
+            Some(CheckpointPolicy::Full)
+        );
+        assert_eq!(
+            CheckpointPolicy::parse("4"),
+            Some(CheckpointPolicy::Remat { segment: 4 })
+        );
+        assert_eq!(
+            CheckpointPolicy::parse("  16\t"),
+            Some(CheckpointPolicy::Remat { segment: 16 })
+        );
+        assert_eq!(CheckpointPolicy::parse("0"), None);
+        assert_eq!(CheckpointPolicy::parse("-2"), None);
+        assert_eq!(CheckpointPolicy::parse("remat"), None);
+        assert_eq!(CheckpointPolicy::parse("remat0"), None);
+        assert_eq!(CheckpointPolicy::parse("1.5"), None);
+        // The printed names round-trip, like the other CLI enums.
+        for policy in [
+            CheckpointPolicy::Full,
+            CheckpointPolicy::Remat { segment: 4 },
+            CheckpointPolicy::Remat { segment: 16 },
+        ] {
+            assert_eq!(CheckpointPolicy::parse(&policy.name()), Some(policy));
+        }
+        assert_eq!(
+            CheckpointPolicy::parse("Remat1"),
+            Some(CheckpointPolicy::Full)
+        );
+    }
+
+    #[test]
+    fn checkpoint_policy_names_and_segments() {
+        assert_eq!(CheckpointPolicy::Full.segment(), 1);
+        assert_eq!(CheckpointPolicy::Remat { segment: 4 }.segment(), 4);
+        assert_eq!(CheckpointPolicy::Remat { segment: 0 }.segment(), 1);
+        assert_eq!(CheckpointPolicy::Full.name(), "full");
+        assert_eq!(CheckpointPolicy::Remat { segment: 8 }.name(), "remat8");
+        assert_eq!(CheckpointPolicy::default(), CheckpointPolicy::Full);
+    }
 }

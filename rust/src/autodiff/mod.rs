@@ -5,9 +5,13 @@
 //! oracle for the HLO buffer-liveness simulator ([`crate::hlo::memory`])
 //! and the engine behind [`crate::meta::native`].
 //!
-//! * [`tensor`] — dense f64 tensors over flat buffers.
+//! * [`tensor`] — dense f64 tensors over copy-on-write flat buffers
+//!   (cloning is an O(1) alias; mutation detaches).
+//! * [`arena`] — length-keyed free-list arena the tape draws node
+//!   buffers from, so reset-and-reused step tapes bypass the allocator.
 //! * [`tape`] — Wengert-list reverse mode whose adjoint pass is itself a
-//!   graph (so grad-of-grad works), plus a forward-mode JVP overlay.
+//!   graph (so grad-of-grad works), plus a forward-mode JVP overlay;
+//!   sweeps borrow ops, `Reshape` aliases its input buffer.
 //! * [`optim`] — differentiable inner-loop optimisers (SGD, momentum,
 //!   Adam) whose per-step update — moment state and bias correction
 //!   included — is built in-graph on the step tape.
@@ -16,22 +20,34 @@
 //!   (reverse-over-reverse, monolithic tape) and
 //!   [`mixflow::mixflow_hypergrad`] (forward-over-reverse, per-step tape
 //!   reuse — the paper's contribution, with the adjoint carried jointly
-//!   over θ and optimiser state), both instrumented with tape counters.
+//!   over θ and optimiser state), plus
+//!   [`mixflow::mixflow_hypergrad_with`] adding the
+//!   [`mixflow::CheckpointPolicy`] block-remat knob; all instrumented
+//!   with tape/arena counters and wall-clock timings.
 //! * [`problems`] — the paper's hyper-LR and loss-weighting tasks plus a
 //!   self-attention + layernorm workload.
 //!
-//! See `rust/src/autodiff/README.md` for the derivation.
+//! See `rust/src/autodiff/README.md` for the derivation and the memory
+//! model.
 
+// The engine's perf story is "no redundant copies on the hot path";
+// keep clippy watching for clones that a move would do (CI runs clippy
+// with -D warnings, so a redundant clone fails the build).
+#![warn(clippy::redundant_clone)]
+
+pub mod arena;
 pub mod mixflow;
 pub mod optim;
 pub mod problems;
 pub mod tape;
 pub mod tensor;
 
+pub use arena::{ArenaStats, BufferArena};
 pub use mixflow::{
-    fd_hypergrad, inner_step_values, mixflow_hypergrad, naive_hypergrad,
-    BilevelProblem, Hypergrad, MemoryReport,
+    fd_hypergrad, inner_step_values, inner_step_values_into,
+    mixflow_hypergrad, mixflow_hypergrad_with, naive_hypergrad,
+    BilevelProblem, CheckpointPolicy, Hypergrad, MemoryReport,
 };
 pub use optim::InnerOptimiser;
 pub use tape::{NodeId, Op, Tape, TapeStats};
-pub use tensor::Tensor;
+pub use tensor::{Buf, Tensor, ELEM_BYTES};

@@ -85,7 +85,7 @@ pub fn mlp_ce_vec(
     let b2b = tape.col_broadcast(b2, m);
     let z = tape.add(hw, b2b);
     let lse = tape.logsumexp_rows(z);
-    let picked = tape.gather_cols(z, labels.to_vec());
+    let picked = tape.gather_cols(z, labels);
     tape.sub(lse, picked)
 }
 
@@ -375,7 +375,7 @@ pub fn attention_ce_vec(
     let normed = tape.layernorm_rows(ctx, 1e-5);
     let z = tape.matmul(normed, wo, false, false);
     let lse = tape.logsumexp_rows(z);
-    let picked = tape.gather_cols(z, labels.to_vec());
+    let picked = tape.gather_cols(z, labels);
     tape.sub(lse, picked)
 }
 

@@ -14,10 +14,23 @@
 //!    a `∇_η L` node the mixed product `(∂²L/∂θ∂η)ᵀ · v` — exactly the
 //!    forward-over-reverse quantities of the paper's Eq. (8).
 //!
-//! Every node's value buffer is counted in [`TapeStats::bytes`]; the JVP
-//! overlay reports the tangent bytes it materialises (zero tangents are
-//! never stored, mirroring the paper's Ω-sparsity exploitation).
+//! Storage comes from a [`BufferArena`] owned by the tape: node values
+//! are written into recycled buffers via the `*_into` kernels, and
+//! [`Tape::reset`] parks every uniquely-owned buffer for the next
+//! step-tape to reuse — the allocator leaves the hot path.  `Reshape`
+//! nodes alias their input buffer (zero copy, zero bytes counted), the
+//! reverse sweep borrows ops instead of cloning them (gather/scatter
+//! indices are `Arc`-shared), and the JVP overlay recycles its tangent
+//! buffers when the sweep finishes.
+//!
+//! Every owning node's value buffer is counted in [`TapeStats::bytes`];
+//! the JVP overlay reports the tangent bytes it *materialises* — aliased
+//! pass-through tangents and zero tangents cost nothing, mirroring the
+//! paper's Ω-sparsity exploitation.
 
+use std::sync::Arc;
+
+use super::arena::{ArenaStats, BufferArena};
 use super::tensor::Tensor;
 
 /// Index of a node on the tape.
@@ -25,7 +38,8 @@ pub type NodeId = usize;
 
 /// Primitive operations.  The set is closed under both `grad` (VJPs are
 /// expressed via these same ops) and `jvp` (linearisations are computed
-/// from stored primal values).
+/// from stored primal values).  Gather/scatter indices are `Arc`-shared
+/// so the reverse sweep can mint adjoint nodes without copying them.
 #[derive(Debug, Clone)]
 pub enum Op {
     /// Differentiable input.
@@ -68,9 +82,10 @@ pub enum Op {
     SoftmaxRows(NodeId),
     LogSumExpRows(NodeId),
     /// `[m,n] → [m]`: element `(i, idx[i])` per row.
-    GatherCols(NodeId, Vec<usize>),
+    GatherCols(NodeId, Arc<[usize]>),
     /// `[m] → [m,n]`: value `i` placed at `(i, idx[i])`, zero elsewhere.
-    ScatterCols(NodeId, Vec<usize>, usize),
+    ScatterCols(NodeId, Arc<[usize]>, usize),
+    /// Zero-copy view: the node's value aliases its input's buffer.
     Reshape(NodeId, Vec<usize>),
 }
 
@@ -83,7 +98,8 @@ struct Node {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TapeStats {
     pub nodes: usize,
-    /// Total bytes of all node value buffers currently on the tape.
+    /// Total bytes of all *owning* node value buffers currently on the
+    /// tape (aliased views such as `Reshape` contribute 0).
     pub bytes: usize,
 }
 
@@ -91,6 +107,7 @@ pub struct TapeStats {
 pub struct Tape {
     nodes: Vec<Node>,
     bytes: usize,
+    arena: BufferArena,
 }
 
 impl Default for Tape {
@@ -100,51 +117,85 @@ impl Default for Tape {
 }
 
 // ---- value-level kernels shared by eager eval and the JVP overlay ------
+//
+// Each kernel has an `*_into` form writing into a recycled buffer (the
+// tape builders route these through the arena) and, where the JVP
+// overlay needs a fresh tensor mid-rule, a thin allocating wrapper.
+
+fn t_sum_into(v: &Tensor, out: &mut Vec<f64>) {
+    out.clear();
+    out.push(v.data.iter().sum());
+}
 
 fn t_sum(v: &Tensor) -> Tensor {
     Tensor::scalar(v.data.iter().sum())
 }
 
-fn t_row_sum(v: &Tensor) -> Tensor {
+fn t_row_sum_into(v: &Tensor, out: &mut Vec<f64>) {
     let (m, n) = v.dims2();
-    let data = (0..m).map(|i| v.data[i * n..(i + 1) * n].iter().sum()).collect();
-    Tensor::new(vec![m], data)
+    out.clear();
+    out.extend(
+        (0..m).map(|i| v.data[i * n..(i + 1) * n].iter().sum::<f64>()),
+    );
+}
+
+fn t_row_sum(v: &Tensor) -> Tensor {
+    let m = v.dims2().0;
+    let mut out = Vec::with_capacity(m);
+    t_row_sum_into(v, &mut out);
+    Tensor::new(vec![m], out)
+}
+
+fn t_row_broadcast_into(v: &Tensor, n: usize, out: &mut Vec<f64>) {
+    assert_eq!(v.shape.len(), 1, "row_broadcast wants a vector");
+    out.clear();
+    for &x in v.data.iter() {
+        out.extend(std::iter::repeat(x).take(n));
+    }
 }
 
 fn t_row_broadcast(v: &Tensor, n: usize) -> Tensor {
-    assert_eq!(v.shape.len(), 1, "row_broadcast wants a vector");
-    let m = v.shape[0];
-    let mut data = Vec::with_capacity(m * n);
+    let mut out = Vec::with_capacity(v.elements() * n);
+    t_row_broadcast_into(v, n, &mut out);
+    Tensor::new(vec![v.shape[0], n], out)
+}
+
+fn t_col_sum_into(v: &Tensor, out: &mut Vec<f64>) {
+    let (m, n) = v.dims2();
+    out.clear();
+    out.resize(n, 0.0);
     for i in 0..m {
-        data.extend(std::iter::repeat(v.data[i]).take(n));
+        for j in 0..n {
+            out[j] += v.data[i * n + j];
+        }
     }
-    Tensor::new(vec![m, n], data)
 }
 
 fn t_col_sum(v: &Tensor) -> Tensor {
-    let (m, n) = v.dims2();
-    let mut data = vec![0.0; n];
-    for i in 0..m {
-        for j in 0..n {
-            data[j] += v.data[i * n + j];
-        }
+    let n = v.dims2().1;
+    let mut out = Vec::with_capacity(n);
+    t_col_sum_into(v, &mut out);
+    Tensor::new(vec![n], out)
+}
+
+fn t_col_broadcast_into(v: &Tensor, m: usize, out: &mut Vec<f64>) {
+    assert_eq!(v.shape.len(), 1, "col_broadcast wants a vector");
+    out.clear();
+    for _ in 0..m {
+        out.extend_from_slice(&v.data);
     }
-    Tensor::new(vec![n], data)
 }
 
 fn t_col_broadcast(v: &Tensor, m: usize) -> Tensor {
-    assert_eq!(v.shape.len(), 1, "col_broadcast wants a vector");
-    let n = v.shape[0];
-    let mut data = Vec::with_capacity(m * n);
-    for _ in 0..m {
-        data.extend_from_slice(&v.data);
-    }
-    Tensor::new(vec![m, n], data)
+    let mut out = Vec::with_capacity(v.elements() * m);
+    t_col_broadcast_into(v, m, &mut out);
+    Tensor::new(vec![m, v.shape[0]], out)
 }
 
-fn t_softmax_rows(z: &Tensor) -> Tensor {
+fn t_softmax_rows_into(z: &Tensor, out: &mut Vec<f64>) {
     let (m, n) = z.dims2();
-    let mut out = vec![0.0; m * n];
+    out.clear();
+    out.resize(m * n, 0.0);
     for i in 0..m {
         let row = &z.data[i * n..(i + 1) * n];
         let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
@@ -158,54 +209,105 @@ fn t_softmax_rows(z: &Tensor) -> Tensor {
             out[i * n + j] /= denom;
         }
     }
+}
+
+fn t_softmax_rows(z: &Tensor) -> Tensor {
+    let (m, n) = z.dims2();
+    let mut out = Vec::with_capacity(m * n);
+    t_softmax_rows_into(z, &mut out);
     Tensor::new(vec![m, n], out)
 }
 
-fn t_logsumexp_rows(z: &Tensor) -> Tensor {
+fn t_logsumexp_rows_into(z: &Tensor, out: &mut Vec<f64>) {
     let (m, n) = z.dims2();
-    let data = (0..m)
-        .map(|i| {
-            let row = &z.data[i * n..(i + 1) * n];
-            let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-            mx + row.iter().map(|x| (x - mx).exp()).sum::<f64>().ln()
-        })
-        .collect();
-    Tensor::new(vec![m], data)
+    out.clear();
+    out.extend((0..m).map(|i| {
+        let row = &z.data[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        mx + row.iter().map(|x| (x - mx).exp()).sum::<f64>().ln()
+    }));
+}
+
+fn t_logsumexp_rows(z: &Tensor) -> Tensor {
+    let m = z.dims2().0;
+    let mut out = Vec::with_capacity(m);
+    t_logsumexp_rows_into(z, &mut out);
+    Tensor::new(vec![m], out)
+}
+
+fn t_gather_cols_into(z: &Tensor, idx: &[usize], out: &mut Vec<f64>) {
+    let (m, n) = z.dims2();
+    assert_eq!(idx.len(), m, "gather index length");
+    out.clear();
+    out.extend(idx.iter().enumerate().map(|(i, &j)| {
+        assert!(j < n, "gather index {j} out of {n}");
+        z.data[i * n + j]
+    }));
 }
 
 fn t_gather_cols(z: &Tensor, idx: &[usize]) -> Tensor {
-    let (m, n) = z.dims2();
-    assert_eq!(idx.len(), m, "gather index length");
-    let data = idx
-        .iter()
-        .enumerate()
-        .map(|(i, &j)| {
-            assert!(j < n, "gather index {j} out of {n}");
-            z.data[i * n + j]
-        })
-        .collect();
-    Tensor::new(vec![m], data)
+    let m = z.dims2().0;
+    let mut out = Vec::with_capacity(m);
+    t_gather_cols_into(z, idx, &mut out);
+    Tensor::new(vec![m], out)
 }
 
-fn t_scatter_cols(v: &Tensor, idx: &[usize], n: usize) -> Tensor {
+fn t_scatter_cols_into(
+    v: &Tensor,
+    idx: &[usize],
+    n: usize,
+    out: &mut Vec<f64>,
+) {
     assert_eq!(v.shape.len(), 1, "scatter wants a vector");
     let m = v.shape[0];
     assert_eq!(idx.len(), m, "scatter index length");
-    let mut data = vec![0.0; m * n];
+    out.clear();
+    out.resize(m * n, 0.0);
     for (i, &j) in idx.iter().enumerate() {
-        data[i * n + j] = v.data[i];
+        out[i * n + j] = v.data[i];
     }
-    Tensor::new(vec![m, n], data)
+}
+
+fn t_scatter_cols(v: &Tensor, idx: &[usize], n: usize) -> Tensor {
+    let m = v.shape[0];
+    let mut out = Vec::with_capacity(m * n);
+    t_scatter_cols_into(v, idx, n, &mut out);
+    Tensor::new(vec![m, n], out)
+}
+
+/// Pull a buffer for `shape` from the arena and fill it.  `fill` must
+/// leave exactly `shape.iter().product()` elements in the buffer (the
+/// recycled contents are stale, so every `*_into` kernel clears first).
+fn arena_tensor(
+    arena: &mut BufferArena,
+    shape: Vec<usize>,
+    fill: impl FnOnce(&mut Vec<f64>),
+) -> Tensor {
+    let len = shape.iter().product::<usize>();
+    let mut buf = arena.take(len);
+    {
+        let out = Arc::get_mut(&mut buf).expect("arena buffer uniquely owned");
+        fill(out);
+        // Hard assert: a kernel that forgot to clear/resize a recycled
+        // buffer must panic, never ship stale trailing elements.
+        assert_eq!(out.len(), len, "kernel wrote a wrong-sized buffer");
+    }
+    Tensor::from_shared(shape, buf)
 }
 
 impl Tape {
     pub fn new() -> Tape {
-        Tape { nodes: Vec::new(), bytes: 0 }
+        Tape { nodes: Vec::new(), bytes: 0, arena: BufferArena::new() }
     }
 
     /// Value of a node.
     pub fn value(&self, id: NodeId) -> &Tensor {
         &self.nodes[id].value
+    }
+
+    /// Op of a node (borrowed — the sweeps never clone ops).
+    pub fn op(&self, id: NodeId) -> &Op {
+        &self.nodes[id].op
     }
 
     /// Shape of a node (cloned).
@@ -217,151 +319,289 @@ impl Tape {
         TapeStats { nodes: self.nodes.len(), bytes: self.bytes }
     }
 
+    /// Traffic counters of the tape's buffer arena.
+    pub fn arena_stats(&self) -> ArenaStats {
+        self.arena.stats()
+    }
+
+    /// Clear the tape, recycling every node buffer that nothing else
+    /// still references into the arena.  Values cloned out of the tape
+    /// (checkpoints, gradients, aliases) keep their buffers alive.  All
+    /// `NodeId`s from before the reset are invalidated.
+    pub fn reset(&mut self) {
+        let Tape { nodes, arena, bytes } = self;
+        for node in nodes.drain(..) {
+            arena.recycle(node.value);
+        }
+        *bytes = 0;
+    }
+
     fn push(&mut self, op: Op, value: Tensor) -> NodeId {
         self.bytes += value.bytes();
         self.nodes.push(Node { op, value });
         self.nodes.len() - 1
     }
 
-    // ---- builders ------------------------------------------------------
+    /// Push a node whose value aliases another buffer — it contributes
+    /// 0 bytes to [`TapeStats::bytes`] (the storage is already counted
+    /// at its owner).
+    fn push_alias(&mut self, op: Op, value: Tensor) -> NodeId {
+        self.nodes.push(Node { op, value });
+        self.nodes.len() - 1
+    }
 
-    /// Differentiable input.
+    // ---- builders ------------------------------------------------------
+    //
+    // Every value-producing builder goes through `unary_map` /
+    // `binary_zip` / an explicit `arena_tensor` call, so node buffers
+    // always come from the arena — a builder that bypassed it would
+    // silently regress the allocator win.
+
+    /// Differentiable input.  The tensor's buffer is shared, not copied:
+    /// a caller handing in a clone of a checkpoint pays O(1).
     pub fn leaf(&mut self, value: Tensor) -> NodeId {
         self.push(Op::Leaf, value)
     }
 
-    /// Non-differentiable input.
+    /// Non-differentiable input (same zero-copy sharing as [`Tape::leaf`]).
     pub fn constant(&mut self, value: Tensor) -> NodeId {
         self.push(Op::Const, value)
     }
 
+    /// Elementwise unary node: `f` over `a`'s value, written into an
+    /// arena buffer.
+    fn unary_map(
+        &mut self,
+        a: NodeId,
+        op: Op,
+        f: impl Fn(f64) -> f64,
+    ) -> NodeId {
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            arena_tensor(arena, va.shape.clone(), |o| va.map_into(&f, o))
+        };
+        self.push(op, value)
+    }
+
+    /// Elementwise binary node: `f` over the (identically shaped) values
+    /// of `a` and `b`, written into an arena buffer.
+    fn binary_zip(
+        &mut self,
+        a: NodeId,
+        b: NodeId,
+        op: Op,
+        f: impl Fn(f64, f64) -> f64,
+    ) -> NodeId {
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let (va, vb) = (&nodes[a].value, &nodes[b].value);
+            arena_tensor(arena, va.shape.clone(), |o| {
+                va.zip_into(vb, &f, o)
+            })
+        };
+        self.push(op, value)
+    }
+
     pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
-        let value = self.value(a).zip(self.value(b), |x, y| x + y);
-        self.push(Op::Add(a, b), value)
+        self.binary_zip(a, b, Op::Add(a, b), |x, y| x + y)
     }
 
     pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
-        let value = self.value(a).zip(self.value(b), |x, y| x - y);
-        self.push(Op::Sub(a, b), value)
+        self.binary_zip(a, b, Op::Sub(a, b), |x, y| x - y)
     }
 
     pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
-        let value = self.value(a).zip(self.value(b), |x, y| x * y);
-        self.push(Op::Mul(a, b), value)
+        self.binary_zip(a, b, Op::Mul(a, b), |x, y| x * y)
     }
 
     pub fn div(&mut self, a: NodeId, b: NodeId) -> NodeId {
-        let value = self.value(a).zip(self.value(b), |x, y| x / y);
-        self.push(Op::Div(a, b), value)
+        self.binary_zip(a, b, Op::Div(a, b), |x, y| x / y)
     }
 
     pub fn scale(&mut self, a: NodeId, c: f64) -> NodeId {
-        let value = self.value(a).map(|x| x * c);
-        self.push(Op::Scale(a, c), value)
+        self.unary_map(a, Op::Scale(a, c), |x| x * c)
     }
 
     pub fn offset(&mut self, a: NodeId, c: f64) -> NodeId {
-        let value = self.value(a).map(|x| x + c);
-        self.push(Op::Offset(a, c), value)
+        self.unary_map(a, Op::Offset(a, c), |x| x + c)
     }
 
     pub fn matmul(&mut self, a: NodeId, b: NodeId, ta: bool, tb: bool) -> NodeId {
-        let value = self.value(a).matmul(self.value(b), ta, tb);
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let (va, vb) = (&nodes[a].value, &nodes[b].value);
+            let (m, n) = va.matmul_dims(vb, ta, tb);
+            arena_tensor(arena, vec![m, n], |o| {
+                va.matmul_into(vb, ta, tb, o);
+            })
+        };
         self.push(Op::Matmul { a, b, ta, tb }, value)
     }
 
     pub fn relu(&mut self, a: NodeId) -> NodeId {
-        let value = self.value(a).map(|x| x.max(0.0));
-        self.push(Op::Relu(a), value)
+        self.unary_map(a, Op::Relu(a), |x| x.max(0.0))
     }
 
     pub fn step(&mut self, a: NodeId) -> NodeId {
-        let value = self.value(a).map(|x| if x > 0.0 { 1.0 } else { 0.0 });
-        self.push(Op::Step(a), value)
+        self.unary_map(a, Op::Step(a), |x| if x > 0.0 { 1.0 } else { 0.0 })
     }
 
     pub fn tanh(&mut self, a: NodeId) -> NodeId {
-        let value = self.value(a).map(f64::tanh);
-        self.push(Op::Tanh(a), value)
+        self.unary_map(a, Op::Tanh(a), f64::tanh)
     }
 
     pub fn exp(&mut self, a: NodeId) -> NodeId {
-        let value = self.value(a).map(f64::exp);
-        self.push(Op::Exp(a), value)
+        self.unary_map(a, Op::Exp(a), f64::exp)
     }
 
     pub fn sqrt(&mut self, a: NodeId) -> NodeId {
-        let value = self.value(a).map(f64::sqrt);
-        self.push(Op::Sqrt(a), value)
+        self.unary_map(a, Op::Sqrt(a), f64::sqrt)
     }
 
     pub fn sum(&mut self, a: NodeId) -> NodeId {
-        let value = t_sum(self.value(a));
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            arena_tensor(arena, vec![], |o| t_sum_into(va, o))
+        };
         self.push(Op::Sum(a), value)
     }
 
     /// Scalar → any shape.
     pub fn broadcast(&mut self, a: NodeId, shape: &[usize]) -> NodeId {
-        let v = self.value(a);
-        assert!(
-            v.shape.is_empty(),
-            "broadcast wants a rank-0 scalar, got {:?}",
-            v.shape
-        );
-        let value = Tensor::full(shape, v.item());
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            assert!(
+                va.shape.is_empty(),
+                "broadcast wants a rank-0 scalar, got {:?}",
+                va.shape
+            );
+            let x = va.item();
+            let len = shape.iter().product::<usize>();
+            arena_tensor(arena, shape.to_vec(), |o| {
+                o.clear();
+                o.resize(len, x);
+            })
+        };
         self.push(Op::Broadcast(a, shape.to_vec()), value)
     }
 
     pub fn row_sum(&mut self, a: NodeId) -> NodeId {
-        let value = t_row_sum(self.value(a));
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            let m = va.dims2().0;
+            arena_tensor(arena, vec![m], |o| t_row_sum_into(va, o))
+        };
         self.push(Op::RowSum(a), value)
     }
 
     pub fn row_broadcast(&mut self, a: NodeId, n: usize) -> NodeId {
-        let value = t_row_broadcast(self.value(a), n);
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            assert_eq!(va.shape.len(), 1, "row_broadcast wants a vector");
+            let m = va.shape[0];
+            arena_tensor(arena, vec![m, n], |o| {
+                t_row_broadcast_into(va, n, o)
+            })
+        };
         self.push(Op::RowBroadcast(a, n), value)
     }
 
     pub fn col_sum(&mut self, a: NodeId) -> NodeId {
-        let value = t_col_sum(self.value(a));
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            let n = va.dims2().1;
+            arena_tensor(arena, vec![n], |o| t_col_sum_into(va, o))
+        };
         self.push(Op::ColSum(a), value)
     }
 
     pub fn col_broadcast(&mut self, a: NodeId, m: usize) -> NodeId {
-        let value = t_col_broadcast(self.value(a), m);
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            assert_eq!(va.shape.len(), 1, "col_broadcast wants a vector");
+            let n = va.shape[0];
+            arena_tensor(arena, vec![m, n], |o| {
+                t_col_broadcast_into(va, m, o)
+            })
+        };
         self.push(Op::ColBroadcast(a, m), value)
     }
 
     pub fn softmax_rows(&mut self, a: NodeId) -> NodeId {
-        let value = t_softmax_rows(self.value(a));
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            let (m, n) = va.dims2();
+            arena_tensor(arena, vec![m, n], |o| t_softmax_rows_into(va, o))
+        };
         self.push(Op::SoftmaxRows(a), value)
     }
 
     pub fn logsumexp_rows(&mut self, a: NodeId) -> NodeId {
-        let value = t_logsumexp_rows(self.value(a));
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            let m = va.dims2().0;
+            arena_tensor(arena, vec![m], |o| t_logsumexp_rows_into(va, o))
+        };
         self.push(Op::LogSumExpRows(a), value)
     }
 
-    pub fn gather_cols(&mut self, a: NodeId, idx: Vec<usize>) -> NodeId {
-        let value = t_gather_cols(self.value(a), &idx);
+    pub fn gather_cols(
+        &mut self,
+        a: NodeId,
+        idx: impl Into<Arc<[usize]>>,
+    ) -> NodeId {
+        let idx: Arc<[usize]> = idx.into();
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            let m = va.dims2().0;
+            arena_tensor(arena, vec![m], |o| {
+                t_gather_cols_into(va, &idx, o)
+            })
+        };
         self.push(Op::GatherCols(a, idx), value)
     }
 
-    pub fn scatter_cols(&mut self, a: NodeId, idx: Vec<usize>, n: usize) -> NodeId {
-        let value = t_scatter_cols(self.value(a), &idx, n);
+    pub fn scatter_cols(
+        &mut self,
+        a: NodeId,
+        idx: impl Into<Arc<[usize]>>,
+        n: usize,
+    ) -> NodeId {
+        let idx: Arc<[usize]> = idx.into();
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            assert_eq!(va.shape.len(), 1, "scatter wants a vector");
+            let m = va.shape[0];
+            arena_tensor(arena, vec![m, n], |o| {
+                t_scatter_cols_into(va, &idx, n, o)
+            })
+        };
         self.push(Op::ScatterCols(a, idx, n), value)
     }
 
+    /// Zero-copy reshape: the node's value aliases the input buffer and
+    /// contributes 0 bytes to [`TapeStats::bytes`].
     pub fn reshape(&mut self, a: NodeId, shape: Vec<usize>) -> NodeId {
-        let v = self.value(a);
+        let v = &self.nodes[a].value;
         assert_eq!(
             v.elements(),
             shape.iter().product::<usize>(),
             "reshape {:?} → {shape:?}",
             v.shape
         );
-        let value = Tensor::new(shape.clone(), v.data.clone());
-        self.push(Op::Reshape(a, shape), value)
+        let value = v.alias(shape.clone());
+        self.push_alias(Op::Reshape(a, shape), value)
     }
 
     /// Mean of all elements (composite: `sum` then `scale`).
@@ -402,6 +642,10 @@ impl Tape {
     /// get zero gradients.  Because the adjoint computation is itself made
     /// of tape ops, a later `grad` (or [`Tape::jvp`]) can differentiate
     /// straight through it.
+    ///
+    /// The sweep borrows each node's op via a take-and-restore swap: no
+    /// `Op::clone()`, and gather/scatter adjoints share the original
+    /// index `Arc` instead of copying the index vector.
     pub fn grad(&mut self, y: NodeId, wrt: &[NodeId]) -> Vec<NodeId> {
         assert_eq!(self.value(y).elements(), 1, "grad of a non-scalar");
         let mut adj: Vec<Option<NodeId>> = vec![None; y + 1];
@@ -410,40 +654,43 @@ impl Tape {
         adj[y] = Some(seed);
         for i in (0..=y).rev() {
             let Some(g) = adj[i] else { continue };
-            let op = self.nodes[i].op.clone();
-            match op {
+            // Borrow the op: swap it out for the duration of the match
+            // (the arms only append new nodes) and put it back after.
+            let op = std::mem::replace(&mut self.nodes[i].op, Op::Leaf);
+            match &op {
                 Op::Leaf | Op::Const | Op::Step(_) => {}
                 Op::Add(a, b) => {
-                    self.acc(&mut adj, a, g);
-                    self.acc(&mut adj, b, g);
+                    self.acc(&mut adj, *a, g);
+                    self.acc(&mut adj, *b, g);
                 }
                 Op::Sub(a, b) => {
-                    self.acc(&mut adj, a, g);
+                    self.acc(&mut adj, *a, g);
                     let neg = self.scale(g, -1.0);
-                    self.acc(&mut adj, b, neg);
+                    self.acc(&mut adj, *b, neg);
                 }
                 Op::Mul(a, b) => {
-                    let ca = self.mul(g, b);
-                    let cb = self.mul(g, a);
-                    self.acc(&mut adj, a, ca);
-                    self.acc(&mut adj, b, cb);
+                    let ca = self.mul(g, *b);
+                    let cb = self.mul(g, *a);
+                    self.acc(&mut adj, *a, ca);
+                    self.acc(&mut adj, *b, cb);
                 }
                 Op::Div(a, b) => {
                     // y = a/b: da = g/b, db = −g·y/b (reusing this node
                     // as y, the same trick as tanh/exp).
-                    let da = self.div(g, b);
-                    self.acc(&mut adj, a, da);
+                    let da = self.div(g, *b);
+                    self.acc(&mut adj, *a, da);
                     let gy = self.mul(g, i);
-                    let gyb = self.div(gy, b);
+                    let gyb = self.div(gy, *b);
                     let db = self.scale(gyb, -1.0);
-                    self.acc(&mut adj, b, db);
+                    self.acc(&mut adj, *b, db);
                 }
                 Op::Scale(a, c) => {
-                    let s = self.scale(g, c);
-                    self.acc(&mut adj, a, s);
+                    let s = self.scale(g, *c);
+                    self.acc(&mut adj, *a, s);
                 }
-                Op::Offset(a, _) => self.acc(&mut adj, a, g),
+                Op::Offset(a, _) => self.acc(&mut adj, *a, g),
                 Op::Matmul { a, b, ta, tb } => {
+                    let (a, b, ta, tb) = (*a, *b, *ta, *tb);
                     let da = if !ta {
                         self.matmul(g, b, false, !tb)
                     } else {
@@ -458,86 +705,87 @@ impl Tape {
                     self.acc(&mut adj, b, db);
                 }
                 Op::Relu(a) => {
-                    let mask = self.step(a);
+                    let mask = self.step(*a);
                     let c = self.mul(g, mask);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::Tanh(a) => {
                     // d tanh = (1 − y²): g − g·y², reusing this node as y.
                     let y2 = self.mul(i, i);
                     let gy2 = self.mul(g, y2);
                     let c = self.sub(g, gy2);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::Exp(a) => {
                     let c = self.mul(g, i);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::Sqrt(a) => {
                     // y = √a: da = g/(2y), reusing this node as y.
                     let gy = self.div(g, i);
                     let c = self.scale(gy, 0.5);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::Sum(a) => {
-                    let sh = self.shape(a);
+                    let sh = self.shape(*a);
                     let c = self.broadcast(g, &sh);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::Broadcast(a, _) => {
                     let c = self.sum(g);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::RowSum(a) => {
-                    let n = self.shape(a)[1];
+                    let n = self.shape(*a)[1];
                     let c = self.row_broadcast(g, n);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::RowBroadcast(a, _) => {
                     let c = self.row_sum(g);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::ColSum(a) => {
-                    let m = self.shape(a)[0];
+                    let m = self.shape(*a)[0];
                     let c = self.col_broadcast(g, m);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::ColBroadcast(a, _) => {
                     let c = self.col_sum(g);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::SoftmaxRows(a) => {
                     // dz = s ⊙ (g − rowbcast(rowsum(g ⊙ s))), s = this node.
-                    let n = self.shape(a)[1];
+                    let n = self.shape(*a)[1];
                     let gs = self.mul(g, i);
                     let rs = self.row_sum(gs);
                     let rb = self.row_broadcast(rs, n);
                     let diff = self.sub(g, rb);
                     let c = self.mul(i, diff);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::LogSumExpRows(a) => {
-                    let n = self.shape(a)[1];
-                    let s = self.softmax_rows(a);
+                    let n = self.shape(*a)[1];
+                    let s = self.softmax_rows(*a);
                     let rb = self.row_broadcast(g, n);
                     let c = self.mul(rb, s);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::GatherCols(a, idx) => {
-                    let n = self.shape(a)[1];
-                    let c = self.scatter_cols(g, idx, n);
-                    self.acc(&mut adj, a, c);
+                    let n = self.shape(*a)[1];
+                    let c = self.scatter_cols(g, idx.clone(), n);
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::ScatterCols(a, idx, _) => {
-                    let c = self.gather_cols(g, idx);
-                    self.acc(&mut adj, a, c);
+                    let c = self.gather_cols(g, idx.clone());
+                    self.acc(&mut adj, *a, c);
                 }
                 Op::Reshape(a, _) => {
-                    let sh = self.shape(a);
+                    let sh = self.shape(*a);
                     let c = self.reshape(g, sh);
-                    self.acc(&mut adj, a, c);
+                    self.acc(&mut adj, *a, c);
                 }
             }
+            self.nodes[i].op = op;
         }
         let mut out = Vec::with_capacity(wrt.len());
         for &w in wrt {
@@ -560,19 +808,22 @@ impl Tape {
     /// `seeds` assigns tangents to leaf/const nodes; every other tangent is
     /// derived by the op linearisations.  Returns the tangents of
     /// `targets` (zeros where no tangent flows) and the total bytes of
-    /// tangent buffers materialised — the memory cost of the overlay.
+    /// tangent buffers *materialised* — aliased pass-through tangents
+    /// (identity-like ops, seed handles) and zero tangents cost nothing.
     /// Nodes after the last target can never influence it, so the sweep
     /// stops there: subgraphs recorded later (e.g. the optimiser update
-    /// and its adjoint in the MixFlow backward step) cost nothing.
+    /// and its adjoint in the MixFlow backward step) cost nothing.  When
+    /// the sweep finishes, all intermediate tangent buffers are recycled
+    /// into the tape's arena for the next step-tape to reuse.
     pub fn jvp(
-        &self,
+        &mut self,
         seeds: &[(NodeId, Tensor)],
         targets: &[NodeId],
     ) -> (Vec<Tensor>, usize) {
+        let Tape { nodes, arena, .. } = self;
         for (id, t) in seeds {
             assert_eq!(
-                t.shape,
-                self.nodes[*id].value.shape,
+                t.shape, nodes[*id].value.shape,
                 "seed shape mismatch at node {id}"
             );
         }
@@ -580,10 +831,10 @@ impl Tape {
             Some(&last) => last + 1,
             None => 0,
         };
-        let mut tan: Vec<Option<Tensor>> = vec![None; self.nodes.len()];
+        let mut tan: Vec<Option<Tensor>> = vec![None; nodes.len()];
         let mut bytes = 0usize;
         for i in 0..stop {
-            let out: Option<Tensor> = match &self.nodes[i].op {
+            let out: Option<Tensor> = match &nodes[i].op {
                 Op::Leaf | Op::Const => seeds
                     .iter()
                     .find(|(id, _)| *id == i)
@@ -602,8 +853,8 @@ impl Tape {
                     (None, None) => None,
                 },
                 Op::Mul(a, b) => {
-                    let va = &self.nodes[*a].value;
-                    let vb = &self.nodes[*b].value;
+                    let va = &nodes[*a].value;
+                    let vb = &nodes[*b].value;
                     match (&tan[*a], &tan[*b]) {
                         (Some(x), Some(y)) => {
                             let left = x.zip(vb, |p, q| p * q);
@@ -617,8 +868,8 @@ impl Tape {
                 }
                 Op::Div(a, b) => {
                     // ẏ = (ȧ − y·ḃ)/b, using this node's value as y.
-                    let vy = &self.nodes[i].value;
-                    let vb = &self.nodes[*b].value;
+                    let vy = &nodes[i].value;
+                    let vb = &nodes[*b].value;
                     match (&tan[*a], &tan[*b]) {
                         (Some(x), Some(bt)) => {
                             let ybt = vy.zip(bt, |y, q| y * q);
@@ -636,8 +887,8 @@ impl Tape {
                 Op::Scale(a, c) => tan[*a].as_ref().map(|t| t.map(|x| x * c)),
                 Op::Offset(a, _) => tan[*a].clone(),
                 Op::Matmul { a, b, ta, tb } => {
-                    let va = &self.nodes[*a].value;
-                    let vb = &self.nodes[*b].value;
+                    let va = &nodes[*a].value;
+                    let vb = &nodes[*b].value;
                     let left =
                         tan[*a].as_ref().map(|t| t.matmul(vb, *ta, *tb));
                     let right =
@@ -649,7 +900,7 @@ impl Tape {
                     }
                 }
                 Op::Relu(a) => tan[*a].as_ref().map(|t| {
-                    t.zip(&self.nodes[*a].value, |p, x| {
+                    t.zip(&nodes[*a].value, |p, x| {
                         if x > 0.0 {
                             p
                         } else {
@@ -658,13 +909,13 @@ impl Tape {
                     })
                 }),
                 Op::Tanh(a) => tan[*a].as_ref().map(|t| {
-                    t.zip(&self.nodes[i].value, |p, y| p * (1.0 - y * y))
+                    t.zip(&nodes[i].value, |p, y| p * (1.0 - y * y))
                 }),
                 Op::Exp(a) => tan[*a]
                     .as_ref()
-                    .map(|t| t.zip(&self.nodes[i].value, |p, y| p * y)),
+                    .map(|t| t.zip(&nodes[i].value, |p, y| p * y)),
                 Op::Sqrt(a) => tan[*a].as_ref().map(|t| {
-                    t.zip(&self.nodes[i].value, |p, y| p / (2.0 * y))
+                    t.zip(&nodes[i].value, |p, y| p / (2.0 * y))
                 }),
                 Op::Sum(a) => tan[*a].as_ref().map(t_sum),
                 Op::Broadcast(a, shape) => tan[*a]
@@ -680,14 +931,14 @@ impl Tape {
                 }
                 Op::SoftmaxRows(a) => tan[*a].as_ref().map(|t| {
                     // ṡ = s ⊙ (ż − rowbcast(rowsum(s ⊙ ż)))
-                    let s = &self.nodes[i].value;
+                    let s = &nodes[i].value;
                     let st = s.zip(t, |p, q| p * q);
                     let rb = t_row_broadcast(&t_row_sum(&st), s.shape[1]);
                     let inner = t.zip(&rb, |p, q| p - q);
                     s.zip(&inner, |p, q| p * q)
                 }),
                 Op::LogSumExpRows(a) => tan[*a].as_ref().map(|t| {
-                    let s = t_softmax_rows(&self.nodes[*a].value);
+                    let s = t_softmax_rows(&nodes[*a].value);
                     t_row_sum(&s.zip(t, |p, q| p * q))
                 }),
                 Op::GatherCols(a, idx) => {
@@ -696,12 +947,18 @@ impl Tape {
                 Op::ScatterCols(a, idx, n) => {
                     tan[*a].as_ref().map(|t| t_scatter_cols(t, idx, *n))
                 }
-                Op::Reshape(a, shape) => tan[*a]
-                    .as_ref()
-                    .map(|t| Tensor::new(shape.clone(), t.data.clone())),
+                Op::Reshape(a, shape) => {
+                    // Zero-copy, like the primal: alias the tangent.
+                    tan[*a].as_ref().map(|t| t.alias(shape.clone()))
+                }
             };
             if let Some(t) = out {
-                bytes += t.bytes();
+                // Aliased pass-throughs (Offset, one-sided Add/Sub,
+                // Reshape, seed handles) share a counted buffer: only
+                // freshly materialised tangents cost bytes.
+                if t.data.is_unique() {
+                    bytes += t.bytes();
+                }
                 tan[i] = Some(t);
             }
         }
@@ -709,9 +966,14 @@ impl Tape {
             .iter()
             .map(|&t| match &tan[t] {
                 Some(x) => x.clone(),
-                None => Tensor::zeros(&self.nodes[t].value.shape),
+                None => Tensor::zeros(&nodes[t].value.shape),
             })
             .collect();
+        // The returned targets were cloned above, so their buffers are
+        // shared and survive; everything else goes back to the arena.
+        for t in tan.into_iter().flatten() {
+            arena.recycle(t);
+        }
         (out, bytes)
     }
 }
@@ -787,7 +1049,7 @@ mod tests {
         let z = tape.constant(Tensor::new(vec![2, 3], vec![1., 2., 3., -1., 0., 1.]));
         let s = tape.softmax_rows(z);
         let rows = t_row_sum(tape.value(s));
-        for r in rows.data {
+        for r in rows.data.iter() {
             assert!((r - 1.0).abs() < 1e-12);
         }
     }
@@ -835,5 +1097,92 @@ mod tests {
         let _ = tape.scale(x, 2.0);
         assert_eq!(tape.stats().bytes, 2 * 8 * 8);
         assert_eq!(tape.stats().nodes, 2);
+    }
+
+    #[test]
+    fn leaf_is_zero_copy() {
+        let t = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut tape = Tape::new();
+        let l = tape.leaf(t.clone());
+        assert!(
+            tape.value(l).aliases(&t),
+            "leaf must share the caller's buffer, not copy it"
+        );
+    }
+
+    #[test]
+    fn reshape_is_zero_copy_and_counts_zero_bytes() {
+        // Regression: reshape used to clone the whole data buffer and
+        // add it to TapeStats::bytes a second time.
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::zeros(&[6]));
+        let before = tape.stats();
+        let r = tape.reshape(x, vec![2, 3]);
+        let after = tape.stats();
+        assert_eq!(
+            after.bytes, before.bytes,
+            "aliased reshape must contribute 0 bytes"
+        );
+        assert_eq!(after.nodes, before.nodes + 1);
+        assert!(tape.value(r).aliases(tape.value(x)));
+        assert_eq!(tape.value(r).shape, vec![2, 3]);
+        // The view still differentiates correctly through the alias.
+        let sq = tape.mul(r, r);
+        let y = tape.sum(sq);
+        let g = tape.grad(y, &[x]);
+        assert_eq!(tape.value(g[0]).data, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn reset_recycles_buffers_for_reuse() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::zeros(&[16]));
+        let _ = tape.scale(x, 2.0);
+        assert_eq!(tape.arena_stats().reuses, 0);
+        tape.reset();
+        assert_eq!(tape.stats().nodes, 0);
+        assert_eq!(tape.stats().bytes, 0);
+        // Same shapes again: the scale output's buffer must be reused.
+        let x2 = tape.leaf(Tensor::zeros(&[16]));
+        let _ = tape.scale(x2, 3.0);
+        assert!(
+            tape.arena_stats().reuses > 0,
+            "second pass must draw from the free list"
+        );
+    }
+
+    #[test]
+    fn reset_spares_buffers_cloned_out() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::new(vec![3], vec![1.0, 2.0, 3.0]));
+        let s = tape.scale(x, 2.0);
+        let kept = tape.value(s).clone();
+        tape.reset();
+        // Force the arena to hand out same-length buffers again: if the
+        // reset had wrongly parked the shared buffer, these writes would
+        // corrupt `kept`.
+        let x2 = tape.leaf(Tensor::zeros(&[3]));
+        let _ = tape.scale(x2, 7.0);
+        let _ = tape.offset(x2, 9.0);
+        assert_eq!(kept.data, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn grad_shares_gather_indices_instead_of_copying() {
+        let mut tape = Tape::new();
+        let z = tape.leaf(Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        let picked = tape.gather_cols(z, vec![2usize, 0]);
+        let y = tape.sum(picked);
+        let _g = tape.grad(y, &[z]);
+        let Op::GatherCols(_, gather_idx) = tape.op(picked) else {
+            panic!("expected GatherCols op");
+        };
+        let shared = (0..tape.stats().nodes).any(|i| {
+            matches!(
+                tape.op(i),
+                Op::ScatterCols(_, idx, _) if Arc::ptr_eq(idx, gather_idx)
+            )
+        });
+        assert!(shared, "scatter adjoint must share the gather index Arc");
     }
 }

@@ -1,17 +1,108 @@
-//! Dense f64 tensors over flat buffers — the value type of the native
-//! autodiff engine.  Scalars are rank-0 (`shape == []`), vectors rank-1,
-//! matrices rank-2 row-major.  Shapes are checked eagerly with panics:
-//! a shape error is a bug in graph construction, never a data condition.
+//! Dense f64 tensors over copy-on-write flat buffers — the value type of
+//! the native autodiff engine.  Scalars are rank-0 (`shape == []`),
+//! vectors rank-1, matrices rank-2 row-major.  Shapes are checked eagerly
+//! with panics: a shape error is a bug in graph construction, never a
+//! data condition.
+//!
+//! Storage is a [`Buf`]: an `Arc`-shared buffer with copy-on-write
+//! mutation.  Cloning a `Tensor` is therefore O(1) — leaves, checkpoints
+//! and `Reshape` views all alias one allocation until somebody writes —
+//! and the tape's [`super::arena::BufferArena`] can recycle a buffer
+//! exactly when the last handle drops.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
 
 use crate::util::prng::Prng;
 
 /// Bytes per element (everything is f64).
 pub const ELEM_BYTES: usize = 8;
 
+/// Copy-on-write backing store for [`Tensor`].  Reads deref straight to
+/// the underlying `Vec<f64>`; writes go through [`Arc::make_mut`], so a
+/// shared buffer is copied before the first mutation and writes through
+/// one handle can never be observed through another.
+#[derive(Clone)]
+pub struct Buf(Arc<Vec<f64>>);
+
+impl Buf {
+    pub fn new(data: Vec<f64>) -> Buf {
+        Buf(Arc::new(data))
+    }
+
+    /// Do two handles share the same allocation?
+    pub fn ptr_eq(a: &Buf, b: &Buf) -> bool {
+        Arc::ptr_eq(&a.0, &b.0)
+    }
+
+    /// Is this the only live handle to the allocation?
+    pub(crate) fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.0) == 1
+    }
+
+    pub(crate) fn from_arc(arc: Arc<Vec<f64>>) -> Buf {
+        Buf(arc)
+    }
+
+    pub(crate) fn into_arc(self) -> Arc<Vec<f64>> {
+        self.0
+    }
+}
+
+impl Deref for Buf {
+    type Target = Vec<f64>;
+    fn deref(&self) -> &Vec<f64> {
+        &self.0
+    }
+}
+
+impl DerefMut for Buf {
+    fn deref_mut(&mut self) -> &mut Vec<f64> {
+        Arc::make_mut(&mut self.0)
+    }
+}
+
+impl fmt::Debug for Buf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&*self.0, f)
+    }
+}
+
+// Content equality only — no ptr_eq fast path, so IEEE semantics are
+// preserved (a tensor with a NaN element never equals its own alias,
+// exactly as the pre-CoW Vec<f64> comparison behaved).  Aliasing is
+// queried explicitly via [`Buf::ptr_eq`] / [`Tensor::aliases`].
+impl PartialEq for Buf {
+    fn eq(&self, other: &Buf) -> bool {
+        *self.0 == *other.0
+    }
+}
+
+impl PartialEq<Vec<f64>> for Buf {
+    fn eq(&self, other: &Vec<f64>) -> bool {
+        *self.0 == *other
+    }
+}
+
+impl From<Vec<f64>> for Buf {
+    fn from(v: Vec<f64>) -> Buf {
+        Buf::new(v)
+    }
+}
+
+impl<'a> IntoIterator for &'a Buf {
+    type Item = &'a f64;
+    type IntoIter = std::slice::Iter<'a, f64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.0.iter()
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: Vec<f64>,
+    pub data: Buf,
 }
 
 impl Tensor {
@@ -22,29 +113,64 @@ impl Tensor {
             "shape {shape:?} does not match {} elements",
             data.len()
         );
-        Tensor { shape, data }
+        Tensor { shape, data: Buf::new(data) }
+    }
+
+    /// Wrap an arena buffer without copying (the arena guarantees the
+    /// buffer is uniquely owned and exactly sized).
+    pub(crate) fn from_shared(shape: Vec<usize>, data: Arc<Vec<f64>>) -> Tensor {
+        debug_assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shared buffer length mismatch for shape {shape:?}"
+        );
+        Tensor { shape, data: Buf::from_arc(data) }
+    }
+
+    pub(crate) fn into_data(self) -> Buf {
+        self.data
+    }
+
+    /// Zero-copy view of the same buffer under a different shape (the
+    /// element count must match).
+    pub fn alias(&self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "alias {:?} → {shape:?}",
+            self.shape
+        );
+        Tensor { shape, data: self.data.clone() }
+    }
+
+    /// Do two tensors share the same backing allocation?
+    pub fn aliases(&self, other: &Tensor) -> bool {
+        Buf::ptr_eq(&self.data, &other.data)
     }
 
     pub fn scalar(x: f64) -> Tensor {
-        Tensor { shape: vec![], data: vec![x] }
+        Tensor { shape: vec![], data: Buf::new(vec![x]) }
     }
 
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
-            data: vec![0.0; shape.iter().product()],
+            data: Buf::new(vec![0.0; shape.iter().product()]),
         }
     }
 
     pub fn full(shape: &[usize], x: f64) -> Tensor {
-        Tensor { shape: shape.to_vec(), data: vec![x; shape.iter().product()] }
+        Tensor {
+            shape: shape.to_vec(),
+            data: Buf::new(vec![x; shape.iter().product()]),
+        }
     }
 
     /// N(0, std²) entries.
     pub fn randn(shape: &[usize], std: f64, rng: &mut Prng) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
-            data: rng.normal_vec_f64(shape.iter().product(), std),
+            data: Buf::new(rng.normal_vec_f64(shape.iter().product(), std)),
         }
     }
 
@@ -70,38 +196,78 @@ impl Tensor {
 
     /// Elementwise map into a new tensor.
     pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
-        Tensor {
-            shape: self.shape.clone(),
-            data: self.data.iter().map(|&x| f(x)).collect(),
-        }
+        let mut out = Vec::with_capacity(self.data.len());
+        self.map_into(f, &mut out);
+        Tensor { shape: self.shape.clone(), data: Buf::new(out) }
+    }
+
+    /// Elementwise map writing into a recycled buffer (cleared first).
+    pub fn map_into(&self, f: impl Fn(f64) -> f64, out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.data.iter().map(|&x| f(x)));
     }
 
     /// Elementwise combine with an identically-shaped tensor.
     pub fn zip(&self, other: &Tensor, f: impl Fn(f64, f64) -> f64) -> Tensor {
+        let mut out = Vec::with_capacity(self.data.len());
+        self.zip_into(other, f, &mut out);
+        Tensor { shape: self.shape.clone(), data: Buf::new(out) }
+    }
+
+    /// Elementwise combine writing into a recycled buffer (cleared
+    /// first).
+    pub fn zip_into(
+        &self,
+        other: &Tensor,
+        f: impl Fn(f64, f64) -> f64,
+        out: &mut Vec<f64>,
+    ) {
         assert_eq!(
             self.shape, other.shape,
             "zip shape mismatch {:?} vs {:?}",
             self.shape, other.shape
         );
-        Tensor {
-            shape: self.shape.clone(),
-            data: self
-                .data
+        out.clear();
+        out.extend(
+            self.data
                 .iter()
                 .zip(other.data.iter())
-                .map(|(&a, &b)| f(a, b))
-                .collect(),
-        }
+                .map(|(&a, &b)| f(a, b)),
+        );
     }
 
-    /// `C = op(A, ta) · op(B, tb)` with `op(X, true) = Xᵀ`; plain loops —
-    /// the native engine's models are small enough that clarity wins.
-    pub fn matmul(&self, other: &Tensor, ta: bool, tb: bool) -> Tensor {
+    /// Output dims `(m, n)` of `op(self, ta) · op(other, tb)` with
+    /// `op(X, true) = Xᵀ`, after checking the contraction dims agree.
+    pub fn matmul_dims(&self, other: &Tensor, ta: bool, tb: bool) -> (usize, usize) {
         let (ar, ac) = self.dims2();
         let (br, bc) = other.dims2();
         let (m, k) = if ta { (ac, ar) } else { (ar, ac) };
         let (kb, n) = if tb { (bc, br) } else { (br, bc) };
         assert_eq!(k, kb, "matmul inner dims {k} vs {kb}");
+        (m, n)
+    }
+
+    /// `C = op(A, ta) · op(B, tb)`; plain loops — the native engine's
+    /// models are small enough that clarity wins.
+    pub fn matmul(&self, other: &Tensor, ta: bool, tb: bool) -> Tensor {
+        let mut out = Vec::new();
+        let (m, n) = self.matmul_into(other, ta, tb, &mut out);
+        Tensor { shape: vec![m, n], data: Buf::new(out) }
+    }
+
+    /// Matmul writing into a recycled buffer (zeroed to `m·n` first).
+    /// Returns the output dims `(m, n)`.
+    pub fn matmul_into(
+        &self,
+        other: &Tensor,
+        ta: bool,
+        tb: bool,
+        out: &mut Vec<f64>,
+    ) -> (usize, usize) {
+        let (m, n) = self.matmul_dims(other, ta, tb);
+        let (ar, ac) = self.dims2();
+        let (_, bc) = other.dims2();
+        let k = if ta { ar } else { ac };
         let a = |i: usize, j: usize| {
             if ta {
                 self.data[j * ac + i]
@@ -116,7 +282,8 @@ impl Tensor {
                 other.data[i * bc + j]
             }
         };
-        let mut out = vec![0.0; m * n];
+        out.clear();
+        out.resize(m * n, 0.0);
         for i in 0..m {
             for l in 0..k {
                 let ail = a(i, l);
@@ -128,7 +295,7 @@ impl Tensor {
                 }
             }
         }
-        Tensor { shape: vec![m, n], data: out }
+        (m, n)
     }
 
     /// Max |entry| difference to another tensor of the same shape.
@@ -164,6 +331,48 @@ mod tests {
     #[should_panic(expected = "shape")]
     fn bad_shape_panics() {
         Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn clone_is_zero_copy_until_write() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert!(b.aliases(&a), "clone must share the buffer");
+        b.data[0] = 9.0; // copy-on-write kicks in here
+        assert!(!b.aliases(&a), "write must detach the buffer");
+        assert_eq!(a.data[0], 1.0, "original unchanged after CoW write");
+        assert_eq!(b.data[0], 9.0);
+    }
+
+    #[test]
+    fn alias_shares_buffer_across_shapes() {
+        let a = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        let v = a.alias(vec![6]);
+        assert!(v.aliases(&a));
+        assert_eq!(v.shape, vec![6]);
+        assert_eq!(v.bytes(), a.bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "alias")]
+    fn alias_with_wrong_count_panics() {
+        Tensor::zeros(&[2, 3]).alias(vec![7]);
+    }
+
+    #[test]
+    fn into_kernels_match_allocating_kernels() {
+        let mut rng = Prng::new(3);
+        let a = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let mut out = vec![99.0; 2]; // stale, wrong-sized: must be reset
+        a.map_into(|x| x * 2.0, &mut out);
+        assert_eq!(a.map(|x| x * 2.0).data, out);
+        a.zip_into(&b, |x, y| x - y, &mut out);
+        assert_eq!(a.zip(&b, |x, y| x - y).data, out);
+        let c = Tensor::randn(&[4, 2], 1.0, &mut rng);
+        let (m, n) = a.matmul_into(&c, false, false, &mut out);
+        assert_eq!((m, n), (3, 2));
+        assert_eq!(a.matmul(&c, false, false).data, out);
     }
 
     #[test]

@@ -12,13 +12,14 @@
 //! * [`hlo`] — HLO text parser → IR, shapes, scheduling, buffer liveness,
 //!   the peak-memory simulator (static/dynamic split, Fig. 2 timelines)
 //!   and a FLOP cost model.
-//! * [`autodiff`] — the native differentiation engine: f64 tensors, a
-//!   Wengert-list tape with graph-mode reverse (so grad-of-grad works), a
-//!   forward-mode JVP overlay, differentiable inner optimisers (SGD,
-//!   momentum, Adam — updates built in-graph), and the `naive_hypergrad`
-//!   / `mixflow_hypergrad` bilevel paths with tape-byte instrumentation.
-//!   The first path in the repo where the whole meta-gradient is computed
-//!   by Rust alone.
+//! * [`autodiff`] — the native differentiation engine: copy-on-write f64
+//!   tensors over an arena-recycled buffer pool, a Wengert-list tape with
+//!   graph-mode reverse (so grad-of-grad works), a forward-mode JVP
+//!   overlay, differentiable inner optimisers (SGD, momentum, Adam —
+//!   updates built in-graph), and the `naive_hypergrad` /
+//!   `mixflow_hypergrad` bilevel paths with block rematerialisation and
+//!   tape/arena/wall-clock instrumentation.  The first path in the repo
+//!   where the whole meta-gradient is computed by Rust alone.
 //! * [`runtime`] — artifact manifest (always available) + the PJRT client
 //!   wrapper: compile cache, literal construction, timed execution
 //!   (feature `pjrt`).

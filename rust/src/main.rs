@@ -5,7 +5,9 @@
 //! * `analyze <key>`        — HLO memory/cost analysis of one artifact
 //! * `native --task <t>`    — native meta-training via the Rust autodiff
 //!   engine (no PJRT, no artifacts); `--mode naive|mixflow`,
-//!   `--inner-opt sgd|momentum|adam` (tasks include `attention`)
+//!   `--inner-opt sgd|momentum|adam` (tasks include `attention`),
+//!   `--remat <K>` block-rematerialisation segment, `--seeds <n>`
+//!   parallel multi-seed sweep on the scheduler pool
 //! * `run <key>`            — execute one exec-tier artifact (pjrt)
 //! * `sweep --group <g>`    — run a figure group, print ratios (pjrt)
 //! * `train --task <t>`     — artifact E2E meta-training loop (pjrt)
@@ -16,17 +18,18 @@
 //! exit with an explanatory error instead of failing to build.
 
 use anyhow::{anyhow, Result};
-use mixflow::autodiff::InnerOptimiser;
+use mixflow::autodiff::{CheckpointPolicy, InnerOptimiser};
 use mixflow::coordinator::report as rpt;
 use mixflow::coordinator::runner::pair_ratios;
 use mixflow::coordinator::ResultsStore;
 use mixflow::hlo::{flops::CostModel, parser, MemorySimulator};
 use mixflow::meta::{
-    print_train_summary, HypergradMode, NativeMetaTrainer, NativeTask,
+    print_train_summary, run_seed_sweep, HypergradMode, NativeMetaTrainer,
+    NativeSweepConfig, NativeTask,
 };
 use mixflow::runtime::Manifest;
-use mixflow::util::args::ArgSpec;
-use mixflow::util::stats::human_bytes;
+use mixflow::util::args::{ArgSpec, Args};
+use mixflow::util::stats::{human_bytes, Summary};
 use mixflow::util::table::Table;
 
 fn main() {
@@ -42,6 +45,8 @@ fn main() {
     .flag("unroll", Some("8"), "inner unroll length for native")
     .flag("mode", Some("mixflow"), "hypergradient path for native (naive|mixflow)")
     .flag("inner-opt", Some("sgd"), "inner-loop optimiser for native (sgd|momentum|adam)")
+    .flag("remat", Some("1"), "checkpoint segment K for native mixflow (full|1 = every step; K>=2 rematerialises inside segments)")
+    .flag("seeds", Some("1"), "native seed-sweep width; >1 fans out over the scheduler pool")
     .flag("iters", Some("5"), "timing iterations")
     .flag("seed", Some("0"), "input seed")
     .switch("no-exec", "analysis only (skip PJRT execution)")
@@ -67,14 +72,7 @@ fn dispatch(args: &mixflow::util::args::Args) -> Result<()> {
             args.get("key").ok_or_else(|| anyhow!("--key required"))?,
             args.get_bool("timeline"),
         ),
-        "native" => cmd_native(
-            args.get("task").unwrap(),
-            args.get_usize("steps").map_err(|e| anyhow!(e))?,
-            args.get_usize("unroll").map_err(|e| anyhow!(e))?,
-            args.get("mode").unwrap(),
-            args.get("inner-opt").unwrap(),
-            args.get_usize("seed").map_err(|e| anyhow!(e))? as u64,
-        ),
+        "native" => cmd_native(args),
         "run" => cmd_run(
             args.get("key").ok_or_else(|| anyhow!("--key required"))?,
             args.get_usize("iters").map_err(|e| anyhow!(e))?,
@@ -172,15 +170,16 @@ fn cmd_analyze(key: &str, timeline: bool) -> Result<()> {
 }
 
 /// Native meta-training: the autodiff engine end-to-end, Python and PJRT
-/// nowhere on the path.
-fn cmd_native(
-    task: &str,
-    steps: usize,
-    unroll: usize,
-    mode: &str,
-    inner_opt: &str,
-    seed: u64,
-) -> Result<()> {
+/// nowhere on the path.  With `--seeds n > 1` the whole outer loop fans
+/// out over the scheduler's worker pool, one trainer per seed.
+fn cmd_native(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps").map_err(|e| anyhow!(e))?;
+    let unroll = args.get_usize("unroll").map_err(|e| anyhow!(e))?;
+    let seed = args.get_usize("seed").map_err(|e| anyhow!(e))? as u64;
+    let task = args.get("task").unwrap();
+    let mode = args.get("mode").unwrap();
+    let inner_opt = args.get("inner-opt").unwrap();
+    let remat = args.get("remat").unwrap();
     // The flag's global default is the artifact task "maml"; the native
     // engine's nearest equivalent workload is the hyper-LR task.
     let task = if task.trim().eq_ignore_ascii_case("maml") {
@@ -202,18 +201,86 @@ fn cmd_native(
              sgd|momentum|adam"
         )
     })?;
+    let remat = CheckpointPolicy::parse(remat).ok_or_else(|| {
+        anyhow!(
+            "--remat {remat:?} invalid; valid values: full|1 (checkpoint \
+             every step) or an integer K >= 2 (remat segment length)"
+        )
+    })?;
+    let seeds = args.get_usize("seeds").map_err(|e| anyhow!(e))?;
+    if seeds == 0 {
+        return Err(anyhow!(
+            "--seeds 0 invalid; valid values: an integer >= 1"
+        ));
+    }
     println!(
-        "native meta-training: task={} mode={} inner-opt={} unroll={unroll} \
-         steps={steps}",
+        "native meta-training: task={} mode={} inner-opt={} remat={} \
+         unroll={unroll} steps={steps}",
         task.name(),
         mode.name(),
-        inner_opt.name()
+        inner_opt.name(),
+        remat.name()
     );
-    let mut trainer = NativeMetaTrainer::with_unroll(task, seed, unroll)
-        .with_mode(mode)
-        .with_inner_opt(inner_opt);
-    let report = trainer.train(steps);
-    print_train_summary(&report, trainer.last_memory.as_ref());
+    if seeds == 1 {
+        let mut trainer = NativeMetaTrainer::with_unroll(task, seed, unroll)
+            .with_mode(mode)
+            .with_inner_opt(inner_opt)
+            .with_remat(remat);
+        let report = trainer.train(steps);
+        print_train_summary(&report, trainer.last_memory.as_ref());
+        return Ok(());
+    }
+    println!("seed sweep: {seeds} seeds starting at {seed}, scheduler pool");
+    let cfg = NativeSweepConfig {
+        task,
+        mode,
+        inner_opt,
+        remat,
+        unroll,
+        steps,
+    };
+    let runs = run_seed_sweep(cfg, seed, seeds);
+    let mut t = Table::new(&[
+        "seed",
+        "loss head",
+        "loss tail",
+        "final",
+        "steps/s",
+    ])
+    .numeric_cols(&[0, 1, 2, 3, 4]);
+    let mut finals = Vec::with_capacity(runs.len());
+    for run in &runs {
+        let (head, tail) = run.report.improvement(10);
+        let last = run.report.losses.last().copied().unwrap_or(f64::NAN);
+        finals.push(last);
+        t.row(vec![
+            run.seed.to_string(),
+            format!("{head:.4}"),
+            format!("{tail:.4}"),
+            format!("{last:.4}"),
+            format!("{:.2}", run.report.steps_per_second),
+        ]);
+    }
+    println!("{}", t.render());
+    let s = Summary::of(&finals);
+    println!(
+        "final val loss over {} seeds: mean {:.4} ± {:.4} (min {:.4}, max \
+         {:.4})",
+        runs.len(),
+        s.mean,
+        s.stddev,
+        s.min,
+        s.max
+    );
+    if let Some(mem) = runs.iter().find_map(|r| r.memory) {
+        println!(
+            "per-seed hypergrad memory: tape {} + checkpoints {} (peak live \
+             {})",
+            human_bytes(mem.tape_bytes as u64),
+            human_bytes(mem.checkpoint_bytes as u64),
+            human_bytes(mem.peak_bytes as u64)
+        );
+    }
     Ok(())
 }
 

@@ -11,7 +11,8 @@ pub mod native;
 pub mod trainer;
 
 pub use native::{
-    print_train_summary, HypergradMode, NativeMetaTrainer, NativeTask,
+    print_train_summary, run_seed_sweep, HypergradMode, NativeMetaTrainer,
+    NativeSweepConfig, NativeTask, SeedRun,
 };
 #[cfg(feature = "pjrt")]
 pub use trainer::MetaTrainer;

@@ -2,21 +2,26 @@
 //! [`crate::autodiff`] alone — no PJRT, no artifacts, no Python anywhere.
 //!
 //! Mirrors the artifact driver's surface: an outer Adam loop over η whose
-//! per-step hypergradient comes from either `mixflow_hypergrad`
-//! (forward-over-reverse, the default) or `naive_hypergrad`
+//! per-step hypergradient comes from either `mixflow_hypergrad_with`
+//! (forward-over-reverse, the default, with a configurable
+//! [`CheckpointPolicy`] remat segment) or `naive_hypergrad`
 //! (reverse-over-reverse baseline), producing the same
-//! [`super::TrainReport`].
+//! [`super::TrainReport`].  Multi-seed sweeps fan the whole outer loop
+//! out over the coordinator's worker pool
+//! ([`crate::coordinator::scheduler::run_pool`]).
 
 use std::time::Instant;
 
 use crate::autodiff::mixflow::{
-    mixflow_hypergrad, naive_hypergrad, BilevelProblem, MemoryReport,
+    mixflow_hypergrad_with, naive_hypergrad, BilevelProblem,
+    CheckpointPolicy, MemoryReport,
 };
 use crate::autodiff::optim::InnerOptimiser;
 use crate::autodiff::problems::{
     AttentionProblem, HyperLrProblem, LossWeightingProblem,
 };
 use crate::autodiff::tensor::Tensor;
+use crate::coordinator::scheduler::{run_pool, Job};
 
 use super::TrainReport;
 
@@ -81,6 +86,7 @@ pub struct NativeMetaTrainer {
     problem: Box<dyn BilevelProblem>,
     task: NativeTask,
     mode: HypergradMode,
+    remat: CheckpointPolicy,
     meta_lr: f64,
     eta: Vec<Tensor>,
     adam_m: Vec<Tensor>,
@@ -119,6 +125,7 @@ impl NativeMetaTrainer {
             problem,
             task,
             mode: HypergradMode::Mixflow,
+            remat: CheckpointPolicy::Full,
             meta_lr: 0.05,
             eta,
             adam_m,
@@ -136,6 +143,13 @@ impl NativeMetaTrainer {
     /// Select the inner-loop optimiser (SGD default, momentum, Adam).
     pub fn with_inner_opt(mut self, opt: InnerOptimiser) -> NativeMetaTrainer {
         self.problem.set_optimiser(opt);
+        self
+    }
+
+    /// Checkpoint policy for the mixflow path (ignored by `--mode naive`,
+    /// which has no checkpoints to thin out).
+    pub fn with_remat(mut self, policy: CheckpointPolicy) -> NativeMetaTrainer {
+        self.remat = policy;
         self
     }
 
@@ -158,9 +172,12 @@ impl NativeMetaTrainer {
             self.problem.resample();
             let theta0 = self.problem.theta0();
             let h = match self.mode {
-                HypergradMode::Mixflow => {
-                    mixflow_hypergrad(self.problem.as_ref(), &theta0, &self.eta)
-                }
+                HypergradMode::Mixflow => mixflow_hypergrad_with(
+                    self.problem.as_ref(),
+                    &theta0,
+                    &self.eta,
+                    self.remat,
+                ),
                 HypergradMode::Naive => {
                     naive_hypergrad(self.problem.as_ref(), &theta0, &self.eta)
                 }
@@ -170,13 +187,20 @@ impl NativeMetaTrainer {
             self.adam_step(&h.d_eta);
         }
         let seconds = t0.elapsed().as_secs_f64();
+        let mut artifact = format!(
+            "native/{}/{}/{}",
+            self.task.name(),
+            self.mode.name(),
+            self.problem.optimiser().name()
+        );
+        // The naive path has no checkpoints to thin, so only a mixflow
+        // run is labelled with its remat policy.
+        if self.mode == HypergradMode::Mixflow && self.remat.segment() > 1 {
+            artifact.push('/');
+            artifact.push_str(&self.remat.name());
+        }
         TrainReport {
-            artifact: format!(
-                "native/{}/{}/{}",
-                self.task.name(),
-                self.mode.name(),
-                self.problem.optimiser().name()
-            ),
+            artifact,
             steps,
             steps_per_second: steps as f64 / seconds.max(1e-9),
             seconds,
@@ -206,6 +230,69 @@ impl NativeMetaTrainer {
     }
 }
 
+/// Configuration of one native multi-seed sweep (everything but the
+/// seeds themselves).
+#[derive(Debug, Clone, Copy)]
+pub struct NativeSweepConfig {
+    pub task: NativeTask,
+    pub mode: HypergradMode,
+    pub inner_opt: InnerOptimiser,
+    pub remat: CheckpointPolicy,
+    pub unroll: usize,
+    pub steps: usize,
+}
+
+/// One seed's result from [`run_seed_sweep`].
+#[derive(Debug, Clone)]
+pub struct SeedRun {
+    pub seed: u64,
+    pub report: TrainReport,
+    pub memory: Option<MemoryReport>,
+}
+
+/// Fan one native meta-training configuration out over
+/// `base_seed .. base_seed + n_seeds` on the coordinator's worker pool.
+/// Each seed gets its own trainer (and therefore its own tape + arena)
+/// on a pool thread; results come back sorted by seed.  Native step
+/// tapes are tiny next to the scheduler's usual HLO artifacts, so the
+/// admission budget is effectively unbounded and the pool degenerates to
+/// plain `min(seeds, cores)` parallelism.
+pub fn run_seed_sweep(
+    cfg: NativeSweepConfig,
+    base_seed: u64,
+    n_seeds: usize,
+) -> Vec<SeedRun> {
+    let jobs: Vec<Job<SeedRun>> = (0..n_seeds as u64)
+        .map(|i| {
+            let seed = base_seed.wrapping_add(i);
+            Job {
+                name: format!("seed{seed}"),
+                cost_bytes: (cfg.unroll as u64 + 2) * 64 * 1024,
+                work: Box::new(move || {
+                    let mut trainer = NativeMetaTrainer::with_unroll(
+                        cfg.task, seed, cfg.unroll,
+                    )
+                    .with_mode(cfg.mode)
+                    .with_inner_opt(cfg.inner_opt)
+                    .with_remat(cfg.remat);
+                    let report = trainer.train(cfg.steps);
+                    SeedRun { seed, report, memory: trainer.last_memory }
+                }),
+            }
+        })
+        .collect();
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(n_seeds.max(1));
+    let mut runs: Vec<SeedRun> = run_pool(jobs, workers, u64::MAX / 2)
+        .into_iter()
+        .map(|(_, run)| run)
+        .collect();
+    runs.sort_by_key(|r| r.seed);
+    runs
+}
+
 /// Render a native run the way the examples and the `native` CLI command
 /// present it: sampled loss curve, throughput, head→tail improvement, and
 /// the hypergradient memory split.  One implementation so the three call
@@ -230,10 +317,18 @@ pub fn print_train_summary(
     );
     if let Some(mem) = memory {
         println!(
-            "hypergrad memory: tape {} + checkpoints {} = {}",
+            "hypergrad memory: tape {} + checkpoints {} = {} (peak live {})",
             human_bytes(mem.tape_bytes as u64),
             human_bytes(mem.checkpoint_bytes as u64),
-            human_bytes(mem.total_bytes() as u64)
+            human_bytes(mem.total_bytes() as u64),
+            human_bytes(mem.peak_bytes as u64)
+        );
+        println!(
+            "hypergrad timing: fwd {} + bwd {}; arena {} reuses / {} allocs",
+            human_secs(mem.forward_seconds),
+            human_secs(mem.backward_seconds),
+            mem.arena_reuses,
+            mem.arena_allocs
         );
     }
 }
@@ -317,5 +412,46 @@ mod tests {
             trainer.eta().iter().map(|e| e.data[0]).collect();
         assert_ne!(before, after, "Adam step must move eta");
         assert!(trainer.last_memory.is_some());
+    }
+
+    #[test]
+    fn remat_policy_shows_up_in_the_artifact_name() {
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(NativeTask::HyperLr, 3, 4)
+                .with_remat(CheckpointPolicy::Remat { segment: 2 });
+        let report = trainer.train(1);
+        assert!(report.losses[0].is_finite());
+        assert!(
+            report.artifact.ends_with("hyperlr/mixflow/sgd/remat2"),
+            "got {:?}",
+            report.artifact
+        );
+    }
+
+    #[test]
+    fn seed_sweep_runs_on_the_pool_and_sorts_by_seed() {
+        let cfg = NativeSweepConfig {
+            task: NativeTask::HyperLr,
+            mode: HypergradMode::Mixflow,
+            inner_opt: InnerOptimiser::Sgd,
+            remat: CheckpointPolicy::Full,
+            unroll: 2,
+            steps: 2,
+        };
+        let runs = run_seed_sweep(cfg, 11, 3);
+        assert_eq!(runs.len(), 3);
+        let seeds: Vec<u64> = runs.iter().map(|r| r.seed).collect();
+        assert_eq!(seeds, vec![11, 12, 13]);
+        for run in &runs {
+            assert_eq!(run.report.losses.len(), 2);
+            assert!(run.report.losses.iter().all(|l| l.is_finite()));
+            assert!(run.memory.is_some(), "sweep must record memory");
+        }
+        // Different seeds draw different data: the loss curves should
+        // not be byte-identical across the whole sweep.
+        assert!(
+            runs.windows(2).any(|w| w[0].report.losses != w[1].report.losses),
+            "all seeds produced identical losses"
+        );
     }
 }

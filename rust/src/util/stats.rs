@@ -26,8 +26,10 @@ impl Summary {
                 stddev: 0.0,
             };
         }
+        // total_cmp: NaN samples (e.g. a seed sweep over empty loss
+        // curves) must degrade to NaN statistics, never panic the sort.
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let n = sorted.len();
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
@@ -114,6 +116,16 @@ mod tests {
     #[test]
     fn summary_empty() {
         assert_eq!(Summary::of(&[]).n, 0);
+    }
+
+    #[test]
+    fn summary_tolerates_nan_samples() {
+        // Regression: a multi-seed sweep over empty loss curves feeds
+        // NaN finals; the sort must not panic.
+        let s = Summary::of(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.mean.is_nan());
     }
 
     #[test]

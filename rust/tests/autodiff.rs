@@ -3,8 +3,9 @@
 //! agreement, the tape-memory regression, and native E2E training.
 
 use mixflow::autodiff::mixflow::{
-    fd_hypergrad, inner_step_values, mixflow_hypergrad, naive_hypergrad,
-    rel_err,
+    fd_hypergrad, inner_step_values, mixflow_hypergrad,
+    mixflow_hypergrad_with, naive_hypergrad, rel_err, CheckpointPolicy,
+    MemoryReport,
 };
 use mixflow::autodiff::optim::InnerOptimiser;
 use mixflow::autodiff::problems::{
@@ -447,48 +448,54 @@ fn hypergrads_match_fd_oracle_attention_adam() {
     );
 }
 
+/// Random small bilevel instance spanning all three tasks and all three
+/// inner optimisers — shared by the equivalence property tests.
+fn random_problem(g: &mut proptest::Gen) -> Box<dyn BilevelProblem> {
+    let seed = g.rng.next_u64();
+    let d = g.usize(2, 4);
+    let hidden = g.usize(2, 5);
+    let classes = g.usize(2, 4);
+    let batch = g.usize(2, 5);
+    let unroll = g.usize(1, 4);
+    let alpha = g.f64(0.02, 0.12);
+    let opt = *g.choose(&[
+        InnerOptimiser::Sgd,
+        InnerOptimiser::momentum(),
+        InnerOptimiser::adam(),
+    ]);
+    match g.usize(0, 2) {
+        0 => Box::new(
+            HyperLrProblem::with_config(
+                seed, d, hidden, classes, batch, unroll, alpha,
+            )
+            .with_optimiser(opt),
+        ),
+        1 => Box::new(
+            LossWeightingProblem::with_config(
+                seed,
+                d,
+                hidden,
+                classes,
+                batch,
+                unroll,
+                alpha,
+                g.f64(0.0, 0.6),
+            )
+            .with_optimiser(opt),
+        ),
+        _ => Box::new(
+            AttentionProblem::with_config(
+                seed, d, batch, classes, unroll, alpha,
+            )
+            .with_optimiser(opt),
+        ),
+    }
+}
+
 #[test]
 fn property_naive_equals_mixflow_on_random_instances() {
     proptest::check("naive≈mixflow", 18, |g| {
-        let seed = g.rng.next_u64();
-        let d = g.usize(2, 4);
-        let hidden = g.usize(2, 5);
-        let classes = g.usize(2, 4);
-        let batch = g.usize(2, 5);
-        let unroll = g.usize(1, 4);
-        let alpha = g.f64(0.02, 0.12);
-        let opt = *g.choose(&[
-            InnerOptimiser::Sgd,
-            InnerOptimiser::momentum(),
-            InnerOptimiser::adam(),
-        ]);
-        let problem: Box<dyn BilevelProblem> = match g.usize(0, 2) {
-            0 => Box::new(
-                HyperLrProblem::with_config(
-                    seed, d, hidden, classes, batch, unroll, alpha,
-                )
-                .with_optimiser(opt),
-            ),
-            1 => Box::new(
-                LossWeightingProblem::with_config(
-                    seed,
-                    d,
-                    hidden,
-                    classes,
-                    batch,
-                    unroll,
-                    alpha,
-                    g.f64(0.0, 0.6),
-                )
-                .with_optimiser(opt),
-            ),
-            _ => Box::new(
-                AttentionProblem::with_config(
-                    seed, d, batch, classes, unroll, alpha,
-                )
-                .with_optimiser(opt),
-            ),
-        };
+        let problem = random_problem(g);
         let theta0 = problem.theta0();
         let eta = problem.eta0();
         let naive = naive_hypergrad(problem.as_ref(), &theta0, &eta);
@@ -503,6 +510,132 @@ fn property_naive_equals_mixflow_on_random_instances() {
             ))
         }
     });
+}
+
+#[test]
+fn property_remat_equals_full_checkpointing() {
+    // Remat recomputes the identical op sequence from the same
+    // checkpoints, so every segment length must reproduce the
+    // full-checkpoint hypergradient to 1e-12 (bit-for-bit in practice)
+    // across tasks, optimisers and K ∈ {1, 2, 4, T}.
+    proptest::check("remat≡full", 16, |g| {
+        let problem = random_problem(g);
+        let theta0 = problem.theta0();
+        let eta = problem.eta0();
+        let full = mixflow_hypergrad(problem.as_ref(), &theta0, &eta);
+        let t = problem.unroll().max(1);
+        for k in [1usize, 2, 4, t] {
+            let remat = mixflow_hypergrad_with(
+                problem.as_ref(),
+                &theta0,
+                &eta,
+                CheckpointPolicy::Remat { segment: k },
+            );
+            let err = rel_err(&full.d_eta, &remat.d_eta);
+            if err > 1e-12 {
+                return Err(format!(
+                    "remat K={k} diverged from full checkpointing: rel err \
+                     {err:.3e} ({} inner opt, unroll {t})",
+                    problem.optimiser().name()
+                ));
+            }
+            if (remat.outer_loss - full.outer_loss).abs() > 1e-12 {
+                return Err(format!(
+                    "remat K={k} changed the outer loss: {} vs {}",
+                    remat.outer_loss, full.outer_loss
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn remat_segment_one_is_bitwise_identical_to_full() {
+    let p = HyperLrProblem::with_unroll(3, 5)
+        .with_optimiser(InnerOptimiser::momentum());
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let a = mixflow_hypergrad(&p, &theta0, &eta);
+    let b = mixflow_hypergrad_with(
+        &p,
+        &theta0,
+        &eta,
+        CheckpointPolicy::Remat { segment: 1 },
+    );
+    for (x, y) in a.d_eta.iter().zip(b.d_eta.iter()) {
+        assert_eq!(x.max_abs_diff(y), 0.0, "K=1 must be bit-for-bit");
+    }
+    assert_eq!(a.outer_loss, b.outer_loss);
+    assert_eq!(a.memory.checkpoint_bytes, b.memory.checkpoint_bytes);
+    assert_eq!(a.memory.tape_bytes, b.memory.tape_bytes);
+}
+
+#[test]
+fn remat_peak_bytes_shrink_monotonically_with_segment() {
+    // The acceptance knob: on the paper's headline configuration
+    // (attention + Adam, T = 16), growing K up to ~√T must strictly
+    // shrink both the peak checkpoint bytes and the overall peak, while
+    // reproducing the K=1 hypergradient.
+    let p = AttentionProblem::with_unroll(1, 16)
+        .with_optimiser(InnerOptimiser::adam());
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let full = mixflow_hypergrad(&p, &theta0, &eta);
+    let mut prev: Option<MemoryReport> = None;
+    for k in [1usize, 2, 4] {
+        let h = mixflow_hypergrad_with(
+            &p,
+            &theta0,
+            &eta,
+            CheckpointPolicy::Remat { segment: k },
+        );
+        assert!(
+            rel_err(&full.d_eta, &h.d_eta) <= 1e-12,
+            "remat K={k} drifted from the full-checkpoint hypergradient"
+        );
+        if let Some(prev) = &prev {
+            assert!(
+                h.memory.checkpoint_bytes < prev.checkpoint_bytes,
+                "K={k}: checkpoint bytes {} not below previous {}",
+                h.memory.checkpoint_bytes,
+                prev.checkpoint_bytes
+            );
+            assert!(
+                h.memory.peak_bytes < prev.peak_bytes,
+                "K={k}: peak bytes {} not below previous {}",
+                h.memory.peak_bytes,
+                prev.peak_bytes
+            );
+            assert!(
+                h.memory.total_bytes() < prev.total_bytes(),
+                "K={k}: total bytes {} not below previous {}",
+                h.memory.total_bytes(),
+                prev.total_bytes()
+            );
+        }
+        prev = Some(h.memory);
+    }
+}
+
+#[test]
+fn mixflow_reuses_arena_buffers_naive_does_not() {
+    let p = HyperLrProblem::with_unroll(2, 6);
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let mixed = mixflow_hypergrad(&p, &theta0, &eta);
+    assert!(
+        mixed.memory.arena_reuses > 0,
+        "step tapes must recycle buffers through the shared arena"
+    );
+    assert!(mixed.memory.arena_allocs > 0);
+    assert!(mixed.memory.forward_seconds >= 0.0);
+    assert!(mixed.memory.backward_seconds >= 0.0);
+    // The naive path records one monolithic tape and never resets it, so
+    // nothing ever returns to its arena.
+    let naive = naive_hypergrad(&p, &theta0, &eta);
+    assert_eq!(naive.memory.arena_reuses, 0);
+    assert_eq!(naive.memory.peak_bytes, naive.memory.tape_bytes);
 }
 
 #[test]
