@@ -10,7 +10,7 @@
 //! cargo run --release --example native_attention -- [steps]
 //! ```
 
-use mixflow::autodiff::InnerOptimiser;
+use mixflow::autodiff::{CheckpointPolicy, InnerOptimiser};
 use mixflow::meta::{print_train_summary, NativeMetaTrainer, NativeTask};
 
 fn main() {
@@ -22,10 +22,12 @@ fn main() {
         "meta-learning per-leaf LRs for attention+layernorm (adam inner)"
     );
     // α₀ starts deliberately small; the meta level must grow the LRs to
-    // cut the post-unroll validation loss.
+    // cut the post-unroll validation loss.  The remat segment is left on
+    // `auto`, so the persistent engine resolves K ≈ √T per run.
     let mut trainer =
         NativeMetaTrainer::with_unroll(NativeTask::Attention, 7, 6)
-            .with_inner_opt(InnerOptimiser::adam());
+            .with_inner_opt(InnerOptimiser::adam())
+            .with_remat(CheckpointPolicy::Auto);
     let report = trainer.train(steps);
     print_train_summary(&report, trainer.last_memory.as_ref());
     println!(
@@ -38,5 +40,10 @@ fn main() {
     );
     let (head, tail) = report.improvement(10);
     assert!(tail < head, "learned LRs must improve the validation loss");
+    assert!(
+        report.artifact.ends_with("attention/mixflow/adam/auto"),
+        "auto remat must label the run: {:?}",
+        report.artifact
+    );
     println!("native_attention OK");
 }

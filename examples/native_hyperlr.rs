@@ -29,5 +29,19 @@ fn main() {
     );
     let (head, tail) = report.improvement(10);
     assert!(tail < head, "learned LRs must improve the validation loss");
+    // All those outer steps ran on ONE persistent engine: its last
+    // per-run memory report must show warm-arena reuse.
+    let mem = trainer.last_memory.expect("memory recorded");
+    assert!(
+        mem.arena_reuses > 0,
+        "persistent engine must recycle buffers across outer steps"
+    );
+    println!(
+        "engine: {} hypergradients on one tape; last step reused {} buffers \
+         ({} fresh allocs)",
+        trainer.engine().outer_steps(),
+        mem.arena_reuses,
+        mem.arena_allocs
+    );
     println!("native_hyperlr OK");
 }

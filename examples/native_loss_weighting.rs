@@ -21,5 +21,9 @@ fn main() {
     print_train_summary(&report, trainer.last_memory.as_ref());
     let (head, tail) = report.improvement(10);
     assert!(tail < head, "meta loss weighting must improve validation loss");
+    println!(
+        "engine: {} hypergradients on one persistent tape",
+        trainer.engine().outer_steps()
+    );
     println!("native_loss_weighting OK");
 }

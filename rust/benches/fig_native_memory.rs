@@ -6,19 +6,20 @@
 //! optimiser (the setup the paper actually benchmarks) — and each unroll
 //! length T, computes the hypergradient twice: reverse-over-reverse on
 //! one monolithic tape vs MixFlow-MG forward-over-reverse with per-step
-//! tape reuse, and reports the live tape bytes each path needs.  Also
-//! cross-checks the two paths agree numerically, and (when an artifact
-//! manifest is discoverable) prints the `hlo::memory` simulator's
-//! default/mixflow ratios next to the native ones so the simulator's
-//! trend has a ground-truth oracle.
+//! tape reuse, and reports the live tape bytes each path needs.  Both
+//! paths run on ONE persistent [`HypergradEngine`] each, reused across
+//! the whole unroll ladder — the configuration every driver now shares.
+//! Also cross-checks the two paths agree numerically, and (when an
+//! artifact manifest is discoverable) prints the `hlo::memory`
+//! simulator's default/mixflow ratios next to the native ones so the
+//! simulator's trend has a ground-truth oracle.
 //!
 //! ```bash
 //! cargo run --release --bin fig_native_memory
 //! ```
 
-use mixflow::autodiff::mixflow::{
-    mixflow_hypergrad, naive_hypergrad, rel_err, BilevelProblem,
-};
+use mixflow::autodiff::engine::{HypergradEngine, HypergradMode};
+use mixflow::autodiff::mixflow::{rel_err, BilevelProblem};
 use mixflow::autodiff::optim::InnerOptimiser;
 use mixflow::autodiff::problems::{AttentionProblem, HyperLrProblem};
 use mixflow::util::stats::human_bytes;
@@ -52,13 +53,19 @@ fn run_config(label: &str, build: ProblemBuilder) -> bool {
     ])
     .numeric_cols(&[0, 1, 2, 3, 4, 5]);
 
+    // One persistent engine per path, shared by the whole ladder: rungs
+    // after the first draw their step tapes out of the warm arena.
+    let mut naive_engine =
+        HypergradEngine::builder().mode(HypergradMode::Naive).build();
+    let mut mixflow_engine = HypergradEngine::builder().build();
+
     let mut ok = true;
     for &unroll in &unrolls {
         let problem = build(unroll);
         let theta0 = problem.theta0();
         let eta = problem.eta0();
-        let naive = naive_hypergrad(problem.as_ref(), &theta0, &eta);
-        let mixed = mixflow_hypergrad(problem.as_ref(), &theta0, &eta);
+        let naive = naive_engine.run(problem.as_ref(), &theta0, &eta);
+        let mixed = mixflow_engine.run(problem.as_ref(), &theta0, &eta);
         let err = rel_err(&naive.d_eta, &mixed.d_eta);
         let naive_bytes = naive.memory.total_bytes();
         let mixed_bytes = mixed.memory.total_bytes();
@@ -81,6 +88,12 @@ fn run_config(label: &str, build: ProblemBuilder) -> bool {
         ]);
     }
     println!("{}", t.render());
+    println!(
+        "  (persistent engines: naive ran {} ladder rungs on one tape, \
+         mixflow {})",
+        naive_engine.outer_steps(),
+        mixflow_engine.outer_steps()
+    );
     ok
 }
 

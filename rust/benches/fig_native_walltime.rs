@@ -5,9 +5,12 @@
 //! wall-clock improvement; this binary pins the repo's perf trajectory
 //! by timing all three paths on the hyper-LR (SGD inner loop) and the
 //! attention+layernorm (Adam inner loop) workloads across the unroll
-//! ladder, via [`mixflow::util::bench`].  It writes every timing and
-//! memory counter to `BENCH_native.json` (CI uploads it as an artifact)
-//! and exits nonzero if
+//! ladder, via [`mixflow::util::bench`].  Each variant runs on ONE
+//! persistent [`HypergradEngine`], so the timed iterations measure the
+//! steady-state (arena-warm) path every driver now runs.  It writes
+//! every timing and memory counter to `BENCH_native.json` (CI uploads it
+//! as an artifact and gates regressions against the committed baseline
+//! via the `perf_gate` bin) and exits nonzero if
 //!
 //! * naive and mixflow disagree beyond 1e-6 (float-op reordering bound),
 //! * remat (K = 4) leaves the full-checkpoint hypergradient by more
@@ -20,9 +23,9 @@
 //! cargo run --release --bin fig_native_walltime -- --smoke # CI mode
 //! ```
 
+use mixflow::autodiff::engine::{HypergradEngine, HypergradMode};
 use mixflow::autodiff::mixflow::{
-    mixflow_hypergrad_with, naive_hypergrad, rel_err, BilevelProblem,
-    CheckpointPolicy, Hypergrad,
+    rel_err, BilevelProblem, CheckpointPolicy, Hypergrad,
 };
 use mixflow::autodiff::optim::InnerOptimiser;
 use mixflow::autodiff::problems::{AttentionProblem, HyperLrProblem};
@@ -110,6 +113,13 @@ fn main() {
     let mut ok = true;
 
     for (task, opt, build) in configs {
+        // Persistent engines: warmup iterations fill the arena, timed
+        // iterations measure the allocator-free steady state.
+        let mut naive_engine =
+            HypergradEngine::builder().mode(HypergradMode::Naive).build();
+        let mut full_engine = HypergradEngine::builder().build();
+        let mut remat_engine =
+            HypergradEngine::builder().checkpoint(remat).build();
         for &unroll in unrolls {
             let problem = build(unroll);
             let theta0 = problem.theta0();
@@ -121,28 +131,29 @@ fn main() {
             let mut naive_h = None;
             let s_naive =
                 bench.run(&format!("{task}+{opt}/T{unroll}/naive"), || {
-                    naive_h =
-                        Some(naive_hypergrad(problem.as_ref(), &theta0, &eta));
+                    naive_h = Some(naive_engine.run(
+                        problem.as_ref(),
+                        &theta0,
+                        &eta,
+                    ));
                 });
             let mut full_h = None;
             let s_full =
                 bench.run(&format!("{task}+{opt}/T{unroll}/mixflow"), || {
-                    full_h = Some(mixflow_hypergrad_with(
+                    full_h = Some(full_engine.run(
                         problem.as_ref(),
                         &theta0,
                         &eta,
-                        CheckpointPolicy::Full,
                     ));
                 });
             let mut rem_h = None;
             let s_remat = bench.run(
                 &format!("{task}+{opt}/T{unroll}/mixflow-remat{REMAT_K}"),
                 || {
-                    rem_h = Some(mixflow_hypergrad_with(
+                    rem_h = Some(remat_engine.run(
                         problem.as_ref(),
                         &theta0,
                         &eta,
-                        remat,
                     ));
                 },
             );

@@ -1,0 +1,248 @@
+//! CI perf-regression gate: compare the smoke-mode `BENCH_native.json`
+//! written by `fig_native_walltime` against the committed baseline
+//! (`rust/benches/BENCH_native_baseline.json`) and fail the job when a
+//! mixflow variant regresses by more than 20% on either axis:
+//!
+//! * **peak_bytes** — compared directly: the byte counters are
+//!   deterministic, so any growth is a real memory regression.
+//! * **walltime** — compared as the `mixflow/naive` median ratio within
+//!   each file rather than as absolute seconds, so a slower or faster CI
+//!   machine cancels out of both sides and only a genuine slowdown of
+//!   the mixflow path relative to the naive baseline trips the gate.
+//!
+//! Rows present in only one file are reported but never fail the gate
+//! (new configurations need a baseline refresh, not a red build).  To
+//! refresh after an intentional perf change:
+//!
+//! ```bash
+//! cargo run --release --bin fig_native_walltime -- --smoke
+//! cp BENCH_native.json rust/benches/BENCH_native_baseline.json
+//! ```
+//!
+//! ```bash
+//! cargo run --release --bin perf_gate [current.json [baseline.json]]
+//! ```
+
+use std::collections::BTreeMap;
+
+use mixflow::util::json::Json;
+use mixflow::util::table::Table;
+
+/// Regression threshold: fail at >20% worse than baseline.
+const TOLERANCE: f64 = 0.20;
+
+/// Row key inside one results file.
+type Key = (String, String, u64, String); // (task, inner_opt, unroll, variant)
+
+struct Row {
+    median_s: f64,
+    peak_bytes: f64,
+}
+
+fn load_rows(path: &str) -> Result<BTreeMap<Key, Row>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let results = doc
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{path}: no `results` array"))?;
+    let mut out = BTreeMap::new();
+    for (i, row) in results.iter().enumerate() {
+        let s = |k: &str| -> Result<String, String> {
+            row.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("{path}: results[{i}] missing `{k}`"))
+        };
+        let n = |k: &str| -> Result<f64, String> {
+            row.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("{path}: results[{i}] missing `{k}`"))
+        };
+        let key =
+            (s("task")?, s("inner_opt")?, n("unroll")? as u64, s("variant")?);
+        out.insert(
+            key,
+            Row { median_s: n("median_s")?, peak_bytes: n("peak_bytes")? },
+        );
+    }
+    Ok(out)
+}
+
+/// `mixflow-variant walltime / naive walltime` for one (task, opt, T)
+/// within a single results file — the machine-independent timing signal.
+fn walltime_ratio(
+    rows: &BTreeMap<Key, Row>,
+    task: &str,
+    opt: &str,
+    unroll: u64,
+    variant: &str,
+) -> Option<f64> {
+    let naive = rows.get(&(
+        task.to_string(),
+        opt.to_string(),
+        unroll,
+        "naive".to_string(),
+    ))?;
+    let var = rows.get(&(
+        task.to_string(),
+        opt.to_string(),
+        unroll,
+        variant.to_string(),
+    ))?;
+    if naive.median_s <= 0.0 {
+        return None;
+    }
+    Some(var.median_s / naive.median_s)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let current_path =
+        args.first().map(String::as_str).unwrap_or("BENCH_native.json");
+    let baseline_path = args
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("rust/benches/BENCH_native_baseline.json");
+    println!(
+        "perf gate: {current_path} vs baseline {baseline_path} \
+         (tolerance {:.0}%)",
+        TOLERANCE * 100.0
+    );
+
+    // A baseline marked `"bootstrap": true` has no measured rows yet
+    // (it was committed from an environment without a Rust toolchain):
+    // pass with a loud warning so the first CI machine with real
+    // numbers can refresh it, after which the gate arms itself.
+    if let Ok(text) = std::fs::read_to_string(baseline_path) {
+        if let Ok(doc) = Json::parse(&text) {
+            if doc.get("bootstrap").and_then(Json::as_bool) == Some(true) {
+                println!(
+                    "WARN: baseline {baseline_path} is a bootstrap \
+                     placeholder — gate not armed.\nRefresh it with:\n  \
+                     cargo run --release --bin fig_native_walltime -- \
+                     --smoke\n  cp {current_path} {baseline_path}"
+                );
+                return;
+            }
+        }
+    }
+
+    let (current, baseline) =
+        match (load_rows(current_path), load_rows(baseline_path)) {
+            (Ok(c), Ok(b)) => (c, b),
+            (Err(e), _) | (_, Err(e)) => {
+                eprintln!("FAIL: {e}");
+                std::process::exit(1);
+            }
+        };
+
+    let mut t = Table::new(&[
+        "config",
+        "variant",
+        "peak now",
+        "peak base",
+        "Δpeak",
+        "wall ratio now",
+        "wall ratio base",
+        "Δwall",
+        "verdict",
+    ])
+    .numeric_cols(&[2, 3, 4, 5, 6, 7]);
+    let mut failures: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+
+    for ((task, opt, unroll, variant), cur) in &current {
+        if !variant.starts_with("mixflow") {
+            continue;
+        }
+        let key =
+            (task.clone(), opt.clone(), *unroll, variant.clone());
+        let Some(base) = baseline.get(&key) else {
+            println!(
+                "note: {task}+{opt}/T{unroll}/{variant} has no baseline row \
+                 (new config?) — skipped"
+            );
+            continue;
+        };
+        compared += 1;
+        let peak_rel = if base.peak_bytes > 0.0 {
+            cur.peak_bytes / base.peak_bytes - 1.0
+        } else {
+            0.0
+        };
+        let wall_now = walltime_ratio(&current, task, opt, *unroll, variant);
+        let wall_base =
+            walltime_ratio(&baseline, task, opt, *unroll, variant);
+        let wall_rel = match (wall_now, wall_base) {
+            (Some(now), Some(base)) if base > 0.0 => Some(now / base - 1.0),
+            _ => None,
+        };
+
+        let mut verdict = "ok";
+        if peak_rel > TOLERANCE {
+            verdict = "FAIL";
+            failures.push(format!(
+                "{task}+{opt}/T{unroll}/{variant}: peak_bytes {} vs \
+                 baseline {} (+{:.1}%)",
+                cur.peak_bytes as u64,
+                base.peak_bytes as u64,
+                peak_rel * 100.0
+            ));
+        }
+        if let Some(rel) = wall_rel {
+            if rel > TOLERANCE {
+                verdict = "FAIL";
+                failures.push(format!(
+                    "{task}+{opt}/T{unroll}/{variant}: mixflow/naive \
+                     walltime ratio {:.3} vs baseline {:.3} (+{:.1}%)",
+                    wall_now.unwrap_or(f64::NAN),
+                    wall_base.unwrap_or(f64::NAN),
+                    rel * 100.0
+                ));
+            }
+        }
+        t.row(vec![
+            format!("{task}+{opt}/T{unroll}"),
+            variant.clone(),
+            format!("{}", cur.peak_bytes as u64),
+            format!("{}", base.peak_bytes as u64),
+            format!("{:+.1}%", peak_rel * 100.0),
+            wall_now.map_or("-".to_string(), |r| format!("{r:.3}")),
+            wall_base.map_or("-".to_string(), |r| format!("{r:.3}")),
+            wall_rel.map_or("-".to_string(), |r| format!("{:+.1}%", r * 100.0)),
+            verdict.to_string(),
+        ]);
+    }
+
+    for key in baseline.keys() {
+        if !current.contains_key(key) && key.3.starts_with("mixflow") {
+            println!(
+                "note: baseline row {}+{}/T{}/{} missing from current run",
+                key.0, key.1, key.2, key.3
+            );
+        }
+    }
+
+    println!("{}", t.render());
+    if compared == 0 {
+        eprintln!(
+            "FAIL: no overlapping mixflow rows between {current_path} and \
+             {baseline_path}"
+        );
+        std::process::exit(1);
+    }
+    if !failures.is_empty() {
+        eprintln!("FAIL: perf regressions beyond {:.0}%:", TOLERANCE * 100.0);
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        eprintln!(
+            "(intentional? refresh the baseline: cp BENCH_native.json \
+             rust/benches/BENCH_native_baseline.json)"
+        );
+        std::process::exit(1);
+    }
+    println!("perf_gate OK ({compared} mixflow rows within tolerance)");
+}

@@ -1,0 +1,570 @@
+//! `HypergradEngine` — the unified, persistent solver API for every
+//! hypergradient path.
+//!
+//! Before the engine, the public surface was three free functions
+//! (`naive_hypergrad`, `mixflow_hypergrad`, `mixflow_hypergrad_with`)
+//! plus the `fd_hypergrad` oracle, each rebuilding its [`Tape`] and
+//! buffer arena per call — so the arena's recycling never amortised
+//! *across* outer steps, and every driver (the `native` CLI command,
+//! `NativeMetaTrainer`, the figure benches, the examples) re-wired the
+//! same configuration by hand.
+//!
+//! The engine owns ONE persistent tape + arena for its whole lifetime.
+//! Each [`HypergradEngine::run`] resets the tape (returning the previous
+//! step's buffers to the arena) and computes the next hypergradient out
+//! of recycled storage: from the second outer step on, the hot path is
+//! allocator-free and [`MemoryReport::arena_reuses`] counts the savings.
+//! The strategy behind `run` is a [`HypergradStrategy`] trait object —
+//! naive reverse-over-reverse, MixFlow-MG forward-over-reverse (with the
+//! [`CheckpointPolicy`] remat knob, including the run-time
+//! [`CheckpointPolicy::Auto`] `K ≈ √T` resolution), or central finite
+//! differences as a first-class cross-check mode — so drivers select a
+//! path by value ([`HypergradMode`]) and exotic callers can plug their
+//! own strategy.
+//!
+//! The old free functions survive as thin shims that build a throwaway
+//! engine, so existing call sites keep compiling; see the "Engine API"
+//! section of `rust/src/autodiff/README.md` for the builder surface and
+//! migration notes.
+
+use std::time::Instant;
+
+use super::mixflow::{
+    inner_step_values_into, mixflow_hypergrad_in, naive_hypergrad_in,
+    BilevelProblem, CheckpointPolicy, Hypergrad, MemoryReport,
+};
+use super::optim::InnerOptimiser;
+use super::tape::{NodeId, Tape};
+use super::tensor::Tensor;
+use crate::util::args::CliEnum;
+
+/// Which hypergradient path an engine (or the `native` CLI) drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HypergradMode {
+    /// Reverse-over-reverse over one monolithic tape.
+    Naive,
+    /// Forward-over-reverse with per-step tape reuse (MixFlow-MG).
+    Mixflow,
+    /// Central finite differences over every η element — the slow
+    /// numerical oracle, exposed as a first-class mode for cross-checks.
+    Fd,
+}
+
+impl HypergradMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HypergradMode::Naive => "naive",
+            HypergradMode::Mixflow => "mixflow",
+            HypergradMode::Fd => "fd",
+        }
+    }
+
+    /// Case- and whitespace-insensitive (`--mode Mixflow` must work).
+    pub fn parse(s: &str) -> Option<HypergradMode> {
+        match s.trim().to_lowercase().as_str() {
+            "naive" => Some(HypergradMode::Naive),
+            "mixflow" => Some(HypergradMode::Mixflow),
+            "fd" => Some(HypergradMode::Fd),
+            _ => None,
+        }
+    }
+}
+
+impl CliEnum for HypergradMode {
+    fn name(&self) -> String {
+        // Method-call syntax resolves to the inherent `name` above.
+        self.name().to_string()
+    }
+
+    fn parse(s: &str) -> Option<HypergradMode> {
+        HypergradMode::parse(s)
+    }
+
+    fn variants() -> &'static [&'static str] {
+        &["naive", "mixflow", "fd"]
+    }
+}
+
+/// One hypergradient path behind the engine: given the engine's
+/// persistent tape, compute `dF/dη` for a bilevel problem at `(θ₀, η)`.
+///
+/// Implementations must treat the tape as scratch — reset it on entry
+/// (recycling whatever the previous run left) and leave nothing behind
+/// that a later run would trip over.  The built-in strategies are
+/// [`NaiveStrategy`], [`MixflowStrategy`] and [`FdStrategy`]; custom
+/// ones plug in via [`HypergradEngine::with_strategy`].
+pub trait HypergradStrategy: Send {
+    /// Short path name, used in artifact labels and reports.
+    fn name(&self) -> &'static str;
+
+    /// Compute one hypergradient on the engine's persistent tape.
+    fn run(
+        &mut self,
+        tape: &mut Tape,
+        problem: &dyn BilevelProblem,
+        theta0: &[Tensor],
+        eta: &[Tensor],
+    ) -> Hypergrad;
+}
+
+/// Reverse-over-reverse on one monolithic tape (the baseline).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NaiveStrategy;
+
+impl HypergradStrategy for NaiveStrategy {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn run(
+        &mut self,
+        tape: &mut Tape,
+        problem: &dyn BilevelProblem,
+        theta0: &[Tensor],
+        eta: &[Tensor],
+    ) -> Hypergrad {
+        naive_hypergrad_in(tape, problem, theta0, eta)
+    }
+}
+
+/// MixFlow-MG forward-over-reverse with per-step tape reuse under a
+/// [`CheckpointPolicy`] ([`CheckpointPolicy::Auto`] resolves `K ≈ √T`
+/// from the problem's unroll at run time).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MixflowStrategy {
+    pub policy: CheckpointPolicy,
+}
+
+impl HypergradStrategy for MixflowStrategy {
+    fn name(&self) -> &'static str {
+        "mixflow"
+    }
+
+    fn run(
+        &mut self,
+        tape: &mut Tape,
+        problem: &dyn BilevelProblem,
+        theta0: &[Tensor],
+        eta: &[Tensor],
+    ) -> Hypergrad {
+        mixflow_hypergrad_in(tape, problem, theta0, eta, self.policy)
+    }
+}
+
+/// Central finite differences over every η element: `2·|η|` forward
+/// unrolls per hypergradient, all on the engine's reused tape.  The
+/// returned [`MemoryReport`] carries the peak step-tape footprint and
+/// the arena traffic; `checkpoint_bytes` is 0 (nothing is checkpointed)
+/// and the whole wall-clock lands in `forward_seconds` (there is no
+/// adjoint sweep).
+#[derive(Debug, Clone, Copy)]
+pub struct FdStrategy {
+    pub epsilon: f64,
+}
+
+impl FdStrategy {
+    pub fn new(epsilon: f64) -> FdStrategy {
+        assert!(
+            epsilon > 0.0,
+            "fd epsilon must be positive, got {epsilon}"
+        );
+        FdStrategy { epsilon }
+    }
+}
+
+impl Default for FdStrategy {
+    fn default() -> FdStrategy {
+        FdStrategy::new(DEFAULT_FD_EPSILON)
+    }
+}
+
+/// Default central-difference step for [`FdStrategy`] / `--fd-eps`.
+pub const DEFAULT_FD_EPSILON: f64 = 1e-5;
+
+/// `F(η)` by forward unroll on a reused tape, folding each step tape's
+/// size into `peak = (bytes, nodes)`.
+fn fd_outer_at(
+    tape: &mut Tape,
+    problem: &dyn BilevelProblem,
+    theta0: &[Tensor],
+    eta: &[Tensor],
+    peak: &mut (usize, usize),
+) -> f64 {
+    let opt = problem.optimiser();
+    let mut theta: Vec<Tensor> = theta0.to_vec();
+    let mut state = opt.init_state(theta0);
+    for t in 0..problem.unroll() {
+        let (next_theta, next_state, stats) =
+            inner_step_values_into(problem, tape, &theta, &state, eta, t);
+        peak.0 = peak.0.max(stats.bytes);
+        peak.1 = peak.1.max(stats.nodes);
+        theta = next_theta;
+        state = next_state;
+    }
+    tape.reset();
+    let ids: Vec<NodeId> =
+        theta.iter().map(|v| tape.leaf(v.clone())).collect();
+    let outer = problem.outer_loss(tape, &ids);
+    peak.0 = peak.0.max(tape.stats().bytes);
+    peak.1 = peak.1.max(tape.stats().nodes);
+    tape.value(outer).item()
+}
+
+impl HypergradStrategy for FdStrategy {
+    fn name(&self) -> &'static str {
+        "fd"
+    }
+
+    fn run(
+        &mut self,
+        tape: &mut Tape,
+        problem: &dyn BilevelProblem,
+        theta0: &[Tensor],
+        eta: &[Tensor],
+    ) -> Hypergrad {
+        let h = self.epsilon;
+        tape.reset();
+        let arena_before = tape.arena_stats();
+        let t0 = Instant::now();
+        let mut peak = (0usize, 0usize);
+        let outer_loss = fd_outer_at(tape, problem, theta0, eta, &mut peak);
+        let mut d_eta = Vec::with_capacity(eta.len());
+        for (li, leaf) in eta.iter().enumerate() {
+            let mut g = Tensor::zeros(&leaf.shape);
+            for j in 0..leaf.elements() {
+                let mut plus: Vec<Tensor> = eta.to_vec();
+                plus[li].data[j] += h;
+                let mut minus: Vec<Tensor> = eta.to_vec();
+                minus[li].data[j] -= h;
+                let f_plus =
+                    fd_outer_at(tape, problem, theta0, &plus, &mut peak);
+                let f_minus =
+                    fd_outer_at(tape, problem, theta0, &minus, &mut peak);
+                g.data[j] = (f_plus - f_minus) / (2.0 * h);
+            }
+            d_eta.push(g);
+        }
+        let arena = tape.arena_stats();
+        Hypergrad {
+            d_eta,
+            outer_loss,
+            memory: MemoryReport {
+                tape_bytes: peak.0,
+                checkpoint_bytes: 0,
+                nodes: peak.1,
+                peak_bytes: peak.0,
+                arena_allocs: arena.allocs - arena_before.allocs,
+                arena_reuses: arena.reuses - arena_before.reuses,
+                forward_seconds: t0.elapsed().as_secs_f64(),
+                backward_seconds: 0.0,
+            },
+        }
+    }
+}
+
+/// Fluent configuration for a [`HypergradEngine`].  All fields are
+/// plain values, so a builder can be stored and re-`build()` cheaply
+/// (the trainers do this when a mode/policy knob changes pre-training).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineBuilder {
+    mode: HypergradMode,
+    policy: CheckpointPolicy,
+    inner_opt: Option<InnerOptimiser>,
+    fd_epsilon: f64,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> EngineBuilder {
+        EngineBuilder {
+            mode: HypergradMode::Mixflow,
+            policy: CheckpointPolicy::Full,
+            inner_opt: None,
+            fd_epsilon: DEFAULT_FD_EPSILON,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Select the hypergradient path (default: mixflow).
+    pub fn mode(mut self, mode: HypergradMode) -> EngineBuilder {
+        self.mode = mode;
+        self
+    }
+
+    /// Checkpoint policy for the mixflow path (default: full; ignored by
+    /// naive/fd, which have no checkpoints to thin).
+    pub fn checkpoint(mut self, policy: CheckpointPolicy) -> EngineBuilder {
+        self.policy = policy;
+        self
+    }
+
+    /// Inner-loop optimiser the engine installs on problems it is asked
+    /// to [`HypergradEngine::configure_problem`] (default: leave the
+    /// problem's own choice alone).
+    pub fn inner_opt(mut self, opt: InnerOptimiser) -> EngineBuilder {
+        self.inner_opt = Some(opt);
+        self
+    }
+
+    /// Central-difference step for the fd path (default 1e-5).
+    pub fn fd_epsilon(mut self, epsilon: f64) -> EngineBuilder {
+        assert!(epsilon > 0.0, "fd epsilon must be positive");
+        self.fd_epsilon = epsilon;
+        self
+    }
+
+    pub fn build(self) -> HypergradEngine {
+        let strategy: Box<dyn HypergradStrategy> = match self.mode {
+            HypergradMode::Naive => Box::new(NaiveStrategy),
+            HypergradMode::Mixflow => {
+                Box::new(MixflowStrategy { policy: self.policy })
+            }
+            HypergradMode::Fd => Box::new(FdStrategy::new(self.fd_epsilon)),
+        };
+        HypergradEngine {
+            tape: Tape::new(),
+            strategy,
+            config: self,
+            outer_steps: 0,
+        }
+    }
+}
+
+/// A persistent hypergradient solver: one strategy + one tape/arena,
+/// reused across outer steps so buffer recycling amortises over the
+/// whole outer loop.
+///
+/// ```text
+/// let mut engine = HypergradEngine::builder()
+///     .mode(HypergradMode::Mixflow)
+///     .checkpoint(CheckpointPolicy::Auto)
+///     .build();
+/// for _ in 0..outer_steps {
+///     problem.resample();
+///     let h = engine.run(&problem, &problem.theta0(), &eta);
+///     // h.memory.arena_reuses > 0 from the second step on
+/// }
+/// ```
+pub struct HypergradEngine {
+    tape: Tape,
+    strategy: Box<dyn HypergradStrategy>,
+    config: EngineBuilder,
+    outer_steps: usize,
+}
+
+impl HypergradEngine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// An engine around a caller-supplied strategy.  `mode()`/`policy()`
+    /// report the builder defaults (mixflow/full) — the strategy's
+    /// [`HypergradStrategy::name`] is the authoritative label.
+    pub fn with_strategy(
+        strategy: Box<dyn HypergradStrategy>,
+    ) -> HypergradEngine {
+        HypergradEngine {
+            tape: Tape::new(),
+            strategy,
+            config: EngineBuilder::default(),
+            outer_steps: 0,
+        }
+    }
+
+    pub fn mode(&self) -> HypergradMode {
+        self.config.mode
+    }
+
+    pub fn policy(&self) -> CheckpointPolicy {
+        self.config.policy
+    }
+
+    pub fn fd_epsilon(&self) -> f64 {
+        self.config.fd_epsilon
+    }
+
+    /// The builder-configured inner optimiser, if any (what
+    /// [`HypergradEngine::configure_problem`] installs).
+    pub fn inner_opt(&self) -> Option<InnerOptimiser> {
+        self.config.inner_opt
+    }
+
+    /// The strategy's path name (`naive`/`mixflow`/`fd`, or whatever a
+    /// custom strategy reports).
+    pub fn strategy_name(&self) -> &'static str {
+        self.strategy.name()
+    }
+
+    /// How many hypergradients this engine has computed.
+    pub fn outer_steps(&self) -> usize {
+        self.outer_steps
+    }
+
+    /// Traffic counters of the persistent arena (cumulative over the
+    /// engine's lifetime; per-run deltas live in
+    /// [`MemoryReport::arena_allocs`]/[`MemoryReport::arena_reuses`]).
+    pub fn arena_stats(&self) -> super::arena::ArenaStats {
+        self.tape.arena_stats()
+    }
+
+    /// Install the builder-configured inner optimiser (if any) on a
+    /// problem.  Call once before the outer loop; a no-op when the
+    /// builder left the optimiser unset.
+    pub fn configure_problem(&self, problem: &mut dyn BilevelProblem) {
+        if let Some(opt) = self.config.inner_opt {
+            problem.set_optimiser(opt);
+        }
+    }
+
+    /// Compute one hypergradient.  The persistent tape is reset
+    /// (recycling the previous run's buffers through the arena) and
+    /// reused — from the second call on, step tapes draw from the free
+    /// list instead of the allocator.
+    pub fn run(
+        &mut self,
+        problem: &dyn BilevelProblem,
+        theta0: &[Tensor],
+        eta: &[Tensor],
+    ) -> Hypergrad {
+        let HypergradEngine { tape, strategy, .. } = self;
+        let h = strategy.run(tape, problem, theta0, eta);
+        self.outer_steps += 1;
+        h
+    }
+
+    /// Drop the recorded graph while keeping the arena warm (parked
+    /// buffers stay available to the next [`HypergradEngine::run`]).
+    /// Strategies reset the tape on entry anyway, so this is only needed
+    /// to release tape-held values early.
+    pub fn reset(&mut self) {
+        self.tape.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autodiff::mixflow::{mixflow_hypergrad_with, rel_err};
+    use crate::autodiff::problems::HyperLrProblem;
+
+    fn small_problem() -> HyperLrProblem {
+        HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08)
+    }
+
+    #[test]
+    fn builder_defaults_are_mixflow_full() {
+        let engine = HypergradEngine::builder().build();
+        assert_eq!(engine.mode(), HypergradMode::Mixflow);
+        assert_eq!(engine.policy(), CheckpointPolicy::Full);
+        assert_eq!(engine.strategy_name(), "mixflow");
+        assert_eq!(engine.outer_steps(), 0);
+    }
+
+    #[test]
+    fn engine_matches_free_function_and_counts_steps() {
+        let p = small_problem();
+        let theta0 = p.theta0();
+        let eta = p.eta0();
+        let mut engine = HypergradEngine::builder().build();
+        let a = engine.run(&p, &theta0, &eta);
+        let b = mixflow_hypergrad_with(
+            &p,
+            &theta0,
+            &eta,
+            CheckpointPolicy::Full,
+        );
+        for (x, y) in a.d_eta.iter().zip(b.d_eta.iter()) {
+            assert_eq!(x.max_abs_diff(y), 0.0, "engine vs shim bit-for-bit");
+        }
+        assert_eq!(engine.outer_steps(), 1);
+    }
+
+    #[test]
+    fn persistent_naive_engine_reuses_buffers_on_the_second_step() {
+        let p = small_problem();
+        let theta0 = p.theta0();
+        let eta = p.eta0();
+        let mut engine =
+            HypergradEngine::builder().mode(HypergradMode::Naive).build();
+        let first = engine.run(&p, &theta0, &eta);
+        assert_eq!(
+            first.memory.arena_reuses, 0,
+            "a monolithic tape's first recording has nothing to reuse"
+        );
+        let second = engine.run(&p, &theta0, &eta);
+        assert!(
+            second.memory.arena_reuses > 0,
+            "second outer step must draw the first step's buffers back \
+             out of the persistent arena"
+        );
+        for (x, y) in first.d_eta.iter().zip(second.d_eta.iter()) {
+            assert_eq!(x.max_abs_diff(y), 0.0, "reuse must not change values");
+        }
+    }
+
+    #[test]
+    fn fd_strategy_matches_mixflow() {
+        let p = small_problem();
+        let theta0 = p.theta0();
+        let eta = p.eta0();
+        let mut fd_engine =
+            HypergradEngine::builder().mode(HypergradMode::Fd).build();
+        let fd = fd_engine.run(&p, &theta0, &eta);
+        let mixed = mixflow_hypergrad_with(
+            &p,
+            &theta0,
+            &eta,
+            CheckpointPolicy::Full,
+        );
+        assert!(
+            rel_err(&fd.d_eta, &mixed.d_eta) < 1e-4,
+            "fd engine must agree with mixflow"
+        );
+        assert!((fd.outer_loss - mixed.outer_loss).abs() < 1e-9);
+        assert_eq!(fd.memory.checkpoint_bytes, 0);
+        assert!(fd.memory.tape_bytes > 0 && fd.memory.nodes > 0);
+    }
+
+    #[test]
+    fn configure_problem_installs_the_builder_inner_opt() {
+        let mut p = small_problem();
+        assert_eq!(p.optimiser(), InnerOptimiser::Sgd);
+        let engine = HypergradEngine::builder()
+            .inner_opt(InnerOptimiser::adam())
+            .build();
+        engine.configure_problem(&mut p);
+        assert_eq!(p.optimiser(), InnerOptimiser::adam());
+    }
+
+    #[test]
+    fn custom_strategy_plugs_in() {
+        struct Zero;
+        impl HypergradStrategy for Zero {
+            fn name(&self) -> &'static str {
+                "zero"
+            }
+            fn run(
+                &mut self,
+                _tape: &mut Tape,
+                _problem: &dyn BilevelProblem,
+                _theta0: &[Tensor],
+                eta: &[Tensor],
+            ) -> Hypergrad {
+                Hypergrad {
+                    d_eta: eta.iter().map(|e| Tensor::zeros(&e.shape)).collect(),
+                    outer_loss: 0.0,
+                    memory: MemoryReport::default(),
+                }
+            }
+        }
+        let p = small_problem();
+        let mut engine = HypergradEngine::with_strategy(Box::new(Zero));
+        assert_eq!(engine.strategy_name(), "zero");
+        let h = engine.run(&p, &p.theta0(), &p.eta0());
+        assert!(h.d_eta.iter().all(|g| g.max_abs() == 0.0));
+    }
+}

@@ -42,13 +42,25 @@
 //! top: `Remat { segment: K }` stores `(θ_t, s_t)` only every K steps and
 //! recomputes the intra-segment states during the backward sweep — live
 //! checkpoints drop from `T` to `~T/K + K` at the cost of one extra
-//! forward pass.  `K = 1` reproduces full checkpointing bit-for-bit.
+//! forward pass.  `K = 1` reproduces full checkpointing bit-for-bit, and
+//! [`CheckpointPolicy::Auto`] resolves `K ≈ √T` at run time.
+//!
+//! The `*_in` functions here record onto a caller-owned tape; they are
+//! the strategy implementations behind
+//! [`super::engine::HypergradEngine`], the persistent solver every
+//! driver goes through.  The historical free functions
+//! ([`naive_hypergrad`], [`mixflow_hypergrad`],
+//! [`mixflow_hypergrad_with`], [`fd_hypergrad`]) remain as thin shims
+//! that build a throwaway engine per call.
 
 use std::time::Instant;
 
-use super::optim::InnerOptimiser;
+use super::engine::{FdStrategy, HypergradEngine, HypergradMode};
 use super::tape::{NodeId, Tape, TapeStats};
 use super::tensor::Tensor;
+use crate::util::args::CliEnum;
+
+use super::optim::InnerOptimiser;
 
 /// A bilevel (meta-learning) problem: builds inner/outer losses as tape
 /// graphs over θ and η leaf nodes.  `step` indexes the inner batch.
@@ -96,14 +108,24 @@ pub enum CheckpointPolicy {
     /// at the cost of roughly one extra forward pass.  `segment = 1` is
     /// exactly [`CheckpointPolicy::Full`], bit-for-bit.
     Remat { segment: usize },
+    /// Resolve the segment length at run time as `K ≈ √T` from the
+    /// problem's unroll — the balance point of the `~T/K + K` live
+    /// checkpoint count.  `T ≤ 2` resolves to `K = 1`, i.e. full
+    /// checkpointing.
+    Auto,
 }
 
 impl CheckpointPolicy {
-    /// Segment length K (1 for [`CheckpointPolicy::Full`]).
-    pub fn segment(&self) -> usize {
+    /// Segment length K for a `unroll`-step inner loop (1 for
+    /// [`CheckpointPolicy::Full`]; `round(√unroll)` for
+    /// [`CheckpointPolicy::Auto`], which is 1 whenever `unroll ≤ 2`).
+    pub fn segment_for(&self, unroll: usize) -> usize {
         match self {
             CheckpointPolicy::Full => 1,
             CheckpointPolicy::Remat { segment } => (*segment).max(1),
+            CheckpointPolicy::Auto => {
+                ((unroll as f64).sqrt().round() as usize).max(1)
+            }
         }
     }
 
@@ -111,23 +133,50 @@ impl CheckpointPolicy {
         match self {
             CheckpointPolicy::Full => "full".to_string(),
             CheckpointPolicy::Remat { segment } => format!("remat{segment}"),
+            CheckpointPolicy::Auto => "auto".to_string(),
         }
     }
 
     /// Case- and whitespace-insensitive: `full` or `1` parse to `Full`,
-    /// an integer `K ≥ 2` to `Remat { segment: K }`.  The names this
-    /// type prints round-trip too: `remat4` parses like `4` (matching
-    /// the other CLI enums, whose printed names all re-parse).
+    /// `auto` to the run-time `K ≈ √T` policy, an integer `K ≥ 2` to
+    /// `Remat { segment: K }`.  The names this type prints round-trip
+    /// too: `remat4` parses like `4` (matching the other CLI enums,
+    /// whose printed names all re-parse).
     pub fn parse(s: &str) -> Option<CheckpointPolicy> {
         let t = s.trim().to_lowercase();
         if t == "full" || t == "1" {
             return Some(CheckpointPolicy::Full);
+        }
+        if t == "auto" {
+            return Some(CheckpointPolicy::Auto);
         }
         match t.strip_prefix("remat").unwrap_or(t.as_str()).parse::<usize>() {
             Ok(1) => Some(CheckpointPolicy::Full),
             Ok(k) if k >= 2 => Some(CheckpointPolicy::Remat { segment: k }),
             _ => None,
         }
+    }
+}
+
+impl CliEnum for CheckpointPolicy {
+    fn name(&self) -> String {
+        self.name()
+    }
+
+    fn parse(s: &str) -> Option<CheckpointPolicy> {
+        CheckpointPolicy::parse(s)
+    }
+
+    /// Parseable exemplars; the open-ended integer form is described by
+    /// the [`CliEnum::valid_values`] override below.
+    fn variants() -> &'static [&'static str] {
+        &["full", "auto", "2", "remat4"]
+    }
+
+    fn valid_values() -> String {
+        "full|1 (checkpoint every step), auto (K ≈ √T at run time), or an \
+         integer K >= 2 (remat segment length)"
+            .to_string()
     }
 }
 
@@ -196,27 +245,48 @@ fn pair_bytes(theta: &[Tensor], state: &[Tensor]) -> usize {
 /// Reverse-over-reverse baseline: one monolithic tape through the whole
 /// unroll — gradients *and* optimiser-state updates in-graph — then
 /// `grad` straight through every per-step second-order subgraph.
-pub fn naive_hypergrad<P: BilevelProblem + ?Sized>(
-    problem: &P,
+///
+/// Thin shim over a throwaway [`HypergradEngine`]; a caller looping over
+/// outer steps should hold a persistent engine instead, so the monolithic
+/// tape's buffers recirculate through its arena between steps.
+pub fn naive_hypergrad(
+    problem: &dyn BilevelProblem,
+    theta0: &[Tensor],
+    eta: &[Tensor],
+) -> Hypergrad {
+    HypergradEngine::builder()
+        .mode(HypergradMode::Naive)
+        .build()
+        .run(problem, theta0, eta)
+}
+
+/// [`naive_hypergrad`] recorded on a caller-owned tape (which is
+/// [`Tape::reset`] first) — the engine's naive strategy, where a
+/// persistent tape lets consecutive outer steps reuse each other's
+/// buffers.
+pub fn naive_hypergrad_in(
+    tape: &mut Tape,
+    problem: &dyn BilevelProblem,
     theta0: &[Tensor],
     eta: &[Tensor],
 ) -> Hypergrad {
     let opt = problem.optimiser();
-    let mut tape = Tape::new();
+    tape.reset();
+    let arena_before = tape.arena_stats();
     let t_fwd = Instant::now();
-    let mut theta = leaves(&mut tape, theta0);
-    let mut state = leaves(&mut tape, &opt.init_state(theta0));
-    let eta_ids = leaves(&mut tape, eta);
+    let mut theta = leaves(tape, theta0);
+    let mut state = leaves(tape, &opt.init_state(theta0));
+    let eta_ids = leaves(tape, eta);
     for t in 0..problem.unroll() {
-        let loss = problem.inner_loss(&mut tape, &theta, &eta_ids, t);
+        let loss = problem.inner_loss(tape, &theta, &eta_ids, t);
         let grads = tape.grad(loss, &theta);
-        let lrs = problem.lr_nodes(&mut tape, &eta_ids);
+        let lrs = problem.lr_nodes(tape, &eta_ids);
         let (next_theta, next_state) =
-            opt.step(&mut tape, &theta, &state, &lrs, &grads, t);
+            opt.step(tape, &theta, &state, &lrs, &grads, t);
         theta = next_theta;
         state = next_state;
     }
-    let outer = problem.outer_loss(&mut tape, &theta);
+    let outer = problem.outer_loss(tape, &theta);
     let forward_seconds = t_fwd.elapsed().as_secs_f64();
     let t_bwd = Instant::now();
     let d_eta_ids = tape.grad(outer, &eta_ids);
@@ -232,8 +302,8 @@ pub fn naive_hypergrad<P: BilevelProblem + ?Sized>(
             checkpoint_bytes: 0,
             nodes: stats.nodes,
             peak_bytes: stats.bytes,
-            arena_allocs: arena.allocs,
-            arena_reuses: arena.reuses,
+            arena_allocs: arena.allocs - arena_before.allocs,
+            arena_reuses: arena.reuses - arena_before.reuses,
             forward_seconds,
             backward_seconds,
         },
@@ -245,8 +315,8 @@ pub fn naive_hypergrad<P: BilevelProblem + ?Sized>(
 /// arena); returns the `θ_{t+1}` and `state_{t+1}` values plus the step
 /// tape's [`TapeStats`] (both its byte and node counters feed the
 /// [`MemoryReport`] peak).
-pub fn inner_step_values_into<P: BilevelProblem + ?Sized>(
-    problem: &P,
+pub fn inner_step_values_into(
+    problem: &dyn BilevelProblem,
     tape: &mut Tape,
     theta: &[Tensor],
     state: &[Tensor],
@@ -272,8 +342,8 @@ pub fn inner_step_values_into<P: BilevelProblem + ?Sized>(
 
 /// [`inner_step_values_into`] on a throwaway tape — kept for callers that
 /// only need a single step (the arena benefit needs a reused tape).
-pub fn inner_step_values<P: BilevelProblem + ?Sized>(
-    problem: &P,
+pub fn inner_step_values(
+    problem: &dyn BilevelProblem,
     theta: &[Tensor],
     state: &[Tensor],
     eta: &[Tensor],
@@ -285,18 +355,36 @@ pub fn inner_step_values<P: BilevelProblem + ?Sized>(
 
 /// MixFlow-MG with full per-step checkpointing — equivalent to
 /// [`mixflow_hypergrad_with`] under [`CheckpointPolicy::Full`].
-pub fn mixflow_hypergrad<P: BilevelProblem + ?Sized>(
-    problem: &P,
+pub fn mixflow_hypergrad(
+    problem: &dyn BilevelProblem,
     theta0: &[Tensor],
     eta: &[Tensor],
 ) -> Hypergrad {
     mixflow_hypergrad_with(problem, theta0, eta, CheckpointPolicy::Full)
 }
 
+/// MixFlow-MG under the given checkpoint policy, on a throwaway engine.
+///
+/// Thin shim over [`HypergradEngine`]; a caller looping over outer steps
+/// should hold a persistent engine instead so the step tapes of
+/// consecutive hypergradients share one arena.
+pub fn mixflow_hypergrad_with(
+    problem: &dyn BilevelProblem,
+    theta0: &[Tensor],
+    eta: &[Tensor],
+    policy: CheckpointPolicy,
+) -> Hypergrad {
+    HypergradEngine::builder()
+        .checkpoint(policy)
+        .build()
+        .run(problem, theta0, eta)
+}
+
 /// MixFlow-MG: forward-over-reverse mixed-mode hypergradient with
 /// per-step tape reuse (the paper's Algorithm 1 shape), the adjoint
 /// carried jointly over `(θ, optimiser state)`, under the given
-/// checkpoint policy.
+/// checkpoint policy, on a caller-owned tape — the engine's mixflow
+/// strategy.
 ///
 /// With `Remat { segment: K }` the forward sweep stores `(θ_t, s_t)`
 /// only at `t ≡ 0 (mod K)`; the backward sweep then re-runs the forward
@@ -304,8 +392,11 @@ pub fn mixflow_hypergrad<P: BilevelProblem + ?Sized>(
 /// states, consumes them in reverse, and drops the whole segment before
 /// moving to the next.  `K = 1` takes exactly the full-checkpoint path —
 /// same float-op sequence, bit-for-bit equal hypergradients.
-pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
-    problem: &P,
+/// [`CheckpointPolicy::Auto`] resolves `K ≈ √T` here, from the
+/// problem's unroll.
+pub fn mixflow_hypergrad_in(
+    tape: &mut Tape,
+    problem: &dyn BilevelProblem,
     theta0: &[Tensor],
     eta: &[Tensor],
     policy: CheckpointPolicy,
@@ -313,12 +404,15 @@ pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
     let unroll = problem.unroll();
     let opt = problem.optimiser();
     let nt = theta0.len();
-    let k = policy.segment().clamp(1, unroll.max(1));
+    let k = policy.segment_for(unroll).clamp(1, unroll.max(1));
 
     // ONE tape for every step — forward, λ seeding, remat recompute and
     // backward all reset-and-reuse it, so buffers recirculate through
-    // its arena instead of being reallocated T times.
-    let mut tape = Tape::new();
+    // its arena instead of being reallocated T times; when the tape
+    // belongs to a persistent engine, the recirculation also spans
+    // outer steps.
+    tape.reset();
+    let arena_before = tape.arena_stats();
     let mut peak_tape = 0usize;
     let mut peak_nodes = 0usize;
     let mut live_state = 0usize; // bytes of live (θ, s) checkpoint values
@@ -345,7 +439,7 @@ pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
             overlap = pb;
         }
         let (next_theta, next_state, stats) =
-            inner_step_values_into(problem, &mut tape, &theta, &state, eta, t);
+            inner_step_values_into(problem, tape, &theta, &state, eta, t);
         peak_tape = peak_tape.max(stats.bytes);
         peak_nodes = peak_nodes.max(stats.nodes);
         peak_total = peak_total.max(stats.bytes + (live_state - overlap));
@@ -362,8 +456,8 @@ pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
     let t_bwd = Instant::now();
     let (mut lambda, outer_loss) = {
         tape.reset();
-        let theta_ids = leaves(&mut tape, &theta);
-        let outer = problem.outer_loss(&mut tape, &theta_ids);
+        let theta_ids = leaves(tape, &theta);
+        let outer = problem.outer_loss(tape, &theta_ids);
         let grads = tape.grad(outer, &theta_ids);
         // θ_T leaves alias the live final pair — counted once.
         let overlap: usize = theta.iter().map(Tensor::bytes).sum();
@@ -398,7 +492,7 @@ pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
                 let (prev_th, prev_st) = seg.last().expect("segment seeded");
                 let overlap = pair_bytes(prev_th, prev_st);
                 let (th, st, stats) = inner_step_values_into(
-                    problem, &mut tape, prev_th, prev_st, eta, t,
+                    problem, tape, prev_th, prev_st, eta, t,
                 );
                 (th, st, stats, overlap)
             };
@@ -421,11 +515,11 @@ pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
             // already counted in `live_state`.
             let overlap = pair_bytes(theta_t, state_t);
             tape.reset();
-            let theta_ids = leaves(&mut tape, theta_t);
-            let state_ids = leaves(&mut tape, state_t);
-            let eta_ids = leaves(&mut tape, eta);
+            let theta_ids = leaves(tape, theta_t);
+            let state_ids = leaves(tape, state_t);
+            let eta_ids = leaves(tape, eta);
             let ns = state_ids.len();
-            let loss = problem.inner_loss(&mut tape, &theta_ids, &eta_ids, t);
+            let loss = problem.inner_loss(tape, &theta_ids, &eta_ids, t);
             // One reverse sweep for the *live* ∇_θL and ∇_ηL nodes — the
             // targets of the dual sweep below.
             let mut gwrt = theta_ids.clone();
@@ -444,9 +538,9 @@ pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
                     tape.constant(v)
                 })
                 .collect();
-            let lr_ids = problem.lr_nodes(&mut tape, &eta_ids);
+            let lr_ids = problem.lr_nodes(tape, &eta_ids);
             let (theta_next, state_next) = opt.step(
-                &mut tape, &theta_ids, &state_ids, &lr_ids, &g_const, t,
+                tape, &theta_ids, &state_ids, &lr_ids, &g_const, t,
             );
 
             // c = Σ ⟨λ, Φ outputs⟩; ∇c gives every direct adjoint at once.
@@ -531,8 +625,8 @@ pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
             checkpoint_bytes: peak_state,
             nodes: peak_nodes,
             peak_bytes: peak_total,
-            arena_allocs: arena.allocs,
-            arena_reuses: arena.reuses,
+            arena_allocs: arena.allocs - arena_before.allocs,
+            arena_reuses: arena.reuses - arena_before.reuses,
             forward_seconds,
             backward_seconds,
         },
@@ -540,45 +634,21 @@ pub fn mixflow_hypergrad_with<P: BilevelProblem + ?Sized>(
 }
 
 /// Central finite differences over every η element — the slow oracle the
-/// tests compare both hypergradient paths against.  Uses the same
-/// in-graph update builder (on one reused tape), so stateful optimisers
-/// are held to the same oracle as SGD.
-pub fn fd_hypergrad<P: BilevelProblem + ?Sized>(
-    problem: &P,
+/// tests compare both hypergradient paths against, and the engine's
+/// `--mode fd` cross-check path.  Uses the same in-graph update builder
+/// (on one reused tape), so stateful optimisers are held to the same
+/// oracle as SGD.  Thin shim over [`FdStrategy`]; hold a persistent
+/// engine ([`HypergradMode::Fd`]) to amortise the tape across calls.
+pub fn fd_hypergrad(
+    problem: &dyn BilevelProblem,
     theta0: &[Tensor],
     eta: &[Tensor],
     h: f64,
 ) -> Vec<Tensor> {
-    let opt = problem.optimiser();
-    let mut tape = Tape::new();
-    let mut outer_at = |eta_v: &[Tensor]| -> f64 {
-        let mut theta: Vec<Tensor> = theta0.to_vec();
-        let mut state = opt.init_state(theta0);
-        for t in 0..problem.unroll() {
-            let (next_theta, next_state, _) = inner_step_values_into(
-                problem, &mut tape, &theta, &state, eta_v, t,
-            );
-            theta = next_theta;
-            state = next_state;
-        }
-        tape.reset();
-        let ids = leaves(&mut tape, &theta);
-        let outer = problem.outer_loss(&mut tape, &ids);
-        tape.value(outer).item()
-    };
-    let mut out = Vec::with_capacity(eta.len());
-    for (li, leaf) in eta.iter().enumerate() {
-        let mut g = Tensor::zeros(&leaf.shape);
-        for j in 0..leaf.elements() {
-            let mut plus: Vec<Tensor> = eta.to_vec();
-            plus[li].data[j] += h;
-            let mut minus: Vec<Tensor> = eta.to_vec();
-            minus[li].data[j] -= h;
-            g.data[j] = (outer_at(&plus) - outer_at(&minus)) / (2.0 * h);
-        }
-        out.push(g);
-    }
-    out
+    use super::engine::HypergradStrategy;
+    FdStrategy::new(h)
+        .run(&mut Tape::new(), problem, theta0, eta)
+        .d_eta
 }
 
 /// Max |Δ| between two η-gradient pytrees, normalised by the largest
@@ -606,6 +676,11 @@ mod tests {
             CheckpointPolicy::parse(" FULL\n"),
             Some(CheckpointPolicy::Full)
         );
+        assert_eq!(CheckpointPolicy::parse("auto"), Some(CheckpointPolicy::Auto));
+        assert_eq!(
+            CheckpointPolicy::parse(" Auto\t"),
+            Some(CheckpointPolicy::Auto)
+        );
         assert_eq!(
             CheckpointPolicy::parse("4"),
             Some(CheckpointPolicy::Remat { segment: 4 })
@@ -622,6 +697,7 @@ mod tests {
         // The printed names round-trip, like the other CLI enums.
         for policy in [
             CheckpointPolicy::Full,
+            CheckpointPolicy::Auto,
             CheckpointPolicy::Remat { segment: 4 },
             CheckpointPolicy::Remat { segment: 16 },
         ] {
@@ -635,11 +711,24 @@ mod tests {
 
     #[test]
     fn checkpoint_policy_names_and_segments() {
-        assert_eq!(CheckpointPolicy::Full.segment(), 1);
-        assert_eq!(CheckpointPolicy::Remat { segment: 4 }.segment(), 4);
-        assert_eq!(CheckpointPolicy::Remat { segment: 0 }.segment(), 1);
+        assert_eq!(CheckpointPolicy::Full.segment_for(16), 1);
+        assert_eq!(CheckpointPolicy::Remat { segment: 4 }.segment_for(16), 4);
+        assert_eq!(CheckpointPolicy::Remat { segment: 0 }.segment_for(16), 1);
         assert_eq!(CheckpointPolicy::Full.name(), "full");
         assert_eq!(CheckpointPolicy::Remat { segment: 8 }.name(), "remat8");
+        assert_eq!(CheckpointPolicy::Auto.name(), "auto");
         assert_eq!(CheckpointPolicy::default(), CheckpointPolicy::Full);
+    }
+
+    #[test]
+    fn auto_policy_resolves_sqrt_t_at_run_time() {
+        // T ≤ 2 keeps full checkpointing; larger unrolls get ~√T.
+        assert_eq!(CheckpointPolicy::Auto.segment_for(0), 1);
+        assert_eq!(CheckpointPolicy::Auto.segment_for(1), 1);
+        assert_eq!(CheckpointPolicy::Auto.segment_for(2), 1);
+        assert_eq!(CheckpointPolicy::Auto.segment_for(4), 2);
+        assert_eq!(CheckpointPolicy::Auto.segment_for(9), 3);
+        assert_eq!(CheckpointPolicy::Auto.segment_for(16), 4);
+        assert_eq!(CheckpointPolicy::Auto.segment_for(32), 6);
     }
 }

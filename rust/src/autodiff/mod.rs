@@ -15,15 +15,22 @@
 //! * [`optim`] — differentiable inner-loop optimisers (SGD, momentum,
 //!   Adam) whose per-step update — moment state and bias correction
 //!   included — is built in-graph on the step tape.
-//! * [`mixflow`] — the [`mixflow::BilevelProblem`] trait and two
-//!   hypergradient paths: [`mixflow::naive_hypergrad`]
+//! * [`mixflow`] — the [`mixflow::BilevelProblem`] trait and the
+//!   hypergradient path implementations: [`mixflow::naive_hypergrad_in`]
 //!   (reverse-over-reverse, monolithic tape) and
-//!   [`mixflow::mixflow_hypergrad`] (forward-over-reverse, per-step tape
-//!   reuse — the paper's contribution, with the adjoint carried jointly
-//!   over θ and optimiser state), plus
-//!   [`mixflow::mixflow_hypergrad_with`] adding the
-//!   [`mixflow::CheckpointPolicy`] block-remat knob; all instrumented
-//!   with tape/arena counters and wall-clock timings.
+//!   [`mixflow::mixflow_hypergrad_in`] (forward-over-reverse, per-step
+//!   tape reuse — the paper's contribution, with the adjoint carried
+//!   jointly over θ and optimiser state) under the
+//!   [`mixflow::CheckpointPolicy`] block-remat knob (including the
+//!   run-time `Auto` K ≈ √T resolution); all instrumented with
+//!   tape/arena counters and wall-clock timings.  The historical free
+//!   functions (`naive_hypergrad`, `mixflow_hypergrad[_with]`,
+//!   `fd_hypergrad`) remain as thin shims over the engine.
+//! * [`engine`] — [`engine::HypergradEngine`]: the unified, persistent
+//!   solver API.  One tape + arena reused across outer steps, a
+//!   [`engine::HypergradStrategy`] trait unifying naive / mixflow / fd
+//!   behind one `run(problem, θ₀, η)` call, configured through the
+//!   fluent [`engine::EngineBuilder`].
 //! * [`problems`] — the paper's hyper-LR and loss-weighting tasks plus a
 //!   self-attention + layernorm workload.
 //!
@@ -36,6 +43,7 @@
 #![warn(clippy::redundant_clone)]
 
 pub mod arena;
+pub mod engine;
 pub mod mixflow;
 pub mod optim;
 pub mod problems;
@@ -43,10 +51,15 @@ pub mod tape;
 pub mod tensor;
 
 pub use arena::{ArenaStats, BufferArena};
+pub use engine::{
+    EngineBuilder, FdStrategy, HypergradEngine, HypergradMode,
+    HypergradStrategy, MixflowStrategy, NaiveStrategy,
+};
 pub use mixflow::{
     fd_hypergrad, inner_step_values, inner_step_values_into,
-    mixflow_hypergrad, mixflow_hypergrad_with, naive_hypergrad,
-    BilevelProblem, CheckpointPolicy, Hypergrad, MemoryReport,
+    mixflow_hypergrad, mixflow_hypergrad_in, mixflow_hypergrad_with,
+    naive_hypergrad, naive_hypergrad_in, BilevelProblem, CheckpointPolicy,
+    Hypergrad, MemoryReport,
 };
 pub use optim::InnerOptimiser;
 pub use tape::{NodeId, Op, Tape, TapeStats};

@@ -16,6 +16,7 @@
 
 use super::tape::{NodeId, Tape};
 use super::tensor::Tensor;
+use crate::util::args::CliEnum;
 
 /// A differentiable inner-loop optimiser: `θ_{t+1} = θ_t − P(η) ⊙ u_t`
 /// where the update direction `u_t` may depend on moment state.
@@ -151,6 +152,21 @@ impl InnerOptimiser {
                 (new_theta, new_m)
             }
         }
+    }
+}
+
+impl CliEnum for InnerOptimiser {
+    fn name(&self) -> String {
+        // Method-call syntax resolves to the inherent `name` above.
+        self.name().to_string()
+    }
+
+    fn parse(s: &str) -> Option<InnerOptimiser> {
+        InnerOptimiser::parse(s)
+    }
+
+    fn variants() -> &'static [&'static str] {
+        &["sgd", "momentum", "adam"]
     }
 }
 

@@ -118,17 +118,13 @@ impl Default for Tape {
 
 // ---- value-level kernels shared by eager eval and the JVP overlay ------
 //
-// Each kernel has an `*_into` form writing into a recycled buffer (the
-// tape builders route these through the arena) and, where the JVP
-// overlay needs a fresh tensor mid-rule, a thin allocating wrapper.
+// Every kernel is an `*_into` form writing into a recycled buffer: both
+// the tape builders and the JVP overlay route them through the arena,
+// so neither sweep touches the allocator in steady state.
 
 fn t_sum_into(v: &Tensor, out: &mut Vec<f64>) {
     out.clear();
     out.push(v.data.iter().sum());
-}
-
-fn t_sum(v: &Tensor) -> Tensor {
-    Tensor::scalar(v.data.iter().sum())
 }
 
 fn t_row_sum_into(v: &Tensor, out: &mut Vec<f64>) {
@@ -139,6 +135,7 @@ fn t_row_sum_into(v: &Tensor, out: &mut Vec<f64>) {
     );
 }
 
+#[cfg(test)]
 fn t_row_sum(v: &Tensor) -> Tensor {
     let m = v.dims2().0;
     let mut out = Vec::with_capacity(m);
@@ -154,12 +151,6 @@ fn t_row_broadcast_into(v: &Tensor, n: usize, out: &mut Vec<f64>) {
     }
 }
 
-fn t_row_broadcast(v: &Tensor, n: usize) -> Tensor {
-    let mut out = Vec::with_capacity(v.elements() * n);
-    t_row_broadcast_into(v, n, &mut out);
-    Tensor::new(vec![v.shape[0], n], out)
-}
-
 fn t_col_sum_into(v: &Tensor, out: &mut Vec<f64>) {
     let (m, n) = v.dims2();
     out.clear();
@@ -171,25 +162,12 @@ fn t_col_sum_into(v: &Tensor, out: &mut Vec<f64>) {
     }
 }
 
-fn t_col_sum(v: &Tensor) -> Tensor {
-    let n = v.dims2().1;
-    let mut out = Vec::with_capacity(n);
-    t_col_sum_into(v, &mut out);
-    Tensor::new(vec![n], out)
-}
-
 fn t_col_broadcast_into(v: &Tensor, m: usize, out: &mut Vec<f64>) {
     assert_eq!(v.shape.len(), 1, "col_broadcast wants a vector");
     out.clear();
     for _ in 0..m {
         out.extend_from_slice(&v.data);
     }
-}
-
-fn t_col_broadcast(v: &Tensor, m: usize) -> Tensor {
-    let mut out = Vec::with_capacity(v.elements() * m);
-    t_col_broadcast_into(v, m, &mut out);
-    Tensor::new(vec![m, v.shape[0]], out)
 }
 
 fn t_softmax_rows_into(z: &Tensor, out: &mut Vec<f64>) {
@@ -211,13 +189,6 @@ fn t_softmax_rows_into(z: &Tensor, out: &mut Vec<f64>) {
     }
 }
 
-fn t_softmax_rows(z: &Tensor) -> Tensor {
-    let (m, n) = z.dims2();
-    let mut out = Vec::with_capacity(m * n);
-    t_softmax_rows_into(z, &mut out);
-    Tensor::new(vec![m, n], out)
-}
-
 fn t_logsumexp_rows_into(z: &Tensor, out: &mut Vec<f64>) {
     let (m, n) = z.dims2();
     out.clear();
@@ -228,13 +199,6 @@ fn t_logsumexp_rows_into(z: &Tensor, out: &mut Vec<f64>) {
     }));
 }
 
-fn t_logsumexp_rows(z: &Tensor) -> Tensor {
-    let m = z.dims2().0;
-    let mut out = Vec::with_capacity(m);
-    t_logsumexp_rows_into(z, &mut out);
-    Tensor::new(vec![m], out)
-}
-
 fn t_gather_cols_into(z: &Tensor, idx: &[usize], out: &mut Vec<f64>) {
     let (m, n) = z.dims2();
     assert_eq!(idx.len(), m, "gather index length");
@@ -243,13 +207,6 @@ fn t_gather_cols_into(z: &Tensor, idx: &[usize], out: &mut Vec<f64>) {
         assert!(j < n, "gather index {j} out of {n}");
         z.data[i * n + j]
     }));
-}
-
-fn t_gather_cols(z: &Tensor, idx: &[usize]) -> Tensor {
-    let m = z.dims2().0;
-    let mut out = Vec::with_capacity(m);
-    t_gather_cols_into(z, idx, &mut out);
-    Tensor::new(vec![m], out)
 }
 
 fn t_scatter_cols_into(
@@ -266,13 +223,6 @@ fn t_scatter_cols_into(
     for (i, &j) in idx.iter().enumerate() {
         out[i * n + j] = v.data[i];
     }
-}
-
-fn t_scatter_cols(v: &Tensor, idx: &[usize], n: usize) -> Tensor {
-    let m = v.shape[0];
-    let mut out = Vec::with_capacity(m * n);
-    t_scatter_cols_into(v, idx, n, &mut out);
-    Tensor::new(vec![m, n], out)
 }
 
 /// Pull a buffer for `shape` from the arena and fill it.  `fill` must
@@ -812,9 +762,15 @@ impl Tape {
     /// (identity-like ops, seed handles) and zero tangents cost nothing.
     /// Nodes after the last target can never influence it, so the sweep
     /// stops there: subgraphs recorded later (e.g. the optimiser update
-    /// and its adjoint in the MixFlow backward step) cost nothing.  When
-    /// the sweep finishes, all intermediate tangent buffers are recycled
-    /// into the tape's arena for the next step-tape to reuse.
+    /// and its adjoint in the MixFlow backward step) cost nothing.
+    ///
+    /// Every materialised tangent is written into a buffer drawn from
+    /// the tape's arena (two-operand rules fuse their intermediate
+    /// products into the one output pass, so no hidden temporaries
+    /// allocate either), and when the sweep finishes all non-returned
+    /// tangent buffers are recycled back — a second sweep over the same
+    /// shapes, or the next step-tape, runs without touching the
+    /// allocator.
     pub fn jvp(
         &mut self,
         seeds: &[(NodeId, Tensor)],
@@ -841,15 +797,27 @@ impl Tape {
                     .map(|(_, t)| t.clone()),
                 Op::Step(_) => None,
                 Op::Add(a, b) => match (&tan[*a], &tan[*b]) {
-                    (Some(x), Some(y)) => Some(x.zip(y, |p, q| p + q)),
+                    (Some(x), Some(y)) => {
+                        Some(arena_tensor(arena, x.shape.clone(), |o| {
+                            x.zip_into(y, |p, q| p + q, o)
+                        }))
+                    }
                     (Some(x), None) => Some(x.clone()),
                     (None, Some(y)) => Some(y.clone()),
                     (None, None) => None,
                 },
                 Op::Sub(a, b) => match (&tan[*a], &tan[*b]) {
-                    (Some(x), Some(y)) => Some(x.zip(y, |p, q| p - q)),
+                    (Some(x), Some(y)) => {
+                        Some(arena_tensor(arena, x.shape.clone(), |o| {
+                            x.zip_into(y, |p, q| p - q, o)
+                        }))
+                    }
                     (Some(x), None) => Some(x.clone()),
-                    (None, Some(y)) => Some(y.map(|q| -q)),
+                    (None, Some(y)) => {
+                        Some(arena_tensor(arena, y.shape.clone(), |o| {
+                            y.map_into(|q| -q, o)
+                        }))
+                    }
                     (None, None) => None,
                 },
                 Op::Mul(a, b) => {
@@ -857,12 +825,25 @@ impl Tape {
                     let vb = &nodes[*b].value;
                     match (&tan[*a], &tan[*b]) {
                         (Some(x), Some(y)) => {
-                            let left = x.zip(vb, |p, q| p * q);
-                            let right = va.zip(y, |p, q| p * q);
-                            Some(left.zip(&right, |p, q| p + q))
+                            // ẋ·b + a·ẏ fused into one output pass.
+                            Some(arena_tensor(arena, va.shape.clone(), |o| {
+                                o.clear();
+                                o.extend((0..va.data.len()).map(|j| {
+                                    x.data[j] * vb.data[j]
+                                        + va.data[j] * y.data[j]
+                                }));
+                            }))
                         }
-                        (Some(x), None) => Some(x.zip(vb, |p, q| p * q)),
-                        (None, Some(y)) => Some(va.zip(y, |p, q| p * q)),
+                        (Some(x), None) => {
+                            Some(arena_tensor(arena, va.shape.clone(), |o| {
+                                x.zip_into(vb, |p, q| p * q, o)
+                            }))
+                        }
+                        (None, Some(y)) => {
+                            Some(arena_tensor(arena, va.shape.clone(), |o| {
+                                va.zip_into(y, |p, q| p * q, o)
+                            }))
+                        }
                         (None, None) => None,
                     }
                 }
@@ -872,81 +853,214 @@ impl Tape {
                     let vb = &nodes[*b].value;
                     match (&tan[*a], &tan[*b]) {
                         (Some(x), Some(bt)) => {
-                            let ybt = vy.zip(bt, |y, q| y * q);
-                            let num = x.zip(&ybt, |p, s| p - s);
-                            Some(num.zip(vb, |p, q| p / q))
+                            Some(arena_tensor(arena, vy.shape.clone(), |o| {
+                                o.clear();
+                                o.extend((0..vy.data.len()).map(|j| {
+                                    (x.data[j] - vy.data[j] * bt.data[j])
+                                        / vb.data[j]
+                                }));
+                            }))
                         }
-                        (Some(x), None) => Some(x.zip(vb, |p, q| p / q)),
+                        (Some(x), None) => {
+                            Some(arena_tensor(arena, vy.shape.clone(), |o| {
+                                x.zip_into(vb, |p, q| p / q, o)
+                            }))
+                        }
                         (None, Some(bt)) => {
-                            let ybt = vy.zip(bt, |y, q| y * q);
-                            Some(ybt.zip(vb, |p, q| -p / q))
+                            Some(arena_tensor(arena, vy.shape.clone(), |o| {
+                                o.clear();
+                                o.extend((0..vy.data.len()).map(|j| {
+                                    -(vy.data[j] * bt.data[j]) / vb.data[j]
+                                }));
+                            }))
                         }
                         (None, None) => None,
                     }
                 }
-                Op::Scale(a, c) => tan[*a].as_ref().map(|t| t.map(|x| x * c)),
+                Op::Scale(a, c) => {
+                    let c = *c;
+                    tan[*a].as_ref().map(|t| {
+                        arena_tensor(arena, t.shape.clone(), |o| {
+                            t.map_into(|x| x * c, o)
+                        })
+                    })
+                }
                 Op::Offset(a, _) => tan[*a].clone(),
                 Op::Matmul { a, b, ta, tb } => {
                     let va = &nodes[*a].value;
                     let vb = &nodes[*b].value;
-                    let left =
-                        tan[*a].as_ref().map(|t| t.matmul(vb, *ta, *tb));
-                    let right =
-                        tan[*b].as_ref().map(|t| va.matmul(t, *ta, *tb));
-                    match (left, right) {
-                        (Some(x), Some(y)) => Some(x.zip(&y, |p, q| p + q)),
-                        (x, None) => x,
-                        (None, y) => y,
+                    let (ta, tb) = (*ta, *tb);
+                    match (&tan[*a], &tan[*b]) {
+                        (Some(x), Some(y)) => {
+                            // ẋ·B into one arena buffer, A·ẏ into a
+                            // second, summed in place (the left buffer is
+                            // uniquely owned), second buffer recycled.
+                            let (m, n) = x.matmul_dims(vb, ta, tb);
+                            let mut left =
+                                arena_tensor(arena, vec![m, n], |o| {
+                                    x.matmul_into(vb, ta, tb, o);
+                                });
+                            let right =
+                                arena_tensor(arena, vec![m, n], |o| {
+                                    va.matmul_into(y, ta, tb, o);
+                                });
+                            for (d, s) in
+                                left.data.iter_mut().zip(right.data.iter())
+                            {
+                                *d += s;
+                            }
+                            arena.recycle(right);
+                            Some(left)
+                        }
+                        (Some(x), None) => {
+                            let (m, n) = x.matmul_dims(vb, ta, tb);
+                            Some(arena_tensor(arena, vec![m, n], |o| {
+                                x.matmul_into(vb, ta, tb, o);
+                            }))
+                        }
+                        (None, Some(y)) => {
+                            let (m, n) = va.matmul_dims(y, ta, tb);
+                            Some(arena_tensor(arena, vec![m, n], |o| {
+                                va.matmul_into(y, ta, tb, o);
+                            }))
+                        }
+                        (None, None) => None,
                     }
                 }
-                Op::Relu(a) => tan[*a].as_ref().map(|t| {
-                    t.zip(&nodes[*a].value, |p, x| {
-                        if x > 0.0 {
-                            p
-                        } else {
-                            0.0
-                        }
+                Op::Relu(a) => {
+                    let va = &nodes[*a].value;
+                    tan[*a].as_ref().map(|t| {
+                        arena_tensor(arena, t.shape.clone(), |o| {
+                            t.zip_into(
+                                va,
+                                |p, x| if x > 0.0 { p } else { 0.0 },
+                                o,
+                            )
+                        })
+                    })
+                }
+                Op::Tanh(a) => {
+                    let vy = &nodes[i].value;
+                    tan[*a].as_ref().map(|t| {
+                        arena_tensor(arena, t.shape.clone(), |o| {
+                            t.zip_into(vy, |p, y| p * (1.0 - y * y), o)
+                        })
+                    })
+                }
+                Op::Exp(a) => {
+                    let vy = &nodes[i].value;
+                    tan[*a].as_ref().map(|t| {
+                        arena_tensor(arena, t.shape.clone(), |o| {
+                            t.zip_into(vy, |p, y| p * y, o)
+                        })
+                    })
+                }
+                Op::Sqrt(a) => {
+                    let vy = &nodes[i].value;
+                    tan[*a].as_ref().map(|t| {
+                        arena_tensor(arena, t.shape.clone(), |o| {
+                            t.zip_into(vy, |p, y| p / (2.0 * y), o)
+                        })
+                    })
+                }
+                Op::Sum(a) => tan[*a].as_ref().map(|t| {
+                    arena_tensor(arena, vec![], |o| t_sum_into(t, o))
+                }),
+                Op::Broadcast(a, shape) => tan[*a].as_ref().map(|t| {
+                    let x = t.item();
+                    let len = shape.iter().product::<usize>();
+                    arena_tensor(arena, shape.clone(), |o| {
+                        o.clear();
+                        o.resize(len, x);
                     })
                 }),
-                Op::Tanh(a) => tan[*a].as_ref().map(|t| {
-                    t.zip(&nodes[i].value, |p, y| p * (1.0 - y * y))
+                Op::RowSum(a) => tan[*a].as_ref().map(|t| {
+                    arena_tensor(arena, vec![t.dims2().0], |o| {
+                        t_row_sum_into(t, o)
+                    })
                 }),
-                Op::Exp(a) => tan[*a]
-                    .as_ref()
-                    .map(|t| t.zip(&nodes[i].value, |p, y| p * y)),
-                Op::Sqrt(a) => tan[*a].as_ref().map(|t| {
-                    t.zip(&nodes[i].value, |p, y| p / (2.0 * y))
+                Op::RowBroadcast(a, n) => tan[*a].as_ref().map(|t| {
+                    arena_tensor(arena, vec![t.shape[0], *n], |o| {
+                        t_row_broadcast_into(t, *n, o)
+                    })
                 }),
-                Op::Sum(a) => tan[*a].as_ref().map(t_sum),
-                Op::Broadcast(a, shape) => tan[*a]
-                    .as_ref()
-                    .map(|t| Tensor::full(shape, t.item())),
-                Op::RowSum(a) => tan[*a].as_ref().map(t_row_sum),
-                Op::RowBroadcast(a, n) => {
-                    tan[*a].as_ref().map(|t| t_row_broadcast(t, *n))
-                }
-                Op::ColSum(a) => tan[*a].as_ref().map(t_col_sum),
-                Op::ColBroadcast(a, m) => {
-                    tan[*a].as_ref().map(|t| t_col_broadcast(t, *m))
-                }
-                Op::SoftmaxRows(a) => tan[*a].as_ref().map(|t| {
-                    // ṡ = s ⊙ (ż − rowbcast(rowsum(s ⊙ ż)))
+                Op::ColSum(a) => tan[*a].as_ref().map(|t| {
+                    arena_tensor(arena, vec![t.dims2().1], |o| {
+                        t_col_sum_into(t, o)
+                    })
+                }),
+                Op::ColBroadcast(a, m) => tan[*a].as_ref().map(|t| {
+                    arena_tensor(arena, vec![*m, t.shape[0]], |o| {
+                        t_col_broadcast_into(t, *m, o)
+                    })
+                }),
+                Op::SoftmaxRows(a) => {
                     let s = &nodes[i].value;
-                    let st = s.zip(t, |p, q| p * q);
-                    let rb = t_row_broadcast(&t_row_sum(&st), s.shape[1]);
-                    let inner = t.zip(&rb, |p, q| p - q);
-                    s.zip(&inner, |p, q| p * q)
-                }),
-                Op::LogSumExpRows(a) => tan[*a].as_ref().map(|t| {
-                    let s = t_softmax_rows(&nodes[*a].value);
-                    t_row_sum(&s.zip(t, |p, q| p * q))
-                }),
-                Op::GatherCols(a, idx) => {
-                    tan[*a].as_ref().map(|t| t_gather_cols(t, idx))
+                    tan[*a].as_ref().map(|t| {
+                        // ṡ_ij = s_ij (ż_ij − Σ_k s_ik ż_ik), per row in
+                        // one pass with no softmax/row-sum temporaries.
+                        arena_tensor(arena, s.shape.clone(), |o| {
+                            o.clear();
+                            let (m, n) = s.dims2();
+                            for r in 0..m {
+                                let srow = &s.data[r * n..(r + 1) * n];
+                                let trow = &t.data[r * n..(r + 1) * n];
+                                let dot: f64 = srow
+                                    .iter()
+                                    .zip(trow.iter())
+                                    .map(|(p, q)| p * q)
+                                    .sum();
+                                o.extend(
+                                    srow.iter()
+                                        .zip(trow.iter())
+                                        .map(|(p, q)| p * (q - dot)),
+                                );
+                            }
+                        })
+                    })
                 }
-                Op::ScatterCols(a, idx, n) => {
-                    tan[*a].as_ref().map(|t| t_scatter_cols(t, idx, *n))
+                Op::LogSumExpRows(a) => {
+                    let vz = &nodes[*a].value;
+                    tan[*a].as_ref().map(|t| {
+                        // rowsum(softmax(z) ⊙ ż) without materialising the
+                        // softmax; each term is (e_j/denom)·ż_j summed
+                        // left-to-right — the identical float-op order the
+                        // softmax+rowsum composition used, so the fusion is
+                        // bit-for-bit.
+                        arena_tensor(arena, vec![vz.dims2().0], |o| {
+                            o.clear();
+                            let (m, n) = vz.dims2();
+                            for r in 0..m {
+                                let zrow = &vz.data[r * n..(r + 1) * n];
+                                let trow = &t.data[r * n..(r + 1) * n];
+                                let mx = zrow
+                                    .iter()
+                                    .cloned()
+                                    .fold(f64::NEG_INFINITY, f64::max);
+                                let denom: f64 = zrow
+                                    .iter()
+                                    .map(|&z| (z - mx).exp())
+                                    .sum();
+                                let mut acc = 0.0;
+                                for j in 0..n {
+                                    let e = (zrow[j] - mx).exp();
+                                    acc += (e / denom) * trow[j];
+                                }
+                                o.push(acc);
+                            }
+                        })
+                    })
                 }
+                Op::GatherCols(a, idx) => tan[*a].as_ref().map(|t| {
+                    arena_tensor(arena, vec![t.dims2().0], |o| {
+                        t_gather_cols_into(t, idx, o)
+                    })
+                }),
+                Op::ScatterCols(a, idx, n) => tan[*a].as_ref().map(|t| {
+                    arena_tensor(arena, vec![t.shape[0], *n], |o| {
+                        t_scatter_cols_into(t, idx, *n, o)
+                    })
+                }),
                 Op::Reshape(a, shape) => {
                     // Zero-copy, like the primal: alias the tangent.
                     tan[*a].as_ref().map(|t| t.alias(shape.clone()))
@@ -1165,6 +1279,41 @@ mod tests {
         let _ = tape.scale(x2, 7.0);
         let _ = tape.offset(x2, 9.0);
         assert_eq!(kept.data, vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn jvp_tangents_draw_from_and_return_to_the_arena() {
+        // Build a graph whose JVP materialises several tangents (matmul,
+        // tanh, mul, sum), sweep it twice: the first sweep's recycled
+        // tangent buffers must serve the second sweep from the free list.
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::new(
+            vec![2, 3],
+            vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6],
+        ));
+        let w = tape.constant(Tensor::new(
+            vec![3, 2],
+            vec![1.0, 0.5, -0.5, 1.0, 0.25, -0.25],
+        ));
+        let xw = tape.matmul(x, w, false, false);
+        let th = tape.tanh(xw);
+        let sq = tape.mul(th, th);
+        let y = tape.sum(sq);
+        let seed = Tensor::full(&[2, 3], 1.0);
+        let (t1, b1) = tape.jvp(&[(x, seed.clone())], &[y]);
+        let s1 = tape.arena_stats();
+        let (t2, b2) = tape.jvp(&[(x, seed)], &[y]);
+        let s2 = tape.arena_stats();
+        assert!(
+            s2.reuses > s1.reuses,
+            "second jvp must reuse the first sweep's recycled tangents \
+             ({} vs {})",
+            s2.reuses,
+            s1.reuses
+        );
+        assert_eq!(t1[0].data, t2[0].data, "reuse must not change tangents");
+        assert_eq!(b1, b2, "materialised tangent bytes must be stable");
+        assert!(b1 > 0);
     }
 
     #[test]

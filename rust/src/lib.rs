@@ -14,11 +14,14 @@
 //!   and a FLOP cost model.
 //! * [`autodiff`] — the native differentiation engine: copy-on-write f64
 //!   tensors over an arena-recycled buffer pool, a Wengert-list tape with
-//!   graph-mode reverse (so grad-of-grad works), a forward-mode JVP
-//!   overlay, differentiable inner optimisers (SGD, momentum, Adam —
-//!   updates built in-graph), and the `naive_hypergrad` /
-//!   `mixflow_hypergrad` bilevel paths with block rematerialisation and
-//!   tape/arena/wall-clock instrumentation.  The first path in the repo
+//!   graph-mode reverse (so grad-of-grad works), an arena-aware
+//!   forward-mode JVP overlay, differentiable inner optimisers (SGD,
+//!   momentum, Adam — updates built in-graph), the naive / mixflow
+//!   bilevel paths with block rematerialisation, and
+//!   `autodiff::engine::HypergradEngine` — the unified persistent solver
+//!   API (one tape + arena reused across outer steps; naive, mixflow and
+//!   fd strategies behind a fluent builder) that every native driver
+//!   constructs hypergradients through.  The first path in the repo
 //!   where the whole meta-gradient is computed by Rust alone.
 //! * [`runtime`] — artifact manifest (always available) + the PJRT client
 //!   wrapper: compile cache, literal construction, timed execution
@@ -27,8 +30,10 @@
 //!   runner, results store, and the paper-style report renderer (the
 //!   executing runner needs feature `pjrt`).
 //! * [`meta`] — the end-to-end meta-training drivers: `trainer` over
-//!   `train_step` artifacts (feature `pjrt`) and `native` over the
-//!   autodiff engine (always available).
+//!   `train_step` artifacts (feature `pjrt`) and `native` over one
+//!   persistent `HypergradEngine` (always available), plus the
+//!   `SweepSpec` grid (task × inner-optimiser × mode × seed) fanned over
+//!   the coordinator's worker pool.
 //!
 //! Feature `pjrt` links an `xla` crate for artifact execution; without it
 //! the crate builds, tests and serves the native path on any toolchain.

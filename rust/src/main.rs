@@ -3,11 +3,14 @@
 //! Subcommands:
 //! * `info`                 — manifest summary (artifacts, groups, sizes)
 //! * `analyze <key>`        — HLO memory/cost analysis of one artifact
-//! * `native --task <t>`    — native meta-training via the Rust autodiff
-//!   engine (no PJRT, no artifacts); `--mode naive|mixflow`,
-//!   `--inner-opt sgd|momentum|adam` (tasks include `attention`),
-//!   `--remat <K>` block-rematerialisation segment, `--seeds <n>`
-//!   parallel multi-seed sweep on the scheduler pool
+//! * `native --task <t>`    — native meta-training via one persistent
+//!   `HypergradEngine` (no PJRT, no artifacts); `--mode`, `--task` and
+//!   `--inner-opt` accept comma-separated lists and fan the full grid
+//!   (task × inner-optimiser × mode × seed) over the scheduler pool;
+//!   `--mode fd` cross-checks with central differences, `--remat auto`
+//!   resolves the remat segment K ≈ √T at run time.  Every valid-value
+//!   error list is derived from the enums' `CliEnum::variants()`, so
+//!   new modes can't silently go missing from the messages.
 //! * `run <key>`            — execute one exec-tier artifact (pjrt)
 //! * `sweep --group <g>`    — run a figure group, print ratios (pjrt)
 //! * `train --task <t>`     — artifact E2E meta-training loop (pjrt)
@@ -24,13 +27,39 @@ use mixflow::coordinator::runner::pair_ratios;
 use mixflow::coordinator::ResultsStore;
 use mixflow::hlo::{flops::CostModel, parser, MemorySimulator};
 use mixflow::meta::{
-    print_train_summary, run_seed_sweep, HypergradMode, NativeMetaTrainer,
-    NativeSweepConfig, NativeTask,
+    print_train_summary, run_sweep, HypergradMode, NativeMetaTrainer,
+    NativeTask, SweepSpec,
 };
 use mixflow::runtime::Manifest;
-use mixflow::util::args::{ArgSpec, Args};
+use mixflow::util::args::{ArgSpec, Args, CliEnum};
 use mixflow::util::stats::{human_bytes, Summary};
 use mixflow::util::table::Table;
+
+/// Parse one CLI enum value, deriving the valid-value list from the
+/// type itself so error messages can never drift behind the enums.
+fn parse_cli<T: CliEnum>(flag: &str, raw: &str) -> Result<T> {
+    T::parse(raw).ok_or_else(|| {
+        anyhow!(
+            "--{flag} {raw:?} invalid; valid values: {}",
+            T::valid_values()
+        )
+    })
+}
+
+/// Comma-separated list of CLI enum values, deduplicated in order.
+fn parse_cli_list<T: CliEnum + PartialEq>(
+    flag: &str,
+    raw: &str,
+) -> Result<Vec<T>> {
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        let v: T = parse_cli(flag, part)?;
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    Ok(out)
+}
 
 fn main() {
     let spec = ArgSpec::new(
@@ -40,13 +69,42 @@ fn main() {
     .positional("command", "info|analyze|native|run|sweep|train|report|verify")
     .flag("key", None, "artifact key (analyze/run)")
     .flag("group", None, "manifest group (sweep/report)")
-    .flag("task", Some("maml"), "task for train/native (maml|learning_lr|loss_weighting|hyperlr|attention)")
+    .flag(
+        "task",
+        Some("maml"),
+        &format!(
+            "task(s) for train/native, comma-separated (maml|{})",
+            NativeTask::valid_values()
+        ),
+    )
     .flag("steps", Some("100"), "outer steps for train/native")
     .flag("unroll", Some("8"), "inner unroll length for native")
-    .flag("mode", Some("mixflow"), "hypergradient path for native (naive|mixflow)")
-    .flag("inner-opt", Some("sgd"), "inner-loop optimiser for native (sgd|momentum|adam)")
-    .flag("remat", Some("1"), "checkpoint segment K for native mixflow (full|1 = every step; K>=2 rematerialises inside segments)")
-    .flag("seeds", Some("1"), "native seed-sweep width; >1 fans out over the scheduler pool")
+    .flag(
+        "mode",
+        Some("mixflow"),
+        &format!(
+            "hypergradient path(s) for native, comma-separated ({})",
+            HypergradMode::valid_values()
+        ),
+    )
+    .flag(
+        "inner-opt",
+        Some("sgd"),
+        &format!(
+            "inner-loop optimiser(s) for native, comma-separated ({})",
+            InnerOptimiser::valid_values()
+        ),
+    )
+    .flag(
+        "remat",
+        Some("1"),
+        &format!(
+            "checkpoint segment K for native mixflow: {}",
+            CheckpointPolicy::valid_values()
+        ),
+    )
+    .flag("seeds", Some("1"), "native seed-sweep width; combined with multi-value --task/--mode/--inner-opt it fans the whole grid over the scheduler pool")
+    .flag("fd-eps", Some("1e-5"), "central-difference epsilon for --mode fd")
     .flag("iters", Some("5"), "timing iterations")
     .flag("seed", Some("0"), "input seed")
     .switch("no-exec", "analysis only (skip PJRT execution)")
@@ -169,92 +227,108 @@ fn cmd_analyze(key: &str, timeline: bool) -> Result<()> {
     Ok(())
 }
 
-/// Native meta-training: the autodiff engine end-to-end, Python and PJRT
-/// nowhere on the path.  With `--seeds n > 1` the whole outer loop fans
-/// out over the scheduler's worker pool, one trainer per seed.
+/// Native meta-training: one persistent `HypergradEngine` end-to-end,
+/// Python and PJRT nowhere on the path.  Multi-value `--task`, `--mode`
+/// and `--inner-opt` (comma-separated) and/or `--seeds n > 1` fan the
+/// full grid over the scheduler's worker pool, one trainer — and
+/// therefore one engine + arena — per grid cell.
 fn cmd_native(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps").map_err(|e| anyhow!(e))?;
     let unroll = args.get_usize("unroll").map_err(|e| anyhow!(e))?;
     let seed = args.get_usize("seed").map_err(|e| anyhow!(e))? as u64;
-    let task = args.get("task").unwrap();
-    let mode = args.get("mode").unwrap();
-    let inner_opt = args.get("inner-opt").unwrap();
-    let remat = args.get("remat").unwrap();
-    // The flag's global default is the artifact task "maml"; the native
-    // engine's nearest equivalent workload is the hyper-LR task.
-    let task = if task.trim().eq_ignore_ascii_case("maml") {
-        NativeTask::HyperLr
-    } else {
-        NativeTask::parse(task).ok_or_else(|| {
-            anyhow!(
-                "--task {task:?} is not a native task; valid values: \
-                 hyperlr|learning_lr|loss_weighting|attention"
-            )
-        })?
-    };
-    let mode = HypergradMode::parse(mode).ok_or_else(|| {
-        anyhow!("--mode {mode:?} invalid; valid values: naive|mixflow")
-    })?;
-    let inner_opt = InnerOptimiser::parse(inner_opt).ok_or_else(|| {
-        anyhow!(
-            "--inner-opt {inner_opt:?} invalid; valid values: \
-             sgd|momentum|adam"
-        )
-    })?;
-    let remat = CheckpointPolicy::parse(remat).ok_or_else(|| {
-        anyhow!(
-            "--remat {remat:?} invalid; valid values: full|1 (checkpoint \
-             every step) or an integer K >= 2 (remat segment length)"
-        )
-    })?;
+    // The flag's global default is the artifact task "maml";
+    // NativeTask::parse aliases it to the hyper-LR task.
+    let tasks: Vec<NativeTask> =
+        parse_cli_list("task", args.get("task").unwrap())?;
+    let modes: Vec<HypergradMode> =
+        parse_cli_list("mode", args.get("mode").unwrap())?;
+    let inner_opts: Vec<InnerOptimiser> =
+        parse_cli_list("inner-opt", args.get("inner-opt").unwrap())?;
+    let remat: CheckpointPolicy =
+        parse_cli("remat", args.get("remat").unwrap())?;
+    let fd_eps = args.get_f64("fd-eps").map_err(|e| anyhow!(e))?;
+    if fd_eps <= 0.0 {
+        return Err(anyhow!("--fd-eps must be positive, got {fd_eps}"));
+    }
     let seeds = args.get_usize("seeds").map_err(|e| anyhow!(e))?;
     if seeds == 0 {
         return Err(anyhow!(
             "--seeds 0 invalid; valid values: an integer >= 1"
         ));
     }
+
+    let names = |xs: &[String]| xs.join(",");
     println!(
         "native meta-training: task={} mode={} inner-opt={} remat={} \
          unroll={unroll} steps={steps}",
-        task.name(),
-        mode.name(),
-        inner_opt.name(),
+        names(&tasks.iter().map(|t| t.name().to_string()).collect::<Vec<_>>()),
+        names(&modes.iter().map(|m| m.name().to_string()).collect::<Vec<_>>()),
+        names(
+            &inner_opts
+                .iter()
+                .map(|o| o.name().to_string())
+                .collect::<Vec<_>>()
+        ),
         remat.name()
     );
-    if seeds == 1 {
-        let mut trainer = NativeMetaTrainer::with_unroll(task, seed, unroll)
-            .with_mode(mode)
-            .with_inner_opt(inner_opt)
-            .with_remat(remat);
+
+    let cells = tasks.len() * modes.len() * inner_opts.len() * seeds;
+    if cells == 1 {
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(tasks[0], seed, unroll)
+                .with_mode(modes[0])
+                .with_inner_opt(inner_opts[0])
+                .with_remat(remat)
+                .with_fd_epsilon(fd_eps);
         let report = trainer.train(steps);
         print_train_summary(&report, trainer.last_memory.as_ref());
+        println!(
+            "engine: {} hypergradients on one persistent tape",
+            trainer.engine().outer_steps()
+        );
         return Ok(());
     }
-    println!("seed sweep: {seeds} seeds starting at {seed}, scheduler pool");
-    let cfg = NativeSweepConfig {
-        task,
-        mode,
-        inner_opt,
+
+    println!(
+        "grid sweep: {cells} cells ({} task × {} opt × {} mode × {seeds} \
+         seeds from {seed}), scheduler pool",
+        tasks.len(),
+        inner_opts.len(),
+        modes.len()
+    );
+    let spec = SweepSpec {
+        tasks,
+        inner_opts,
+        modes,
         remat,
+        fd_epsilon: fd_eps,
         unroll,
         steps,
+        base_seed: seed,
+        n_seeds: seeds,
     };
-    let runs = run_seed_sweep(cfg, seed, seeds);
+    let runs = run_sweep(&spec);
     let mut t = Table::new(&[
+        "task",
+        "opt",
+        "mode",
         "seed",
         "loss head",
         "loss tail",
         "final",
         "steps/s",
     ])
-    .numeric_cols(&[0, 1, 2, 3, 4]);
+    .numeric_cols(&[3, 4, 5, 6, 7]);
     let mut finals = Vec::with_capacity(runs.len());
     for run in &runs {
         let (head, tail) = run.report.improvement(10);
         let last = run.report.losses.last().copied().unwrap_or(f64::NAN);
         finals.push(last);
         t.row(vec![
-            run.seed.to_string(),
+            run.cell.task.name().to_string(),
+            run.cell.inner_opt.name().to_string(),
+            run.cell.mode.name().to_string(),
+            run.cell.seed.to_string(),
             format!("{head:.4}"),
             format!("{tail:.4}"),
             format!("{last:.4}"),
@@ -264,7 +338,7 @@ fn cmd_native(args: &Args) -> Result<()> {
     println!("{}", t.render());
     let s = Summary::of(&finals);
     println!(
-        "final val loss over {} seeds: mean {:.4} ± {:.4} (min {:.4}, max \
+        "final val loss over {} runs: mean {:.4} ± {:.4} (min {:.4}, max \
          {:.4})",
         runs.len(),
         s.mean,
@@ -274,7 +348,7 @@ fn cmd_native(args: &Args) -> Result<()> {
     );
     if let Some(mem) = runs.iter().find_map(|r| r.memory) {
         println!(
-            "per-seed hypergrad memory: tape {} + checkpoints {} (peak live \
+            "per-cell hypergrad memory: tape {} + checkpoints {} (peak live \
              {})",
             human_bytes(mem.tape_bytes as u64),
             human_bytes(mem.checkpoint_bytes as u64),

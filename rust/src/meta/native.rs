@@ -2,55 +2,33 @@
 //! [`crate::autodiff`] alone — no PJRT, no artifacts, no Python anywhere.
 //!
 //! Mirrors the artifact driver's surface: an outer Adam loop over η whose
-//! per-step hypergradient comes from either `mixflow_hypergrad_with`
-//! (forward-over-reverse, the default, with a configurable
-//! [`CheckpointPolicy`] remat segment) or `naive_hypergrad`
-//! (reverse-over-reverse baseline), producing the same
-//! [`super::TrainReport`].  Multi-seed sweeps fan the whole outer loop
-//! out over the coordinator's worker pool
-//! ([`crate::coordinator::scheduler::run_pool`]).
+//! per-step hypergradient comes from one persistent
+//! [`HypergradEngine`] — naive, mixflow (with a configurable
+//! [`CheckpointPolicy`] remat segment, `auto` included) or fd, selected
+//! by [`HypergradMode`] — producing the same [`super::TrainReport`].
+//! Because the engine, its tape and its arena live as long as the
+//! trainer, every outer step after the first draws its buffers from the
+//! previous step's recycled storage.
+//!
+//! Sweeps fan out over the coordinator's worker pool
+//! ([`crate::coordinator::scheduler::run_pool`]): [`run_seed_sweep`]
+//! for the classic one-configuration × N-seeds case, [`run_sweep`] for a
+//! full [`SweepSpec`] grid (task × inner-optimiser × mode × seed).
 
 use std::time::Instant;
 
-use crate::autodiff::mixflow::{
-    mixflow_hypergrad_with, naive_hypergrad, BilevelProblem,
-    CheckpointPolicy, MemoryReport,
-};
+use crate::autodiff::engine::HypergradEngine;
+pub use crate::autodiff::engine::HypergradMode;
+use crate::autodiff::mixflow::{BilevelProblem, CheckpointPolicy, MemoryReport};
 use crate::autodiff::optim::InnerOptimiser;
 use crate::autodiff::problems::{
     AttentionProblem, HyperLrProblem, LossWeightingProblem,
 };
 use crate::autodiff::tensor::Tensor;
 use crate::coordinator::scheduler::{run_pool, Job};
+use crate::util::args::CliEnum;
 
 use super::TrainReport;
-
-/// Which hypergradient path drives the outer loop.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum HypergradMode {
-    /// Reverse-over-reverse over one monolithic tape.
-    Naive,
-    /// Forward-over-reverse with per-step tape reuse (MixFlow-MG).
-    Mixflow,
-}
-
-impl HypergradMode {
-    pub fn name(&self) -> &'static str {
-        match self {
-            HypergradMode::Naive => "naive",
-            HypergradMode::Mixflow => "mixflow",
-        }
-    }
-
-    /// Case- and whitespace-insensitive (`--mode Mixflow` must work).
-    pub fn parse(s: &str) -> Option<HypergradMode> {
-        match s.trim().to_lowercase().as_str() {
-            "naive" => Some(HypergradMode::Naive),
-            "mixflow" => Some(HypergradMode::Mixflow),
-            _ => None,
-        }
-    }
-}
 
 /// The native bilevel tasks (paper §5.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -70,10 +48,13 @@ impl NativeTask {
     }
 
     /// Accepts both the native names and the artifact task names,
-    /// case- and whitespace-insensitively.
+    /// case- and whitespace-insensitively.  The artifact default `maml`
+    /// maps to the native engine's nearest equivalent workload, the
+    /// hyper-LR task (hosting that alias here keeps `main.rs` free of
+    /// string rewriting).
     pub fn parse(s: &str) -> Option<NativeTask> {
         match s.trim().to_lowercase().as_str() {
-            "hyperlr" | "learning_lr" => Some(NativeTask::HyperLr),
+            "hyperlr" | "learning_lr" | "maml" => Some(NativeTask::HyperLr),
             "loss_weighting" => Some(NativeTask::LossWeighting),
             "attention" | "attn" => Some(NativeTask::Attention),
             _ => None,
@@ -81,12 +62,27 @@ impl NativeTask {
     }
 }
 
-/// Outer-loop driver: Adam on η over native hypergradients.
+impl CliEnum for NativeTask {
+    fn name(&self) -> String {
+        // Method-call syntax resolves to the inherent `name` above.
+        self.name().to_string()
+    }
+
+    fn parse(s: &str) -> Option<NativeTask> {
+        NativeTask::parse(s)
+    }
+
+    fn variants() -> &'static [&'static str] {
+        &["hyperlr", "learning_lr", "loss_weighting", "attention"]
+    }
+}
+
+/// Outer-loop driver: Adam on η over native hypergradients, all computed
+/// by one persistent [`HypergradEngine`].
 pub struct NativeMetaTrainer {
     problem: Box<dyn BilevelProblem>,
     task: NativeTask,
-    mode: HypergradMode,
-    remat: CheckpointPolicy,
+    engine: HypergradEngine,
     meta_lr: f64,
     eta: Vec<Tensor>,
     adam_m: Vec<Tensor>,
@@ -124,8 +120,7 @@ impl NativeMetaTrainer {
         NativeMetaTrainer {
             problem,
             task,
-            mode: HypergradMode::Mixflow,
-            remat: CheckpointPolicy::Full,
+            engine: HypergradEngine::builder().build(),
             meta_lr: 0.05,
             eta,
             adam_m,
@@ -135,21 +130,50 @@ impl NativeMetaTrainer {
         }
     }
 
+    /// Rebuild the engine from an updated builder, carrying over every
+    /// previously configured knob (mode, policy, fd epsilon, inner
+    /// optimiser).  Cheap before training; mid-training it would drop
+    /// the warm arena, so the `with_*` knobs are meant for construction
+    /// time.
+    fn reconfigure(
+        &mut self,
+        f: impl FnOnce(
+            crate::autodiff::engine::EngineBuilder,
+        ) -> crate::autodiff::engine::EngineBuilder,
+    ) {
+        let mut base = HypergradEngine::builder()
+            .mode(self.engine.mode())
+            .checkpoint(self.engine.policy())
+            .fd_epsilon(self.engine.fd_epsilon());
+        if let Some(opt) = self.engine.inner_opt() {
+            base = base.inner_opt(opt);
+        }
+        self.engine = f(base).build();
+    }
+
     pub fn with_mode(mut self, mode: HypergradMode) -> NativeMetaTrainer {
-        self.mode = mode;
+        self.reconfigure(|b| b.mode(mode));
         self
     }
 
     /// Select the inner-loop optimiser (SGD default, momentum, Adam).
     pub fn with_inner_opt(mut self, opt: InnerOptimiser) -> NativeMetaTrainer {
-        self.problem.set_optimiser(opt);
+        self.reconfigure(|b| b.inner_opt(opt));
+        self.engine.configure_problem(self.problem.as_mut());
         self
     }
 
-    /// Checkpoint policy for the mixflow path (ignored by `--mode naive`,
-    /// which has no checkpoints to thin out).
+    /// Checkpoint policy for the mixflow path (`auto` resolves K ≈ √T at
+    /// run time; ignored by `--mode naive|fd`, which have no checkpoints
+    /// to thin out).
     pub fn with_remat(mut self, policy: CheckpointPolicy) -> NativeMetaTrainer {
-        self.remat = policy;
+        self.reconfigure(|b| b.checkpoint(policy));
+        self
+    }
+
+    /// Central-difference step for the fd path.
+    pub fn with_fd_epsilon(mut self, epsilon: f64) -> NativeMetaTrainer {
+        self.reconfigure(|b| b.fd_epsilon(epsilon));
         self
     }
 
@@ -163,41 +187,40 @@ impl NativeMetaTrainer {
         &self.eta
     }
 
+    /// The persistent engine driving this trainer's hypergradients.
+    pub fn engine(&self) -> &HypergradEngine {
+        &self.engine
+    }
+
     /// Run `steps` outer updates; each draws fresh batches, computes the
-    /// hypergradient and applies one Adam step to η.
+    /// hypergradient on the persistent engine and applies one Adam step
+    /// to η.
     pub fn train(&mut self, steps: usize) -> TrainReport {
         let mut losses = Vec::with_capacity(steps);
         let t0 = Instant::now();
         for _ in 0..steps {
             self.problem.resample();
             let theta0 = self.problem.theta0();
-            let h = match self.mode {
-                HypergradMode::Mixflow => mixflow_hypergrad_with(
-                    self.problem.as_ref(),
-                    &theta0,
-                    &self.eta,
-                    self.remat,
-                ),
-                HypergradMode::Naive => {
-                    naive_hypergrad(self.problem.as_ref(), &theta0, &self.eta)
-                }
-            };
+            let h = self.engine.run(self.problem.as_ref(), &theta0, &self.eta);
             losses.push(h.outer_loss);
             self.last_memory = Some(h.memory);
             self.adam_step(&h.d_eta);
         }
         let seconds = t0.elapsed().as_secs_f64();
+        let mode = self.engine.mode();
         let mut artifact = format!(
             "native/{}/{}/{}",
             self.task.name(),
-            self.mode.name(),
+            mode.name(),
             self.problem.optimiser().name()
         );
-        // The naive path has no checkpoints to thin, so only a mixflow
-        // run is labelled with its remat policy.
-        if self.mode == HypergradMode::Mixflow && self.remat.segment() > 1 {
+        // Only the mixflow path has checkpoints to thin, so only a
+        // mixflow run is labelled with its remat policy.
+        if mode == HypergradMode::Mixflow
+            && self.engine.policy() != CheckpointPolicy::Full
+        {
             artifact.push('/');
-            artifact.push_str(&self.remat.name());
+            artifact.push_str(&self.engine.policy().name());
         }
         TrainReport {
             artifact,
@@ -230,8 +253,102 @@ impl NativeMetaTrainer {
     }
 }
 
+/// A full native sweep grid: every `task × inner-optimiser × mode`
+/// combination over `n_seeds` consecutive seeds, all sharing one unroll
+/// length, outer-step budget and checkpoint policy.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub tasks: Vec<NativeTask>,
+    pub inner_opts: Vec<InnerOptimiser>,
+    pub modes: Vec<HypergradMode>,
+    pub remat: CheckpointPolicy,
+    /// Central-difference step for any fd-mode cells.
+    pub fd_epsilon: f64,
+    pub unroll: usize,
+    pub steps: usize,
+    pub base_seed: u64,
+    pub n_seeds: usize,
+}
+
+impl SweepSpec {
+    /// One configuration over a seed range — the classic
+    /// [`run_seed_sweep`] shape.
+    pub fn single(
+        cfg: NativeSweepConfig,
+        base_seed: u64,
+        n_seeds: usize,
+    ) -> SweepSpec {
+        SweepSpec {
+            tasks: vec![cfg.task],
+            inner_opts: vec![cfg.inner_opt],
+            modes: vec![cfg.mode],
+            remat: cfg.remat,
+            fd_epsilon: crate::autodiff::engine::DEFAULT_FD_EPSILON,
+            unroll: cfg.unroll,
+            steps: cfg.steps,
+            base_seed,
+            n_seeds,
+        }
+    }
+
+    /// The grid, flattened in task → inner-optimiser → mode → seed order.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out = Vec::with_capacity(
+            self.tasks.len()
+                * self.inner_opts.len()
+                * self.modes.len()
+                * self.n_seeds,
+        );
+        for &task in &self.tasks {
+            for &inner_opt in &self.inner_opts {
+                for &mode in &self.modes {
+                    for i in 0..self.n_seeds as u64 {
+                        out.push(SweepCell {
+                            task,
+                            inner_opt,
+                            mode,
+                            seed: self.base_seed.wrapping_add(i),
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One point of a [`SweepSpec`] grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepCell {
+    pub task: NativeTask,
+    pub inner_opt: InnerOptimiser,
+    pub mode: HypergradMode,
+    pub seed: u64,
+}
+
+impl SweepCell {
+    /// `task/opt/mode/seedN` — the pool job name and report row label.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/seed{}",
+            self.task.name(),
+            self.inner_opt.name(),
+            self.mode.name(),
+            self.seed
+        )
+    }
+}
+
+/// One grid cell's result from [`run_sweep`].
+#[derive(Debug, Clone)]
+pub struct SweepRun {
+    pub cell: SweepCell,
+    pub report: TrainReport,
+    pub memory: Option<MemoryReport>,
+}
+
 /// Configuration of one native multi-seed sweep (everything but the
-/// seeds themselves).
+/// seeds themselves) — the single-cell ancestor of [`SweepSpec`].
 #[derive(Debug, Clone, Copy)]
 pub struct NativeSweepConfig {
     pub task: NativeTask,
@@ -250,47 +367,69 @@ pub struct SeedRun {
     pub memory: Option<MemoryReport>,
 }
 
-/// Fan one native meta-training configuration out over
-/// `base_seed .. base_seed + n_seeds` on the coordinator's worker pool.
-/// Each seed gets its own trainer (and therefore its own tape + arena)
-/// on a pool thread; results come back sorted by seed.  Native step
+/// Fan a [`SweepSpec`] grid out over the coordinator's worker pool.
+/// Each cell gets its own trainer — and therefore its own persistent
+/// engine, tape and arena — on a pool thread; results come back sorted
+/// in grid order (task → inner-optimiser → mode → seed).  Native step
 /// tapes are tiny next to the scheduler's usual HLO artifacts, so the
 /// admission budget is effectively unbounded and the pool degenerates to
-/// plain `min(seeds, cores)` parallelism.
-pub fn run_seed_sweep(
-    cfg: NativeSweepConfig,
-    base_seed: u64,
-    n_seeds: usize,
-) -> Vec<SeedRun> {
-    let jobs: Vec<Job<SeedRun>> = (0..n_seeds as u64)
-        .map(|i| {
-            let seed = base_seed.wrapping_add(i);
-            Job {
-                name: format!("seed{seed}"),
-                cost_bytes: (cfg.unroll as u64 + 2) * 64 * 1024,
-                work: Box::new(move || {
-                    let mut trainer = NativeMetaTrainer::with_unroll(
-                        cfg.task, seed, cfg.unroll,
-                    )
-                    .with_mode(cfg.mode)
-                    .with_inner_opt(cfg.inner_opt)
-                    .with_remat(cfg.remat);
-                    let report = trainer.train(cfg.steps);
-                    SeedRun { seed, report, memory: trainer.last_memory }
-                }),
-            }
+/// plain `min(cells, cores)` parallelism.
+pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepRun> {
+    let cells = spec.cells();
+    let unroll = spec.unroll;
+    let steps = spec.steps;
+    let remat = spec.remat;
+    let fd_epsilon = spec.fd_epsilon;
+    let jobs: Vec<Job<SweepRun>> = cells
+        .iter()
+        .map(|&cell| Job {
+            name: cell.label(),
+            cost_bytes: (unroll as u64 + 2) * 64 * 1024,
+            work: Box::new(move || {
+                let mut trainer = NativeMetaTrainer::with_unroll(
+                    cell.task, cell.seed, unroll,
+                )
+                .with_mode(cell.mode)
+                .with_inner_opt(cell.inner_opt)
+                .with_remat(remat)
+                .with_fd_epsilon(fd_epsilon);
+                let report = trainer.train(steps);
+                SweepRun { cell, report, memory: trainer.last_memory }
+            }),
         })
         .collect();
     let workers = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
-        .min(n_seeds.max(1));
-    let mut runs: Vec<SeedRun> = run_pool(jobs, workers, u64::MAX / 2)
+        .min(cells.len().max(1));
+    let mut runs: Vec<SweepRun> = run_pool(jobs, workers, u64::MAX / 2)
         .into_iter()
         .map(|(_, run)| run)
         .collect();
-    runs.sort_by_key(|r| r.seed);
+    // Back into grid order (the pool returns completion order); labels
+    // are unique per cell, so they key the ordering.
+    let order: std::collections::HashMap<String, usize> =
+        cells.iter().map(SweepCell::label).zip(0..).collect();
+    runs.sort_by_key(|r| order[&r.cell.label()]);
     runs
+}
+
+/// Fan one native meta-training configuration out over
+/// `base_seed .. base_seed + n_seeds` on the coordinator's worker pool —
+/// a single-cell [`run_sweep`]; results come back sorted by seed.
+pub fn run_seed_sweep(
+    cfg: NativeSweepConfig,
+    base_seed: u64,
+    n_seeds: usize,
+) -> Vec<SeedRun> {
+    run_sweep(&SweepSpec::single(cfg, base_seed, n_seeds))
+        .into_iter()
+        .map(|run| SeedRun {
+            seed: run.cell.seed,
+            report: run.report,
+            memory: run.memory,
+        })
+        .collect()
 }
 
 /// Render a native run the way the examples and the `native` CLI command
@@ -344,6 +483,7 @@ mod tests {
             NativeTask::parse("learning_lr"),
             Some(NativeTask::HyperLr)
         );
+        assert_eq!(NativeTask::parse("maml"), Some(NativeTask::HyperLr));
         assert_eq!(
             NativeTask::parse("loss_weighting"),
             Some(NativeTask::LossWeighting)
@@ -358,6 +498,7 @@ mod tests {
             Some(HypergradMode::Mixflow)
         );
         assert_eq!(HypergradMode::parse("naive"), Some(HypergradMode::Naive));
+        assert_eq!(HypergradMode::parse("fd"), Some(HypergradMode::Fd));
     }
 
     #[test]
@@ -372,6 +513,7 @@ mod tests {
             HypergradMode::parse(" NAIVE\t"),
             Some(HypergradMode::Naive)
         );
+        assert_eq!(HypergradMode::parse(" FD\n"), Some(HypergradMode::Fd));
         assert_eq!(NativeTask::parse("HyperLR"), Some(NativeTask::HyperLr));
         assert_eq!(
             NativeTask::parse("  Attention\n"),
@@ -412,6 +554,56 @@ mod tests {
             trainer.eta().iter().map(|e| e.data[0]).collect();
         assert_ne!(before, after, "Adam step must move eta");
         assert!(trainer.last_memory.is_some());
+        assert_eq!(trainer.engine().outer_steps(), 1);
+    }
+
+    #[test]
+    fn trainer_engine_persists_across_outer_steps() {
+        // The whole point of the engine rebuild: the second outer step
+        // must find the first step's buffers in the persistent arena.
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(NativeTask::HyperLr, 3, 4);
+        trainer.train(1);
+        let first = trainer.last_memory.expect("memory recorded");
+        trainer.train(1);
+        let second = trainer.last_memory.expect("memory recorded");
+        assert!(
+            second.arena_reuses > first.arena_reuses,
+            "second outer step must reuse more than the first \
+             ({} vs {})",
+            second.arena_reuses,
+            first.arena_reuses
+        );
+        assert!(
+            second.arena_allocs < first.arena_allocs,
+            "second outer step must allocate less than the first \
+             ({} vs {})",
+            second.arena_allocs,
+            first.arena_allocs
+        );
+        assert_eq!(trainer.engine().outer_steps(), 2);
+    }
+
+    #[test]
+    fn fd_mode_trains_and_labels_the_artifact() {
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(NativeTask::HyperLr, 3, 2)
+                .with_mode(HypergradMode::Fd);
+        let before: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        let report = trainer.train(2);
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+        assert!(
+            report.artifact.ends_with("hyperlr/fd/sgd"),
+            "got {:?}",
+            report.artifact
+        );
+        let after: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        assert_ne!(before, after, "fd hypergradients must move eta");
+        let mem = trainer.last_memory.expect("fd memory recorded");
+        assert_eq!(mem.checkpoint_bytes, 0);
+        assert!(mem.arena_reuses > 0, "fd reuses the engine tape");
     }
 
     #[test]
@@ -425,6 +617,14 @@ mod tests {
             report.artifact.ends_with("hyperlr/mixflow/sgd/remat2"),
             "got {:?}",
             report.artifact
+        );
+        let auto = NativeMetaTrainer::with_unroll(NativeTask::HyperLr, 3, 4)
+            .with_remat(CheckpointPolicy::Auto)
+            .train(1);
+        assert!(
+            auto.artifact.ends_with("hyperlr/mixflow/sgd/auto"),
+            "got {:?}",
+            auto.artifact
         );
     }
 
@@ -453,5 +653,77 @@ mod tests {
             runs.windows(2).any(|w| w[0].report.losses != w[1].report.losses),
             "all seeds produced identical losses"
         );
+    }
+
+    #[test]
+    fn sweep_spec_grid_covers_the_product_in_order() {
+        let spec = SweepSpec {
+            tasks: vec![NativeTask::HyperLr, NativeTask::Attention],
+            inner_opts: vec![InnerOptimiser::Sgd, InnerOptimiser::adam()],
+            modes: vec![HypergradMode::Mixflow, HypergradMode::Naive],
+            remat: CheckpointPolicy::Full,
+            fd_epsilon: 1e-5,
+            unroll: 2,
+            steps: 1,
+            base_seed: 7,
+            n_seeds: 2,
+        };
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2);
+        assert_eq!(
+            cells[0],
+            SweepCell {
+                task: NativeTask::HyperLr,
+                inner_opt: InnerOptimiser::Sgd,
+                mode: HypergradMode::Mixflow,
+                seed: 7,
+            }
+        );
+        // Seed varies fastest, task slowest.
+        assert_eq!(cells[1].seed, 8);
+        assert_eq!(cells[2].mode, HypergradMode::Naive);
+        assert_eq!(cells.last().unwrap().task, NativeTask::Attention);
+        assert_eq!(cells[0].label(), "hyperlr/sgd/mixflow/seed7");
+    }
+
+    #[test]
+    fn grid_sweep_runs_every_cell_on_the_pool() {
+        let spec = SweepSpec {
+            tasks: vec![NativeTask::HyperLr],
+            inner_opts: vec![InnerOptimiser::Sgd, InnerOptimiser::momentum()],
+            modes: vec![HypergradMode::Mixflow, HypergradMode::Naive],
+            remat: CheckpointPolicy::Full,
+            fd_epsilon: 1e-5,
+            unroll: 2,
+            steps: 2,
+            base_seed: 11,
+            n_seeds: 1,
+        };
+        let runs = run_sweep(&spec);
+        assert_eq!(runs.len(), 4);
+        // Grid order preserved despite pool completion order.
+        let labels: Vec<String> =
+            runs.iter().map(|r| r.cell.label()).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "hyperlr/sgd/mixflow/seed11",
+                "hyperlr/sgd/naive/seed11",
+                "hyperlr/momentum/mixflow/seed11",
+                "hyperlr/momentum/naive/seed11",
+            ]
+        );
+        for run in &runs {
+            assert!(run.report.losses.iter().all(|l| l.is_finite()));
+            assert!(run.memory.is_some());
+            let mode = run.cell.mode.name();
+            assert!(
+                run.report.artifact.contains(&format!("/{mode}/")),
+                "artifact {:?} must carry mode {mode}",
+                run.report.artifact
+            );
+        }
+        // Same seed + task + mode, different optimiser ⇒ different curves.
+        assert_ne!(runs[0].report.losses, runs[2].report.losses);
     }
 }

@@ -5,6 +5,33 @@
 
 use std::collections::BTreeMap;
 
+/// A CLI-facing enumeration: a closed set of named values a flag can
+/// take.  Implementors promise that
+///
+/// * every string in [`CliEnum::variants`] parses (`parse(v).is_some()`),
+/// * the canonical printed name round-trips
+///   (`parse(&x.name()) == Some(x)` for canonically-constructed values).
+///
+/// `main.rs` derives its `--flag ... valid values: a|b|c` error lists
+/// from [`CliEnum::valid_values`] instead of hardcoding them, so adding
+/// a variant to an enum automatically fixes every error message (the
+/// drift that once hid new modes from `--mode`'s error text).
+pub trait CliEnum: Sized {
+    /// Canonical printed name (re-parses via [`CliEnum::parse`]).
+    fn name(&self) -> String;
+    /// Case- and whitespace-insensitive lookup.
+    fn parse(s: &str) -> Option<Self>;
+    /// Accepted spellings, every one of which parses.  Open-ended types
+    /// (e.g. a remat segment accepting any integer K ≥ 2) list
+    /// exemplars here and override [`CliEnum::valid_values`] with the
+    /// general form.
+    fn variants() -> &'static [&'static str];
+    /// The `a|b|c` list shown in `--flag` error messages.
+    fn valid_values() -> String {
+        Self::variants().join("|")
+    }
+}
+
 /// One declared flag.
 #[derive(Debug, Clone)]
 struct Spec {
@@ -181,6 +208,41 @@ impl Args {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[derive(Debug, PartialEq)]
+    enum Fruit {
+        Apple,
+        Pear,
+    }
+
+    impl CliEnum for Fruit {
+        fn name(&self) -> String {
+            match self {
+                Fruit::Apple => "apple".to_string(),
+                Fruit::Pear => "pear".to_string(),
+            }
+        }
+        fn parse(s: &str) -> Option<Fruit> {
+            match s.trim().to_lowercase().as_str() {
+                "apple" => Some(Fruit::Apple),
+                "pear" => Some(Fruit::Pear),
+                _ => None,
+            }
+        }
+        fn variants() -> &'static [&'static str] {
+            &["apple", "pear"]
+        }
+    }
+
+    #[test]
+    fn cli_enum_contract() {
+        for v in Fruit::variants() {
+            let parsed = Fruit::parse(v).expect("every variant parses");
+            assert_eq!(Fruit::parse(&parsed.name()), Some(parsed));
+        }
+        assert_eq!(Fruit::valid_values(), "apple|pear");
+        assert_eq!(Fruit::parse("banana"), None);
+    }
 
     fn spec() -> ArgSpec {
         ArgSpec::new("prog", "test")

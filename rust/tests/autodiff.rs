@@ -1,7 +1,9 @@
 //! Integration tests for the native autodiff engine: finite-difference
 //! checks for every op, property-tested naive ≈ mixflow hypergradient
-//! agreement, the tape-memory regression, and native E2E training.
+//! agreement, persistent-engine ≡ fresh-call equivalence, CLI enum
+//! round-trips, the tape-memory regression, and native E2E training.
 
+use mixflow::autodiff::engine::HypergradEngine;
 use mixflow::autodiff::mixflow::{
     fd_hypergrad, inner_step_values, mixflow_hypergrad,
     mixflow_hypergrad_with, naive_hypergrad, rel_err, CheckpointPolicy,
@@ -15,6 +17,7 @@ use mixflow::autodiff::tape::{NodeId, Tape};
 use mixflow::autodiff::tensor::Tensor;
 use mixflow::autodiff::BilevelProblem;
 use mixflow::meta::{HypergradMode, NativeMetaTrainer, NativeTask};
+use mixflow::util::args::CliEnum;
 use mixflow::util::prng::Prng;
 use mixflow::util::proptest;
 
@@ -510,6 +513,176 @@ fn property_naive_equals_mixflow_on_random_instances() {
             ))
         }
     });
+}
+
+#[test]
+fn property_persistent_engine_is_bitwise_equal_to_fresh_calls() {
+    // The engine rebuild's core contract: a persistent HypergradEngine
+    // reused over N outer steps — buffers recirculating through one
+    // arena the whole time — must be bit-for-bit equal to a fresh
+    // per-call mixflow_hypergrad_with at every step, across random
+    // tasks, optimisers and checkpoint policies.
+    proptest::check("engine≡fresh", 12, |g| {
+        let mut problem = random_problem(g);
+        let theta0 = problem.theta0();
+        let mut eta = problem.eta0();
+        let policy = *g.choose(&[
+            CheckpointPolicy::Full,
+            CheckpointPolicy::Remat { segment: 2 },
+            CheckpointPolicy::Auto,
+        ]);
+        let mut engine = HypergradEngine::builder().checkpoint(policy).build();
+        let mut cold_reuses = None;
+        for step in 0..3 {
+            problem.resample();
+            let fresh = mixflow_hypergrad_with(
+                problem.as_ref(),
+                &theta0,
+                &eta,
+                policy,
+            );
+            let live = engine.run(problem.as_ref(), &theta0, &eta);
+            for (a, b) in fresh.d_eta.iter().zip(live.d_eta.iter()) {
+                if a.max_abs_diff(b) != 0.0 {
+                    return Err(format!(
+                        "step {step}: persistent engine diverged from fresh \
+                         call ({} policy, {} opt)",
+                        policy.name(),
+                        problem.optimiser().name()
+                    ));
+                }
+            }
+            if fresh.outer_loss != live.outer_loss {
+                return Err(format!(
+                    "step {step}: outer loss {} vs {}",
+                    live.outer_loss, fresh.outer_loss
+                ));
+            }
+            // The acceptance knob: every warm outer step must reuse
+            // strictly more buffers per run than the cold first step.
+            // (Warm steps compare equal to each other — the arena hits
+            // steady state after one run — so the baseline is step 0.)
+            match cold_reuses {
+                None => cold_reuses = Some(live.memory.arena_reuses),
+                Some(cold) => {
+                    if live.memory.arena_reuses <= cold {
+                        return Err(format!(
+                            "step {step}: warm-run arena reuse {} not above \
+                             the cold run's {}",
+                            live.memory.arena_reuses, cold
+                        ));
+                    }
+                }
+            }
+            // Walk η a little so consecutive steps differ.
+            for (e, gvec) in eta.iter_mut().zip(fresh.d_eta.iter()) {
+                for j in 0..e.data.len() {
+                    e.data[j] -= 0.01 * gvec.data[j];
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn property_cli_enum_names_round_trip() {
+    // parse(name()) == Some(self) for every canonically-constructed
+    // value of all four CLI enums, plus: every advertised variant
+    // string parses.
+    for mode in [
+        HypergradMode::Naive,
+        HypergradMode::Mixflow,
+        HypergradMode::Fd,
+    ] {
+        assert_eq!(HypergradMode::parse(mode.name()), Some(mode));
+    }
+    for task in [
+        NativeTask::HyperLr,
+        NativeTask::LossWeighting,
+        NativeTask::Attention,
+    ] {
+        assert_eq!(NativeTask::parse(task.name()), Some(task));
+    }
+    for opt in [
+        InnerOptimiser::Sgd,
+        InnerOptimiser::momentum(),
+        InnerOptimiser::adam(),
+    ] {
+        assert_eq!(InnerOptimiser::parse(opt.name()), Some(opt));
+    }
+    for v in <HypergradMode as CliEnum>::variants() {
+        assert!(HypergradMode::parse(v).is_some(), "variant {v}");
+    }
+    for v in <NativeTask as CliEnum>::variants() {
+        assert!(NativeTask::parse(v).is_some(), "variant {v}");
+    }
+    for v in <InnerOptimiser as CliEnum>::variants() {
+        assert!(InnerOptimiser::parse(v).is_some(), "variant {v}");
+    }
+    for v in <CheckpointPolicy as CliEnum>::variants() {
+        assert!(CheckpointPolicy::parse(v).is_some(), "variant {v}");
+    }
+    // The open-ended policy round-trips over random canonical segments.
+    proptest::check("policy-roundtrip", 40, |g| {
+        let policy = match g.usize(0, 2) {
+            0 => CheckpointPolicy::Full,
+            1 => CheckpointPolicy::Auto,
+            _ => CheckpointPolicy::Remat { segment: g.usize(2, 64) },
+        };
+        if CheckpointPolicy::parse(&policy.name()) == Some(policy) {
+            Ok(())
+        } else {
+            Err(format!("{policy:?} did not round-trip via {:?}", policy.name()))
+        }
+    });
+    // Valid-value lists the CLI derives are non-empty and mention every
+    // mode (the drift the shared trait exists to prevent).
+    let modes = <HypergradMode as CliEnum>::valid_values();
+    assert_eq!(modes, "naive|mixflow|fd");
+}
+
+#[test]
+fn auto_policy_matches_full_checkpointing_numerically() {
+    // Auto resolves K=round(√T) at run time; the remat recompute replays
+    // the identical op sequence, so it must reproduce the K=1 result.
+    let p = AttentionProblem::with_unroll(1, 9)
+        .with_optimiser(InnerOptimiser::adam());
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let full = mixflow_hypergrad(&p, &theta0, &eta);
+    let auto = mixflow_hypergrad_with(
+        &p,
+        &theta0,
+        &eta,
+        CheckpointPolicy::Auto,
+    );
+    assert!(
+        rel_err(&full.d_eta, &auto.d_eta) <= 1e-12,
+        "auto remat drifted from full checkpointing"
+    );
+    // K=3 at T=9 stores fewer checkpoints than K=1.
+    assert!(
+        auto.memory.checkpoint_bytes < full.memory.checkpoint_bytes,
+        "auto ({}) must checkpoint less than full ({})",
+        auto.memory.checkpoint_bytes,
+        full.memory.checkpoint_bytes
+    );
+    // At T ≤ 2 auto degrades to full checkpointing exactly (K = 1).
+    let tiny = HyperLrProblem::with_unroll(3, 2);
+    let theta0 = tiny.theta0();
+    let eta = tiny.eta0();
+    let a = mixflow_hypergrad(&tiny, &theta0, &eta);
+    let b = mixflow_hypergrad_with(
+        &tiny,
+        &theta0,
+        &eta,
+        CheckpointPolicy::Auto,
+    );
+    for (x, y) in a.d_eta.iter().zip(b.d_eta.iter()) {
+        assert_eq!(x.max_abs_diff(y), 0.0, "T≤2 auto must be bit-for-bit");
+    }
+    assert_eq!(a.memory.checkpoint_bytes, b.memory.checkpoint_bytes);
 }
 
 #[test]
