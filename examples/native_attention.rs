@@ -1,10 +1,11 @@
 //! The paper's headline configuration, native edition: meta-learned
-//! per-leaf learning rates over a single-head self-attention + layernorm
-//! block whose inner loop runs **Adam** — the MixFlow-MG backward sweep
-//! carries the adjoint through the optimiser moments `m`/`v`, not just θ.
-//! Every gradient (inner, outer, and the second-order products) is
-//! computed by the pure-Rust autodiff engine.  No PJRT, no artifacts, no
-//! Python toolchain.
+//! per-leaf learning rates over a **multi-head, batched** self-attention
+//! + layernorm block whose inner loop runs **Adam** — the MixFlow-MG
+//! backward sweep carries the adjoint through the optimiser moments
+//! `m`/`v`, not just θ, and the per-head projections ride the batched
+//! 3-D tape ops.  Every gradient (inner, outer, and the second-order
+//! products) is computed by the pure-Rust autodiff engine.  No PJRT, no
+//! artifacts, no Python toolchain.
 //!
 //! ```bash
 //! cargo run --release --example native_attention -- [steps]
@@ -19,15 +20,18 @@ fn main() {
         .and_then(|s| s.parse().ok())
         .unwrap_or(40);
     println!(
-        "meta-learning per-leaf LRs for attention+layernorm (adam inner)"
+        "meta-learning per-leaf LRs for 2-head batched attention+layernorm \
+         (adam inner)"
     );
     // α₀ starts deliberately small; the meta level must grow the LRs to
     // cut the post-unroll validation loss.  The remat segment is left on
-    // `auto`, so the persistent engine resolves K ≈ √T per run.
+    // `auto`, so the persistent engine resolves K ≈ √T per run; 2 heads
+    // over 2-sequence batches exercise the batched 3-D tape ops.
     let mut trainer =
         NativeMetaTrainer::with_unroll(NativeTask::Attention, 7, 6)
             .with_inner_opt(InnerOptimiser::adam())
-            .with_remat(CheckpointPolicy::Auto);
+            .with_remat(CheckpointPolicy::Auto)
+            .with_attention_shape(2, 2);
     let report = trainer.train(steps);
     print_train_summary(&report, trainer.last_memory.as_ref());
     println!(
@@ -41,9 +45,19 @@ fn main() {
     let (head, tail) = report.improvement(10);
     assert!(tail < head, "learned LRs must improve the validation loss");
     assert!(
-        report.artifact.ends_with("attention/mixflow/adam/auto"),
-        "auto remat must label the run: {:?}",
+        report.artifact.ends_with("attention/mixflow/adam/auto/h2/b2"),
+        "multi-head auto-remat run must label the artifact: {:?}",
         report.artifact
+    );
+    let mem = trainer.last_memory.expect("memory report recorded");
+    assert!(mem.kv_peak_bytes > 0, "K/V projections must be tagged");
+    assert!(
+        mem.kv_ckpt_alias_bytes > 0,
+        "backward sweep must rebuild K/V from checkpoint aliases"
+    );
+    assert!(
+        mem.kv_remat_bytes > 0,
+        "auto remat (K = √6 ≈ 2) must rematerialise intra-segment K/V"
     );
     println!("native_attention OK");
 }

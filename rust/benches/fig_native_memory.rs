@@ -2,26 +2,31 @@
 //! (Figures 1/4 shape) — no artifacts, no PJRT, no Python.
 //!
 //! For each configuration — the hyper-LR MLP task with a plain-SGD inner
-//! loop, and the attention + layernorm task driven by an Adam inner
-//! optimiser (the setup the paper actually benchmarks) — and each unroll
-//! length T, computes the hypergradient twice: reverse-over-reverse on
-//! one monolithic tape vs MixFlow-MG forward-over-reverse with per-step
-//! tape reuse, and reports the live tape bytes each path needs.  Both
-//! paths run on ONE persistent [`HypergradEngine`] each, reused across
-//! the whole unroll ladder — the configuration every driver now shares.
-//! Also cross-checks the two paths agree numerically, and (when an
-//! artifact manifest is discoverable) prints the `hlo::memory`
-//! simulator's default/mixflow ratios next to the native ones so the
-//! simulator's trend has a ground-truth oracle.
+//! loop, the single-head attention + layernorm task driven by an Adam
+//! inner optimiser, and the **multi-head batched** attention workload
+//! (the shape-for-shape match of the paper's benchmark setting) — and
+//! each unroll length T, computes the hypergradient three ways: naive
+//! reverse-over-reverse on one monolithic tape, MixFlow-MG with full
+//! checkpointing, and MixFlow-MG under `CheckpointPolicy::Auto`
+//! (K ≈ √T), reporting live tape bytes plus the **KV-reuse analysis**:
+//! peak live K/V-projection bytes per path, and the backward-sweep K/V
+//! rebuilds split into checkpoint-alias vs remat bytes.  All three paths
+//! run on ONE persistent [`HypergradEngine`] each, reused across the
+//! whole unroll ladder.  Also cross-checks the paths agree numerically,
+//! and (when an artifact manifest is discoverable) prints the
+//! `hlo::memory` simulator's default/mixflow ratios next to the native
+//! ones so the simulator's trend has a ground-truth oracle.
 //!
 //! ```bash
 //! cargo run --release --bin fig_native_memory
 //! ```
 
 use mixflow::autodiff::engine::{HypergradEngine, HypergradMode};
-use mixflow::autodiff::mixflow::{rel_err, BilevelProblem};
+use mixflow::autodiff::mixflow::{rel_err, BilevelProblem, CheckpointPolicy};
 use mixflow::autodiff::optim::InnerOptimiser;
-use mixflow::autodiff::problems::{AttentionProblem, HyperLrProblem};
+use mixflow::autodiff::problems::{
+    AttentionProblem, HyperLrProblem, MultiHeadAttentionProblem,
+};
 use mixflow::util::stats::human_bytes;
 use mixflow::util::table::Table;
 
@@ -38,26 +43,44 @@ fn build_attention_adam(unroll: usize) -> Box<dyn BilevelProblem> {
     )
 }
 
-/// One naive-vs-MixFlow table over the unroll ladder; false if the
-/// memory gap or the numeric agreement breaks anywhere.
-fn run_config(label: &str, build: ProblemBuilder) -> bool {
+fn build_multihead_attention_adam(unroll: usize) -> Box<dyn BilevelProblem> {
+    // The canonical multi-head default (2 heads × head dim 3 over
+    // 2-sequence batches) — the same shape the KV-counter integration
+    // tests pin, so bench and tests cannot drift apart.
+    Box::new(
+        MultiHeadAttentionProblem::with_unroll(1, unroll)
+            .with_optimiser(InnerOptimiser::adam()),
+    )
+}
+
+/// One naive vs MixFlow(full) vs MixFlow(auto-remat) table over the
+/// unroll ladder; false if the memory gap, a KV-reuse counter
+/// (`check_kv` configs only) or the numeric agreement breaks anywhere.
+fn run_config(label: &str, build: ProblemBuilder, check_kv: bool) -> bool {
     println!("\n[{label}]");
     let unrolls = [2usize, 4, 8, 16];
     let mut t = Table::new(&[
         "unroll T",
-        "naive tape",
+        "naive bytes",
         "mixflow tape",
         "mixflow ckpt",
         "ratio",
+        "naive KV",
+        "mix KV peak",
+        "KV ckpt-alias",
+        "KV remat (auto)",
         "max |dEta diff|",
     ])
-    .numeric_cols(&[0, 1, 2, 3, 4, 5]);
+    .numeric_cols(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9]);
 
     // One persistent engine per path, shared by the whole ladder: rungs
     // after the first draw their step tapes out of the warm arena.
     let mut naive_engine =
         HypergradEngine::builder().mode(HypergradMode::Naive).build();
     let mut mixflow_engine = HypergradEngine::builder().build();
+    let mut auto_engine = HypergradEngine::builder()
+        .checkpoint(CheckpointPolicy::Auto)
+        .build();
 
     let mut ok = true;
     for &unroll in &unrolls {
@@ -66,17 +89,63 @@ fn run_config(label: &str, build: ProblemBuilder) -> bool {
         let eta = problem.eta0();
         let naive = naive_engine.run(problem.as_ref(), &theta0, &eta);
         let mixed = mixflow_engine.run(problem.as_ref(), &theta0, &eta);
+        let auto = auto_engine.run(problem.as_ref(), &theta0, &eta);
         let err = rel_err(&naive.d_eta, &mixed.d_eta);
         let naive_bytes = naive.memory.total_bytes();
         let mixed_bytes = mixed.memory.total_bytes();
         if unroll >= 4 && mixed_bytes >= naive_bytes {
+            eprintln!("FAIL {label} T={unroll}: total bytes gap inverted");
+            ok = false;
+        }
+        if unroll >= 4 && mixed.memory.peak_bytes >= naive.memory.peak_bytes {
+            eprintln!(
+                "FAIL {label} T={unroll}: mixflow peak {} not below naive {}",
+                mixed.memory.peak_bytes, naive.memory.peak_bytes
+            );
             ok = false;
         }
         // Same bound the naive≈mixflow property test enforces; the two
         // paths order f64 ops differently, so exact agreement is
         // platform-dependent.
         if err > 1e-6 {
+            eprintln!("FAIL {label} T={unroll}: naive vs mixflow {err:.2e}");
             ok = false;
+        }
+        // Auto remat replays the identical op sequence from the stored
+        // checkpoints — it must reproduce full checkpointing to 1e-12.
+        if rel_err(&mixed.d_eta, &auto.d_eta) > 1e-12 {
+            eprintln!("FAIL {label} T={unroll}: auto remat drifted from full");
+            ok = false;
+        }
+        if check_kv && unroll >= 4 {
+            // The KV-reuse acceptance: K/V projections are tagged, the
+            // naive tape keeps all T steps' worth live while mixflow
+            // holds one step's worth, every backward step under full
+            // checkpointing rebuilds K/V from a checkpoint alias, and
+            // auto remat (K ≥ 2 at T ≥ 4) rematerialises some of it.
+            if naive.memory.kv_peak_bytes == 0
+                || mixed.memory.kv_peak_bytes == 0
+                || mixed.memory.kv_ckpt_alias_bytes == 0
+                || auto.memory.kv_remat_bytes == 0
+            {
+                eprintln!(
+                    "FAIL {label} T={unroll}: KV-reuse counters must be \
+                     nonzero (naive kv {}, mix kv {}, alias {}, remat {})",
+                    naive.memory.kv_peak_bytes,
+                    mixed.memory.kv_peak_bytes,
+                    mixed.memory.kv_ckpt_alias_bytes,
+                    auto.memory.kv_remat_bytes
+                );
+                ok = false;
+            }
+            if mixed.memory.kv_peak_bytes >= naive.memory.kv_peak_bytes {
+                eprintln!(
+                    "FAIL {label} T={unroll}: mixflow KV peak {} not below \
+                     naive {}",
+                    mixed.memory.kv_peak_bytes, naive.memory.kv_peak_bytes
+                );
+                ok = false;
+            }
         }
         t.row(vec![
             unroll.to_string(),
@@ -84,15 +153,20 @@ fn run_config(label: &str, build: ProblemBuilder) -> bool {
             human_bytes(mixed.memory.tape_bytes as u64),
             human_bytes(mixed.memory.checkpoint_bytes as u64),
             format!("{:.2}", naive_bytes as f64 / mixed_bytes.max(1) as f64),
+            human_bytes(naive.memory.kv_peak_bytes as u64),
+            human_bytes(mixed.memory.kv_peak_bytes as u64),
+            human_bytes(mixed.memory.kv_ckpt_alias_bytes as u64),
+            human_bytes(auto.memory.kv_remat_bytes as u64),
             format!("{err:.2e}"),
         ]);
     }
     println!("{}", t.render());
     println!(
         "  (persistent engines: naive ran {} ladder rungs on one tape, \
-         mixflow {})",
+         mixflow {}, auto-remat {})",
         naive_engine.outer_steps(),
-        mixflow_engine.outer_steps()
+        mixflow_engine.outer_steps(),
+        auto_engine.outer_steps()
     );
     ok
 }
@@ -101,20 +175,32 @@ fn main() {
     println!(
         "Figure (native) — tape memory: reverse-over-reverse vs MixFlow-MG"
     );
-    let configs: [(&str, ProblemBuilder); 2] = [
-        ("hyperlr · sgd inner optimiser", build_hyperlr_sgd),
-        ("attention+layernorm · adam inner optimiser", build_attention_adam),
+    let configs: [(&str, ProblemBuilder, bool); 3] = [
+        ("hyperlr · sgd inner optimiser", build_hyperlr_sgd, false),
+        (
+            "attention+layernorm · adam inner optimiser",
+            build_attention_adam,
+            true,
+        ),
+        (
+            "multi-head attention (2 heads × 2 seqs) · adam inner optimiser",
+            build_multihead_attention_adam,
+            true,
+        ),
     ];
     let mut all_ok = true;
-    for (label, build) in configs {
-        if !run_config(label, build) {
+    for (label, build, check_kv) in configs {
+        if !run_config(label, build, check_kv) {
             all_ok = false;
         }
     }
     println!(
         "paper shape: the naive tape grows ~linearly in T while MixFlow-MG \
          holds one step's tape + O(T) checkpoints (θ plus optimiser \
-         moments) — the ratio widens with T on both configurations."
+         moments) — the ratio widens with T on all configurations, and on \
+         the attention workloads the KV columns show the K/V projections \
+         specifically moving from live-on-tape (naive) to \
+         rebuilt-per-step from checkpoint aliases or remat (mixflow)."
     );
 
     // Cross-check against the HLO buffer-liveness simulator when real

@@ -3,9 +3,10 @@
 //!
 //! The paper claims not just a >10x memory reduction but up to 25%
 //! wall-clock improvement; this binary pins the repo's perf trajectory
-//! by timing all three paths on the hyper-LR (SGD inner loop) and the
-//! attention+layernorm (Adam inner loop) workloads across the unroll
-//! ladder, via [`mixflow::util::bench`].  Each variant runs on ONE
+//! by timing all three paths on the hyper-LR (SGD inner loop), the
+//! single-head attention+layernorm (Adam inner loop) and the multi-head
+//! batched attention (`attention_mh2b2`, Adam) workloads across the
+//! unroll ladder, via [`mixflow::util::bench`].  Each variant runs on ONE
 //! persistent [`HypergradEngine`], so the timed iterations measure the
 //! steady-state (arena-warm) path every driver now runs.  It writes
 //! every timing and memory counter to `BENCH_native.json` (CI uploads it
@@ -28,7 +29,9 @@ use mixflow::autodiff::mixflow::{
     rel_err, BilevelProblem, CheckpointPolicy, Hypergrad,
 };
 use mixflow::autodiff::optim::InnerOptimiser;
-use mixflow::autodiff::problems::{AttentionProblem, HyperLrProblem};
+use mixflow::autodiff::problems::{
+    AttentionProblem, HyperLrProblem, MultiHeadAttentionProblem,
+};
 use mixflow::util::bench::Bench;
 use mixflow::util::json::Json;
 use mixflow::util::stats::{human_bytes, Summary};
@@ -47,6 +50,16 @@ fn build_hyperlr_sgd(unroll: usize) -> Box<dyn BilevelProblem> {
 fn build_attention_adam(unroll: usize) -> Box<dyn BilevelProblem> {
     Box::new(
         AttentionProblem::with_unroll(1, unroll)
+            .with_optimiser(InnerOptimiser::adam()),
+    )
+}
+
+fn build_multihead_attention_adam(unroll: usize) -> Box<dyn BilevelProblem> {
+    // The canonical multi-head default (2 heads × 2-sequence batches),
+    // Adam inner loop — the paper's benchmark shape.  `perf_gate` gates
+    // this cell's mixflow rows once the committed baseline carries them.
+    Box::new(
+        MultiHeadAttentionProblem::with_unroll(1, unroll)
             .with_optimiser(InnerOptimiser::adam()),
     )
 }
@@ -90,9 +103,10 @@ fn main() {
         if smoke { "  [smoke]" } else { "" }
     );
 
-    let configs: [(&str, &str, ProblemBuilder); 2] = [
+    let configs: [(&str, &str, ProblemBuilder); 3] = [
         ("hyperlr", "sgd", build_hyperlr_sgd),
         ("attention", "adam", build_attention_adam),
+        ("attention_mh2b2", "adam", build_multihead_attention_adam),
     ];
     let remat = CheckpointPolicy::Remat { segment: REMAT_K };
     let mut bench = Bench::new("fig_native_walltime")

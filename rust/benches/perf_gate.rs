@@ -10,9 +10,14 @@
 //!   machine cancels out of both sides and only a genuine slowdown of
 //!   the mixflow path relative to the naive baseline trips the gate.
 //!
-//! Rows present in only one file are reported but never fail the gate
-//! (new configurations need a baseline refresh, not a red build).  To
-//! refresh after an intentional perf change:
+//! Every `mixflow*` row the smoke bench emits is gated — including the
+//! multi-head batched attention cell (`attention_mh2b2+adam`) — as soon
+//! as the committed baseline carries a matching row.  Rows present in
+//! only one file are reported but never fail the gate (new
+//! configurations need a baseline refresh, not a red build; the
+//! multi-head cell warns-and-passes this way while the baseline is
+//! still the bootstrap placeholder).  To refresh after an intentional
+//! perf change:
 //!
 //! ```bash
 //! cargo run --release --bin fig_native_walltime -- --smoke

@@ -257,6 +257,11 @@ impl HypergradStrategy for FdStrategy {
                 arena_reuses: arena.reuses - arena_before.reuses,
                 forward_seconds: t0.elapsed().as_secs_f64(),
                 backward_seconds: 0.0,
+                // fd never walks a backward sweep, so the KV-reuse
+                // ledger (an adjoint-path notion) stays empty.
+                kv_peak_bytes: 0,
+                kv_ckpt_alias_bytes: 0,
+                kv_remat_bytes: 0,
             },
         }
     }

@@ -209,6 +209,24 @@ pub struct MemoryReport {
     pub forward_seconds: f64,
     /// Wall-clock of the adjoint sweep, remat recompute included.
     pub backward_seconds: f64,
+    /// Peak K/V-projection bytes live on any single tape (nodes tagged
+    /// via [`super::tape::Tape::mark_kv`] by the attention problems).
+    /// Naive accumulates every step's K/V on the monolithic tape, so
+    /// this grows ∝ T; mixflow holds at most one step's worth — the
+    /// per-tensor view of where the attention memory saving comes from.
+    /// 0 for problems with no tagged K/V nodes and for the fd path.
+    pub kv_peak_bytes: usize,
+    /// K/V bytes rebuilt on backward-sweep step tapes whose `(θ_t, s_t)`
+    /// seed was **aliased straight from a stored checkpoint** (segment
+    /// boundaries; every backward step under full checkpointing).  These
+    /// rebuilds cost one step-tape's transient storage instead of T live
+    /// projections — the KV-reuse half of the MixFlow saving.
+    pub kv_ckpt_alias_bytes: usize,
+    /// K/V bytes rebuilt from **rematerialised** intra-segment states
+    /// (the segment recompute plus backward steps seeded by recomputed
+    /// states).  0 under full checkpointing (`K = 1`); grows as the
+    /// remat segment K trades recompute for checkpoint memory.
+    pub kv_remat_bytes: usize,
 }
 
 impl MemoryReport {
@@ -306,6 +324,12 @@ pub fn naive_hypergrad_in(
             arena_reuses: arena.reuses - arena_before.reuses,
             forward_seconds,
             backward_seconds,
+            // The monolithic tape keeps every step's K/V projection
+            // live at once; nothing is rebuilt, so both reuse counters
+            // stay 0.
+            kv_peak_bytes: stats.kv_bytes,
+            kv_ckpt_alias_bytes: 0,
+            kv_remat_bytes: 0,
         },
     }
 }
@@ -418,6 +442,12 @@ pub fn mixflow_hypergrad_in(
     let mut live_state = 0usize; // bytes of live (θ, s) checkpoint values
     let mut peak_state = 0usize;
     let mut peak_total = 0usize;
+    // KV-reuse ledger: peak K/V bytes on any one step tape, plus the
+    // backward-sweep rebuilds split by what seeded them (stored
+    // checkpoint alias vs rematerialised intra-segment state).
+    let mut kv_peak = 0usize;
+    let mut kv_ckpt_alias = 0usize;
+    let mut kv_remat = 0usize;
 
     // ---- forward: checkpoint (θ_t, s_t) at segment boundaries ----------
     let t_fwd = Instant::now();
@@ -443,6 +473,7 @@ pub fn mixflow_hypergrad_in(
         peak_tape = peak_tape.max(stats.bytes);
         peak_nodes = peak_nodes.max(stats.nodes);
         peak_total = peak_total.max(stats.bytes + (live_state - overlap));
+        kv_peak = kv_peak.max(stats.kv_bytes);
         theta = next_theta;
         state = next_state;
     }
@@ -465,6 +496,11 @@ pub fn mixflow_hypergrad_in(
         peak_nodes = peak_nodes.max(tape.stats().nodes);
         peak_total =
             peak_total.max(tape.stats().bytes + (live_state - overlap));
+        // The λ-seeding tape rebuilds the validation K/V from θ_T —
+        // aliased from the live final state, so it books as a
+        // checkpoint-alias rebuild.
+        kv_peak = kv_peak.max(tape.stats().kv_bytes);
+        kv_ckpt_alias += tape.stats().kv_bytes;
         let mut lambda: Vec<Tensor> =
             grads.iter().map(|&id| tape.value(id).clone()).collect();
         lambda.extend(state.iter().map(|s| Tensor::zeros(&s.shape)));
@@ -504,6 +540,9 @@ pub fn mixflow_hypergrad_in(
             peak_tape = peak_tape.max(stats.bytes);
             peak_nodes = peak_nodes.max(stats.nodes);
             peak_total = peak_total.max(stats.bytes + (live_state - overlap));
+            // Segment recompute rebuilds K/V it threw away forward.
+            kv_peak = kv_peak.max(stats.kv_bytes);
+            kv_remat += stats.kv_bytes;
             live_state += pair_bytes(&th, &st);
             peak_state = peak_state.max(live_state);
             seg.push((th, st));
@@ -606,6 +645,16 @@ pub fn mixflow_hypergrad_in(
             peak_total = peak_total.max(
                 tape.stats().bytes + tangent_bytes + (live_state - overlap),
             );
+            // This backward step rebuilt step t's K/V projections.  At a
+            // segment boundary the (θ_t, s_t) seed is an alias of a
+            // stored checkpoint; inside a segment it was rematerialised
+            // by the recompute pass above.
+            kv_peak = kv_peak.max(tape.stats().kv_bytes);
+            if t == seg_start {
+                kv_ckpt_alias += tape.stats().kv_bytes;
+            } else {
+                kv_remat += tape.stats().kv_bytes;
+            }
         }
 
         // Whole segment consumed: its states (stored + rematerialised)
@@ -629,6 +678,9 @@ pub fn mixflow_hypergrad_in(
             arena_reuses: arena.reuses - arena_before.reuses,
             forward_seconds,
             backward_seconds,
+            kv_peak_bytes: kv_peak,
+            kv_ckpt_alias_bytes: kv_ckpt_alias,
+            kv_remat_bytes: kv_remat,
         },
     }
 }

@@ -11,7 +11,10 @@
 //!   buffers from, so reset-and-reused step tapes bypass the allocator.
 //! * [`tape`] — Wengert-list reverse mode whose adjoint pass is itself a
 //!   graph (so grad-of-grad works), plus a forward-mode JVP overlay;
-//!   sweeps borrow ops, `Reshape` aliases its input buffer.
+//!   sweeps borrow ops, `Reshape` aliases its input buffer.  Batched
+//!   rank-3 matmul and column concat/split ops carry the multi-head
+//!   attention stack, and `Tape::mark_kv` tags K/V projections for the
+//!   [`mixflow::MemoryReport`] KV-reuse counters.
 //! * [`optim`] — differentiable inner-loop optimisers (SGD, momentum,
 //!   Adam) whose per-step update — moment state and bias correction
 //!   included — is built in-graph on the step tape.
@@ -31,8 +34,11 @@
 //!   [`engine::HypergradStrategy`] trait unifying naive / mixflow / fd
 //!   behind one `run(problem, θ₀, η)` call, configured through the
 //!   fluent [`engine::EngineBuilder`].
-//! * [`problems`] — the paper's hyper-LR and loss-weighting tasks plus a
-//!   self-attention + layernorm workload.
+//! * [`problems`] — the paper's hyper-LR and loss-weighting tasks plus
+//!   self-attention + layernorm workloads: the legacy single-head
+//!   [`problems::AttentionProblem`] and the multi-head batched
+//!   [`problems::MultiHeadAttentionProblem`] (`heads = 1, batch = 1`
+//!   reproduces the single-head path bit-for-bit).
 //!
 //! See `rust/src/autodiff/README.md` for the derivation and the memory
 //! model.

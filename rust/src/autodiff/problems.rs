@@ -368,6 +368,8 @@ pub fn attention_ce_vec(
     let q = tape.matmul(x_id, wq, false, false);
     let k = tape.matmul(x_id, wk, false, false);
     let v = tape.matmul(x_id, wv, false, false);
+    tape.mark_kv(k);
+    tape.mark_kv(v);
     let scores = tape.matmul(q, k, false, true);
     let scaled = tape.scale(scores, 1.0 / (d as f64).sqrt());
     let attn = tape.softmax_rows(scaled);
@@ -517,6 +519,248 @@ impl BilevelProblem for AttentionProblem {
     }
 }
 
+/// Per-token cross-entropy `[b·s]` of a **multi-head, batched**
+/// self-attention block with row layer-normalisation.
+///
+/// `theta = [Wq (d×d), Wk (d×d), Wv (d×d), Wo (d×c)]` exactly as the
+/// single-head [`attention_ce_vec`]; the heads live in column blocks of
+/// the shared projections.  `x_id` must hold a `[b·s, d]` token batch —
+/// `b` sequences of `s = rows / b` tokens each, flattened row-major, so
+/// attention is block-diagonal over the `b` sequences.  Per head `h`
+/// (width `d_h = d / heads`):
+///
+/// 1. split columns `[h·d_h, (h+1)·d_h)` out of the shared Q/K/V
+///    projections ([`Tape::split_cols`]),
+/// 2. reshape `[b·s, d_h] → [b, s, d_h]` (zero-copy — row-major blocks
+///    are already contiguous per sequence),
+/// 3. batched scores `Q·Kᵀ / √d_h` over the `b` groups
+///    ([`Tape::batch_matmul`]), row softmax, batched context `A·V`,
+/// 4. reshape back and head-stack the contexts ([`Tape::concat_cols`]).
+///
+/// With `heads = 1, b = 1` every step degenerates to the single-head
+/// path bit-for-bit (the splits/concats are exact copies and a
+/// one-group batched matmul runs the identical kernel loop).  The K and
+/// V projections are tagged via [`Tape::mark_kv`] so `MemoryReport`'s
+/// KV-reuse counters see them.
+pub fn multihead_attention_ce_vec(
+    tape: &mut Tape,
+    x_id: NodeId,
+    theta: &[NodeId],
+    labels: &[usize],
+    heads: usize,
+    batch: usize,
+) -> NodeId {
+    let rows = tape.shape(x_id)[0];
+    let d = tape.shape(x_id)[1];
+    assert!(heads >= 1, "heads must be >= 1");
+    assert!(batch >= 1, "batch must be >= 1");
+    assert_eq!(rows % batch, 0, "token rows {rows} not divisible by batch {batch}");
+    assert_eq!(d % heads, 0, "d_model {d} not divisible by heads {heads}");
+    let s = rows / batch;
+    let dh = d / heads;
+    let (wq, wk, wv, wo) = (theta[0], theta[1], theta[2], theta[3]);
+    let q = tape.matmul(x_id, wq, false, false);
+    let k = tape.matmul(x_id, wk, false, false);
+    let v = tape.matmul(x_id, wv, false, false);
+    tape.mark_kv(k);
+    tape.mark_kv(v);
+    let mut head_ctx = Vec::with_capacity(heads);
+    for h in 0..heads {
+        let off = h * dh;
+        let qh = tape.split_cols(q, off, dh);
+        let kh = tape.split_cols(k, off, dh);
+        let vh = tape.split_cols(v, off, dh);
+        let q3 = tape.reshape(qh, vec![batch, s, dh]);
+        let k3 = tape.reshape(kh, vec![batch, s, dh]);
+        let v3 = tape.reshape(vh, vec![batch, s, dh]);
+        let scores = tape.batch_matmul(q3, k3, false, true);
+        let scaled = tape.scale(scores, 1.0 / (dh as f64).sqrt());
+        let flat = tape.reshape(scaled, vec![batch * s, s]);
+        let attn = tape.softmax_rows(flat);
+        let attn3 = tape.reshape(attn, vec![batch, s, s]);
+        let ctx = tape.batch_matmul(attn3, v3, false, false);
+        head_ctx.push(tape.reshape(ctx, vec![batch * s, dh]));
+    }
+    let ctx = tape.concat_cols(&head_ctx);
+    let normed = tape.layernorm_rows(ctx, 1e-5);
+    let z = tape.matmul(normed, wo, false, false);
+    let lse = tape.logsumexp_rows(z);
+    let picked = tape.gather_cols(z, labels);
+    tape.sub(lse, picked)
+}
+
+/// Hyper-LR over a **multi-head, batched** self-attention block — the
+/// shape-for-shape match of the paper's transformer benchmark setting.
+/// `heads = 1, batch = 1` reproduces [`AttentionProblem`] bit-for-bit
+/// (same data stream, same θ init, degenerate tape ops), which the
+/// conformance proptest in `rust/tests/autodiff.rs` pins.
+///
+/// Training batches hold `batch` sequences of `seq` tokens; the
+/// validation batch holds `batch` sequences of `2·seq` tokens (the
+/// sequence count is fixed at `batch`, so the per-forward group count
+/// never changes).  η is a log-scale LR multiplier per θ leaf exactly as
+/// in [`HyperLrProblem`].
+pub struct MultiHeadAttentionProblem {
+    data: MixtureData,
+    theta_init: Vec<Tensor>,
+    heads: usize,
+    batch: usize,
+    seq: usize,
+    unroll: usize,
+    alpha0: f64,
+    opt: InnerOptimiser,
+    train: Vec<(Tensor, Vec<usize>)>,
+    val: (Tensor, Vec<usize>),
+}
+
+impl MultiHeadAttentionProblem {
+    /// Default multi-head shape: d_model 6, 2 heads × head dim 3,
+    /// 2-sequence batches, α₀ deliberately small like
+    /// [`AttentionProblem::new`].
+    pub fn new(seed: u64) -> MultiHeadAttentionProblem {
+        MultiHeadAttentionProblem::with_config(seed, 6, 2, 2, 8, 4, 8, 0.01)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_config(
+        seed: u64,
+        d_model: usize,
+        heads: usize,
+        batch: usize,
+        seq: usize,
+        classes: usize,
+        unroll: usize,
+        alpha0: f64,
+    ) -> MultiHeadAttentionProblem {
+        assert!(heads >= 1, "heads must be >= 1");
+        assert!(batch >= 1, "batch must be >= 1");
+        assert_eq!(
+            d_model % heads,
+            0,
+            "d_model {d_model} not divisible by heads {heads}"
+        );
+        let data = MixtureData::new(seed, d_model, classes);
+        // Same init stream as AttentionProblem (fold 0xA77E, three d×d
+        // projections + the d×c output head) so heads=1/batch=1 is
+        // bit-for-bit the single-head problem.
+        let mut init_rng = Prng::new(seed).fold_in(0xA77E);
+        let theta_init = vec![
+            Tensor::randn(&[d_model, d_model], 0.5, &mut init_rng),
+            Tensor::randn(&[d_model, d_model], 0.5, &mut init_rng),
+            Tensor::randn(&[d_model, d_model], 0.5, &mut init_rng),
+            Tensor::randn(&[d_model, classes], 0.5, &mut init_rng),
+        ];
+        let mut p = MultiHeadAttentionProblem {
+            data,
+            theta_init,
+            heads,
+            batch,
+            seq,
+            unroll,
+            alpha0,
+            opt: InnerOptimiser::Sgd,
+            train: Vec::new(),
+            val: (Tensor::zeros(&[1, d_model]), vec![0]),
+        };
+        p.resample();
+        p
+    }
+
+    /// Same task with a different unroll length (memory benches).
+    pub fn with_unroll(seed: u64, unroll: usize) -> MultiHeadAttentionProblem {
+        MultiHeadAttentionProblem::with_config(seed, 6, 2, 2, 8, 4, unroll, 0.01)
+    }
+
+    /// Builder-style inner-optimiser override.
+    pub fn with_optimiser(
+        mut self,
+        opt: InnerOptimiser,
+    ) -> MultiHeadAttentionProblem {
+        self.opt = opt;
+        self
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn mean_ce(
+        &self,
+        tape: &mut Tape,
+        batch: &(Tensor, Vec<usize>),
+        theta: &[NodeId],
+    ) -> NodeId {
+        let x_id = tape.constant(batch.0.clone());
+        let ce = multihead_attention_ce_vec(
+            tape, x_id, theta, &batch.1, self.heads, self.batch,
+        );
+        let s = tape.sum(ce);
+        tape.scale(s, 1.0 / batch.1.len() as f64)
+    }
+}
+
+impl BilevelProblem for MultiHeadAttentionProblem {
+    fn theta0(&self) -> Vec<Tensor> {
+        self.theta_init.clone()
+    }
+
+    fn eta0(&self) -> Vec<Tensor> {
+        self.theta_init.iter().map(|_| Tensor::scalar(0.0)).collect()
+    }
+
+    fn unroll(&self) -> usize {
+        self.unroll
+    }
+
+    fn inner_loss(
+        &self,
+        tape: &mut Tape,
+        theta: &[NodeId],
+        _eta: &[NodeId],
+        step: usize,
+    ) -> NodeId {
+        self.mean_ce(tape, &self.train[step % self.train.len()], theta)
+    }
+
+    fn outer_loss(&self, tape: &mut Tape, theta: &[NodeId]) -> NodeId {
+        self.mean_ce(tape, &self.val, theta)
+    }
+
+    fn lr_nodes(&self, tape: &mut Tape, eta: &[NodeId]) -> Vec<NodeId> {
+        self.theta_init
+            .iter()
+            .enumerate()
+            .map(|(i, leaf)| {
+                let e = tape.exp(eta[i]);
+                let s = tape.scale(e, self.alpha0);
+                tape.broadcast(s, &leaf.shape)
+            })
+            .collect()
+    }
+
+    fn optimiser(&self) -> InnerOptimiser {
+        self.opt
+    }
+
+    fn set_optimiser(&mut self, opt: InnerOptimiser) {
+        self.opt = opt;
+    }
+
+    fn resample(&mut self) {
+        // Same PRNG consumption as AttentionProblem when batch = 1:
+        // batch·seq tokens per train step, batch·seq·2 for validation
+        // (i.e. the same `batch` sequence count with doubled length).
+        self.train = (0..self.unroll)
+            .map(|_| self.data.batch(self.batch * self.seq, 0.0))
+            .collect();
+        self.val = self.data.batch(self.batch * self.seq * 2, 0.0);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -596,6 +840,67 @@ mod tests {
         let prob2 =
             AttentionProblem::new(3).with_optimiser(InnerOptimiser::momentum());
         assert_eq!(prob2.optimiser(), InnerOptimiser::momentum());
+    }
+
+    #[test]
+    fn multihead_loss_is_finite_and_theta_sensitive() {
+        let prob = MultiHeadAttentionProblem::with_config(
+            29, 6, 3, 2, 4, 4, 3, 0.05,
+        );
+        assert_eq!(prob.heads(), 3);
+        assert_eq!(prob.batch(), 2);
+        let mut tape = Tape::new();
+        let theta: Vec<NodeId> =
+            prob.theta0().into_iter().map(|t| tape.leaf(t)).collect();
+        let eta: Vec<NodeId> =
+            prob.eta0().into_iter().map(|t| tape.leaf(t)).collect();
+        let l = prob.inner_loss(&mut tape, &theta, &eta, 0);
+        assert!(tape.value(l).item().is_finite());
+        assert!(tape.value(l).item() > 0.0, "CE must be positive");
+        let g = tape.grad(l, &theta);
+        let total: f64 = g.iter().map(|&id| tape.value(id).max_abs()).sum();
+        assert!(total > 1e-8, "multihead θ gradient unexpectedly zero");
+        assert!(
+            tape.stats().kv_bytes > 0,
+            "K/V projections must be tagged on the tape"
+        );
+    }
+
+    #[test]
+    fn multihead_heads1_batch1_matches_single_head_loss_values() {
+        // The degenerate configuration must reproduce the single-head
+        // problem's loss value exactly (full hypergradient conformance
+        // is property-tested in rust/tests/autodiff.rs).
+        let old = AttentionProblem::with_config(31, 4, 5, 3, 2, 0.03);
+        let new = MultiHeadAttentionProblem::with_config(
+            31, 4, 1, 1, 5, 3, 2, 0.03,
+        );
+        for (a, b) in old.theta0().iter().zip(new.theta0().iter()) {
+            assert_eq!(a.data, b.data, "theta init must match");
+        }
+        let mut t_old = Tape::new();
+        let theta: Vec<NodeId> =
+            old.theta0().into_iter().map(|t| t_old.leaf(t)).collect();
+        let eta: Vec<NodeId> =
+            old.eta0().into_iter().map(|t| t_old.leaf(t)).collect();
+        let l_old = old.inner_loss(&mut t_old, &theta, &eta, 0);
+        let mut t_new = Tape::new();
+        let theta: Vec<NodeId> =
+            new.theta0().into_iter().map(|t| t_new.leaf(t)).collect();
+        let eta: Vec<NodeId> =
+            new.eta0().into_iter().map(|t| t_new.leaf(t)).collect();
+        let l_new = new.inner_loss(&mut t_new, &theta, &eta, 0);
+        assert_eq!(
+            t_old.value(l_old).item(),
+            t_new.value(l_new).item(),
+            "heads=1/batch=1 inner loss must be bit-for-bit single-head"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible by heads")]
+    fn multihead_rejects_indivisible_d_model() {
+        MultiHeadAttentionProblem::with_config(1, 6, 4, 1, 4, 3, 2, 0.05);
     }
 
     #[test]

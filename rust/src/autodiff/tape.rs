@@ -54,6 +54,17 @@ pub enum Op {
     /// `x + c` elementwise.
     Offset(NodeId, f64),
     Matmul { a: NodeId, b: NodeId, ta: bool, tb: bool },
+    /// Batched matmul over rank-3 `[g, m, k] × [g, k, n] → [g, m, n]`
+    /// operands sharing a leading group dimension (`g` = batch × heads in
+    /// the attention stack).  Per group the kernel is bit-for-bit the
+    /// rank-2 [`Op::Matmul`], so `g = 1` reproduces the unbatched path.
+    BatchMatmul { a: NodeId, b: NodeId, ta: bool, tb: bool },
+    /// Column-wise concatenation of same-row-count matrices
+    /// `[m, n₁] ⧺ … ⧺ [m, n_p] → [m, Σnᵢ]` — head-stacking.
+    ConcatCols(Vec<NodeId>),
+    /// Columns `[offset, offset + width)` of an `[m, n]` input —
+    /// head-splitting; the adjoint zero-pads back via [`Op::ConcatCols`].
+    SplitCols(NodeId, usize, usize),
     /// Elementwise `a / b`.  Both operands differentiable (Adam's
     /// `m̂/(√v̂+ε)` and layernorm's `(x−μ)/σ` need the denominator path).
     Div(NodeId, NodeId),
@@ -101,12 +112,18 @@ pub struct TapeStats {
     /// Total bytes of all *owning* node value buffers currently on the
     /// tape (aliased views such as `Reshape` contribute 0).
     pub bytes: usize,
+    /// Bytes of nodes marked as K/V projections via [`Tape::mark_kv`] —
+    /// the attention problems tag their key/value projection outputs so
+    /// the hypergradient paths can report how much of the naive-vs-
+    /// MixFlow gap comes from KV tensors specifically.
+    pub kv_bytes: usize,
 }
 
 /// The Wengert list.
 pub struct Tape {
     nodes: Vec<Node>,
     bytes: usize,
+    kv_bytes: usize,
     arena: BufferArena,
 }
 
@@ -209,6 +226,49 @@ fn t_gather_cols_into(z: &Tensor, idx: &[usize], out: &mut Vec<f64>) {
     }));
 }
 
+/// Column-concatenate matrices sharing a row count.  `parts` supplies
+/// `(tensor, is_some)` pairs via `Option`: a `None` part contributes
+/// `widths[i]` zero columns (the JVP overlay uses this for inputs with
+/// no tangent).
+fn t_concat_cols_into(
+    parts: &[Option<&Tensor>],
+    widths: &[usize],
+    m: usize,
+    out: &mut Vec<f64>,
+) {
+    assert_eq!(parts.len(), widths.len(), "concat parts vs widths");
+    out.clear();
+    for i in 0..m {
+        for (p, &w) in parts.iter().zip(widths.iter()) {
+            match p {
+                Some(t) => {
+                    debug_assert_eq!(t.dims2(), (m, w));
+                    out.extend_from_slice(&t.data[i * w..(i + 1) * w]);
+                }
+                None => out.extend(std::iter::repeat(0.0).take(w)),
+            }
+        }
+    }
+}
+
+fn t_split_cols_into(
+    v: &Tensor,
+    offset: usize,
+    width: usize,
+    out: &mut Vec<f64>,
+) {
+    let (m, n) = v.dims2();
+    assert!(
+        offset + width <= n,
+        "split cols [{offset}, {}) out of {n}",
+        offset + width
+    );
+    out.clear();
+    for i in 0..m {
+        out.extend_from_slice(&v.data[i * n + offset..i * n + offset + width]);
+    }
+}
+
 fn t_scatter_cols_into(
     v: &Tensor,
     idx: &[usize],
@@ -247,7 +307,12 @@ fn arena_tensor(
 
 impl Tape {
     pub fn new() -> Tape {
-        Tape { nodes: Vec::new(), bytes: 0, arena: BufferArena::new() }
+        Tape {
+            nodes: Vec::new(),
+            bytes: 0,
+            kv_bytes: 0,
+            arena: BufferArena::new(),
+        }
     }
 
     /// Value of a node.
@@ -266,7 +331,20 @@ impl Tape {
     }
 
     pub fn stats(&self) -> TapeStats {
-        TapeStats { nodes: self.nodes.len(), bytes: self.bytes }
+        TapeStats {
+            nodes: self.nodes.len(),
+            bytes: self.bytes,
+            kv_bytes: self.kv_bytes,
+        }
+    }
+
+    /// Tag a node as a K/V projection: its buffer bytes are counted in
+    /// [`TapeStats::kv_bytes`] until the next [`Tape::reset`].  The
+    /// attention problems mark their key/value projection outputs so
+    /// [`super::mixflow::MemoryReport`] can split the memory saving into
+    /// KV-specific counters.
+    pub fn mark_kv(&mut self, id: NodeId) {
+        self.kv_bytes += self.nodes[id].value.bytes();
     }
 
     /// Traffic counters of the tape's buffer arena.
@@ -279,11 +357,12 @@ impl Tape {
     /// (checkpoints, gradients, aliases) keep their buffers alive.  All
     /// `NodeId`s from before the reset are invalidated.
     pub fn reset(&mut self) {
-        let Tape { nodes, arena, bytes } = self;
+        let Tape { nodes, arena, bytes, kv_bytes } = self;
         for node in nodes.drain(..) {
             arena.recycle(node.value);
         }
         *bytes = 0;
+        *kv_bytes = 0;
     }
 
     fn push(&mut self, op: Op, value: Tensor) -> NodeId {
@@ -387,6 +466,67 @@ impl Tape {
             })
         };
         self.push(Op::Matmul { a, b, ta, tb }, value)
+    }
+
+    /// Batched rank-3 matmul `[g, m, k] × [g, k, n] → [g, m, n]` (with
+    /// per-operand transposes of the trailing two dims).  `g = 1` is
+    /// bit-for-bit the rank-2 [`Tape::matmul`].
+    pub fn batch_matmul(
+        &mut self,
+        a: NodeId,
+        b: NodeId,
+        ta: bool,
+        tb: bool,
+    ) -> NodeId {
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let (va, vb) = (&nodes[a].value, &nodes[b].value);
+            let (g, m, n) = va.bmm_dims(vb, ta, tb);
+            arena_tensor(arena, vec![g, m, n], |o| {
+                va.bmm_into(vb, ta, tb, o);
+            })
+        };
+        self.push(Op::BatchMatmul { a, b, ta, tb }, value)
+    }
+
+    /// Column-wise concatenation of same-row-count matrices — the
+    /// head-stacking op (`[m, d_h]` per head → `[m, d_model]`).
+    pub fn concat_cols(&mut self, parts: &[NodeId]) -> NodeId {
+        assert!(!parts.is_empty(), "concat_cols of nothing");
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let m = nodes[parts[0]].value.dims2().0;
+            let tensors: Vec<&Tensor> =
+                parts.iter().map(|&p| &nodes[p].value).collect();
+            let widths: Vec<usize> =
+                tensors.iter().map(|t| t.dims2().1).collect();
+            let n: usize = widths.iter().sum();
+            let opts: Vec<Option<&Tensor>> =
+                tensors.iter().map(|t| Some(*t)).collect();
+            arena_tensor(arena, vec![m, n], |o| {
+                t_concat_cols_into(&opts, &widths, m, o)
+            })
+        };
+        self.push(Op::ConcatCols(parts.to_vec()), value)
+    }
+
+    /// Columns `[offset, offset + width)` of an `[m, n]` input — the
+    /// head-splitting op.
+    pub fn split_cols(
+        &mut self,
+        a: NodeId,
+        offset: usize,
+        width: usize,
+    ) -> NodeId {
+        let value = {
+            let Tape { nodes, arena, .. } = self;
+            let va = &nodes[a].value;
+            let m = va.dims2().0;
+            arena_tensor(arena, vec![m, width], |o| {
+                t_split_cols_into(va, offset, width, o)
+            })
+        };
+        self.push(Op::SplitCols(a, offset, width), value)
     }
 
     pub fn relu(&mut self, a: NodeId) -> NodeId {
@@ -653,6 +793,58 @@ impl Tape {
                     };
                     self.acc(&mut adj, a, da);
                     self.acc(&mut adj, b, db);
+                }
+                Op::BatchMatmul { a, b, ta, tb } => {
+                    // Same adjoints as Matmul, per group.
+                    let (a, b, ta, tb) = (*a, *b, *ta, *tb);
+                    let da = if !ta {
+                        self.batch_matmul(g, b, false, !tb)
+                    } else {
+                        self.batch_matmul(b, g, tb, true)
+                    };
+                    let db = if !tb {
+                        self.batch_matmul(a, g, !ta, false)
+                    } else {
+                        self.batch_matmul(g, a, true, ta)
+                    };
+                    self.acc(&mut adj, a, da);
+                    self.acc(&mut adj, b, db);
+                }
+                Op::ConcatCols(parts) => {
+                    // Each input's adjoint is its column slice of g.
+                    let mut offset = 0usize;
+                    for &p in parts.iter() {
+                        let w = self.shape(p)[1];
+                        let c = self.split_cols(g, offset, w);
+                        self.acc(&mut adj, p, c);
+                        offset += w;
+                    }
+                }
+                Op::SplitCols(a, offset, width) => {
+                    // Zero-pad g back to the input width: concat
+                    // [0 | g | 0] with constant zero blocks.
+                    let (a, offset, width) = (*a, *offset, *width);
+                    let sh = self.shape(a);
+                    let (m, n) = (sh[0], sh[1]);
+                    let mut parts: Vec<NodeId> = Vec::with_capacity(3);
+                    if offset > 0 {
+                        parts.push(
+                            self.constant(Tensor::zeros(&[m, offset])),
+                        );
+                    }
+                    parts.push(g);
+                    if offset + width < n {
+                        parts.push(self.constant(Tensor::zeros(&[
+                            m,
+                            n - offset - width,
+                        ])));
+                    }
+                    let c = if parts.len() == 1 {
+                        g
+                    } else {
+                        self.concat_cols(&parts)
+                    };
+                    self.acc(&mut adj, a, c);
                 }
                 Op::Relu(a) => {
                     let mask = self.step(*a);
@@ -926,6 +1118,73 @@ impl Tape {
                         }
                         (None, None) => None,
                     }
+                }
+                Op::BatchMatmul { a, b, ta, tb } => {
+                    // Same dual rule as Matmul, per group: ẋ·B + A·ẏ,
+                    // left buffer summed in place, right recycled.
+                    let va = &nodes[*a].value;
+                    let vb = &nodes[*b].value;
+                    let (ta, tb) = (*ta, *tb);
+                    match (&tan[*a], &tan[*b]) {
+                        (Some(x), Some(y)) => {
+                            let (g, m, n) = x.bmm_dims(vb, ta, tb);
+                            let mut left =
+                                arena_tensor(arena, vec![g, m, n], |o| {
+                                    x.bmm_into(vb, ta, tb, o);
+                                });
+                            let right =
+                                arena_tensor(arena, vec![g, m, n], |o| {
+                                    va.bmm_into(y, ta, tb, o);
+                                });
+                            for (d, s) in
+                                left.data.iter_mut().zip(right.data.iter())
+                            {
+                                *d += s;
+                            }
+                            arena.recycle(right);
+                            Some(left)
+                        }
+                        (Some(x), None) => {
+                            let (g, m, n) = x.bmm_dims(vb, ta, tb);
+                            Some(arena_tensor(arena, vec![g, m, n], |o| {
+                                x.bmm_into(vb, ta, tb, o);
+                            }))
+                        }
+                        (None, Some(y)) => {
+                            let (g, m, n) = va.bmm_dims(y, ta, tb);
+                            Some(arena_tensor(arena, vec![g, m, n], |o| {
+                                va.bmm_into(y, ta, tb, o);
+                            }))
+                        }
+                        (None, None) => None,
+                    }
+                }
+                Op::ConcatCols(parts) => {
+                    if parts.iter().all(|p| tan[*p].is_none()) {
+                        None
+                    } else {
+                        // Concat the part tangents; parts with no
+                        // tangent contribute zero columns.
+                        let m = nodes[i].value.dims2().0;
+                        let widths: Vec<usize> = parts
+                            .iter()
+                            .map(|&p| nodes[p].value.dims2().1)
+                            .collect();
+                        let n: usize = widths.iter().sum();
+                        let opts: Vec<Option<&Tensor>> =
+                            parts.iter().map(|&p| tan[p].as_ref()).collect();
+                        Some(arena_tensor(arena, vec![m, n], |o| {
+                            t_concat_cols_into(&opts, &widths, m, o)
+                        }))
+                    }
+                }
+                Op::SplitCols(a, offset, width) => {
+                    tan[*a].as_ref().map(|t| {
+                        let m = t.dims2().0;
+                        arena_tensor(arena, vec![m, *width], |o| {
+                            t_split_cols_into(t, *offset, *width, o)
+                        })
+                    })
                 }
                 Op::Relu(a) => {
                     let va = &nodes[*a].value;
@@ -1314,6 +1573,102 @@ mod tests {
         assert_eq!(t1[0].data, t2[0].data, "reuse must not change tangents");
         assert_eq!(b1, b2, "materialised tangent bytes must be stable");
         assert!(b1 > 0);
+    }
+
+    #[test]
+    fn concat_then_split_round_trips() {
+        let mut tape = Tape::new();
+        let a = tape.leaf(Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]));
+        let b = tape.leaf(Tensor::new(vec![2, 3], vec![5., 6., 7., 8., 9., 10.]));
+        let cat = tape.concat_cols(&[a, b]);
+        assert_eq!(tape.shape(cat), vec![2, 5]);
+        assert_eq!(
+            tape.value(cat).data,
+            vec![1., 2., 5., 6., 7., 3., 4., 8., 9., 10.]
+        );
+        let left = tape.split_cols(cat, 0, 2);
+        let right = tape.split_cols(cat, 2, 3);
+        assert_eq!(tape.value(left).data, tape.value(a).data);
+        assert_eq!(tape.value(right).data, tape.value(b).data);
+    }
+
+    #[test]
+    fn concat_split_grads_route_columns() {
+        // y = Σ (2·a ⧺ 3·b) → da = 2, db = 3 everywhere.
+        let mut tape = Tape::new();
+        let a = tape.leaf(Tensor::full(&[2, 2], 1.0));
+        let b = tape.leaf(Tensor::full(&[2, 3], 1.0));
+        let sa = tape.scale(a, 2.0);
+        let sb = tape.scale(b, 3.0);
+        let cat = tape.concat_cols(&[sa, sb]);
+        let y = tape.sum(cat);
+        let g = tape.grad(y, &[a, b]);
+        assert_eq!(tape.value(g[0]).data, vec![2.0; 4]);
+        assert_eq!(tape.value(g[1]).data, vec![3.0; 6]);
+        // Split adjoint zero-pads: z = Σ split(cat, 2, 3) → da = 0, db = 3.
+        let mut tape = Tape::new();
+        let a = tape.leaf(Tensor::full(&[2, 2], 1.0));
+        let b = tape.leaf(Tensor::full(&[2, 3], 1.0));
+        let cat = tape.concat_cols(&[a, b]);
+        let right = tape.split_cols(cat, 2, 3);
+        let sr = tape.scale(right, 3.0);
+        let z = tape.sum(sr);
+        let g = tape.grad(z, &[a, b]);
+        assert_eq!(tape.value(g[0]).data, vec![0.0; 4]);
+        assert_eq!(tape.value(g[1]).data, vec![3.0; 6]);
+    }
+
+    #[test]
+    fn batch_matmul_grad_matches_per_group_matmul_grad() {
+        // Batched f = Σ bmm(A, B) gradients must equal the per-group
+        // rank-2 gradients stacked.
+        let a_data = vec![1., 2., 3., 4., 5., 6., 7., 8.];
+        let b_data = vec![1., 0., 0., 1., 2., 1., 1., 2.];
+        let mut tape = Tape::new();
+        let a = tape.leaf(Tensor::new(vec![2, 2, 2], a_data.clone()));
+        let b = tape.leaf(Tensor::new(vec![2, 2, 2], b_data.clone()));
+        let c = tape.batch_matmul(a, b, false, false);
+        let y = tape.sum(c);
+        let g = tape.grad(y, &[a, b]);
+        for group in 0..2 {
+            let mut t2 = Tape::new();
+            let a2 = t2.leaf(Tensor::new(
+                vec![2, 2],
+                a_data[group * 4..(group + 1) * 4].to_vec(),
+            ));
+            let b2 = t2.leaf(Tensor::new(
+                vec![2, 2],
+                b_data[group * 4..(group + 1) * 4].to_vec(),
+            ));
+            let c2 = t2.matmul(a2, b2, false, false);
+            let y2 = t2.sum(c2);
+            let g2 = t2.grad(y2, &[a2, b2]);
+            assert_eq!(
+                &tape.value(g[0]).data[group * 4..(group + 1) * 4],
+                &t2.value(g2[0]).data[..],
+                "dA group {group}"
+            );
+            assert_eq!(
+                &tape.value(g[1]).data[group * 4..(group + 1) * 4],
+                &t2.value(g2[1]).data[..],
+                "dB group {group}"
+            );
+        }
+    }
+
+    #[test]
+    fn mark_kv_counts_until_reset() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::zeros(&[4, 4]));
+        let k = tape.scale(x, 2.0);
+        let v = tape.scale(x, 3.0);
+        assert_eq!(tape.stats().kv_bytes, 0);
+        tape.mark_kv(k);
+        tape.mark_kv(v);
+        assert_eq!(tape.stats().kv_bytes, 2 * 16 * 8);
+        assert!(tape.stats().kv_bytes < tape.stats().bytes);
+        tape.reset();
+        assert_eq!(tape.stats().kv_bytes, 0, "reset must clear the KV ledger");
     }
 
     #[test]

@@ -194,6 +194,18 @@ impl Tensor {
         (self.shape[0], self.shape[1])
     }
 
+    /// Rank-3 dimensions `(groups, rows, cols)` — the batched-matmul
+    /// layout (`group` is batch × heads in the attention stack).
+    pub fn dims3(&self) -> (usize, usize, usize) {
+        assert_eq!(
+            self.shape.len(),
+            3,
+            "expected rank-3 tensor, got {:?}",
+            self.shape
+        );
+        (self.shape[0], self.shape[1], self.shape[2])
+    }
+
     /// Elementwise map into a new tensor.
     pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
         let mut out = Vec::with_capacity(self.data.len());
@@ -298,6 +310,82 @@ impl Tensor {
         (m, n)
     }
 
+    /// Output dims `(g, m, n)` of the batched product
+    /// `op(self[g], ta) · op(other[g], tb)` over rank-3 operands that
+    /// share a leading group dimension, after checking the per-group
+    /// contraction dims agree.
+    pub fn bmm_dims(
+        &self,
+        other: &Tensor,
+        ta: bool,
+        tb: bool,
+    ) -> (usize, usize, usize) {
+        let (ga, ar, ac) = self.dims3();
+        let (gb, br, bc) = other.dims3();
+        assert_eq!(ga, gb, "batch_matmul group dims {ga} vs {gb}");
+        let (m, k) = if ta { (ac, ar) } else { (ar, ac) };
+        let (kb, n) = if tb { (bc, br) } else { (br, bc) };
+        assert_eq!(k, kb, "batch_matmul inner dims {k} vs {kb}");
+        (ga, m, n)
+    }
+
+    /// Batched matmul writing into a recycled buffer (zeroed to `g·m·n`
+    /// first).  Per group the loop order and zero-skip are identical to
+    /// [`Tensor::matmul_into`], so a single-group batched product is
+    /// bit-for-bit the rank-2 product.  Returns `(g, m, n)`.
+    pub fn bmm_into(
+        &self,
+        other: &Tensor,
+        ta: bool,
+        tb: bool,
+        out: &mut Vec<f64>,
+    ) -> (usize, usize, usize) {
+        let (g, m, n) = self.bmm_dims(other, ta, tb);
+        let (_, ar, ac) = self.dims3();
+        let (_, br, bc) = other.dims3();
+        let k = if ta { ar } else { ac };
+        out.clear();
+        out.resize(g * m * n, 0.0);
+        for gi in 0..g {
+            let ao = gi * ar * ac;
+            let bo = gi * br * bc;
+            let oo = gi * m * n;
+            let a = |i: usize, j: usize| {
+                if ta {
+                    self.data[ao + j * ac + i]
+                } else {
+                    self.data[ao + i * ac + j]
+                }
+            };
+            let b = |i: usize, j: usize| {
+                if tb {
+                    other.data[bo + j * bc + i]
+                } else {
+                    other.data[bo + i * bc + j]
+                }
+            };
+            for i in 0..m {
+                for l in 0..k {
+                    let ail = a(i, l);
+                    if ail == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        out[oo + i * n + j] += ail * b(l, j);
+                    }
+                }
+            }
+        }
+        (g, m, n)
+    }
+
+    /// Batched matmul into a new tensor (rank-3 in, rank-3 out).
+    pub fn bmm(&self, other: &Tensor, ta: bool, tb: bool) -> Tensor {
+        let mut out = Vec::new();
+        let (g, m, n) = self.bmm_into(other, ta, tb, &mut out);
+        Tensor { shape: vec![g, m, n], data: Buf::new(out) }
+    }
+
     /// Max |entry| difference to another tensor of the same shape.
     pub fn max_abs_diff(&self, other: &Tensor) -> f64 {
         assert_eq!(self.shape, other.shape);
@@ -396,6 +484,43 @@ mod tests {
         let at = Tensor::new(vec![2, 3], vec![1., 3., 5., 2., 4., 6.]);
         let both = a.matmul(&at, true, true);
         assert_eq!(both.data, ata.data);
+    }
+
+    #[test]
+    fn bmm_single_group_is_bitwise_matmul() {
+        let mut rng = Prng::new(17);
+        for &(ta, tb) in &[(false, false), (true, false), (false, true), (true, true)] {
+            let (ar, ac) = if ta { (4, 3) } else { (3, 4) };
+            let (br, bc) = if tb { (2, 4) } else { (4, 2) };
+            let a2 = Tensor::randn(&[ar, ac], 1.0, &mut rng);
+            let b2 = Tensor::randn(&[br, bc], 1.0, &mut rng);
+            let a3 = a2.alias(vec![1, ar, ac]);
+            let b3 = b2.alias(vec![1, br, bc]);
+            let flat = a2.matmul(&b2, ta, tb);
+            let batched = a3.bmm(&b3, ta, tb);
+            assert_eq!(batched.shape[0], 1);
+            assert_eq!(
+                batched.data, flat.data,
+                "g=1 bmm must be bit-for-bit matmul (ta={ta}, tb={tb})"
+            );
+        }
+    }
+
+    #[test]
+    fn bmm_groups_are_independent_blocks() {
+        // Two groups computed batched must equal the two per-group
+        // rank-2 products stacked.
+        let mut rng = Prng::new(18);
+        let a = Tensor::randn(&[2, 3, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[2, 4, 2], 1.0, &mut rng);
+        let out = a.bmm(&b, false, false);
+        assert_eq!(out.shape, vec![2, 3, 2]);
+        for g in 0..2 {
+            let a2 = Tensor::new(vec![3, 4], a.data[g * 12..(g + 1) * 12].to_vec());
+            let b2 = Tensor::new(vec![4, 2], b.data[g * 8..(g + 1) * 8].to_vec());
+            let want = a2.matmul(&b2, false, false);
+            assert_eq!(&out.data[g * 6..(g + 1) * 6], &want.data[..]);
+        }
     }
 
     #[test]

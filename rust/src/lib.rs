@@ -15,9 +15,11 @@
 //! * [`autodiff`] — the native differentiation engine: copy-on-write f64
 //!   tensors over an arena-recycled buffer pool, a Wengert-list tape with
 //!   graph-mode reverse (so grad-of-grad works), an arena-aware
-//!   forward-mode JVP overlay, differentiable inner optimisers (SGD,
-//!   momentum, Adam — updates built in-graph), the naive / mixflow
-//!   bilevel paths with block rematerialisation, and
+//!   forward-mode JVP overlay (including batched 3-D matmul and column
+//!   concat/split for head-stacking), differentiable inner optimisers
+//!   (SGD, momentum, Adam — updates built in-graph), the naive / mixflow
+//!   bilevel paths with block rematerialisation and a KV-reuse analysis
+//!   for the attention workloads, and
 //!   `autodiff::engine::HypergradEngine` — the unified persistent solver
 //!   API (one tape + arena reused across outer steps; naive, mixflow and
 //!   fd strategies behind a fluent builder) that every native driver
@@ -32,8 +34,9 @@
 //! * [`meta`] — the end-to-end meta-training drivers: `trainer` over
 //!   `train_step` artifacts (feature `pjrt`) and `native` over one
 //!   persistent `HypergradEngine` (always available), plus the
-//!   `SweepSpec` grid (task × inner-optimiser × mode × seed) fanned over
-//!   the coordinator's worker pool.
+//!   `SweepSpec` grid (task × inner-optimiser × mode × heads × seed)
+//!   fanned over the coordinator's worker pool with a mean ± std JSON
+//!   report.
 //!
 //! Feature `pjrt` links an `xla` crate for artifact execution; without it
 //! the crate builds, tests and serves the native path on any toolchain.

@@ -4,13 +4,18 @@
 //! * `info`                 — manifest summary (artifacts, groups, sizes)
 //! * `analyze <key>`        — HLO memory/cost analysis of one artifact
 //! * `native --task <t>`    — native meta-training via one persistent
-//!   `HypergradEngine` (no PJRT, no artifacts); `--mode`, `--task` and
-//!   `--inner-opt` accept comma-separated lists and fan the full grid
-//!   (task × inner-optimiser × mode × seed) over the scheduler pool;
-//!   `--mode fd` cross-checks with central differences, `--remat auto`
-//!   resolves the remat segment K ≈ √T at run time.  Every valid-value
-//!   error list is derived from the enums' `CliEnum::variants()`, so
-//!   new modes can't silently go missing from the messages.
+//!   `HypergradEngine` (no PJRT, no artifacts); `--mode`, `--task`,
+//!   `--inner-opt` and `--heads` accept comma-separated lists and fan
+//!   the full grid (task × inner-optimiser × mode × heads × seed) over
+//!   the scheduler pool, printing per-config mean ± std and writing
+//!   `SWEEP_native.json`; `--heads`/`--batch` shape the multi-head
+//!   batched attention task (e.g. `mixflow native --task attention
+//!   --heads 4 --batch 8 --inner-opt adam --mode naive,mixflow --remat
+//!   auto`); `--mode fd` cross-checks with central differences,
+//!   `--remat auto` resolves the remat segment K ≈ √T at run time.
+//!   Every valid-value error list is derived from the enums'
+//!   `CliEnum::variants()`, so new modes can't silently go missing from
+//!   the messages.
 //! * `run <key>`            — execute one exec-tier artifact (pjrt)
 //! * `sweep --group <g>`    — run a figure group, print ratios (pjrt)
 //! * `train --task <t>`     — artifact E2E meta-training loop (pjrt)
@@ -27,8 +32,8 @@ use mixflow::coordinator::runner::pair_ratios;
 use mixflow::coordinator::ResultsStore;
 use mixflow::hlo::{flops::CostModel, parser, MemorySimulator};
 use mixflow::meta::{
-    print_train_summary, run_sweep, HypergradMode, NativeMetaTrainer,
-    NativeTask, SweepSpec,
+    print_train_summary, run_sweep, sweep_report_json, HypergradMode,
+    NativeMetaTrainer, NativeTask, SweepSpec,
 };
 use mixflow::runtime::Manifest;
 use mixflow::util::args::{ArgSpec, Args, CliEnum};
@@ -54,6 +59,30 @@ fn parse_cli_list<T: CliEnum + PartialEq>(
     let mut out = Vec::new();
     for part in raw.split(',') {
         let v: T = parse_cli(flag, part)?;
+        if !out.contains(&v) {
+            out.push(v);
+        }
+    }
+    Ok(out)
+}
+
+/// Comma-separated list of positive integers, deduplicated in order
+/// (`--heads 1,2,4`).
+fn parse_usize_list(flag: &str, raw: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        let v: usize = part.trim().parse().map_err(|_| {
+            anyhow!(
+                "--{flag} {part:?} invalid; valid values: comma-separated \
+                 integers >= 1"
+            )
+        })?;
+        if v == 0 {
+            return Err(anyhow!(
+                "--{flag} 0 invalid; valid values: comma-separated \
+                 integers >= 1"
+            ));
+        }
         if !out.contains(&v) {
             out.push(v);
         }
@@ -103,7 +132,18 @@ fn main() {
             CheckpointPolicy::valid_values()
         ),
     )
-    .flag("seeds", Some("1"), "native seed-sweep width; combined with multi-value --task/--mode/--inner-opt it fans the whole grid over the scheduler pool")
+    .flag(
+        "heads",
+        Some("1"),
+        "attention head count(s) for native, comma-separated (a sweep \
+         axis; d_model rounds up to a multiple of the head count)",
+    )
+    .flag(
+        "batch",
+        Some("1"),
+        "sequences per attention batch for native (ignored by other tasks)",
+    )
+    .flag("seeds", Some("1"), "native seed-sweep width; combined with multi-value --task/--mode/--inner-opt/--heads it fans the whole grid over the scheduler pool")
     .flag("fd-eps", Some("1e-5"), "central-difference epsilon for --mode fd")
     .flag("iters", Some("5"), "timing iterations")
     .flag("seed", Some("0"), "input seed")
@@ -228,10 +268,11 @@ fn cmd_analyze(key: &str, timeline: bool) -> Result<()> {
 }
 
 /// Native meta-training: one persistent `HypergradEngine` end-to-end,
-/// Python and PJRT nowhere on the path.  Multi-value `--task`, `--mode`
-/// and `--inner-opt` (comma-separated) and/or `--seeds n > 1` fan the
-/// full grid over the scheduler's worker pool, one trainer — and
-/// therefore one engine + arena — per grid cell.
+/// Python and PJRT nowhere on the path.  Multi-value `--task`, `--mode`,
+/// `--inner-opt`, `--heads` (comma-separated) and/or `--seeds n > 1` fan
+/// the full grid over the scheduler's worker pool, one trainer — and
+/// therefore one engine + arena — per grid cell; grid runs print the
+/// per-config mean ± std table and write `SWEEP_native.json`.
 fn cmd_native(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps").map_err(|e| anyhow!(e))?;
     let unroll = args.get_usize("unroll").map_err(|e| anyhow!(e))?;
@@ -246,6 +287,13 @@ fn cmd_native(args: &Args) -> Result<()> {
         parse_cli_list("inner-opt", args.get("inner-opt").unwrap())?;
     let remat: CheckpointPolicy =
         parse_cli("remat", args.get("remat").unwrap())?;
+    let heads = parse_usize_list("heads", args.get("heads").unwrap())?;
+    let batch = args.get_usize("batch").map_err(|e| anyhow!(e))?;
+    if batch == 0 {
+        return Err(anyhow!(
+            "--batch 0 invalid; valid values: an integer >= 1"
+        ));
+    }
     let fd_eps = args.get_f64("fd-eps").map_err(|e| anyhow!(e))?;
     if fd_eps <= 0.0 {
         return Err(anyhow!("--fd-eps must be positive, got {fd_eps}"));
@@ -260,7 +308,7 @@ fn cmd_native(args: &Args) -> Result<()> {
     let names = |xs: &[String]| xs.join(",");
     println!(
         "native meta-training: task={} mode={} inner-opt={} remat={} \
-         unroll={unroll} steps={steps}",
+         heads={} batch={batch} unroll={unroll} steps={steps}",
         names(&tasks.iter().map(|t| t.name().to_string()).collect::<Vec<_>>()),
         names(&modes.iter().map(|m| m.name().to_string()).collect::<Vec<_>>()),
         names(
@@ -269,17 +317,20 @@ fn cmd_native(args: &Args) -> Result<()> {
                 .map(|o| o.name().to_string())
                 .collect::<Vec<_>>()
         ),
-        remat.name()
+        remat.name(),
+        names(&heads.iter().map(|h| h.to_string()).collect::<Vec<_>>()),
     );
 
-    let cells = tasks.len() * modes.len() * inner_opts.len() * seeds;
+    let cells =
+        tasks.len() * modes.len() * inner_opts.len() * heads.len() * seeds;
     if cells == 1 {
         let mut trainer =
             NativeMetaTrainer::with_unroll(tasks[0], seed, unroll)
                 .with_mode(modes[0])
                 .with_inner_opt(inner_opts[0])
                 .with_remat(remat)
-                .with_fd_epsilon(fd_eps);
+                .with_fd_epsilon(fd_eps)
+                .with_attention_shape(heads[0], batch);
         let report = trainer.train(steps);
         print_train_summary(&report, trainer.last_memory.as_ref());
         println!(
@@ -290,16 +341,19 @@ fn cmd_native(args: &Args) -> Result<()> {
     }
 
     println!(
-        "grid sweep: {cells} cells ({} task × {} opt × {} mode × {seeds} \
-         seeds from {seed}), scheduler pool",
+        "grid sweep: {cells} cells ({} task × {} opt × {} mode × {} heads \
+         × {seeds} seeds from {seed}), scheduler pool",
         tasks.len(),
         inner_opts.len(),
-        modes.len()
+        modes.len(),
+        heads.len()
     );
     let spec = SweepSpec {
         tasks,
         inner_opts,
         modes,
+        heads,
+        batch,
         remat,
         fd_epsilon: fd_eps,
         unroll,
@@ -312,13 +366,14 @@ fn cmd_native(args: &Args) -> Result<()> {
         "task",
         "opt",
         "mode",
+        "heads",
         "seed",
         "loss head",
         "loss tail",
         "final",
         "steps/s",
     ])
-    .numeric_cols(&[3, 4, 5, 6, 7]);
+    .numeric_cols(&[3, 4, 5, 6, 7, 8]);
     let mut finals = Vec::with_capacity(runs.len());
     for run in &runs {
         let (head, tail) = run.report.improvement(10);
@@ -328,6 +383,7 @@ fn cmd_native(args: &Args) -> Result<()> {
             run.cell.task.name().to_string(),
             run.cell.inner_opt.name().to_string(),
             run.cell.mode.name().to_string(),
+            run.cell.heads.to_string(),
             run.cell.seed.to_string(),
             format!("{head:.4}"),
             format!("{tail:.4}"),
@@ -336,6 +392,39 @@ fn cmd_native(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+
+    // Per-configuration mean ± std over the seed axis (the same
+    // aggregation the JSON dump carries).
+    let doc = sweep_report_json(&spec, &runs);
+    if let Some(aggs) = doc.get("aggregates").and_then(|a| a.as_arr()) {
+        let mut at = Table::new(&["config", "seeds", "final mean", "± std"])
+            .numeric_cols(&[1, 2, 3]);
+        for agg in aggs {
+            at.row(vec![
+                agg.get("config")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                agg.get("n_seeds")
+                    .and_then(|v| v.as_u64())
+                    .unwrap_or(0)
+                    .to_string(),
+                format!(
+                    "{:.4}",
+                    agg.get("final_mean")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(f64::NAN)
+                ),
+                format!(
+                    "{:.4}",
+                    agg.get("final_std")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(f64::NAN)
+                ),
+            ]);
+        }
+        println!("{}", at.render());
+    }
     let s = Summary::of(&finals);
     println!(
         "final val loss over {} runs: mean {:.4} ± {:.4} (min {:.4}, max \
@@ -355,6 +444,10 @@ fn cmd_native(args: &Args) -> Result<()> {
             human_bytes(mem.peak_bytes as u64)
         );
     }
+    let path = "SWEEP_native.json";
+    std::fs::write(path, doc.pretty() + "\n")
+        .map_err(|e| anyhow!("could not write {path}: {e}"))?;
+    println!("sweep grid written to {path}");
     Ok(())
 }
 

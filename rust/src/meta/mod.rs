@@ -11,9 +11,9 @@ pub mod native;
 pub mod trainer;
 
 pub use native::{
-    print_train_summary, run_seed_sweep, run_sweep, HypergradMode,
-    NativeMetaTrainer, NativeSweepConfig, NativeTask, SeedRun, SweepCell,
-    SweepRun, SweepSpec,
+    print_train_summary, run_seed_sweep, run_sweep, sweep_report_json,
+    HypergradMode, NativeMetaTrainer, NativeSweepConfig, NativeTask,
+    SeedRun, SweepCell, SweepRun, SweepSpec,
 };
 #[cfg(feature = "pjrt")]
 pub use trainer::MetaTrainer;

@@ -13,7 +13,9 @@
 //! Sweeps fan out over the coordinator's worker pool
 //! ([`crate::coordinator::scheduler::run_pool`]): [`run_seed_sweep`]
 //! for the classic one-configuration × N-seeds case, [`run_sweep`] for a
-//! full [`SweepSpec`] grid (task × inner-optimiser × mode × seed).
+//! full [`SweepSpec`] grid (task × inner-optimiser × mode × heads ×
+//! seed), with [`sweep_report_json`] folding the seed axis into
+//! per-configuration mean ± std for the `SWEEP_native.json` dump.
 
 use std::time::Instant;
 
@@ -22,11 +24,13 @@ pub use crate::autodiff::engine::HypergradMode;
 use crate::autodiff::mixflow::{BilevelProblem, CheckpointPolicy, MemoryReport};
 use crate::autodiff::optim::InnerOptimiser;
 use crate::autodiff::problems::{
-    AttentionProblem, HyperLrProblem, LossWeightingProblem,
+    HyperLrProblem, LossWeightingProblem, MultiHeadAttentionProblem,
 };
 use crate::autodiff::tensor::Tensor;
 use crate::coordinator::scheduler::{run_pool, Job};
 use crate::util::args::CliEnum;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
 
 use super::TrainReport;
 
@@ -82,6 +86,10 @@ impl CliEnum for NativeTask {
 pub struct NativeMetaTrainer {
     problem: Box<dyn BilevelProblem>,
     task: NativeTask,
+    seed: u64,
+    unroll: usize,
+    heads: usize,
+    batch: usize,
     engine: HypergradEngine,
     meta_lr: f64,
     eta: Vec<Tensor>,
@@ -97,13 +105,19 @@ impl NativeMetaTrainer {
         NativeMetaTrainer::with_unroll(task, seed, 8)
     }
 
-    /// Build with an explicit inner-unroll length.
-    pub fn with_unroll(
+    /// The one place a `(task, seed, unroll, heads, batch)` tuple turns
+    /// into a problem, so the `with_*` shape knobs rebuild exactly what
+    /// the constructor built.  `heads`/`batch` only shape the attention
+    /// task; its d_model is the base width 6 rounded up to the nearest
+    /// multiple of `heads` so any head count divides evenly.
+    fn build_problem(
         task: NativeTask,
         seed: u64,
         unroll: usize,
-    ) -> NativeMetaTrainer {
-        let problem: Box<dyn BilevelProblem> = match task {
+        heads: usize,
+        batch: usize,
+    ) -> Box<dyn BilevelProblem> {
+        match task {
             NativeTask::HyperLr => {
                 Box::new(HyperLrProblem::with_unroll(seed, unroll))
             }
@@ -111,15 +125,33 @@ impl NativeMetaTrainer {
                 Box::new(LossWeightingProblem::with_unroll(seed, unroll))
             }
             NativeTask::Attention => {
-                Box::new(AttentionProblem::with_unroll(seed, unroll))
+                let d_model = 6usize.div_ceil(heads) * heads;
+                Box::new(MultiHeadAttentionProblem::with_config(
+                    seed, d_model, heads, batch, 8, 4, unroll, 0.01,
+                ))
             }
-        };
+        }
+    }
+
+    /// Build with an explicit inner-unroll length (single-head,
+    /// single-sequence attention; see [`NativeMetaTrainer::with_heads`]
+    /// and [`NativeMetaTrainer::with_batch`]).
+    pub fn with_unroll(
+        task: NativeTask,
+        seed: u64,
+        unroll: usize,
+    ) -> NativeMetaTrainer {
+        let problem = Self::build_problem(task, seed, unroll, 1, 1);
         let eta = problem.eta0();
         let adam_m = eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
         let adam_v = eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
         NativeMetaTrainer {
             problem,
             task,
+            seed,
+            unroll,
+            heads: 1,
+            batch: 1,
             engine: HypergradEngine::builder().build(),
             meta_lr: 0.05,
             eta,
@@ -128,6 +160,53 @@ impl NativeMetaTrainer {
             adam_t: 0,
             last_memory: None,
         }
+    }
+
+    /// Rebuild the problem after a shape knob changed, reinstalling the
+    /// engine's inner optimiser and resetting the meta-level state (η
+    /// and its Adam moments restart from the fresh problem's η₀).
+    fn rebuild_problem(&mut self) {
+        self.problem = Self::build_problem(
+            self.task, self.seed, self.unroll, self.heads, self.batch,
+        );
+        self.engine.configure_problem(self.problem.as_mut());
+        self.eta = self.problem.eta0();
+        self.adam_m =
+            self.eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
+        self.adam_v =
+            self.eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
+        self.adam_t = 0;
+    }
+
+    /// Both attention shape knobs — head count and sequences per batch
+    /// — with at most one problem rebuild (ignored by the other tasks).
+    /// The attention d_model is rounded up to the nearest multiple of
+    /// `heads`.
+    pub fn with_attention_shape(
+        mut self,
+        heads: usize,
+        batch: usize,
+    ) -> NativeMetaTrainer {
+        let heads = heads.max(1);
+        let batch = batch.max(1);
+        if heads != self.heads || batch != self.batch {
+            self.heads = heads;
+            self.batch = batch;
+            self.rebuild_problem();
+        }
+        self
+    }
+
+    /// Attention head count (ignored by the other tasks).
+    pub fn with_heads(self, heads: usize) -> NativeMetaTrainer {
+        let batch = self.batch;
+        self.with_attention_shape(heads, batch)
+    }
+
+    /// Sequences per attention batch (ignored by the other tasks).
+    pub fn with_batch(self, batch: usize) -> NativeMetaTrainer {
+        let heads = self.heads;
+        self.with_attention_shape(heads, batch)
     }
 
     /// Rebuild the engine from an updated builder, carrying over every
@@ -222,6 +301,14 @@ impl NativeMetaTrainer {
             artifact.push('/');
             artifact.push_str(&self.engine.policy().name());
         }
+        // Multi-head / batched attention shapes label their runs; the
+        // degenerate h1/b1 default keeps the historical label.
+        if self.task == NativeTask::Attention && self.heads > 1 {
+            artifact.push_str(&format!("/h{}", self.heads));
+        }
+        if self.task == NativeTask::Attention && self.batch > 1 {
+            artifact.push_str(&format!("/b{}", self.batch));
+        }
         TrainReport {
             artifact,
             steps,
@@ -253,14 +340,21 @@ impl NativeMetaTrainer {
     }
 }
 
-/// A full native sweep grid: every `task × inner-optimiser × mode`
-/// combination over `n_seeds` consecutive seeds, all sharing one unroll
-/// length, outer-step budget and checkpoint policy.
+/// A full native sweep grid: every
+/// `task × inner-optimiser × mode × heads` combination over `n_seeds`
+/// consecutive seeds, all sharing one unroll length, attention batch
+/// width, outer-step budget and checkpoint policy.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
     pub tasks: Vec<NativeTask>,
     pub inner_opts: Vec<InnerOptimiser>,
     pub modes: Vec<HypergradMode>,
+    /// Attention head counts — a sweep axis like the others (the
+    /// non-attention tasks ignore the value but still occupy the grid
+    /// cell, keeping grid order uniform).
+    pub heads: Vec<usize>,
+    /// Sequences per attention batch (shared by every cell).
+    pub batch: usize,
     pub remat: CheckpointPolicy,
     /// Central-difference step for any fd-mode cells.
     pub fd_epsilon: f64,
@@ -282,6 +376,8 @@ impl SweepSpec {
             tasks: vec![cfg.task],
             inner_opts: vec![cfg.inner_opt],
             modes: vec![cfg.mode],
+            heads: vec![1],
+            batch: 1,
             remat: cfg.remat,
             fd_epsilon: crate::autodiff::engine::DEFAULT_FD_EPSILON,
             unroll: cfg.unroll,
@@ -291,24 +387,29 @@ impl SweepSpec {
         }
     }
 
-    /// The grid, flattened in task → inner-optimiser → mode → seed order.
+    /// The grid, flattened in
+    /// task → inner-optimiser → mode → heads → seed order.
     pub fn cells(&self) -> Vec<SweepCell> {
         let mut out = Vec::with_capacity(
             self.tasks.len()
                 * self.inner_opts.len()
                 * self.modes.len()
+                * self.heads.len()
                 * self.n_seeds,
         );
         for &task in &self.tasks {
             for &inner_opt in &self.inner_opts {
                 for &mode in &self.modes {
-                    for i in 0..self.n_seeds as u64 {
-                        out.push(SweepCell {
-                            task,
-                            inner_opt,
-                            mode,
-                            seed: self.base_seed.wrapping_add(i),
-                        });
+                    for &heads in &self.heads {
+                        for i in 0..self.n_seeds as u64 {
+                            out.push(SweepCell {
+                                task,
+                                inner_opt,
+                                mode,
+                                heads,
+                                seed: self.base_seed.wrapping_add(i),
+                            });
+                        }
                     }
                 }
             }
@@ -323,18 +424,33 @@ pub struct SweepCell {
     pub task: NativeTask,
     pub inner_opt: InnerOptimiser,
     pub mode: HypergradMode,
+    pub heads: usize,
     pub seed: u64,
 }
 
 impl SweepCell {
-    /// `task/opt/mode/seedN` — the pool job name and report row label.
+    /// `task/opt/mode/hH/seedN` — the pool job name and report row label.
     pub fn label(&self) -> String {
         format!(
-            "{}/{}/{}/seed{}",
+            "{}/{}/{}/h{}/seed{}",
             self.task.name(),
             self.inner_opt.name(),
             self.mode.name(),
+            self.heads,
             self.seed
+        )
+    }
+
+    /// The cell's configuration key with the seed stripped —
+    /// `task/opt/mode/hH` — used to aggregate seeds in
+    /// [`sweep_report_json`].
+    pub fn config_label(&self) -> String {
+        format!(
+            "{}/{}/{}/h{}",
+            self.task.name(),
+            self.inner_opt.name(),
+            self.mode.name(),
+            self.heads
         )
     }
 }
@@ -380,6 +496,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepRun> {
     let steps = spec.steps;
     let remat = spec.remat;
     let fd_epsilon = spec.fd_epsilon;
+    let batch = spec.batch;
     let jobs: Vec<Job<SweepRun>> = cells
         .iter()
         .map(|&cell| Job {
@@ -392,7 +509,8 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepRun> {
                 .with_mode(cell.mode)
                 .with_inner_opt(cell.inner_opt)
                 .with_remat(remat)
-                .with_fd_epsilon(fd_epsilon);
+                .with_fd_epsilon(fd_epsilon)
+                .with_attention_shape(cell.heads, batch);
                 let report = trainer.train(steps);
                 SweepRun { cell, report, memory: trainer.last_memory }
             }),
@@ -432,6 +550,80 @@ pub fn run_seed_sweep(
         .collect()
 }
 
+/// `BENCH_native`-style JSON document for one [`run_sweep`] result set:
+/// a `cells` array in exact grid order (task → opt → mode → heads →
+/// seed) with per-cell loss-curve mean ± std, and an `aggregates` array
+/// folding the seed axis into per-configuration mean ± std of the final
+/// validation loss.  The golden-file test in `rust/tests/sweep.rs`
+/// parses this dump and checks grid-order completeness, so the schema
+/// is pinned: renaming a field is a breaking change.
+pub fn sweep_report_json(spec: &SweepSpec, runs: &[SweepRun]) -> Json {
+    let mut doc = Json::obj();
+    doc.insert("bench", Json::Str("sweep_native".to_string()));
+    doc.insert("unroll", Json::Num(spec.unroll as f64));
+    doc.insert("steps", Json::Num(spec.steps as f64));
+    doc.insert("batch", Json::Num(spec.batch as f64));
+    doc.insert("remat", Json::Str(spec.remat.name()));
+    doc.insert("base_seed", Json::Num(spec.base_seed as f64));
+    doc.insert("n_seeds", Json::Num(spec.n_seeds as f64));
+
+    let mut cells = Vec::with_capacity(runs.len());
+    for run in runs {
+        let losses = &run.report.losses;
+        let s = Summary::of(losses);
+        let mut row = Json::obj();
+        row.insert("task", Json::Str(run.cell.task.name().to_string()));
+        row.insert(
+            "inner_opt",
+            Json::Str(run.cell.inner_opt.name().to_string()),
+        );
+        row.insert("mode", Json::Str(run.cell.mode.name().to_string()));
+        row.insert("heads", Json::Num(run.cell.heads as f64));
+        row.insert("seed", Json::Num(run.cell.seed as f64));
+        row.insert("label", Json::Str(run.cell.label()));
+        row.insert(
+            "final_loss",
+            Json::Num(losses.last().copied().unwrap_or(f64::NAN)),
+        );
+        row.insert("loss_mean", Json::Num(s.mean));
+        row.insert("loss_std", Json::Num(s.stddev));
+        row.insert(
+            "steps_per_second",
+            Json::Num(run.report.steps_per_second),
+        );
+        if let Some(mem) = &run.memory {
+            row.insert("peak_bytes", Json::Num(mem.peak_bytes as f64));
+            row.insert(
+                "kv_peak_bytes",
+                Json::Num(mem.kv_peak_bytes as f64),
+            );
+        }
+        cells.push(row);
+    }
+    doc.insert("cells", Json::Arr(cells));
+
+    // Seed-axis aggregation: runs arrive in grid order with the seed
+    // varying fastest, so consecutive chunks of `n_seeds` share one
+    // configuration.
+    let mut aggregates = Vec::new();
+    let n = spec.n_seeds.max(1);
+    for chunk in runs.chunks(n) {
+        let finals: Vec<f64> = chunk
+            .iter()
+            .map(|r| r.report.losses.last().copied().unwrap_or(f64::NAN))
+            .collect();
+        let s = Summary::of(&finals);
+        let mut row = Json::obj();
+        row.insert("config", Json::Str(chunk[0].cell.config_label()));
+        row.insert("n_seeds", Json::Num(chunk.len() as f64));
+        row.insert("final_mean", Json::Num(s.mean));
+        row.insert("final_std", Json::Num(s.stddev));
+        aggregates.push(row);
+    }
+    doc.insert("aggregates", Json::Arr(aggregates));
+    doc
+}
+
 /// Render a native run the way the examples and the `native` CLI command
 /// present it: sampled loss curve, throughput, head→tail improvement, and
 /// the hypergradient memory split.  One implementation so the three call
@@ -469,6 +661,15 @@ pub fn print_train_summary(
             mem.arena_reuses,
             mem.arena_allocs
         );
+        if mem.kv_peak_bytes > 0 {
+            println!(
+                "KV reuse: peak {} live; rebuilt {} from checkpoint \
+                 aliases + {} from remat",
+                human_bytes(mem.kv_peak_bytes as u64),
+                human_bytes(mem.kv_ckpt_alias_bytes as u64),
+                human_bytes(mem.kv_remat_bytes as u64)
+            );
+        }
     }
 }
 
@@ -539,6 +740,50 @@ mod tests {
         let after: Vec<f64> =
             trainer.eta().iter().map(|e| e.data[0]).collect();
         assert_ne!(before, after, "Adam step must move eta");
+    }
+
+    #[test]
+    fn multihead_attention_trainer_labels_and_reports_kv() {
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(NativeTask::Attention, 5, 3)
+                .with_inner_opt(InnerOptimiser::adam())
+                .with_heads(2)
+                .with_batch(2);
+        let report = trainer.train(1);
+        assert!(report.losses[0].is_finite());
+        assert!(
+            report.artifact.ends_with("attention/mixflow/adam/h2/b2"),
+            "got {:?}",
+            report.artifact
+        );
+        let mem = trainer.last_memory.expect("memory recorded");
+        assert!(mem.kv_peak_bytes > 0, "KV projections must be tagged");
+        assert!(
+            mem.kv_ckpt_alias_bytes > 0,
+            "full checkpointing rebuilds every backward step's K/V from \
+             checkpoint aliases"
+        );
+        assert_eq!(
+            mem.kv_remat_bytes, 0,
+            "no remat under full checkpointing"
+        );
+    }
+
+    #[test]
+    fn attention_d_model_rounds_up_to_heads() {
+        // heads=4 does not divide the base d_model 6; the trainer must
+        // widen the model instead of panicking.
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(NativeTask::Attention, 5, 2)
+                .with_heads(4)
+                .with_batch(2);
+        let report = trainer.train(1);
+        assert!(report.losses[0].is_finite());
+        assert!(
+            report.artifact.ends_with("attention/mixflow/sgd/h4/b2"),
+            "got {:?}",
+            report.artifact
+        );
     }
 
     #[test]
@@ -661,6 +906,8 @@ mod tests {
             tasks: vec![NativeTask::HyperLr, NativeTask::Attention],
             inner_opts: vec![InnerOptimiser::Sgd, InnerOptimiser::adam()],
             modes: vec![HypergradMode::Mixflow, HypergradMode::Naive],
+            heads: vec![1, 2],
+            batch: 1,
             remat: CheckpointPolicy::Full,
             fd_epsilon: 1e-5,
             unroll: 2,
@@ -669,21 +916,24 @@ mod tests {
             n_seeds: 2,
         };
         let cells = spec.cells();
-        assert_eq!(cells.len(), 2 * 2 * 2 * 2);
+        assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 2);
         assert_eq!(
             cells[0],
             SweepCell {
                 task: NativeTask::HyperLr,
                 inner_opt: InnerOptimiser::Sgd,
                 mode: HypergradMode::Mixflow,
+                heads: 1,
                 seed: 7,
             }
         );
-        // Seed varies fastest, task slowest.
+        // Seed varies fastest, then heads, then mode; task slowest.
         assert_eq!(cells[1].seed, 8);
-        assert_eq!(cells[2].mode, HypergradMode::Naive);
+        assert_eq!(cells[2].heads, 2);
+        assert_eq!(cells[4].mode, HypergradMode::Naive);
         assert_eq!(cells.last().unwrap().task, NativeTask::Attention);
-        assert_eq!(cells[0].label(), "hyperlr/sgd/mixflow/seed7");
+        assert_eq!(cells[0].label(), "hyperlr/sgd/mixflow/h1/seed7");
+        assert_eq!(cells[0].config_label(), "hyperlr/sgd/mixflow/h1");
     }
 
     #[test]
@@ -692,6 +942,8 @@ mod tests {
             tasks: vec![NativeTask::HyperLr],
             inner_opts: vec![InnerOptimiser::Sgd, InnerOptimiser::momentum()],
             modes: vec![HypergradMode::Mixflow, HypergradMode::Naive],
+            heads: vec![1],
+            batch: 1,
             remat: CheckpointPolicy::Full,
             fd_epsilon: 1e-5,
             unroll: 2,
@@ -707,10 +959,10 @@ mod tests {
         assert_eq!(
             labels,
             vec![
-                "hyperlr/sgd/mixflow/seed11",
-                "hyperlr/sgd/naive/seed11",
-                "hyperlr/momentum/mixflow/seed11",
-                "hyperlr/momentum/naive/seed11",
+                "hyperlr/sgd/mixflow/h1/seed11",
+                "hyperlr/sgd/naive/h1/seed11",
+                "hyperlr/momentum/mixflow/h1/seed11",
+                "hyperlr/momentum/naive/h1/seed11",
             ]
         );
         for run in &runs {

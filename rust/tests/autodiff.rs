@@ -5,13 +5,13 @@
 
 use mixflow::autodiff::engine::HypergradEngine;
 use mixflow::autodiff::mixflow::{
-    fd_hypergrad, inner_step_values, mixflow_hypergrad,
-    mixflow_hypergrad_with, naive_hypergrad, rel_err, CheckpointPolicy,
-    MemoryReport,
+    inner_step_values, mixflow_hypergrad, mixflow_hypergrad_with,
+    naive_hypergrad, rel_err, CheckpointPolicy, MemoryReport,
 };
 use mixflow::autodiff::optim::InnerOptimiser;
 use mixflow::autodiff::problems::{
     AttentionProblem, HyperLrProblem, LossWeightingProblem,
+    MultiHeadAttentionProblem,
 };
 use mixflow::autodiff::tape::{NodeId, Tape};
 use mixflow::autodiff::tensor::Tensor;
@@ -191,11 +191,88 @@ fn fd_checks_matmul_all_transposes() {
         let y = t.tanh(c);
         t.sum(y)
     });
-    // And with the differentiated operand on the right.
+    // And with the differentiated operand on the right.  (This used
+    // bnt [4,5] as the left operand — inner dims 5 vs 3, a guaranteed
+    // panic that survived four toolchain-less sessions; btt [4,3] is
+    // the shape-compatible left constant.)
     fd_check("matmul_rhs", &a, |t, x| {
-        let b = t.constant(bnt.clone());
+        let b = t.constant(btt.clone());
         let c = t.matmul(b, x, false, false);
         let y = t.tanh(c);
+        t.sum(y)
+    });
+}
+
+#[test]
+fn fd_checks_batched_and_head_stacking_ops() {
+    // The multi-head attention ops: batched 3-D matmul in all four
+    // transpose combinations (both operand positions), column split and
+    // concat, and the full split → per-head bmm → concat round trip.
+    let mut rng = Prng::new(31);
+    let a3 = Tensor::randn(&[2, 3, 4], 1.0, &mut rng);
+    let bnn = Tensor::randn(&[2, 4, 2], 1.0, &mut rng);
+    let btn = Tensor::randn(&[2, 3, 2], 1.0, &mut rng);
+    let bnt = Tensor::randn(&[2, 2, 4], 1.0, &mut rng);
+    let btt = Tensor::randn(&[2, 2, 3], 1.0, &mut rng);
+    fd_check("batch_matmul_nn", &a3, |t, x| {
+        let b = t.constant(bnn.clone());
+        let c = t.batch_matmul(x, b, false, false);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    fd_check("batch_matmul_tn", &a3, |t, x| {
+        let b = t.constant(btn.clone());
+        let c = t.batch_matmul(x, b, true, false);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    fd_check("batch_matmul_nt", &a3, |t, x| {
+        let b = t.constant(bnt.clone());
+        let c = t.batch_matmul(x, b, false, true);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    fd_check("batch_matmul_tt", &a3, |t, x| {
+        let b = t.constant(btt.clone());
+        let c = t.batch_matmul(x, b, true, true);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    // Differentiated operand in the right slot: btt [2,2,3] · x [2,3,4].
+    fd_check("batch_matmul_rhs", &a3, |t, x| {
+        let b = t.constant(btt.clone());
+        let c = t.batch_matmul(b, x, false, false);
+        let y = t.tanh(c);
+        t.sum(y)
+    });
+    let m = Tensor::randn(&[3, 6], 1.0, &mut rng);
+    fd_check("split_cols", &m, |t, x| {
+        let mid = t.split_cols(x, 2, 3);
+        let y = t.tanh(mid);
+        t.sum(y)
+    });
+    fd_check("concat_cols", &m, |t, x| {
+        let left = t.split_cols(x, 0, 2);
+        let right = t.split_cols(x, 2, 4);
+        let l2 = t.scale(left, 2.0);
+        let r3 = t.scale(right, 3.0);
+        let cat = t.concat_cols(&[l2, r3]);
+        let y = t.tanh(cat);
+        t.sum(y)
+    });
+    fd_check("split_bmm_concat_head_stack", &m, |t, x| {
+        // The exact multi-head wiring: 2 heads of width 3 over a
+        // 1-sequence batch, scores → context → concat.
+        let mut heads = Vec::new();
+        for h in 0..2 {
+            let xh = t.split_cols(x, h * 3, 3);
+            let x3 = t.reshape(xh, vec![1, 3, 3]);
+            let scores = t.batch_matmul(x3, x3, false, true);
+            let ctx = t.batch_matmul(scores, x3, false, false);
+            heads.push(t.reshape(ctx, vec![3, 3]));
+        }
+        let cat = t.concat_cols(&heads);
+        let y = t.tanh(cat);
         t.sum(y)
     });
 }
@@ -369,90 +446,118 @@ fn forward_over_reverse_hvp_matches_fd() {
     assert!(err < 1e-5, "HVP rel err {err:.3e}");
 }
 
+/// Hold every hypergradient path to the central-difference oracle on one
+/// problem, all three running on **persistent engines** (the ROADMAP
+/// follow-up from PR 4: the throwaway-engine `fd_hypergrad` shims are
+/// gone from the oracle tests).  Each engine computes the hypergradient
+/// twice: the warm second run must (a) reproduce the cold run
+/// bit-for-bit and (b) draw strictly more buffers out of the persistent
+/// arena than the cold run did — the second-step arena-reuse contract.
+fn assert_engines_match_fd_oracle(
+    label: &str,
+    problem: &dyn mixflow::autodiff::BilevelProblem,
+) {
+    let theta0 = problem.theta0();
+    let eta = problem.eta0();
+    let mut naive_engine =
+        HypergradEngine::builder().mode(HypergradMode::Naive).build();
+    let mut mixflow_engine = HypergradEngine::builder().build();
+    let mut fd_engine =
+        HypergradEngine::builder().mode(HypergradMode::Fd).build();
+    let naive = naive_engine.run(problem, &theta0, &eta);
+    let mixed = mixflow_engine.run(problem, &theta0, &eta);
+    let fd = fd_engine.run(problem, &theta0, &eta);
+    assert!(
+        rel_err(&naive.d_eta, &fd.d_eta) < 1e-4,
+        "{label}: naive vs fd"
+    );
+    assert!(
+        rel_err(&mixed.d_eta, &fd.d_eta) < 1e-4,
+        "{label}: mixflow vs fd"
+    );
+    assert!(
+        rel_err(&naive.d_eta, &mixed.d_eta) < 1e-6,
+        "{label}: naive vs mixflow"
+    );
+    for (name, engine, cold) in [
+        ("naive", &mut naive_engine, &naive),
+        ("mixflow", &mut mixflow_engine, &mixed),
+        ("fd", &mut fd_engine, &fd),
+    ] {
+        let warm = engine.run(problem, &theta0, &eta);
+        for (a, b) in cold.d_eta.iter().zip(warm.d_eta.iter()) {
+            assert_eq!(
+                a.max_abs_diff(b),
+                0.0,
+                "{label}/{name}: warm rerun must be bit-for-bit"
+            );
+        }
+        assert!(
+            warm.memory.arena_reuses > cold.memory.arena_reuses,
+            "{label}/{name}: second engine step must reuse more arena \
+             buffers than the cold step ({} vs {})",
+            warm.memory.arena_reuses,
+            cold.memory.arena_reuses
+        );
+        assert_eq!(engine.outer_steps(), 2, "{label}/{name}");
+    }
+}
+
 #[test]
 fn hypergrads_match_fd_oracle() {
-    // Small instances; both tasks, both paths, against central differences.
-    let hyper = HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08);
-    let theta0 = hyper.theta0();
-    let eta = hyper.eta0();
-    let naive = naive_hypergrad(&hyper, &theta0, &eta);
-    let mixed = mixflow_hypergrad(&hyper, &theta0, &eta);
-    let fd = fd_hypergrad(&hyper, &theta0, &eta, 1e-5);
-    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "hyperlr naive vs fd");
-    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "hyperlr mixflow vs fd");
-
-    let weight = LossWeightingProblem::with_config(13, 3, 4, 3, 4, 3, 0.15, 0.5);
-    let theta0 = weight.theta0();
-    let eta = weight.eta0();
-    let naive = naive_hypergrad(&weight, &theta0, &eta);
-    let mixed = mixflow_hypergrad(&weight, &theta0, &eta);
-    let fd = fd_hypergrad(&weight, &theta0, &eta, 1e-5);
-    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "weighting naive vs fd");
-    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "weighting mixflow vs fd");
+    // Small instances; both MLP tasks against central differences, on
+    // persistent engines.
+    assert_engines_match_fd_oracle(
+        "hyperlr",
+        &HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08),
+    );
+    assert_engines_match_fd_oracle(
+        "weighting",
+        &LossWeightingProblem::with_config(13, 3, 4, 3, 4, 3, 0.15, 0.5),
+    );
 }
 
 #[test]
 fn hypergrads_match_fd_oracle_stateful_optimisers() {
     // The optimiser-state adjoint path (m/v moments, bias correction)
     // must be held to the same FD oracle as plain SGD.
-    let momentum = HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08)
-        .with_optimiser(InnerOptimiser::momentum());
-    let theta0 = momentum.theta0();
-    let eta = momentum.eta0();
-    let naive = naive_hypergrad(&momentum, &theta0, &eta);
-    let mixed = mixflow_hypergrad(&momentum, &theta0, &eta);
-    let fd = fd_hypergrad(&momentum, &theta0, &eta, 1e-5);
-    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "momentum naive vs fd");
-    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "momentum mixflow vs fd");
-
-    let adam = HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08)
-        .with_optimiser(InnerOptimiser::adam());
-    let naive = naive_hypergrad(&adam, &theta0, &eta);
-    let mixed = mixflow_hypergrad(&adam, &theta0, &eta);
-    let fd = fd_hypergrad(&adam, &theta0, &eta, 1e-5);
-    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "adam naive vs fd");
-    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "adam mixflow vs fd");
-    assert!(
-        rel_err(&naive.d_eta, &mixed.d_eta) < 1e-6,
-        "adam naive vs mixflow"
+    assert_engines_match_fd_oracle(
+        "momentum",
+        &HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08)
+            .with_optimiser(InnerOptimiser::momentum()),
     );
-
+    assert_engines_match_fd_oracle(
+        "adam",
+        &HyperLrProblem::with_config(11, 3, 4, 3, 4, 3, 0.08)
+            .with_optimiser(InnerOptimiser::adam()),
+    );
     // Adam under a dense mixed ∂²L/∂η∂θ term (η inside the inner loss).
-    let weight = LossWeightingProblem::with_config(13, 3, 4, 3, 4, 3, 0.15, 0.5)
-        .with_optimiser(InnerOptimiser::adam());
-    let theta0 = weight.theta0();
-    let eta = weight.eta0();
-    let naive = naive_hypergrad(&weight, &theta0, &eta);
-    let mixed = mixflow_hypergrad(&weight, &theta0, &eta);
-    let fd = fd_hypergrad(&weight, &theta0, &eta, 1e-5);
-    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "weighting+adam naive vs fd");
-    assert!(
-        rel_err(&mixed.d_eta, &fd) < 1e-4,
-        "weighting+adam mixflow vs fd"
+    assert_engines_match_fd_oracle(
+        "weighting+adam",
+        &LossWeightingProblem::with_config(13, 3, 4, 3, 4, 3, 0.15, 0.5)
+            .with_optimiser(InnerOptimiser::adam()),
     );
 }
 
 #[test]
 fn hypergrads_match_fd_oracle_attention_adam() {
     // The paper's benchmark shape: attention + layernorm inner model,
-    // Adam inner optimiser.
-    let prob = AttentionProblem::with_config(19, 3, 4, 3, 3, 0.05)
-        .with_optimiser(InnerOptimiser::adam());
-    let theta0 = prob.theta0();
-    let eta = prob.eta0();
-    let naive = naive_hypergrad(&prob, &theta0, &eta);
-    let mixed = mixflow_hypergrad(&prob, &theta0, &eta);
-    let fd = fd_hypergrad(&prob, &theta0, &eta, 1e-5);
-    assert!(rel_err(&naive.d_eta, &fd) < 1e-4, "attention naive vs fd");
-    assert!(rel_err(&mixed.d_eta, &fd) < 1e-4, "attention mixflow vs fd");
-    assert!(
-        rel_err(&naive.d_eta, &mixed.d_eta) < 1e-6,
-        "attention naive vs mixflow"
+    // Adam inner optimiser — single-head and multi-head batched.
+    assert_engines_match_fd_oracle(
+        "attention",
+        &AttentionProblem::with_config(19, 3, 4, 3, 3, 0.05)
+            .with_optimiser(InnerOptimiser::adam()),
+    );
+    assert_engines_match_fd_oracle(
+        "attention_mh",
+        &MultiHeadAttentionProblem::with_config(19, 4, 2, 2, 3, 3, 3, 0.05)
+            .with_optimiser(InnerOptimiser::adam()),
     );
 }
 
-/// Random small bilevel instance spanning all three tasks and all three
-/// inner optimisers — shared by the equivalence property tests.
+/// Random small bilevel instance spanning all four tasks (multi-head
+/// batched attention included) and all three inner optimisers — shared
+/// by the equivalence property tests.
 fn random_problem(g: &mut proptest::Gen) -> Box<dyn BilevelProblem> {
     let seed = g.rng.next_u64();
     let d = g.usize(2, 4);
@@ -466,7 +571,7 @@ fn random_problem(g: &mut proptest::Gen) -> Box<dyn BilevelProblem> {
         InnerOptimiser::momentum(),
         InnerOptimiser::adam(),
     ]);
-    match g.usize(0, 2) {
+    match g.usize(0, 3) {
         0 => Box::new(
             HyperLrProblem::with_config(
                 seed, d, hidden, classes, batch, unroll, alpha,
@@ -486,13 +591,100 @@ fn random_problem(g: &mut proptest::Gen) -> Box<dyn BilevelProblem> {
             )
             .with_optimiser(opt),
         ),
-        _ => Box::new(
+        2 => Box::new(
             AttentionProblem::with_config(
                 seed, d, batch, classes, unroll, alpha,
             )
             .with_optimiser(opt),
         ),
+        _ => {
+            // Multi-head batched attention: d_model must divide by the
+            // head count, so draw (heads, head dim) and multiply.
+            let heads = g.usize(1, 3);
+            let d_model = heads * g.usize(1, 2);
+            let seqs = g.usize(1, 3);
+            Box::new(
+                MultiHeadAttentionProblem::with_config(
+                    seed,
+                    d_model,
+                    heads,
+                    seqs,
+                    g.usize(2, 4),
+                    classes,
+                    unroll,
+                    alpha,
+                )
+                .with_optimiser(opt),
+            )
+        }
     }
+}
+
+#[test]
+fn property_multihead_heads1_is_bitwise_single_head_attention() {
+    // The tentpole's conformance pin: MultiHeadAttentionProblem with
+    // heads = 1, batch = 1 must reproduce the legacy single-head
+    // AttentionProblem hypergradient to ≤ 1e-12 (bit-for-bit in
+    // practice — the splits/concats are exact copies and one-group
+    // batched matmuls run the identical kernel loops) for the naive,
+    // mixflow and remat paths, across random shapes and optimisers.
+    proptest::check("mha-h1≡attention", 12, |g| {
+        let seed = g.rng.next_u64();
+        let d = g.usize(2, 4);
+        let seq = g.usize(2, 5);
+        let classes = g.usize(2, 4);
+        let unroll = g.usize(1, 4);
+        let alpha = g.f64(0.02, 0.12);
+        let opt = *g.choose(&[
+            InnerOptimiser::Sgd,
+            InnerOptimiser::momentum(),
+            InnerOptimiser::adam(),
+        ]);
+        let old = AttentionProblem::with_config(
+            seed, d, seq, classes, unroll, alpha,
+        )
+        .with_optimiser(opt);
+        let new = MultiHeadAttentionProblem::with_config(
+            seed, d, 1, 1, seq, classes, unroll, alpha,
+        )
+        .with_optimiser(opt);
+        let theta0 = old.theta0();
+        let eta = old.eta0();
+        for (a, b) in theta0.iter().zip(new.theta0().iter()) {
+            if a.max_abs_diff(b) != 0.0 {
+                return Err("theta init diverged".to_string());
+            }
+        }
+        for mode in ["naive", "mixflow", "remat2"] {
+            let run = |p: &dyn BilevelProblem| match mode {
+                "naive" => naive_hypergrad(p, &theta0, &eta),
+                "mixflow" => mixflow_hypergrad(p, &theta0, &eta),
+                _ => mixflow_hypergrad_with(
+                    p,
+                    &theta0,
+                    &eta,
+                    CheckpointPolicy::Remat { segment: 2 },
+                ),
+            };
+            let a = run(&old);
+            let b = run(&new);
+            let err = rel_err(&a.d_eta, &b.d_eta);
+            if err > 1e-12 {
+                return Err(format!(
+                    "{mode}: heads=1 multi-head diverged from single-head \
+                     (rel err {err:.3e}, {} opt, unroll {unroll})",
+                    opt.name()
+                ));
+            }
+            if (a.outer_loss - b.outer_loss).abs() > 1e-12 {
+                return Err(format!(
+                    "{mode}: outer loss {} vs {}",
+                    b.outer_loss, a.outer_loss
+                ));
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
@@ -861,6 +1053,90 @@ fn adam_attention_tape_memory_beats_naive_for_long_unrolls() {
         );
         prev_ratio = ratio;
     }
+}
+
+#[test]
+fn multihead_attention_memory_gap_and_kv_counters() {
+    // The tentpole acceptance shape: on the multi-head batched workload
+    // the mixflow peak must stay below naive at T ∈ {4, 8, 16}, with the
+    // KV-reuse counters attributing part of the saving to the K/V
+    // projections specifically.
+    for unroll in [4usize, 8, 16] {
+        let p = MultiHeadAttentionProblem::with_unroll(1, unroll)
+            .with_optimiser(InnerOptimiser::adam());
+        let theta0 = p.theta0();
+        let eta = p.eta0();
+        let naive = naive_hypergrad(&p, &theta0, &eta);
+        let mixed = mixflow_hypergrad(&p, &theta0, &eta);
+        assert!(
+            rel_err(&naive.d_eta, &mixed.d_eta) < 1e-6,
+            "T={unroll}: multihead naive vs mixflow"
+        );
+        assert!(
+            mixed.memory.peak_bytes < naive.memory.peak_bytes,
+            "T={unroll}: mixflow peak {} not below naive {}",
+            mixed.memory.peak_bytes,
+            naive.memory.peak_bytes
+        );
+        // Naive keeps every step's K/V projections live on the
+        // monolithic tape; mixflow holds at most one step's worth.
+        assert!(naive.memory.kv_peak_bytes > 0, "naive KV untagged");
+        assert!(mixed.memory.kv_peak_bytes > 0, "mixflow KV untagged");
+        assert!(
+            mixed.memory.kv_peak_bytes < naive.memory.kv_peak_bytes,
+            "T={unroll}: mixflow KV peak {} not below naive {}",
+            mixed.memory.kv_peak_bytes,
+            naive.memory.kv_peak_bytes
+        );
+        // Full checkpointing: every backward step rebuilds K/V from a
+        // stored-checkpoint alias; nothing is rematerialised.
+        assert!(mixed.memory.kv_ckpt_alias_bytes > 0);
+        assert_eq!(mixed.memory.kv_remat_bytes, 0);
+        assert_eq!(naive.memory.kv_ckpt_alias_bytes, 0);
+        assert_eq!(naive.memory.kv_remat_bytes, 0);
+    }
+}
+
+#[test]
+fn kv_counters_split_by_checkpoint_policy() {
+    // Under Remat{K}: segment-boundary backward steps alias stored
+    // checkpoints, intra-segment steps (and the recompute pass) book as
+    // rematerialised — so K = 1 puts everything in the alias bucket and
+    // K ≥ 2 moves a strictly positive share into the remat bucket while
+    // the total K/V rebuild volume only grows (the recompute pass
+    // rebuilds K/V the full-checkpoint path never re-touches).
+    let p = MultiHeadAttentionProblem::with_unroll(3, 8)
+        .with_optimiser(InnerOptimiser::adam());
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let full = mixflow_hypergrad(&p, &theta0, &eta);
+    assert!(full.memory.kv_ckpt_alias_bytes > 0);
+    assert_eq!(full.memory.kv_remat_bytes, 0);
+    let remat = mixflow_hypergrad_with(
+        &p,
+        &theta0,
+        &eta,
+        CheckpointPolicy::Remat { segment: 4 },
+    );
+    assert!(remat.memory.kv_remat_bytes > 0, "K=4 must remat some K/V");
+    assert!(
+        remat.memory.kv_ckpt_alias_bytes < full.memory.kv_ckpt_alias_bytes,
+        "K=4 must alias fewer checkpoints than K=1 ({} vs {})",
+        remat.memory.kv_ckpt_alias_bytes,
+        full.memory.kv_ckpt_alias_bytes
+    );
+    let full_total =
+        full.memory.kv_ckpt_alias_bytes + full.memory.kv_remat_bytes;
+    let remat_total =
+        remat.memory.kv_ckpt_alias_bytes + remat.memory.kv_remat_bytes;
+    assert!(
+        remat_total > full_total,
+        "remat must rebuild strictly more K/V overall ({remat_total} vs \
+         {full_total})"
+    );
+    // The per-tape KV peak is a one-step quantity — thinning checkpoints
+    // must not change it.
+    assert_eq!(full.memory.kv_peak_bytes, remat.memory.kv_peak_bytes);
 }
 
 #[test]

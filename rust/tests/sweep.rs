@@ -1,0 +1,165 @@
+//! Sweep-grid reporting coverage: `run_sweep` over a
+//! task × inner-opt × mode × heads × seed grid, dumped through
+//! [`mixflow::meta::sweep_report_json`] to a `BENCH_native`-style JSON
+//! file, then parsed back and checked for grid-order completeness — the
+//! golden-file pin on the sweep report schema.
+
+use mixflow::autodiff::mixflow::CheckpointPolicy;
+use mixflow::autodiff::optim::InnerOptimiser;
+use mixflow::meta::{
+    run_sweep, sweep_report_json, HypergradMode, NativeTask, SweepSpec,
+};
+use mixflow::util::json::Json;
+
+fn small_grid_spec() -> SweepSpec {
+    SweepSpec {
+        tasks: vec![NativeTask::HyperLr, NativeTask::Attention],
+        inner_opts: vec![InnerOptimiser::Sgd],
+        modes: vec![HypergradMode::Mixflow, HypergradMode::Naive],
+        heads: vec![1, 2],
+        batch: 2,
+        remat: CheckpointPolicy::Full,
+        fd_epsilon: 1e-5,
+        unroll: 2,
+        steps: 2,
+        base_seed: 21,
+        n_seeds: 2,
+    }
+}
+
+#[test]
+fn sweep_json_round_trips_with_grid_order_completeness() {
+    let spec = small_grid_spec();
+    let runs = run_sweep(&spec);
+    let expected = spec.cells();
+    assert_eq!(runs.len(), expected.len());
+    // 2 tasks × 1 opt × 2 modes × 2 heads × 2 seeds.
+    assert_eq!(expected.len(), 16);
+
+    // Golden-file round trip: dump, re-read, parse.
+    let doc = sweep_report_json(&spec, &runs);
+    let path = std::env::temp_dir().join(format!(
+        "mixflow_sweep_golden_{}.json",
+        std::process::id()
+    ));
+    std::fs::write(&path, doc.pretty() + "\n").expect("write golden file");
+    let text = std::fs::read_to_string(&path).expect("read golden file");
+    std::fs::remove_file(&path).ok();
+    let parsed = Json::parse(&text).expect("sweep JSON must parse");
+
+    assert_eq!(
+        parsed.get("bench").and_then(Json::as_str),
+        Some("sweep_native")
+    );
+    assert_eq!(parsed.get("unroll").and_then(Json::as_u64), Some(2));
+    assert_eq!(parsed.get("batch").and_then(Json::as_u64), Some(2));
+    assert_eq!(parsed.get("remat").and_then(Json::as_str), Some("full"));
+
+    // Every (task, opt, mode, heads, seed) tuple appears exactly once,
+    // in exact grid order (task → opt → mode → heads → seed).
+    let cells = parsed
+        .get("cells")
+        .and_then(Json::as_arr)
+        .expect("cells array");
+    assert_eq!(cells.len(), expected.len());
+    for (row, want) in cells.iter().zip(expected.iter()) {
+        assert_eq!(
+            row.get("task").and_then(Json::as_str),
+            Some(want.task.name()),
+        );
+        assert_eq!(
+            row.get("inner_opt").and_then(Json::as_str),
+            Some(want.inner_opt.name()),
+        );
+        assert_eq!(
+            row.get("mode").and_then(Json::as_str),
+            Some(want.mode.name()),
+        );
+        assert_eq!(
+            row.get("heads").and_then(Json::as_u64),
+            Some(want.heads as u64),
+        );
+        assert_eq!(
+            row.get("seed").and_then(Json::as_u64),
+            Some(want.seed),
+        );
+        assert_eq!(
+            row.get("label").and_then(Json::as_str),
+            Some(want.label().as_str()),
+        );
+        // Per-cell loss aggregation fields must be present and finite.
+        for key in ["final_loss", "loss_mean", "loss_std"] {
+            let v = row
+                .get(key)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("cell missing `{key}`"));
+            assert!(v.is_finite(), "{key} must be finite, got {v}");
+        }
+        assert!(
+            row.get("peak_bytes").and_then(Json::as_f64).unwrap_or(0.0)
+                > 0.0,
+            "cells must carry the memory report"
+        );
+    }
+
+    // Aggregates fold exactly the seed axis, preserving config order.
+    let aggs = parsed
+        .get("aggregates")
+        .and_then(Json::as_arr)
+        .expect("aggregates array");
+    assert_eq!(aggs.len(), expected.len() / spec.n_seeds);
+    for (i, agg) in aggs.iter().enumerate() {
+        let want = &expected[i * spec.n_seeds];
+        assert_eq!(
+            agg.get("config").and_then(Json::as_str),
+            Some(want.config_label().as_str()),
+        );
+        assert_eq!(
+            agg.get("n_seeds").and_then(Json::as_u64),
+            Some(spec.n_seeds as u64),
+        );
+        let mean = agg.get("final_mean").and_then(Json::as_f64).unwrap();
+        let std = agg.get("final_std").and_then(Json::as_f64).unwrap();
+        assert!(mean.is_finite());
+        assert!(std.is_finite() && std >= 0.0);
+    }
+}
+
+#[test]
+fn sweep_heads_axis_changes_the_attention_cells_only() {
+    // heads is a real axis for the attention task (different model
+    // width/shape ⇒ different losses) and a no-op duplicate for the MLP
+    // tasks — both facts the grid report relies on.
+    let spec = SweepSpec {
+        tasks: vec![NativeTask::HyperLr, NativeTask::Attention],
+        inner_opts: vec![InnerOptimiser::Sgd],
+        modes: vec![HypergradMode::Mixflow],
+        heads: vec![1, 2],
+        batch: 1,
+        remat: CheckpointPolicy::Full,
+        fd_epsilon: 1e-5,
+        unroll: 2,
+        steps: 2,
+        base_seed: 5,
+        n_seeds: 1,
+    };
+    let runs = run_sweep(&spec);
+    assert_eq!(runs.len(), 4);
+    // Grid order: hyperlr/h1, hyperlr/h2, attention/h1, attention/h2.
+    assert_eq!(runs[0].cell.label(), "hyperlr/sgd/mixflow/h1/seed5");
+    assert_eq!(runs[1].cell.label(), "hyperlr/sgd/mixflow/h2/seed5");
+    assert_eq!(runs[2].cell.label(), "attention/sgd/mixflow/h1/seed5");
+    assert_eq!(runs[3].cell.label(), "attention/sgd/mixflow/h2/seed5");
+    assert_eq!(
+        runs[0].report.losses, runs[1].report.losses,
+        "heads must not affect the hyperlr task"
+    );
+    assert_ne!(
+        runs[2].report.losses, runs[3].report.losses,
+        "heads must change the attention task"
+    );
+    // The attention cells carry KV counters; the MLP cells don't.
+    let mem2 = runs[2].memory.expect("memory recorded");
+    assert!(mem2.kv_peak_bytes > 0);
+    assert_eq!(runs[0].memory.expect("memory").kv_peak_bytes, 0);
+}
