@@ -17,16 +17,27 @@
 //! `hlo::memory` simulator's default/mixflow ratios next to the native
 //! ones so the simulator's trend has a ground-truth oracle.
 //!
+//! The engines run with telemetry on: every rung conformance-checks the
+//! strategy's own `MemoryReport.arena_allocs/arena_reuses` against the
+//! registry's independently mirrored `arena.allocs`/`arena.reuses`
+//! deltas in the step trace (the two ledgers are written by different
+//! code paths, so drift means an accounting bug), and the collected
+//! traces land in `TRACE_native_memory.jsonl` +
+//! `TRACE_native_memory_chrome.json`.
+//!
 //! ```bash
 //! cargo run --release --bin fig_native_memory
 //! ```
 
 use mixflow::autodiff::engine::{HypergradEngine, HypergradMode};
-use mixflow::autodiff::mixflow::{rel_err, BilevelProblem, CheckpointPolicy};
+use mixflow::autodiff::mixflow::{
+    rel_err, BilevelProblem, CheckpointPolicy, Hypergrad,
+};
 use mixflow::autodiff::optim::InnerOptimiser;
 use mixflow::autodiff::problems::{
     AttentionProblem, HyperLrProblem, MultiHeadAttentionProblem,
 };
+use mixflow::obs::{write_trace, StepTrace, TraceFormat};
 use mixflow::util::stats::human_bytes;
 use mixflow::util::table::Table;
 
@@ -53,10 +64,53 @@ fn build_multihead_attention_adam(unroll: usize) -> Box<dyn BilevelProblem> {
     )
 }
 
+/// Registry-vs-`MemoryReport` conformance: the engine mirrors arena
+/// take/alloc deltas into the registry independently of the strategy's
+/// own bookkeeping, and the step trace carries both ledgers — any
+/// disagreement is an accounting bug, not noise.
+fn check_trace_conformance(
+    label: &str,
+    unroll: usize,
+    variant: &str,
+    trace: Option<&StepTrace>,
+    h: &Hypergrad,
+) -> bool {
+    let Some(tr) = trace else {
+        eprintln!(
+            "FAIL {label} T={unroll} {variant}: telemetry on but no step \
+             trace recorded"
+        );
+        return false;
+    };
+    let mut ok = true;
+    for (counter, want) in [
+        ("arena.allocs", h.memory.arena_allocs as u64),
+        ("arena.reuses", h.memory.arena_reuses as u64),
+    ] {
+        let got = tr.counter(counter).unwrap_or(0);
+        if got != want {
+            eprintln!(
+                "FAIL {label} T={unroll} {variant}: registry {counter} = \
+                 {got} but MemoryReport says {want}"
+            );
+            ok = false;
+        }
+    }
+    ok
+}
+
 /// One naive vs MixFlow(full) vs MixFlow(auto-remat) table over the
 /// unroll ladder; false if the memory gap, a KV-reuse counter
-/// (`check_kv` configs only) or the numeric agreement breaks anywhere.
-fn run_config(label: &str, build: ProblemBuilder, check_kv: bool) -> bool {
+/// (`check_kv` configs only), a registry conformance check or the
+/// numeric agreement breaks anywhere.  Drains each engine's step traces
+/// into `cells` under `slug/{variant}` labels.
+fn run_config(
+    label: &str,
+    slug: &str,
+    build: ProblemBuilder,
+    check_kv: bool,
+    cells: &mut Vec<(String, Vec<StepTrace>)>,
+) -> bool {
     println!("\n[{label}]");
     let unrolls = [2usize, 4, 8, 16];
     let mut t = Table::new(&[
@@ -75,11 +129,15 @@ fn run_config(label: &str, build: ProblemBuilder, check_kv: bool) -> bool {
 
     // One persistent engine per path, shared by the whole ladder: rungs
     // after the first draw their step tapes out of the warm arena.
-    let mut naive_engine =
-        HypergradEngine::builder().mode(HypergradMode::Naive).build();
-    let mut mixflow_engine = HypergradEngine::builder().build();
+    let mut naive_engine = HypergradEngine::builder()
+        .mode(HypergradMode::Naive)
+        .telemetry(true)
+        .build();
+    let mut mixflow_engine =
+        HypergradEngine::builder().telemetry(true).build();
     let mut auto_engine = HypergradEngine::builder()
         .checkpoint(CheckpointPolicy::Auto)
+        .telemetry(true)
         .build();
 
     let mut ok = true;
@@ -90,6 +148,15 @@ fn run_config(label: &str, build: ProblemBuilder, check_kv: bool) -> bool {
         let naive = naive_engine.run(problem.as_ref(), &theta0, &eta);
         let mixed = mixflow_engine.run(problem.as_ref(), &theta0, &eta);
         let auto = auto_engine.run(problem.as_ref(), &theta0, &eta);
+        for (variant, trace, h) in [
+            ("naive", naive_engine.last_trace(), &naive),
+            ("mixflow", mixflow_engine.last_trace(), &mixed),
+            ("mixflow-auto", auto_engine.last_trace(), &auto),
+        ] {
+            if !check_trace_conformance(label, unroll, variant, trace, h) {
+                ok = false;
+            }
+        }
         let err = rel_err(&naive.d_eta, &mixed.d_eta);
         let naive_bytes = naive.memory.total_bytes();
         let mixed_bytes = mixed.memory.total_bytes();
@@ -168,6 +235,13 @@ fn run_config(label: &str, build: ProblemBuilder, check_kv: bool) -> bool {
         mixflow_engine.outer_steps(),
         auto_engine.outer_steps()
     );
+    cells.push((format!("{slug}/naive"), naive_engine.take_step_traces()));
+    cells
+        .push((format!("{slug}/mixflow"), mixflow_engine.take_step_traces()));
+    cells.push((
+        format!("{slug}/mixflow-auto"),
+        auto_engine.take_step_traces(),
+    ));
     ok
 }
 
@@ -175,22 +249,39 @@ fn main() {
     println!(
         "Figure (native) — tape memory: reverse-over-reverse vs MixFlow-MG"
     );
-    let configs: [(&str, ProblemBuilder, bool); 3] = [
-        ("hyperlr · sgd inner optimiser", build_hyperlr_sgd, false),
+    let configs: [(&str, &str, ProblemBuilder, bool); 3] = [
+        (
+            "hyperlr · sgd inner optimiser",
+            "hyperlr",
+            build_hyperlr_sgd,
+            false,
+        ),
         (
             "attention+layernorm · adam inner optimiser",
+            "attention",
             build_attention_adam,
             true,
         ),
         (
             "multi-head attention (2 heads × 2 seqs) · adam inner optimiser",
+            "attention_mh2b2",
             build_multihead_attention_adam,
             true,
         ),
     ];
     let mut all_ok = true;
-    for (label, build, check_kv) in configs {
-        if !run_config(label, build, check_kv) {
+    let mut trace_cells: Vec<(String, Vec<StepTrace>)> = Vec::new();
+    for (label, slug, build, check_kv) in configs {
+        if !run_config(label, slug, build, check_kv, &mut trace_cells) {
+            all_ok = false;
+        }
+    }
+    for (tpath, format) in [
+        ("TRACE_native_memory.jsonl", TraceFormat::Jsonl),
+        ("TRACE_native_memory_chrome.json", TraceFormat::Chrome),
+    ] {
+        if let Err(e) = write_trace(tpath, format, &trace_cells) {
+            eprintln!("FAIL: could not write {tpath}: {e}");
             all_ok = false;
         }
     }
@@ -243,5 +334,8 @@ fn main() {
         eprintln!("FAIL: mixflow did not beat naive on memory or diverged");
         std::process::exit(1);
     }
-    println!("fig_native_memory OK");
+    println!(
+        "fig_native_memory OK (TRACE_native_memory.jsonl, \
+         TRACE_native_memory_chrome.json written)"
+    );
 }

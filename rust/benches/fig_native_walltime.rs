@@ -11,7 +11,13 @@
 //! steady-state (arena-warm) path every driver now runs.  It writes
 //! every timing and memory counter to `BENCH_native.json` (CI uploads it
 //! as an artifact and gates regressions against the committed baseline
-//! via the `perf_gate` bin) and exits nonzero if
+//! via the `perf_gate` bin).  A second, telemetry-enabled twin of every
+//! engine runs two untimed steps per rung so each JSON row also carries
+//! `phase_s` (per-phase seconds of the warm step — what `perf_gate`
+//! gates at phase level) and the full traces land in
+//! `TRACE_native.jsonl` + `TRACE_native_chrome.json` next to the bench
+//! JSON; the timed engines stay uninstrumented so telemetry cost can
+//! never leak into the gated medians.  It exits nonzero if
 //!
 //! * naive and mixflow disagree beyond 1e-6 (float-op reordering bound),
 //! * remat (K = 4) leaves the full-checkpoint hypergradient by more
@@ -32,6 +38,7 @@ use mixflow::autodiff::optim::InnerOptimiser;
 use mixflow::autodiff::problems::{
     AttentionProblem, HyperLrProblem, MultiHeadAttentionProblem,
 };
+use mixflow::obs::{write_trace, StepTrace, TraceFormat};
 use mixflow::util::bench::Bench;
 use mixflow::util::json::Json;
 use mixflow::util::stats::{human_bytes, Summary};
@@ -62,6 +69,18 @@ fn build_multihead_attention_adam(unroll: usize) -> Box<dyn BilevelProblem> {
         MultiHeadAttentionProblem::with_unroll(1, unroll)
             .with_optimiser(InnerOptimiser::adam()),
     )
+}
+
+/// Per-phase seconds of the warm (last) traced step, as a JSON object —
+/// the `phase_s` row field `perf_gate` gates phase-level walltime on.
+fn phase_seconds(traces: &[StepTrace]) -> Json {
+    let mut o = Json::obj();
+    if let Some(t) = traces.last() {
+        for p in &t.phases {
+            o.insert(p.phase.name(), Json::Num(p.seconds));
+        }
+    }
+    o
 }
 
 fn result_row(
@@ -113,6 +132,7 @@ fn main() {
         .with_iters(warmup, iters)
         .with_budget(if smoke { 10.0 } else { 60.0 });
     let mut rows: Vec<Json> = Vec::new();
+    let mut trace_cells: Vec<(String, Vec<StepTrace>)> = Vec::new();
     let mut table = Table::new(&[
         "task",
         "T",
@@ -134,6 +154,19 @@ fn main() {
         let mut full_engine = HypergradEngine::builder().build();
         let mut remat_engine =
             HypergradEngine::builder().checkpoint(remat).build();
+        // Telemetry twins: identically configured instrumented engines
+        // that run two untimed steps per rung (cold + arena-warm) to
+        // source `phase_s` and the exported traces — keeping the timed
+        // engines above uninstrumented.
+        let mut naive_tw = HypergradEngine::builder()
+            .mode(HypergradMode::Naive)
+            .telemetry(true)
+            .build();
+        let mut full_tw = HypergradEngine::builder().telemetry(true).build();
+        let mut remat_tw = HypergradEngine::builder()
+            .checkpoint(remat)
+            .telemetry(true)
+            .build();
         for &unroll in unrolls {
             let problem = build(unroll);
             let theta0 = problem.theta0();
@@ -202,15 +235,44 @@ fn main() {
                 ok = false;
             }
 
-            rows.push(result_row(task, opt, unroll, "naive", &s_naive, &naive));
-            rows.push(result_row(task, opt, unroll, "mixflow", &s_full, &full));
-            rows.push(result_row(
+            // Two untimed instrumented steps per rung: the second runs
+            // arena-warm, so its trace reflects the same steady state
+            // the timed medians measure.
+            for _ in 0..2 {
+                let _ = naive_tw.run(problem.as_ref(), &theta0, &eta);
+                let _ = full_tw.run(problem.as_ref(), &theta0, &eta);
+                let _ = remat_tw.run(problem.as_ref(), &theta0, &eta);
+            }
+            let tr_naive = naive_tw.take_step_traces();
+            let tr_full = full_tw.take_step_traces();
+            let tr_remat = remat_tw.take_step_traces();
+
+            let mut row =
+                result_row(task, opt, unroll, "naive", &s_naive, &naive);
+            row.insert("phase_s", phase_seconds(&tr_naive));
+            rows.push(row);
+            let mut row =
+                result_row(task, opt, unroll, "mixflow", &s_full, &full);
+            row.insert("phase_s", phase_seconds(&tr_full));
+            rows.push(row);
+            let mut row = result_row(
                 task,
                 opt,
                 unroll,
                 &format!("mixflow_remat{REMAT_K}"),
                 &s_remat,
                 &rem,
+            );
+            row.insert("phase_s", phase_seconds(&tr_remat));
+            rows.push(row);
+
+            trace_cells
+                .push((format!("{task}+{opt}/T{unroll}/naive"), tr_naive));
+            trace_cells
+                .push((format!("{task}+{opt}/T{unroll}/mixflow"), tr_full));
+            trace_cells.push((
+                format!("{task}+{opt}/T{unroll}/mixflow-remat{REMAT_K}"),
+                tr_remat,
             ));
             table.row(vec![
                 format!("{task}+{opt}"),
@@ -238,10 +300,22 @@ fn main() {
         eprintln!("FAIL: could not write {path}: {e}");
         ok = false;
     }
+    for (tpath, format) in [
+        ("TRACE_native.jsonl", TraceFormat::Jsonl),
+        ("TRACE_native_chrome.json", TraceFormat::Chrome),
+    ] {
+        if let Err(e) = write_trace(tpath, format, &trace_cells) {
+            eprintln!("FAIL: could not write {tpath}: {e}");
+            ok = false;
+        }
+    }
 
     if !ok {
         eprintln!("FAIL: fig_native_walltime checks did not hold");
         std::process::exit(1);
     }
-    println!("fig_native_walltime OK ({path} written)");
+    println!(
+        "fig_native_walltime OK ({path}, TRACE_native.jsonl, \
+         TRACE_native_chrome.json written)"
+    );
 }

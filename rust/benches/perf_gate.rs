@@ -9,6 +9,14 @@
 //!   each file rather than as absolute seconds, so a slower or faster CI
 //!   machine cancels out of both sides and only a genuine slowdown of
 //!   the mixflow path relative to the naive baseline trips the gate.
+//! * **phase walltime** — rows carrying the telemetry-derived `phase_s`
+//!   map (per-phase seconds of the warm instrumented step) are also
+//!   gated phase by phase, normalised the same machine-independent way
+//!   (phase seconds / same-file naive median).  Only phases worth at
+//!   least 10% of their baseline row's total phase time are gated — the
+//!   sub-10% ones are timer noise — and at a wider 35% tolerance, since
+//!   single phases are shorter and noisier than whole steps.  This is
+//!   what turns "mixflow got 20% slower" into "the jvp phase did".
 //!
 //! Every `mixflow*` row the smoke bench emits is gated — including the
 //! multi-head batched attention cell (`attention_mh2b2+adam`) — as soon
@@ -36,12 +44,23 @@ use mixflow::util::table::Table;
 /// Regression threshold: fail at >20% worse than baseline.
 const TOLERANCE: f64 = 0.20;
 
+/// Phase-level threshold — wider than the end-to-end gate because a
+/// single phase is a fraction of a step and proportionally noisier.
+const PHASE_TOLERANCE: f64 = 0.35;
+
+/// Gate a phase only when it carries at least this share of its
+/// baseline row's total phase time; thinner slices are timer noise.
+const MIN_PHASE_SHARE: f64 = 0.10;
+
 /// Row key inside one results file.
 type Key = (String, String, u64, String); // (task, inner_opt, unroll, variant)
 
 struct Row {
     median_s: f64,
     peak_bytes: f64,
+    /// Telemetry-derived per-phase seconds (`phase_s` in the bench
+    /// JSON); empty for rows written before the telemetry subsystem.
+    phase_s: Vec<(String, f64)>,
 }
 
 fn load_rows(path: &str) -> Result<BTreeMap<Key, Row>, String> {
@@ -67,9 +86,21 @@ fn load_rows(path: &str) -> Result<BTreeMap<Key, Row>, String> {
         };
         let key =
             (s("task")?, s("inner_opt")?, n("unroll")? as u64, s("variant")?);
+        let mut phase_s = Vec::new();
+        if let Some(phases) = row.get("phase_s") {
+            for name in phases.keys() {
+                if let Some(v) = phases.get(name).and_then(Json::as_f64) {
+                    phase_s.push((name.clone(), v));
+                }
+            }
+        }
         out.insert(
             key,
-            Row { median_s: n("median_s")?, peak_bytes: n("peak_bytes")? },
+            Row {
+                median_s: n("median_s")?,
+                peak_bytes: n("peak_bytes")?,
+                phase_s,
+            },
         );
     }
     Ok(out)
@@ -100,6 +131,23 @@ fn walltime_ratio(
         return None;
     }
     Some(var.median_s / naive.median_s)
+}
+
+/// The naive row's median for one (task, opt, T) within a file — the
+/// machine-speed normaliser the phase-level gate divides by.
+fn naive_median(
+    rows: &BTreeMap<Key, Row>,
+    task: &str,
+    opt: &str,
+    unroll: u64,
+) -> Option<f64> {
+    let naive = rows.get(&(
+        task.to_string(),
+        opt.to_string(),
+        unroll,
+        "naive".to_string(),
+    ))?;
+    (naive.median_s > 0.0).then_some(naive.median_s)
 }
 
 fn main() {
@@ -152,11 +200,13 @@ fn main() {
         "wall ratio now",
         "wall ratio base",
         "Δwall",
+        "phases",
         "verdict",
     ])
     .numeric_cols(&[2, 3, 4, 5, 6, 7]);
     let mut failures: Vec<String> = Vec::new();
     let mut compared = 0usize;
+    let mut phases_compared = 0usize;
 
     for ((task, opt, unroll, variant), cur) in &current {
         if !variant.starts_with("mixflow") {
@@ -208,6 +258,45 @@ fn main() {
                 ));
             }
         }
+
+        // Phase-level gate: each telemetry phase normalised by the same
+        // file's naive median, so machine speed cancels here too.
+        let mut phases_gated = 0usize;
+        let mut phases_failed = 0usize;
+        let cur_norm = naive_median(&current, task, opt, *unroll);
+        let base_norm = naive_median(&baseline, task, opt, *unroll);
+        if let (Some(cn), Some(bn)) = (cur_norm, base_norm) {
+            let base_total: f64 =
+                base.phase_s.iter().map(|(_, v)| v).sum();
+            for (phase, base_v) in &base.phase_s {
+                if base_total <= 0.0
+                    || *base_v <= 0.0
+                    || base_v / base_total < MIN_PHASE_SHARE
+                {
+                    continue;
+                }
+                let Some((_, cur_v)) =
+                    cur.phase_s.iter().find(|(p, _)| p == phase)
+                else {
+                    continue;
+                };
+                phases_gated += 1;
+                let rel = (cur_v / cn) / (base_v / bn) - 1.0;
+                if rel > PHASE_TOLERANCE {
+                    verdict = "FAIL";
+                    phases_failed += 1;
+                    failures.push(format!(
+                        "{task}+{opt}/T{unroll}/{variant}: phase `{phase}` \
+                         normalised walltime +{:.1}% vs baseline \
+                         (tolerance {:.0}%)",
+                        rel * 100.0,
+                        PHASE_TOLERANCE * 100.0
+                    ));
+                }
+            }
+        }
+        phases_compared += phases_gated;
+
         t.row(vec![
             format!("{task}+{opt}/T{unroll}"),
             variant.clone(),
@@ -217,6 +306,13 @@ fn main() {
             wall_now.map_or("-".to_string(), |r| format!("{r:.3}")),
             wall_base.map_or("-".to_string(), |r| format!("{r:.3}")),
             wall_rel.map_or("-".to_string(), |r| format!("{:+.1}%", r * 100.0)),
+            if phases_gated == 0 {
+                "-".to_string()
+            } else if phases_failed == 0 {
+                format!("{phases_gated} ok")
+            } else {
+                format!("{phases_failed}/{phases_gated} FAIL")
+            },
             verdict.to_string(),
         ]);
     }
@@ -249,5 +345,8 @@ fn main() {
         );
         std::process::exit(1);
     }
-    println!("perf_gate OK ({compared} mixflow rows within tolerance)");
+    println!(
+        "perf_gate OK ({compared} mixflow rows, {phases_compared} gated \
+         phases within tolerance)"
+    );
 }

@@ -19,10 +19,11 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use super::tensor::Tensor;
+use super::tensor::{Tensor, ELEM_BYTES};
 
 /// Traffic counters for one arena (surfaced in
-/// [`super::mixflow::MemoryReport`]).
+/// [`super::mixflow::MemoryReport`] and mirrored per outer step into the
+/// `obs` metrics registry by the engine).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ArenaStats {
     /// Buffers allocated fresh from the system allocator.
@@ -31,6 +32,12 @@ pub struct ArenaStats {
     pub reuses: usize,
     /// Buffers returned to the free list so far.
     pub recycled: usize,
+    /// Cumulative bytes of freshly allocated buffers.
+    pub alloc_bytes: usize,
+    /// Cumulative bytes served from the free list.
+    pub reuse_bytes: usize,
+    /// Cumulative bytes returned to the free list.
+    pub recycle_bytes: usize,
     /// Bytes currently parked on the free list.
     pub free_bytes: usize,
     /// Buffers currently parked on the free list.
@@ -44,6 +51,9 @@ pub struct BufferArena {
     allocs: usize,
     reuses: usize,
     recycled: usize,
+    alloc_bytes: usize,
+    reuse_bytes: usize,
+    recycle_bytes: usize,
 }
 
 impl BufferArena {
@@ -58,10 +68,12 @@ impl BufferArena {
         match self.free.get_mut(&len).and_then(|v| v.pop()) {
             Some(buf) => {
                 self.reuses += 1;
+                self.reuse_bytes += len * ELEM_BYTES;
                 buf
             }
             None => {
                 self.allocs += 1;
+                self.alloc_bytes += len * ELEM_BYTES;
                 Arc::new(vec![0.0; len])
             }
         }
@@ -75,6 +87,7 @@ impl BufferArena {
         let arc = t.into_data().into_arc();
         if Arc::strong_count(&arc) == 1 {
             self.recycled += 1;
+            self.recycle_bytes += arc.len() * ELEM_BYTES;
             self.free.entry(arc.len()).or_default().push(arc);
         }
     }
@@ -86,13 +99,16 @@ impl BufferArena {
             free_buffers += bucket.len();
             free_bytes += bucket
                 .iter()
-                .map(|b| b.len() * super::tensor::ELEM_BYTES)
+                .map(|b| b.len() * ELEM_BYTES)
                 .sum::<usize>();
         }
         ArenaStats {
             allocs: self.allocs,
             reuses: self.reuses,
             recycled: self.recycled,
+            alloc_bytes: self.alloc_bytes,
+            reuse_bytes: self.reuse_bytes,
+            recycle_bytes: self.recycle_bytes,
             free_bytes,
             free_buffers,
         }
@@ -137,5 +153,12 @@ mod tests {
         assert_eq!(s.reuses, 0);
         assert_eq!(s.free_buffers, 1, "len-8 buffer still parked");
         assert_eq!(s.free_bytes, 64);
+        // Byte-traffic counters: 8 + 4 elements allocated fresh, the
+        // len-8 buffer parked once, nothing reused yet.
+        assert_eq!(s.alloc_bytes, 96);
+        assert_eq!(s.recycle_bytes, 64);
+        assert_eq!(s.reuse_bytes, 0);
+        let _back = arena.take(8);
+        assert_eq!(arena.stats().reuse_bytes, 64);
     }
 }

@@ -36,6 +36,7 @@ use super::mixflow::{
 use super::optim::InnerOptimiser;
 use super::tape::{NodeId, Tape};
 use super::tensor::Tensor;
+use crate::obs::{Counter, Gauge, MetricsRegistry, Phase, StepTrace};
 use crate::util::args::CliEnum;
 
 /// Which hypergradient path an engine (or the `native` CLI) drives.
@@ -227,7 +228,9 @@ impl HypergradStrategy for FdStrategy {
         let arena_before = tape.arena_stats();
         let t0 = Instant::now();
         let mut peak = (0usize, 0usize);
+        tape.obs_mut().phase_begin(Phase::Forward);
         let outer_loss = fd_outer_at(tape, problem, theta0, eta, &mut peak);
+        tape.obs_mut().phase_end(Phase::Forward);
         let mut d_eta = Vec::with_capacity(eta.len());
         for (li, leaf) in eta.iter().enumerate() {
             let mut g = Tensor::zeros(&leaf.shape);
@@ -236,10 +239,12 @@ impl HypergradStrategy for FdStrategy {
                 plus[li].data[j] += h;
                 let mut minus: Vec<Tensor> = eta.to_vec();
                 minus[li].data[j] -= h;
+                tape.obs_mut().phase_begin(Phase::Forward);
                 let f_plus =
                     fd_outer_at(tape, problem, theta0, &plus, &mut peak);
                 let f_minus =
                     fd_outer_at(tape, problem, theta0, &minus, &mut peak);
+                tape.obs_mut().phase_end(Phase::Forward);
                 g.data[j] = (f_plus - f_minus) / (2.0 * h);
             }
             d_eta.push(g);
@@ -276,6 +281,7 @@ pub struct EngineBuilder {
     policy: CheckpointPolicy,
     inner_opt: Option<InnerOptimiser>,
     fd_epsilon: f64,
+    telemetry: bool,
 }
 
 impl Default for EngineBuilder {
@@ -285,6 +291,7 @@ impl Default for EngineBuilder {
             policy: CheckpointPolicy::Full,
             inner_opt: None,
             fd_epsilon: DEFAULT_FD_EPSILON,
+            telemetry: false,
         }
     }
 }
@@ -322,6 +329,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Enable the `obs` telemetry recorder on the engine's tape
+    /// (default off — and off means the recorder is a strict no-op:
+    /// no timestamps, no counters, bit-identical hypergradients).
+    pub fn telemetry(mut self, on: bool) -> EngineBuilder {
+        self.telemetry = on;
+        self
+    }
+
     pub fn build(self) -> HypergradEngine {
         let strategy: Box<dyn HypergradStrategy> = match self.mode {
             HypergradMode::Naive => Box::new(NaiveStrategy),
@@ -330,8 +345,10 @@ impl EngineBuilder {
             }
             HypergradMode::Fd => Box::new(FdStrategy::new(self.fd_epsilon)),
         };
+        let mut tape = Tape::new();
+        tape.obs_mut().set_enabled(self.telemetry);
         HypergradEngine {
-            tape: Tape::new(),
+            tape,
             strategy,
             config: self,
             outer_steps: 0,
@@ -416,6 +433,38 @@ impl HypergradEngine {
         self.tape.arena_stats()
     }
 
+    /// Whether the `obs` telemetry recorder is on for this engine.
+    pub fn telemetry_enabled(&self) -> bool {
+        self.tape.obs().enabled()
+    }
+
+    /// Turn the telemetry recorder on/off mid-life (the builder knob
+    /// [`EngineBuilder::telemetry`] is the usual way).
+    pub fn set_telemetry(&mut self, on: bool) {
+        self.tape.obs_mut().set_enabled(on);
+    }
+
+    /// The engine's metrics registry (counters/gauges/histograms,
+    /// cumulative over the engine's lifetime).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        self.tape.obs().registry()
+    }
+
+    /// Completed per-step traces not yet drained.
+    pub fn step_traces(&self) -> &[StepTrace] {
+        self.tape.obs().steps()
+    }
+
+    /// The most recent completed step trace, if any.
+    pub fn last_trace(&self) -> Option<&StepTrace> {
+        self.tape.obs().steps().last()
+    }
+
+    /// Drain completed step traces (registry totals stay).
+    pub fn take_step_traces(&mut self) -> Vec<StepTrace> {
+        self.tape.obs_mut().take_steps()
+    }
+
     /// Install the builder-configured inner optimiser (if any) on a
     /// problem.  Call once before the outer loop; a no-op when the
     /// builder left the optimiser unset.
@@ -435,8 +484,57 @@ impl HypergradEngine {
         theta0: &[Tensor],
         eta: &[Tensor],
     ) -> Hypergrad {
+        let step = self.outer_steps;
         let HypergradEngine { tape, strategy, .. } = self;
+        if !tape.obs().enabled() {
+            let h = strategy.run(tape, problem, theta0, eta);
+            self.outer_steps += 1;
+            return h;
+        }
+        // Telemetry on: bracket the strategy in a step trace.  Arena
+        // traffic is mirrored into the registry as deltas of the arena's
+        // own counters (the strategies never report recycle traffic, so
+        // the registry is the only place the full ledger exists), and
+        // the strategy's MemoryReport rides along in the trace for
+        // conformance checking against the registry deltas.
+        let arena0 = tape.arena_stats();
+        tape.obs_mut().step_begin(step, strategy.name());
         let h = strategy.run(tape, problem, theta0, eta);
+        let arena = tape.arena_stats();
+        let obs = tape.obs_mut();
+        let d = |now: usize, was: usize| (now - was) as u64;
+        obs.count(Counter::ArenaAllocs, d(arena.allocs, arena0.allocs));
+        obs.count(Counter::ArenaReuses, d(arena.reuses, arena0.reuses));
+        obs.count(
+            Counter::ArenaRecycled,
+            d(arena.recycled, arena0.recycled),
+        );
+        obs.count(
+            Counter::ArenaAllocBytes,
+            d(arena.alloc_bytes, arena0.alloc_bytes),
+        );
+        obs.count(
+            Counter::ArenaReuseBytes,
+            d(arena.reuse_bytes, arena0.reuse_bytes),
+        );
+        obs.count(
+            Counter::ArenaRecycleBytes,
+            d(arena.recycle_bytes, arena0.recycle_bytes),
+        );
+        obs.gauge_max(
+            Gauge::CheckpointPeakBytes,
+            h.memory.checkpoint_bytes as u64,
+        );
+        let report = [
+            ("arena_allocs", h.memory.arena_allocs as u64),
+            ("arena_reuses", h.memory.arena_reuses as u64),
+            ("tape_bytes", h.memory.tape_bytes as u64),
+            ("checkpoint_bytes", h.memory.checkpoint_bytes as u64),
+            ("peak_bytes", h.memory.peak_bytes as u64),
+            ("nodes", h.memory.nodes as u64),
+            ("kv_peak_bytes", h.memory.kv_peak_bytes as u64),
+        ];
+        obs.step_end(&report);
         self.outer_steps += 1;
         h
     }

@@ -58,6 +58,7 @@ use std::time::Instant;
 use super::engine::{FdStrategy, HypergradEngine, HypergradMode};
 use super::tape::{NodeId, Tape, TapeStats};
 use super::tensor::Tensor;
+use crate::obs::{Counter, Phase};
 use crate::util::args::CliEnum;
 
 use super::optim::InnerOptimiser;
@@ -292,6 +293,7 @@ pub fn naive_hypergrad_in(
     tape.reset();
     let arena_before = tape.arena_stats();
     let t_fwd = Instant::now();
+    tape.obs_mut().phase_begin(Phase::Forward);
     let mut theta = leaves(tape, theta0);
     let mut state = leaves(tape, &opt.init_state(theta0));
     let eta_ids = leaves(tape, eta);
@@ -305,10 +307,13 @@ pub fn naive_hypergrad_in(
         state = next_state;
     }
     let outer = problem.outer_loss(tape, &theta);
+    tape.obs_mut().phase_end(Phase::Forward);
     let forward_seconds = t_fwd.elapsed().as_secs_f64();
     let t_bwd = Instant::now();
+    tape.obs_mut().phase_begin(Phase::BackwardVjp);
     let d_eta_ids = tape.grad(outer, &eta_ids);
     let d_eta = d_eta_ids.iter().map(|&id| tape.value(id).clone()).collect();
+    tape.obs_mut().phase_end(Phase::BackwardVjp);
     let backward_seconds = t_bwd.elapsed().as_secs_f64();
     let stats = tape.stats();
     let arena = tape.arena_stats();
@@ -461,15 +466,21 @@ pub fn mixflow_hypergrad_in(
         // overlap once.
         let mut overlap = 0usize;
         if t % k == 0 {
+            tape.obs_mut().phase_begin(Phase::CheckpointStore);
             let pb = pair_bytes(&theta, &state);
             live_state += pb;
             peak_state = peak_state.max(live_state);
             // O(1) clones: the checkpoint aliases the live values.
             ckpt.push(Some((theta.clone(), state.clone())));
             overlap = pb;
+            tape.obs_mut().count(Counter::CheckpointStores, 1);
+            tape.obs_mut().count(Counter::CheckpointBytes, pb as u64);
+            tape.obs_mut().phase_end(Phase::CheckpointStore);
         }
+        tape.obs_mut().phase_begin(Phase::Forward);
         let (next_theta, next_state, stats) =
             inner_step_values_into(problem, tape, &theta, &state, eta, t);
+        tape.obs_mut().phase_end(Phase::Forward);
         peak_tape = peak_tape.max(stats.bytes);
         peak_nodes = peak_nodes.max(stats.nodes);
         peak_total = peak_total.max(stats.bytes + (live_state - overlap));
@@ -485,6 +496,7 @@ pub fn mixflow_hypergrad_in(
 
     // ---- λ_T = (∇_θ L_val(θ_T), 0 state adjoint) -----------------------
     let t_bwd = Instant::now();
+    tape.obs_mut().phase_begin(Phase::LambdaSeed);
     let (mut lambda, outer_loss) = {
         tape.reset();
         let theta_ids = leaves(tape, &theta);
@@ -506,6 +518,7 @@ pub fn mixflow_hypergrad_in(
         lambda.extend(state.iter().map(|s| Tensor::zeros(&s.shape)));
         (lambda, tape.value(outer).item())
     };
+    tape.obs_mut().phase_end(Phase::LambdaSeed);
     drop(theta);
     drop(state);
     live_state -= final_bytes;
@@ -524,6 +537,7 @@ pub fn mixflow_hypergrad_in(
         let mut seg: Vec<StatePair> = Vec::with_capacity(seg_end - seg_start);
         seg.push(seed);
         for t in seg_start..seg_end - 1 {
+            tape.obs_mut().phase_begin(Phase::RematRebuild);
             let (th, st, stats, overlap) = {
                 let (prev_th, prev_st) = seg.last().expect("segment seeded");
                 let overlap = pair_bytes(prev_th, prev_st);
@@ -532,6 +546,8 @@ pub fn mixflow_hypergrad_in(
                 );
                 (th, st, stats, overlap)
             };
+            tape.obs_mut().count(Counter::RematRebuilds, 1);
+            tape.obs_mut().phase_end(Phase::RematRebuild);
             // Physical peak while this recompute tape is live: the new
             // pair still aliases the tape's output nodes (inside
             // stats.bytes), so it joins the state ledger only after the
@@ -553,6 +569,7 @@ pub fn mixflow_hypergrad_in(
             // This step's (θ_t, s_t) leaves alias the segment state
             // already counted in `live_state`.
             let overlap = pair_bytes(theta_t, state_t);
+            tape.obs_mut().phase_begin(Phase::BackwardVjp);
             tape.reset();
             let theta_ids = leaves(tape, theta_t);
             let state_ids = leaves(tape, state_t);
@@ -620,7 +637,9 @@ pub fn mixflow_hypergrad_in(
                 .collect();
             let mut targets: Vec<NodeId> = g_theta_live.to_vec();
             targets.extend(g_eta_live.iter().copied());
+            tape.obs_mut().phase_begin(Phase::Jvp);
             let (tangents, tangent_bytes) = tape.jvp(&seeds, &targets);
+            tape.obs_mut().phase_end(Phase::Jvp);
             let (hvp, mixed) = tangents.split_at(nt);
 
             let mut new_lambda = Vec::with_capacity(nt + ns);
@@ -655,6 +674,7 @@ pub fn mixflow_hypergrad_in(
             } else {
                 kv_remat += tape.stats().kv_bytes;
             }
+            tape.obs_mut().phase_end(Phase::BackwardVjp);
         }
 
         // Whole segment consumed: its states (stored + rematerialised)

@@ -32,6 +32,7 @@ use std::sync::Arc;
 
 use super::arena::{ArenaStats, BufferArena};
 use super::tensor::Tensor;
+use crate::obs::{Counter, Gauge, Telemetry};
 
 /// Index of a node on the tape.
 pub type NodeId = usize;
@@ -125,6 +126,10 @@ pub struct Tape {
     bytes: usize,
     kv_bytes: usize,
     arena: BufferArena,
+    /// Telemetry recorder (disabled by default).  Living here means the
+    /// strategies — which already hold `&mut Tape` — and the tape's own
+    /// hot paths all reach the same recorder without signature changes.
+    obs: Telemetry,
 }
 
 impl Default for Tape {
@@ -312,7 +317,19 @@ impl Tape {
             bytes: 0,
             kv_bytes: 0,
             arena: BufferArena::new(),
+            obs: Telemetry::new(),
         }
+    }
+
+    /// The tape's telemetry recorder (disabled by default).
+    pub fn obs(&self) -> &Telemetry {
+        &self.obs
+    }
+
+    /// Mutable access to the telemetry recorder — how the engine and the
+    /// strategies open/close steps and phase spans.
+    pub fn obs_mut(&mut self) -> &mut Telemetry {
+        &mut self.obs
     }
 
     /// Value of a node.
@@ -344,7 +361,12 @@ impl Tape {
     /// [`super::mixflow::MemoryReport`] can split the memory saving into
     /// KV-specific counters.
     pub fn mark_kv(&mut self, id: NodeId) {
-        self.kv_bytes += self.nodes[id].value.bytes();
+        let bytes = self.nodes[id].value.bytes();
+        self.kv_bytes += bytes;
+        if self.obs.enabled() {
+            self.obs.count(Counter::KvBytes, bytes as u64);
+            self.obs.gauge_max(Gauge::KvPeakBytes, self.kv_bytes as u64);
+        }
     }
 
     /// Traffic counters of the tape's buffer arena.
@@ -357,7 +379,7 @@ impl Tape {
     /// (checkpoints, gradients, aliases) keep their buffers alive.  All
     /// `NodeId`s from before the reset are invalidated.
     pub fn reset(&mut self) {
-        let Tape { nodes, arena, bytes, kv_bytes } = self;
+        let Tape { nodes, arena, bytes, kv_bytes, .. } = self;
         for node in nodes.drain(..) {
             arena.recycle(node.value);
         }
@@ -366,7 +388,13 @@ impl Tape {
     }
 
     fn push(&mut self, op: Op, value: Tensor) -> NodeId {
-        self.bytes += value.bytes();
+        let bytes = value.bytes();
+        self.bytes += bytes;
+        if self.obs.enabled() {
+            self.obs.count(Counter::TapeNodes, 1);
+            self.obs.count(Counter::TapeBytes, bytes as u64);
+            self.obs.gauge_max(Gauge::TapePeakBytes, self.bytes as u64);
+        }
         self.nodes.push(Node { op, value });
         self.nodes.len() - 1
     }
@@ -375,6 +403,9 @@ impl Tape {
     /// 0 bytes to [`TapeStats::bytes`] (the storage is already counted
     /// at its owner).
     fn push_alias(&mut self, op: Op, value: Tensor) -> NodeId {
+        if self.obs.enabled() {
+            self.obs.count(Counter::TapeNodes, 1);
+        }
         self.nodes.push(Node { op, value });
         self.nodes.len() - 1
     }

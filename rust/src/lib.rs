@@ -25,6 +25,11 @@
 //!   fd strategies behind a fluent builder) that every native driver
 //!   constructs hypergradients through.  The first path in the repo
 //!   where the whole meta-gradient is computed by Rust alone.
+//! * [`obs`] — engine observability: the `MetricsRegistry` of counters,
+//!   gauges and per-phase wall-time histograms, the span-scoped
+//!   `Telemetry` recorder threaded through tape/arena/engine, and the
+//!   trace sinks (JSON-lines, Chrome trace-event for Perfetto, CLI
+//!   summary table).  Off by default; the disabled path is a no-op.
 //! * [`runtime`] — artifact manifest (always available) + the PJRT client
 //!   wrapper: compile cache, literal construction, timed execution
 //!   (feature `pjrt`).
@@ -45,6 +50,7 @@ pub mod autodiff;
 pub mod coordinator;
 pub mod hlo;
 pub mod meta;
+pub mod obs;
 pub mod runtime;
 pub mod util;
 

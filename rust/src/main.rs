@@ -13,6 +13,10 @@
 //!   --heads 4 --batch 8 --inner-opt adam --mode naive,mixflow --remat
 //!   auto`); `--mode fd` cross-checks with central differences,
 //!   `--remat auto` resolves the remat segment K ≈ √T at run time.
+//!   `--trace <path>` turns on the engine's telemetry and writes
+//!   per-outer-step phase timings + counter deltas (`--trace-format
+//!   jsonl|chrome`; chrome loads in Perfetto), plus a CLI phase
+//!   breakdown table.
 //!   Every valid-value error list is derived from the enums'
 //!   `CliEnum::variants()`, so new modes can't silently go missing from
 //!   the messages.
@@ -35,6 +39,7 @@ use mixflow::meta::{
     print_train_summary, run_sweep, sweep_report_json, HypergradMode,
     NativeMetaTrainer, NativeTask, SweepSpec,
 };
+use mixflow::obs::{print_trace_summary, write_trace, TraceFormat};
 use mixflow::runtime::Manifest;
 use mixflow::util::args::{ArgSpec, Args, CliEnum};
 use mixflow::util::stats::{human_bytes, Summary};
@@ -145,6 +150,20 @@ fn main() {
     )
     .flag("seeds", Some("1"), "native seed-sweep width; combined with multi-value --task/--mode/--inner-opt/--heads it fans the whole grid over the scheduler pool")
     .flag("fd-eps", Some("1e-5"), "central-difference epsilon for --mode fd")
+    .flag(
+        "trace",
+        None,
+        "write per-outer-step engine telemetry to this path (native); \
+         enables phase spans + the metrics registry for every cell",
+    )
+    .flag(
+        "trace-format",
+        Some("jsonl"),
+        &format!(
+            "trace encoding for --trace: {}",
+            TraceFormat::valid_values()
+        ),
+    )
     .flag("iters", Some("5"), "timing iterations")
     .flag("seed", Some("0"), "input seed")
     .switch("no-exec", "analysis only (skip PJRT execution)")
@@ -304,6 +323,9 @@ fn cmd_native(args: &Args) -> Result<()> {
             "--seeds 0 invalid; valid values: an integer >= 1"
         ));
     }
+    let trace_path = args.get("trace");
+    let trace_format: TraceFormat =
+        parse_cli("trace-format", args.get("trace-format").unwrap())?;
 
     let names = |xs: &[String]| xs.join(",");
     println!(
@@ -330,13 +352,24 @@ fn cmd_native(args: &Args) -> Result<()> {
                 .with_inner_opt(inner_opts[0])
                 .with_remat(remat)
                 .with_fd_epsilon(fd_eps)
-                .with_attention_shape(heads[0], batch);
+                .with_attention_shape(heads[0], batch)
+                .with_telemetry(trace_path.is_some());
         let report = trainer.train(steps);
         print_train_summary(&report, trainer.last_memory.as_ref());
         println!(
             "engine: {} hypergradients on one persistent tape",
             trainer.engine().outer_steps()
         );
+        if let Some(path) = trace_path {
+            let traced = vec![(report.artifact.clone(), trainer.take_traces())];
+            print_trace_summary(&traced);
+            write_trace(path, trace_format, &traced)
+                .map_err(|e| anyhow!("could not write {path}: {e}"))?;
+            println!(
+                "trace ({}) written to {path}",
+                trace_format.name()
+            );
+        }
         return Ok(());
     }
 
@@ -360,6 +393,7 @@ fn cmd_native(args: &Args) -> Result<()> {
         steps,
         base_seed: seed,
         n_seeds: seeds,
+        telemetry: trace_path.is_some(),
     };
     let runs = run_sweep(&spec);
     let mut t = Table::new(&[
@@ -448,6 +482,16 @@ fn cmd_native(args: &Args) -> Result<()> {
     std::fs::write(path, doc.pretty() + "\n")
         .map_err(|e| anyhow!("could not write {path}: {e}"))?;
     println!("sweep grid written to {path}");
+    if let Some(tp) = trace_path {
+        let traced: Vec<(String, Vec<mixflow::obs::StepTrace>)> = runs
+            .iter()
+            .map(|r| (r.cell.label(), r.traces.clone()))
+            .collect();
+        print_trace_summary(&traced);
+        write_trace(tp, trace_format, &traced)
+            .map_err(|e| anyhow!("could not write {tp}: {e}"))?;
+        println!("trace ({}) written to {tp}", trace_format.name());
+    }
     Ok(())
 }
 

@@ -28,6 +28,7 @@ use crate::autodiff::problems::{
 };
 use crate::autodiff::tensor::Tensor;
 use crate::coordinator::scheduler::{run_pool, Job};
+use crate::obs::StepTrace;
 use crate::util::args::CliEnum;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -223,7 +224,8 @@ impl NativeMetaTrainer {
         let mut base = HypergradEngine::builder()
             .mode(self.engine.mode())
             .checkpoint(self.engine.policy())
-            .fd_epsilon(self.engine.fd_epsilon());
+            .fd_epsilon(self.engine.fd_epsilon())
+            .telemetry(self.engine.telemetry_enabled());
         if let Some(opt) = self.engine.inner_opt() {
             base = base.inner_opt(opt);
         }
@@ -259,6 +261,22 @@ impl NativeMetaTrainer {
     pub fn with_meta_lr(mut self, lr: f64) -> NativeMetaTrainer {
         self.meta_lr = lr;
         self
+    }
+
+    /// Enable/disable engine telemetry (off by default).  With telemetry
+    /// on, every outer step leaves a [`StepTrace`] on the engine —
+    /// drained via [`NativeMetaTrainer::take_traces`].
+    pub fn with_telemetry(mut self, on: bool) -> NativeMetaTrainer {
+        if on != self.engine.telemetry_enabled() {
+            self.reconfigure(|b| b.telemetry(on));
+        }
+        self
+    }
+
+    /// Drain the per-outer-step traces the engine recorded (empty when
+    /// telemetry is off).
+    pub fn take_traces(&mut self) -> Vec<StepTrace> {
+        self.engine.take_step_traces()
     }
 
     /// Current meta-parameters.
@@ -362,6 +380,9 @@ pub struct SweepSpec {
     pub steps: usize,
     pub base_seed: u64,
     pub n_seeds: usize,
+    /// Record per-outer-step telemetry traces on every cell's engine
+    /// (each [`SweepRun`] then carries its [`SweepRun::traces`]).
+    pub telemetry: bool,
 }
 
 impl SweepSpec {
@@ -384,6 +405,7 @@ impl SweepSpec {
             steps: cfg.steps,
             base_seed,
             n_seeds,
+            telemetry: false,
         }
     }
 
@@ -461,6 +483,12 @@ pub struct SweepRun {
     pub cell: SweepCell,
     pub report: TrainReport,
     pub memory: Option<MemoryReport>,
+    /// Per-outer-step telemetry traces, drained off the cell's engine
+    /// after training (empty unless [`SweepSpec::telemetry`] was set).
+    /// This is the per-cell aggregation point: each pool worker records
+    /// on its own engine-private recorder, and the traces ride back
+    /// through `run_pool` with the rest of the result.
+    pub traces: Vec<StepTrace>,
 }
 
 /// Configuration of one native multi-seed sweep (everything but the
@@ -497,6 +525,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepRun> {
     let remat = spec.remat;
     let fd_epsilon = spec.fd_epsilon;
     let batch = spec.batch;
+    let telemetry = spec.telemetry;
     let jobs: Vec<Job<SweepRun>> = cells
         .iter()
         .map(|&cell| Job {
@@ -510,9 +539,16 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepRun> {
                 .with_inner_opt(cell.inner_opt)
                 .with_remat(remat)
                 .with_fd_epsilon(fd_epsilon)
-                .with_attention_shape(cell.heads, batch);
+                .with_attention_shape(cell.heads, batch)
+                .with_telemetry(telemetry);
                 let report = trainer.train(steps);
-                SweepRun { cell, report, memory: trainer.last_memory }
+                let traces = trainer.take_traces();
+                SweepRun {
+                    cell,
+                    report,
+                    memory: trainer.last_memory,
+                    traces,
+                }
             }),
         })
         .collect();
@@ -914,6 +950,7 @@ mod tests {
             steps: 1,
             base_seed: 7,
             n_seeds: 2,
+            telemetry: false,
         };
         let cells = spec.cells();
         assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 2);
@@ -950,6 +987,7 @@ mod tests {
             steps: 2,
             base_seed: 11,
             n_seeds: 1,
+            telemetry: true,
         };
         let runs = run_sweep(&spec);
         assert_eq!(runs.len(), 4);
@@ -974,6 +1012,15 @@ mod tests {
                 "artifact {:?} must carry mode {mode}",
                 run.report.artifact
             );
+            // spec.telemetry = true: each cell's engine recorded one
+            // trace per outer step on its pool thread, and the traces
+            // came back through run_pool with the result.
+            assert_eq!(run.traces.len(), spec.steps);
+            for tr in &run.traces {
+                assert_eq!(tr.strategy, mode);
+                assert!(tr.phase(crate::obs::Phase::Forward).is_some());
+                assert!(tr.counter("tape.nodes").unwrap_or(0) > 0);
+            }
         }
         // Same seed + task + mode, different optimiser ⇒ different curves.
         assert_ne!(runs[0].report.losses, runs[2].report.losses);

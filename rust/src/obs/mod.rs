@@ -1,0 +1,33 @@
+//! Engine observability: metrics registry, phase tracing, trace sinks.
+//!
+//! The paper's claims are observability claims — "over 10× memory and up
+//! to 25% wall-clock improvements" — so the native engine carries a
+//! zero-dependency telemetry layer that can say *where inside a
+//! hypergradient step* the bytes and seconds go:
+//!
+//! * [`registry`] — named counters / peak gauges / per-phase wall-time
+//!   histograms ([`MetricsRegistry`]), array-backed so the tape hot path
+//!   pays one branch + one array add when enabled and one branch when
+//!   not.
+//! * [`trace`] — the [`Telemetry`] recorder (owned by `Tape`, bracketed
+//!   by `HypergradEngine` per outer step and by the strategies per
+//!   [`Phase`]), the [`StepTrace`] record, and the sinks: JSON-lines
+//!   ([`trace_jsonl`]), Chrome trace-event ([`chrome_trace`], loads in
+//!   Perfetto), and the CLI table ([`print_trace_summary`]).
+//!
+//! Telemetry is off by default.  The disabled path takes no timestamps
+//! and writes no counters, so it cannot perturb hypergradients — the
+//! bit-identity and ≤5% overhead pins live in `rust/tests/trace.rs`.
+//! `MemoryReport` stays the strategies' own accounting; every
+//! [`StepTrace`] carries both that report and the registry's counter
+//! deltas so the two paths are conformance-checked against each other
+//! (see `fig_native_memory` and the warm-engine tests).
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, MetricsRegistry};
+pub use trace::{
+    chrome_trace, print_trace_summary, trace_jsonl, write_trace, Phase,
+    PhaseStat, SpanEvent, StepTrace, Telemetry, TraceCells, TraceFormat,
+};

@@ -1,0 +1,294 @@
+//! The metrics registry: named counters, peak gauges and per-phase
+//! wall-time histograms for the native hypergradient engine.
+//!
+//! Metric identities are closed enums ([`Counter`], [`Gauge`]) backed by
+//! fixed-size arrays, so recording a sample on the tape's hot path is an
+//! array index — no string hashing, no allocation.  The printable names
+//! (`tape.nodes`, `arena.alloc_bytes`, ...) exist only at the reporting
+//! boundary; see the "Telemetry" section of `rust/src/autodiff/README.md`
+//! for the full name table and which subsystem feeds each metric.
+//!
+//! The registry itself has no enabled/disabled switch — that lives in
+//! [`super::trace::Telemetry`], whose disabled path returns before ever
+//! touching the registry.
+
+use std::collections::BTreeMap;
+
+/// A monotonically increasing count (events or bytes since the registry
+/// was created).  Per-outer-step deltas are captured by
+/// [`super::trace::StepTrace::counters`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Nodes pushed onto the tape (aliased nodes included).
+    TapeNodes,
+    /// Bytes of owning node buffers pushed onto the tape.
+    TapeBytes,
+    /// Bytes tagged as K/V projections via `Tape::mark_kv`.
+    KvBytes,
+    /// Arena buffers drawn fresh from the system allocator.
+    ArenaAllocs,
+    /// Arena buffers served from the free list.
+    ArenaReuses,
+    /// Arena buffers returned to the free list.
+    ArenaRecycled,
+    /// Bytes of freshly allocated arena buffers.
+    ArenaAllocBytes,
+    /// Bytes served from the arena free list.
+    ArenaReuseBytes,
+    /// Bytes returned to the arena free list.
+    ArenaRecycleBytes,
+    /// `(θ_t, s_t)` checkpoint pairs stored by the mixflow forward sweep.
+    CheckpointStores,
+    /// Bytes of stored checkpoint pairs.
+    CheckpointBytes,
+    /// Inner steps re-run by the mixflow backward sweep to rebuild
+    /// intra-segment states (0 under full checkpointing).
+    RematRebuilds,
+}
+
+impl Counter {
+    /// Every counter, in reporting order.
+    pub const ALL: [Counter; 12] = [
+        Counter::TapeNodes,
+        Counter::TapeBytes,
+        Counter::KvBytes,
+        Counter::ArenaAllocs,
+        Counter::ArenaReuses,
+        Counter::ArenaRecycled,
+        Counter::ArenaAllocBytes,
+        Counter::ArenaReuseBytes,
+        Counter::ArenaRecycleBytes,
+        Counter::CheckpointStores,
+        Counter::CheckpointBytes,
+        Counter::RematRebuilds,
+    ];
+
+    /// Number of counters (array backing size).
+    pub const COUNT: usize = Counter::ALL.len();
+
+    /// The dotted metric name used in traces and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::TapeNodes => "tape.nodes",
+            Counter::TapeBytes => "tape.bytes",
+            Counter::KvBytes => "tape.kv_bytes",
+            Counter::ArenaAllocs => "arena.allocs",
+            Counter::ArenaReuses => "arena.reuses",
+            Counter::ArenaRecycled => "arena.recycled",
+            Counter::ArenaAllocBytes => "arena.alloc_bytes",
+            Counter::ArenaReuseBytes => "arena.reuse_bytes",
+            Counter::ArenaRecycleBytes => "arena.recycle_bytes",
+            Counter::CheckpointStores => "checkpoint.stores",
+            Counter::CheckpointBytes => "checkpoint.bytes",
+            Counter::RematRebuilds => "remat.rebuilds",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// A high-water mark: `record` keeps the maximum ever seen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Peak live bytes on any single tape recording.
+    TapePeakBytes,
+    /// Peak K/V-projection bytes live on any single tape recording.
+    KvPeakBytes,
+    /// Peak live checkpoint bytes reported by any one hypergradient.
+    CheckpointPeakBytes,
+}
+
+impl Gauge {
+    /// Every gauge, in reporting order.
+    pub const ALL: [Gauge; 3] = [
+        Gauge::TapePeakBytes,
+        Gauge::KvPeakBytes,
+        Gauge::CheckpointPeakBytes,
+    ];
+
+    /// Number of gauges (array backing size).
+    pub const COUNT: usize = Gauge::ALL.len();
+
+    /// The dotted metric name used in traces and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::TapePeakBytes => "tape.peak_bytes",
+            Gauge::KvPeakBytes => "tape.kv_peak_bytes",
+            Gauge::CheckpointPeakBytes => "checkpoint.peak_bytes",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// Running summary of observed samples (per-phase wall time, seconds).
+/// Count/sum/min/max is all the sinks need; full distributions stay in
+/// the per-step traces.
+#[derive(Debug, Clone, Copy)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { count: 0, sum: 0.0, min: f64::INFINITY, max: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Mean sample, or 0 for an empty histogram.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// One engine's worth of metrics.  Owned by the tape's
+/// [`super::trace::Telemetry`], so every `HypergradEngine` (and
+/// therefore every sweep cell) gets its own registry — no global state,
+/// no locks on pool threads.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: [u64; Counter::COUNT],
+    gauges: [u64; Gauge::COUNT],
+    /// Wall-time histograms keyed by span phase name.
+    hists: BTreeMap<&'static str, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, c: Counter, delta: u64) {
+        self.counters[c.idx()] += delta;
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c.idx()]
+    }
+
+    /// Raise a gauge to `v` if `v` is a new high-water mark.
+    #[inline]
+    pub fn gauge_max(&mut self, g: Gauge, v: u64) {
+        let slot = &mut self.gauges[g.idx()];
+        *slot = (*slot).max(v);
+    }
+
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[g.idx()]
+    }
+
+    /// Record one wall-time sample under `name` (span phase names).
+    pub fn observe(&mut self, name: &'static str, seconds: f64) {
+        self.hists.entry(name).or_default().observe(seconds);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// All histograms in name order.
+    pub fn histograms(
+        &self,
+    ) -> impl Iterator<Item = (&'static str, &Histogram)> {
+        self.hists.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// Snapshot of every counter, for later [`MetricsRegistry::delta`].
+    pub fn snapshot(&self) -> [u64; Counter::COUNT] {
+        self.counters
+    }
+
+    /// `(name, delta)` for every counter since `since` — the per-step
+    /// counter deltas the trace records carry.
+    pub fn delta(
+        &self,
+        since: &[u64; Counter::COUNT],
+    ) -> Vec<(&'static str, u64)> {
+        Counter::ALL
+            .iter()
+            .map(|&c| {
+                (c.name(), self.counters[c.idx()] - since[c.idx()])
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_delta() {
+        let mut r = MetricsRegistry::new();
+        r.add(Counter::TapeNodes, 3);
+        let snap = r.snapshot();
+        r.add(Counter::TapeNodes, 4);
+        r.add(Counter::ArenaAllocs, 2);
+        assert_eq!(r.counter(Counter::TapeNodes), 7);
+        let d = r.delta(&snap);
+        assert_eq!(d.len(), Counter::COUNT);
+        let lookup = |name: &str| {
+            d.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+        };
+        assert_eq!(lookup("tape.nodes"), Some(4));
+        assert_eq!(lookup("arena.allocs"), Some(2));
+        assert_eq!(lookup("tape.bytes"), Some(0));
+    }
+
+    #[test]
+    fn gauges_keep_the_high_water_mark() {
+        let mut r = MetricsRegistry::new();
+        r.gauge_max(Gauge::TapePeakBytes, 10);
+        r.gauge_max(Gauge::TapePeakBytes, 4);
+        assert_eq!(r.gauge(Gauge::TapePeakBytes), 10);
+        r.gauge_max(Gauge::TapePeakBytes, 11);
+        assert_eq!(r.gauge(Gauge::TapePeakBytes), 11);
+    }
+
+    #[test]
+    fn histograms_summarise_samples() {
+        let mut r = MetricsRegistry::new();
+        r.observe("forward", 0.5);
+        r.observe("forward", 1.5);
+        let h = r.histogram("forward").expect("recorded");
+        assert_eq!(h.count, 2);
+        assert_eq!(h.sum, 2.0);
+        assert_eq!(h.min, 0.5);
+        assert_eq!(h.max, 1.5);
+        assert_eq!(h.mean(), 1.0);
+        assert!(r.histogram("backward_vjp").is_none());
+        assert_eq!(r.histograms().count(), 1);
+    }
+
+    #[test]
+    fn metric_names_are_unique_and_dotted() {
+        let mut names: Vec<&str> =
+            Counter::ALL.iter().map(|c| c.name()).collect();
+        names.extend(Gauge::ALL.iter().map(|g| g.name()));
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate metric name");
+        assert!(names.iter().all(|n| n.contains('.')));
+    }
+}

@@ -1,0 +1,668 @@
+//! Span-scoped phase tracing and the trace sinks.
+//!
+//! [`Telemetry`] is the engine-facing recorder: the `HypergradEngine`
+//! brackets each outer step with [`Telemetry::step_begin`] /
+//! [`Telemetry::step_end`], and the strategies bracket their internal
+//! phases ([`Phase`]) with [`Telemetry::phase_begin`] /
+//! [`Telemetry::phase_end`].  Spans may nest (a `jvp` span runs inside
+//! `backward_vjp`); each closed span feeds the per-step [`StepTrace`]
+//! and the registry's per-phase wall-time histogram.
+//!
+//! The recorder is **disabled by default** and every entry point returns
+//! immediately in that state — no `Instant::now()`, no counter writes —
+//! which is what makes the telemetry-off bit-identity + overhead pin in
+//! `rust/tests/trace.rs` hold trivially: the disabled path never touches
+//! the computation or the clock.
+//!
+//! Two sinks serialise collected traces:
+//!
+//! * [`trace_jsonl`] — one JSON object per line per outer step, with
+//!   nested phase timings, registry counter deltas, and the
+//!   `MemoryReport` cross-check block (`TRACE_native.jsonl`).
+//! * [`chrome_trace`] — a Chrome trace-event document (open in Perfetto
+//!   or `chrome://tracing`); one process per traced cell, "X" complete
+//!   events for steps and phase spans.
+//!
+//! plus [`print_trace_summary`], the CLI table.
+
+use std::time::Instant;
+
+use super::registry::{Counter, Gauge, MetricsRegistry};
+use crate::util::args::CliEnum;
+use crate::util::json::Json;
+use crate::util::stats::human_secs;
+use crate::util::table::Table;
+
+/// The traced phases of one hypergradient computation.
+///
+/// Which phases appear depends on the strategy: `naive` emits
+/// `forward` + `backward_vjp`; `mixflow` emits all six (with
+/// `remat_rebuild` only under a `Remat{segment ≥ 2}` policy); `fd` wraps
+/// its unrolled evaluations in `forward` spans (one for the base point,
+/// one per ± pair).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Inner unroll(s): recording inner steps and the outer loss.
+    Forward,
+    /// Storing a `(θ_t, s_t)` segment-boundary checkpoint.
+    CheckpointStore,
+    /// Seeding λ = ∂L_outer/∂θ_T at the end of the unroll.
+    LambdaSeed,
+    /// Re-running inner steps to rebuild intra-segment states.
+    RematRebuild,
+    /// One backward step: re-record, VJP for the adjoint λᵀ∂Φ/∂(θ,η).
+    BackwardVjp,
+    /// The forward-over-reverse JVP that advances λ (nested inside
+    /// `backward_vjp`).
+    Jvp,
+}
+
+impl Phase {
+    /// Every phase, in canonical reporting order.
+    pub const ALL: [Phase; 6] = [
+        Phase::Forward,
+        Phase::CheckpointStore,
+        Phase::LambdaSeed,
+        Phase::RematRebuild,
+        Phase::BackwardVjp,
+        Phase::Jvp,
+    ];
+
+    /// The snake_case phase name used in trace records and histograms.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Forward => "forward",
+            Phase::CheckpointStore => "checkpoint_store",
+            Phase::LambdaSeed => "lambda_seed",
+            Phase::RematRebuild => "remat_rebuild",
+            Phase::BackwardVjp => "backward_vjp",
+            Phase::Jvp => "jvp",
+        }
+    }
+}
+
+/// One closed span: a phase occurrence with microsecond timestamps
+/// relative to the recorder's epoch (Chrome trace `ts`/`dur`).
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    pub phase: Phase,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// Aggregated timing for one phase within one outer step.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub phase: Phase,
+    /// Number of spans of this phase in the step.
+    pub count: u64,
+    /// Total wall time across those spans.
+    pub seconds: f64,
+}
+
+/// The trace record for one outer step: phase timings, registry counter
+/// deltas over the step, and the strategy's own `MemoryReport`-derived
+/// numbers for conformance checking.
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    /// Engine-lifetime outer-step index.
+    pub step: usize,
+    /// `HypergradStrategy::name()` of the strategy that ran.
+    pub strategy: &'static str,
+    /// Step start, µs since the recorder epoch.
+    pub start_us: u64,
+    /// Step wall time in µs.
+    pub dur_us: u64,
+    /// Per-phase aggregates, in order of first occurrence.
+    pub phases: Vec<PhaseStat>,
+    /// Registry counter deltas over the step (every [`Counter`], 0 when
+    /// untouched).
+    pub counters: Vec<(&'static str, u64)>,
+    /// Independent per-step numbers from the strategy's `MemoryReport`,
+    /// for conformance checks against `counters`.
+    pub report: Vec<(&'static str, u64)>,
+    /// Every closed span, for timeline export.
+    pub events: Vec<SpanEvent>,
+}
+
+impl StepTrace {
+    /// Aggregate for `phase`, if any span of it ran this step.
+    pub fn phase(&self, phase: Phase) -> Option<&PhaseStat> {
+        self.phases.iter().find(|p| p.phase == phase)
+    }
+
+    /// Registry counter delta by dotted name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    /// `MemoryReport` cross-check value by field name.
+    pub fn report_counter(&self, name: &str) -> Option<u64> {
+        self.report.iter().find(|(n, _)| *n == name).map(|(_, v)| *v)
+    }
+
+    /// Step wall time in seconds.
+    pub fn total_seconds(&self) -> f64 {
+        self.dur_us as f64 / 1e6
+    }
+}
+
+/// An outer step still being recorded.
+#[derive(Debug, Clone)]
+struct OpenStep {
+    step: usize,
+    strategy: &'static str,
+    start_us: u64,
+    t0: Instant,
+    phases: Vec<PhaseStat>,
+    events: Vec<SpanEvent>,
+    counters0: [u64; Counter::COUNT],
+}
+
+/// The per-engine telemetry recorder.  Lives inside `Tape`, so the
+/// strategies (which already hold `&mut Tape`) and the tape/arena hot
+/// paths all reach the same recorder without any signature changes.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    enabled: bool,
+    /// Zero point for all `*_us` timestamps.
+    epoch: Instant,
+    registry: MetricsRegistry,
+    steps: Vec<StepTrace>,
+    current: Option<OpenStep>,
+    /// Open phase spans, innermost last.
+    stack: Vec<(Phase, Instant)>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::new()
+    }
+}
+
+impl Telemetry {
+    /// A disabled recorder (the default for every tape).
+    pub fn new() -> Telemetry {
+        Telemetry {
+            enabled: false,
+            epoch: Instant::now(),
+            registry: MetricsRegistry::new(),
+            steps: Vec::new(),
+            current: None,
+            stack: Vec::new(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// Completed step traces, oldest first.
+    pub fn steps(&self) -> &[StepTrace] {
+        &self.steps
+    }
+
+    /// Drain completed step traces (leaves registry totals intact).
+    pub fn take_steps(&mut self) -> Vec<StepTrace> {
+        std::mem::take(&mut self.steps)
+    }
+
+    /// Bump a counter.  No-op while disabled.
+    #[inline]
+    pub fn count(&mut self, c: Counter, delta: u64) {
+        if self.enabled {
+            self.registry.add(c, delta);
+        }
+    }
+
+    /// Raise a gauge high-water mark.  No-op while disabled.
+    #[inline]
+    pub fn gauge_max(&mut self, g: Gauge, v: u64) {
+        if self.enabled {
+            self.registry.gauge_max(g, v);
+        }
+    }
+
+    /// Open the trace record for outer step `step` run by `strategy`.
+    /// An unclosed previous step is finalised first.
+    pub fn step_begin(&mut self, step: usize, strategy: &'static str) {
+        if !self.enabled {
+            return;
+        }
+        if self.current.is_some() {
+            self.step_end(&[]);
+        }
+        self.current = Some(OpenStep {
+            step,
+            strategy,
+            start_us: self.now_us(),
+            t0: Instant::now(),
+            phases: Vec::new(),
+            events: Vec::new(),
+            counters0: self.registry.snapshot(),
+        });
+    }
+
+    /// Close the current step, attaching `report` (the strategy's
+    /// `MemoryReport`-derived numbers) for conformance checking.
+    pub fn step_end(&mut self, report: &[(&'static str, u64)]) {
+        if !self.enabled {
+            return;
+        }
+        let Some(open) = self.current.take() else {
+            return;
+        };
+        self.stack.clear();
+        self.steps.push(StepTrace {
+            step: open.step,
+            strategy: open.strategy,
+            start_us: open.start_us,
+            dur_us: open.t0.elapsed().as_micros() as u64,
+            phases: open.phases,
+            counters: self.registry.delta(&open.counters0),
+            report: report.to_vec(),
+            events: open.events,
+        });
+    }
+
+    /// Open a phase span.  Spans may nest; a span opened outside any
+    /// step (strategy run directly on an enabled tape) lazily opens an
+    /// anonymous step so the span is never lost.
+    pub fn phase_begin(&mut self, phase: Phase) {
+        if !self.enabled {
+            return;
+        }
+        if self.current.is_none() {
+            self.step_begin(self.steps.len(), "(direct)");
+        }
+        self.stack.push((phase, Instant::now()));
+    }
+
+    /// Close the innermost open span of `phase`.  A stray end (no
+    /// matching begin) is ignored.
+    pub fn phase_end(&mut self, phase: Phase) {
+        if !self.enabled {
+            return;
+        }
+        let Some(i) = self.stack.iter().rposition(|(p, _)| *p == phase)
+        else {
+            debug_assert!(false, "phase_end({}) without begin", phase.name());
+            return;
+        };
+        let (_, t0) = self.stack.remove(i);
+        let dur = t0.elapsed();
+        let seconds = dur.as_secs_f64();
+        self.registry.observe(phase.name(), seconds);
+        let end_us = self.now_us();
+        let dur_us = dur.as_micros() as u64;
+        if let Some(open) = self.current.as_mut() {
+            open.events.push(SpanEvent {
+                phase,
+                start_us: end_us.saturating_sub(dur_us),
+                dur_us,
+            });
+            match open.phases.iter_mut().find(|p| p.phase == phase) {
+                Some(stat) => {
+                    stat.count += 1;
+                    stat.seconds += seconds;
+                }
+                None => open.phases.push(PhaseStat {
+                    phase,
+                    count: 1,
+                    seconds,
+                }),
+            }
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+/// On-disk trace encodings for `--trace-format`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    /// One JSON object per line per outer step (`TRACE_native.jsonl`).
+    Jsonl,
+    /// Chrome trace-event JSON (Perfetto / `chrome://tracing`).
+    Chrome,
+}
+
+impl CliEnum for TraceFormat {
+    fn name(&self) -> String {
+        match self {
+            TraceFormat::Jsonl => "jsonl".to_string(),
+            TraceFormat::Chrome => "chrome".to_string(),
+        }
+    }
+
+    fn parse(s: &str) -> Option<TraceFormat> {
+        match s.trim().to_lowercase().as_str() {
+            "jsonl" => Some(TraceFormat::Jsonl),
+            "chrome" | "perfetto" => Some(TraceFormat::Chrome),
+            _ => None,
+        }
+    }
+
+    fn variants() -> &'static [&'static str] {
+        &["jsonl", "chrome"]
+    }
+}
+
+/// Traces grouped by cell label — the unit both sinks consume.  A cell
+/// is one traced engine: a sweep cell, a CLI run, or a bench variant.
+pub type TraceCells = [(String, Vec<StepTrace>)];
+
+fn pairs_obj(pairs: &[(&'static str, u64)]) -> Json {
+    let mut o = Json::obj();
+    for (name, v) in pairs {
+        o.insert(name, Json::Num(*v as f64));
+    }
+    o
+}
+
+/// Serialise traces as JSON lines: one object per (cell, outer step)
+/// with nested phase timings, counter deltas, and the report block.
+pub fn trace_jsonl(cells: &TraceCells) -> String {
+    let mut out = String::new();
+    for (label, steps) in cells {
+        for t in steps {
+            let mut rec = Json::obj();
+            rec.insert("cell", Json::Str(label.clone()));
+            rec.insert("step", Json::Num(t.step as f64));
+            rec.insert("strategy", Json::Str(t.strategy.to_string()));
+            rec.insert("start_us", Json::Num(t.start_us as f64));
+            rec.insert("dur_us", Json::Num(t.dur_us as f64));
+            let mut phases = Json::obj();
+            for p in &t.phases {
+                let mut po = Json::obj();
+                po.insert("count", Json::Num(p.count as f64));
+                po.insert("seconds", Json::Num(p.seconds));
+                phases.insert(p.phase.name(), po);
+            }
+            rec.insert("phases", phases);
+            rec.insert("counters", pairs_obj(&t.counters));
+            rec.insert("report", pairs_obj(&t.report));
+            out.push_str(&rec.compact());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Serialise traces as a Chrome trace-event document.  Each cell maps
+/// to one process (named via an "M" metadata event); outer steps and
+/// phase spans become "X" complete events on that process's timeline.
+pub fn chrome_trace(cells: &TraceCells) -> Json {
+    let mut events = Vec::new();
+    for (i, (label, steps)) in cells.iter().enumerate() {
+        let pid = (i + 1) as f64;
+        let mut meta = Json::obj();
+        meta.insert("name", Json::Str("process_name".to_string()));
+        meta.insert("ph", Json::Str("M".to_string()));
+        meta.insert("pid", Json::Num(pid));
+        meta.insert("tid", Json::Num(0.0));
+        let mut margs = Json::obj();
+        margs.insert("name", Json::Str(label.clone()));
+        meta.insert("args", margs);
+        events.push(meta);
+        for t in steps {
+            let mut step_ev = Json::obj();
+            step_ev.insert(
+                "name",
+                Json::Str(format!("step {} ({})", t.step, t.strategy)),
+            );
+            step_ev.insert("cat", Json::Str("step".to_string()));
+            step_ev.insert("ph", Json::Str("X".to_string()));
+            step_ev.insert("pid", Json::Num(pid));
+            step_ev.insert("tid", Json::Num(0.0));
+            step_ev.insert("ts", Json::Num(t.start_us as f64));
+            step_ev.insert("dur", Json::Num(t.dur_us.max(1) as f64));
+            events.push(step_ev);
+            for e in &t.events {
+                let mut ev = Json::obj();
+                ev.insert("name", Json::Str(e.phase.name().to_string()));
+                ev.insert("cat", Json::Str("phase".to_string()));
+                ev.insert("ph", Json::Str("X".to_string()));
+                ev.insert("pid", Json::Num(pid));
+                ev.insert("tid", Json::Num(0.0));
+                ev.insert("ts", Json::Num(e.start_us as f64));
+                ev.insert("dur", Json::Num(e.dur_us.max(1) as f64));
+                events.push(ev);
+            }
+        }
+    }
+    let mut doc = Json::obj();
+    doc.insert("displayTimeUnit", Json::Str("ms".to_string()));
+    doc.insert("traceEvents", Json::Arr(events));
+    doc
+}
+
+/// Write `cells` to `path` in the chosen format.
+pub fn write_trace(
+    path: &str,
+    format: TraceFormat,
+    cells: &TraceCells,
+) -> std::io::Result<()> {
+    let body = match format {
+        TraceFormat::Jsonl => trace_jsonl(cells),
+        TraceFormat::Chrome => chrome_trace(cells).pretty() + "\n",
+    };
+    std::fs::write(path, body)
+}
+
+/// Print the per-cell phase breakdown table (the CLI summary sink).
+pub fn print_trace_summary(cells: &TraceCells) {
+    let mut table = Table::new(&[
+        "cell", "strategy", "steps", "phase", "spans", "time", "share",
+    ])
+    .numeric_cols(&[2, 4, 5, 6]);
+    for (label, steps) in cells {
+        if steps.is_empty() {
+            continue;
+        }
+        let strategy = steps[0].strategy;
+        let total: f64 = steps.iter().map(|s| s.total_seconds()).sum();
+        for phase in Phase::ALL {
+            let mut count = 0u64;
+            let mut seconds = 0.0f64;
+            for s in steps {
+                if let Some(p) = s.phase(phase) {
+                    count += p.count;
+                    seconds += p.seconds;
+                }
+            }
+            if count == 0 {
+                continue;
+            }
+            let share = if total > 0.0 { 100.0 * seconds / total } else { 0.0 };
+            table.row(vec![
+                label.clone(),
+                strategy.to_string(),
+                steps.len().to_string(),
+                phase.name().to_string(),
+                count.to_string(),
+                human_secs(seconds),
+                format!("{share:.1}%"),
+            ]);
+        }
+        table.row(vec![
+            label.clone(),
+            strategy.to_string(),
+            steps.len().to_string(),
+            "(step total)".to_string(),
+            steps.len().to_string(),
+            human_secs(total),
+            "100.0%".to_string(),
+        ]);
+    }
+    println!("\n== trace summary ==");
+    println!("{}", table.render());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut t = Telemetry::new();
+        assert!(!t.enabled());
+        t.step_begin(0, "naive");
+        t.phase_begin(Phase::Forward);
+        t.count(Counter::TapeNodes, 5);
+        t.phase_end(Phase::Forward);
+        t.step_end(&[("nodes", 5)]);
+        assert!(t.steps().is_empty());
+        assert_eq!(t.registry().counter(Counter::TapeNodes), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_aggregate_per_step() {
+        let mut t = Telemetry::new();
+        t.set_enabled(true);
+        t.step_begin(7, "mixflow");
+        t.phase_begin(Phase::Forward);
+        t.phase_end(Phase::Forward);
+        t.phase_begin(Phase::BackwardVjp);
+        t.phase_begin(Phase::Jvp); // nested
+        t.phase_end(Phase::Jvp);
+        t.phase_end(Phase::BackwardVjp);
+        t.phase_begin(Phase::Forward);
+        t.phase_end(Phase::Forward);
+        t.count(Counter::TapeNodes, 3);
+        t.step_end(&[("nodes", 3)]);
+
+        let steps = t.steps();
+        assert_eq!(steps.len(), 1);
+        let s = &steps[0];
+        assert_eq!(s.step, 7);
+        assert_eq!(s.strategy, "mixflow");
+        assert_eq!(s.phase(Phase::Forward).map(|p| p.count), Some(2));
+        assert_eq!(s.phase(Phase::BackwardVjp).map(|p| p.count), Some(1));
+        assert_eq!(s.phase(Phase::Jvp).map(|p| p.count), Some(1));
+        assert!(s.phase(Phase::RematRebuild).is_none());
+        assert_eq!(s.events.len(), 4);
+        assert_eq!(s.counter("tape.nodes"), Some(3));
+        assert_eq!(s.counter("remat.rebuilds"), Some(0));
+        assert_eq!(s.report_counter("nodes"), Some(3));
+        // Registry histogram saw every span.
+        assert_eq!(
+            t.registry().histogram("forward").map(|h| h.count),
+            Some(2)
+        );
+        // A second step's counter delta starts from zero.
+        t.step_begin(8, "mixflow");
+        t.step_end(&[]);
+        assert_eq!(t.steps()[1].counter("tape.nodes"), Some(0));
+        let drained = t.take_steps();
+        assert_eq!(drained.len(), 2);
+        assert!(t.steps().is_empty());
+    }
+
+    #[test]
+    fn orphan_spans_open_an_anonymous_step() {
+        let mut t = Telemetry::new();
+        t.set_enabled(true);
+        t.phase_begin(Phase::Forward);
+        t.phase_end(Phase::Forward);
+        t.step_end(&[]);
+        assert_eq!(t.steps().len(), 1);
+        assert_eq!(t.steps()[0].strategy, "(direct)");
+    }
+
+    #[test]
+    fn jsonl_sink_emits_one_parseable_line_per_step() {
+        let mut t = Telemetry::new();
+        t.set_enabled(true);
+        for i in 0..2 {
+            t.step_begin(i, "naive");
+            t.phase_begin(Phase::Forward);
+            t.phase_end(Phase::Forward);
+            t.step_end(&[("arena_allocs", 4)]);
+        }
+        let cells = vec![("cellA".to_string(), t.take_steps())];
+        let text = trace_jsonl(&cells);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let rec = Json::parse(line).expect("jsonl line parses");
+            assert_eq!(rec.get("cell").and_then(Json::as_str), Some("cellA"));
+            assert_eq!(
+                rec.get("step").and_then(Json::as_u64),
+                Some(i as u64)
+            );
+            assert!(rec
+                .get("phases")
+                .and_then(|p| p.get("forward"))
+                .and_then(|f| f.get("count"))
+                .and_then(Json::as_u64)
+                .is_some());
+            assert!(rec
+                .get("counters")
+                .and_then(|c| c.get("tape.nodes"))
+                .is_some());
+            assert_eq!(
+                rec.get("report")
+                    .and_then(|r| r.get("arena_allocs"))
+                    .and_then(Json::as_u64),
+                Some(4)
+            );
+        }
+    }
+
+    #[test]
+    fn chrome_sink_emits_metadata_and_complete_events() {
+        let mut t = Telemetry::new();
+        t.set_enabled(true);
+        t.step_begin(0, "mixflow");
+        t.phase_begin(Phase::Forward);
+        t.phase_end(Phase::Forward);
+        t.step_end(&[]);
+        let cells = vec![("cellA".to_string(), t.take_steps())];
+        let doc = chrome_trace(&cells);
+        let text = doc.pretty();
+        let parsed = Json::parse(&text).expect("chrome trace parses");
+        let events = parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        // Metadata + step + 1 phase span.
+        assert_eq!(events.len(), 3);
+        assert_eq!(
+            events[0].get("ph").and_then(Json::as_str),
+            Some("M")
+        );
+        assert_eq!(
+            events[0].path(&["args", "name"]).and_then(Json::as_str),
+            Some("cellA")
+        );
+        for ev in &events[1..] {
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(ev.get("ts").and_then(Json::as_u64).is_some());
+            assert!(ev.get("dur").and_then(Json::as_u64).unwrap_or(0) >= 1);
+        }
+    }
+
+    #[test]
+    fn trace_format_cli_enum_contract() {
+        for v in TraceFormat::variants() {
+            let parsed =
+                TraceFormat::parse(v).expect("every variant parses");
+            assert_eq!(TraceFormat::parse(&parsed.name()), Some(parsed));
+        }
+        assert_eq!(TraceFormat::valid_values(), "jsonl|chrome");
+        assert_eq!(TraceFormat::parse(" JSONL "), Some(TraceFormat::Jsonl));
+        assert_eq!(TraceFormat::parse("perfetto"), Some(TraceFormat::Chrome));
+        assert_eq!(TraceFormat::parse("xml"), None);
+    }
+}

@@ -24,6 +24,7 @@ fn small_grid_spec() -> SweepSpec {
         steps: 2,
         base_seed: 21,
         n_seeds: 2,
+        telemetry: false,
     }
 }
 
@@ -142,6 +143,7 @@ fn sweep_heads_axis_changes_the_attention_cells_only() {
         steps: 2,
         base_seed: 5,
         n_seeds: 1,
+        telemetry: false,
     };
     let runs = run_sweep(&spec);
     assert_eq!(runs.len(), 4);

@@ -1,0 +1,356 @@
+//! Telemetry acceptance: trace-schema golden files, registry-vs-report
+//! conformance on a warm persistent engine, telemetry-off bit-identity
+//! with a pinned walltime overhead bound, and the `--trace-format` CLI
+//! enum contract (mirroring the `rust/tests/sweep.rs` golden-file
+//! pattern for the sweep report schema).
+
+use mixflow::autodiff::engine::{HypergradEngine, HypergradMode};
+use mixflow::autodiff::mixflow::{BilevelProblem, CheckpointPolicy};
+use mixflow::autodiff::problems::HyperLrProblem;
+use mixflow::obs::{
+    chrome_trace, trace_jsonl, Counter, Phase, StepTrace, TraceFormat,
+};
+use mixflow::util::args::CliEnum;
+use mixflow::util::json::Json;
+
+/// Run `steps` hypergradients on a fresh telemetry-enabled engine in the
+/// given mode and drain the traces.
+fn traced_steps(
+    mode: HypergradMode,
+    policy: CheckpointPolicy,
+    unroll: usize,
+    steps: usize,
+) -> Vec<StepTrace> {
+    let problem = HyperLrProblem::with_unroll(3, unroll);
+    let theta0 = problem.theta0();
+    let eta = problem.eta0();
+    let mut engine = HypergradEngine::builder()
+        .mode(mode)
+        .checkpoint(policy)
+        .telemetry(true)
+        .build();
+    for _ in 0..steps {
+        let h = engine.run(&problem, &theta0, &eta);
+        assert!(h.outer_loss.is_finite());
+    }
+    engine.take_step_traces()
+}
+
+/// Each strategy must emit its full phase vocabulary: `naive` the
+/// forward + backward pair, `mixflow` under remat all six phases, `fd`
+/// its forward evaluations — and never a `jvp` span outside mixflow.
+#[test]
+fn strategies_emit_their_complete_phase_sets() {
+    let naive = traced_steps(
+        HypergradMode::Naive,
+        CheckpointPolicy::Full,
+        4,
+        2,
+    );
+    assert_eq!(naive.len(), 2);
+    for t in &naive {
+        assert_eq!(t.strategy, "naive");
+        assert!(t.phase(Phase::Forward).is_some());
+        assert!(t.phase(Phase::BackwardVjp).is_some());
+        assert!(t.phase(Phase::Jvp).is_none(), "naive path has no JVP");
+        assert!(t.dur_us > 0);
+    }
+
+    // Remat segment 2 over unroll 4 exercises every mixflow phase,
+    // including the checkpoint-thinning rebuild.
+    let mixflow = traced_steps(
+        HypergradMode::Mixflow,
+        CheckpointPolicy::Remat { segment: 2 },
+        4,
+        2,
+    );
+    for t in &mixflow {
+        assert_eq!(t.strategy, "mixflow");
+        for phase in Phase::ALL {
+            assert!(
+                t.phase(phase).is_some(),
+                "mixflow+remat step {} must span `{}`",
+                t.step,
+                phase.name()
+            );
+        }
+        // T=4 / K=2 stores ceil includes t=0 boundary checkpoints and
+        // rebuilds the intra-segment states on the way back.
+        assert!(t.counter("checkpoint.stores").unwrap_or(0) > 0);
+        assert!(t.counter("remat.rebuilds").unwrap_or(0) > 0);
+    }
+
+    let fd = traced_steps(HypergradMode::Fd, CheckpointPolicy::Full, 2, 1);
+    for t in &fd {
+        assert_eq!(t.strategy, "fd");
+        let fwd = t.phase(Phase::Forward).expect("fd spans its unrolls");
+        // Base point + one ± pair per η element means several spans.
+        assert!(fwd.count >= 3, "fd forward spans, got {}", fwd.count);
+        assert!(t.phase(Phase::BackwardVjp).is_none());
+    }
+}
+
+/// Golden-file pin on the JSONL schema: dump, re-read, reparse every
+/// line, and require step/phase/counter completeness.
+#[test]
+fn jsonl_trace_round_trips_with_counter_completeness() {
+    let cells = vec![
+        (
+            "hyperlr/naive".to_string(),
+            traced_steps(HypergradMode::Naive, CheckpointPolicy::Full, 4, 2),
+        ),
+        (
+            "hyperlr/mixflow-remat2".to_string(),
+            traced_steps(
+                HypergradMode::Mixflow,
+                CheckpointPolicy::Remat { segment: 2 },
+                4,
+                2,
+            ),
+        ),
+    ];
+    let path = std::env::temp_dir().join(format!(
+        "mixflow_trace_golden_{}.jsonl",
+        std::process::id()
+    ));
+    std::fs::write(&path, trace_jsonl(&cells)).expect("write trace file");
+    let text = std::fs::read_to_string(&path).expect("read trace file");
+    std::fs::remove_file(&path).ok();
+
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4, "one record per (cell, outer step)");
+    for (i, line) in lines.iter().enumerate() {
+        let rec = Json::parse(line).expect("every trace line parses");
+        let cell = rec.get("cell").and_then(Json::as_str).expect("cell");
+        let want_cell = &cells[i / 2].0;
+        assert_eq!(cell, want_cell);
+        assert_eq!(
+            rec.get("step").and_then(Json::as_u64),
+            Some((i % 2) as u64)
+        );
+        let strategy =
+            rec.get("strategy").and_then(Json::as_str).expect("strategy");
+        assert!(want_cell.contains(strategy));
+        assert!(rec.get("dur_us").and_then(Json::as_u64).unwrap_or(0) > 0);
+
+        // Phase objects carry count + seconds for every recorded phase.
+        let phases = rec.get("phases").expect("phases object");
+        let fwd = phases.get("forward").expect("forward phase");
+        assert!(fwd.get("count").and_then(Json::as_u64).unwrap_or(0) > 0);
+        assert!(fwd.get("seconds").and_then(Json::as_f64).is_some());
+
+        // Counter completeness: the delta block lists every registry
+        // counter by its dotted name, zeros included.
+        let counters = rec.get("counters").expect("counters object");
+        for c in Counter::ALL {
+            assert!(
+                counters.get(c.name()).and_then(Json::as_u64).is_some(),
+                "record {i} missing counter `{}`",
+                c.name()
+            );
+        }
+        assert!(
+            counters
+                .get("tape.nodes")
+                .and_then(Json::as_u64)
+                .unwrap_or(0)
+                > 0
+        );
+
+        // The MemoryReport conformance block rides along.
+        let report = rec.get("report").expect("report object");
+        for key in ["arena_allocs", "arena_reuses", "nodes", "peak_bytes"] {
+            assert!(
+                report.get(key).and_then(Json::as_u64).is_some(),
+                "record {i} missing report field `{key}`"
+            );
+        }
+    }
+}
+
+/// The Chrome export must be a well-formed trace-event document: one
+/// process-name metadata record per cell and only nonzero-duration "X"
+/// events after it — that is what Perfetto / `chrome://tracing` loads.
+#[test]
+fn chrome_trace_round_trips_as_trace_event_json() {
+    let steps =
+        traced_steps(HypergradMode::Mixflow, CheckpointPolicy::Full, 4, 2);
+    let n_events: usize = steps.iter().map(|s| s.events.len() + 1).sum();
+    let cells = vec![("hyperlr/mixflow".to_string(), steps)];
+
+    let path = std::env::temp_dir().join(format!(
+        "mixflow_trace_golden_{}.chrome.json",
+        std::process::id()
+    ));
+    mixflow::obs::write_trace(
+        path.to_str().expect("temp path is utf-8"),
+        TraceFormat::Chrome,
+        &cells,
+    )
+    .expect("write chrome trace");
+    let text = std::fs::read_to_string(&path).expect("read chrome trace");
+    std::fs::remove_file(&path).ok();
+
+    let doc = Json::parse(&text).expect("chrome trace parses as JSON");
+    assert_eq!(
+        doc.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ms")
+    );
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert_eq!(events.len(), 1 + n_events, "metadata + step/span events");
+    assert_eq!(events[0].get("ph").and_then(Json::as_str), Some("M"));
+    assert_eq!(
+        events[0].path(&["args", "name"]).and_then(Json::as_str),
+        Some("hyperlr/mixflow")
+    );
+    for ev in &events[1..] {
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(ev.get("pid").and_then(Json::as_u64).is_some());
+        assert!(ev.get("ts").and_then(Json::as_u64).is_some());
+        assert!(
+            ev.get("dur").and_then(Json::as_u64).unwrap_or(0) >= 1,
+            "complete events need a nonzero duration"
+        );
+    }
+    // Re-serialising what chrome_trace built gives the same document.
+    assert_eq!(chrome_trace(&cells).pretty() + "\n", text);
+}
+
+/// Registry-vs-`MemoryReport` conformance on one persistent engine:
+/// the engine mirrors arena deltas into the registry independently of
+/// the strategy's own bookkeeping, and the warm second step must both
+/// agree with its report and reuse strictly more than the cold first.
+#[test]
+fn warm_engine_registry_matches_memory_report() {
+    let problem = HyperLrProblem::with_unroll(3, 4);
+    let theta0 = problem.theta0();
+    let eta = problem.eta0();
+    let mut engine = HypergradEngine::builder().telemetry(true).build();
+
+    let h1 = engine.run(&problem, &theta0, &eta);
+    let h2 = engine.run(&problem, &theta0, &eta);
+    let traces = engine.step_traces();
+    assert_eq!(traces.len(), 2);
+
+    for (t, h) in traces.iter().zip([&h1, &h2]) {
+        assert_eq!(
+            t.counter("arena.allocs"),
+            Some(h.memory.arena_allocs as u64),
+            "registry alloc delta must match the MemoryReport"
+        );
+        assert_eq!(
+            t.counter("arena.reuses"),
+            Some(h.memory.arena_reuses as u64),
+            "registry reuse delta must match the MemoryReport"
+        );
+        // The trace's own conformance block carries the same numbers.
+        assert_eq!(
+            t.report_counter("arena_allocs"),
+            Some(h.memory.arena_allocs as u64)
+        );
+        assert_eq!(
+            t.report_counter("arena_reuses"),
+            Some(h.memory.arena_reuses as u64)
+        );
+        assert_eq!(t.report_counter("nodes"), Some(h.memory.nodes as u64));
+    }
+
+    // Warm-arena acceptance: the second outer step draws from the
+    // first step's recycled buffers.
+    let (cold, warm) = (&traces[0], &traces[1]);
+    assert!(
+        warm.counter("arena.reuses") > cold.counter("arena.reuses"),
+        "warm step must reuse strictly more than the cold step"
+    );
+    assert!(
+        warm.counter("arena.allocs") < cold.counter("arena.allocs"),
+        "warm step must allocate strictly less than the cold step"
+    );
+    // Registry totals accumulate across steps (they survive the drain).
+    let registry = engine.metrics();
+    assert_eq!(
+        registry.counter(Counter::ArenaAllocs),
+        (h1.memory.arena_allocs + h2.memory.arena_allocs) as u64
+    );
+    assert_eq!(
+        registry.counter(Counter::ArenaReuses),
+        (h1.memory.arena_reuses + h2.memory.arena_reuses) as u64
+    );
+}
+
+/// Telemetry off must be free: bit-identical hypergradients, no traces,
+/// and at most a few percent of walltime next to an instrumented twin.
+#[test]
+fn telemetry_off_is_bit_identical_with_bounded_overhead() {
+    let problem = HyperLrProblem::with_unroll(3, 16);
+    let theta0 = problem.theta0();
+    let eta = problem.eta0();
+    let mut off = HypergradEngine::builder().build();
+    let mut on = HypergradEngine::builder().telemetry(true).build();
+
+    // Bit-identity: the disabled path takes no timestamps and writes no
+    // counters, so the numerics cannot differ in any bit.
+    let h_off = off.run(&problem, &theta0, &eta);
+    let h_on = on.run(&problem, &theta0, &eta);
+    assert_eq!(h_off.d_eta.len(), h_on.d_eta.len());
+    for (a, b) in h_off.d_eta.iter().zip(h_on.d_eta.iter()) {
+        assert_eq!(a.shape, b.shape);
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "telemetry must not perturb the hypergradient"
+            );
+        }
+    }
+    assert_eq!(h_off.outer_loss.to_bits(), h_on.outer_loss.to_bits());
+    assert!(off.step_traces().is_empty(), "off engine records nothing");
+    assert_eq!(on.step_traces().len(), 1);
+
+    // Overhead: interleaved warm samples, best-of-N on each side so a
+    // single scheduler hiccup cannot fail the pin.  ≤5% is the
+    // acceptance bound; the disabled comparison below it is the real
+    // claim (`off` here IS the uninstrumented production path).
+    for _ in 0..3 {
+        off.run(&problem, &theta0, &eta);
+        on.run(&problem, &theta0, &eta);
+    }
+    let mut off_min = f64::INFINITY;
+    let mut on_min = f64::INFINITY;
+    for _ in 0..12 {
+        let t = std::time::Instant::now();
+        off.run(&problem, &theta0, &eta);
+        off_min = off_min.min(t.elapsed().as_secs_f64());
+        let t = std::time::Instant::now();
+        on.run(&problem, &theta0, &eta);
+        on_min = on_min.min(t.elapsed().as_secs_f64());
+    }
+    assert!(
+        on_min <= off_min * 1.05,
+        "telemetry-on best step {on_min:.3e}s exceeds 105% of \
+         telemetry-off best {off_min:.3e}s"
+    );
+}
+
+/// `--trace-format` round-trips through the `CliEnum` contract exactly
+/// like the PR-4 enums: every variant parses, names survive a
+/// parse→name→parse cycle, and the error list is derived, not written.
+#[test]
+fn trace_format_cli_enum_round_trips() {
+    for v in TraceFormat::variants() {
+        let parsed = TraceFormat::parse(v)
+            .unwrap_or_else(|| panic!("variant {v:?} must parse"));
+        assert_eq!(parsed.name(), *v);
+        assert_eq!(TraceFormat::parse(&parsed.name()), Some(parsed));
+    }
+    assert_eq!(TraceFormat::valid_values(), "jsonl|chrome");
+    // Case/whitespace tolerance and the Perfetto alias.
+    assert_eq!(TraceFormat::parse(" JSONL\t"), Some(TraceFormat::Jsonl));
+    assert_eq!(TraceFormat::parse("Chrome"), Some(TraceFormat::Chrome));
+    assert_eq!(TraceFormat::parse("perfetto"), Some(TraceFormat::Chrome));
+    assert_eq!(TraceFormat::parse("csv"), None);
+    assert_eq!(TraceFormat::parse(""), None);
+}
