@@ -17,13 +17,22 @@
 //! gates at phase level) and the full traces land in
 //! `TRACE_native.jsonl` + `TRACE_native_chrome.json` next to the bench
 //! JSON; the timed engines stay uninstrumented so telemetry cost can
-//! never leak into the gated medians.  It exits nonzero if
+//! never leak into the gated medians.  The attention rungs additionally
+//! time a `mixflow_noplan` twin (`.plan(false)`: compiled step plans
+//! off, the pre-plan free-list arena path) so the JSON carries the
+//! plan-on/plan-off A/B next to each gated mixflow row — reported, not
+//! hard-gated, since the delta is machine-dependent.  It exits nonzero
+//! if
 //!
 //! * naive and mixflow disagree beyond 1e-6 (float-op reordering bound),
 //! * remat (K = 4) leaves the full-checkpoint hypergradient by more
 //!   than 1e-12 (it recomputes the identical op sequence, so it is
-//!   bit-for-bit in practice), or
-//! * remat fails to shrink peak checkpoint bytes for T > K.
+//!   bit-for-bit in practice),
+//! * remat fails to shrink peak checkpoint bytes for T > K,
+//! * plan-on and plan-off mixflow disagree beyond 1e-12 (plans only
+//!   change where buffers come from, so they are bit-for-bit), or
+//! * a timed mixflow engine finishes the ladder without a single plan
+//!   replay (the compiled-plan path never engaged).
 //!
 //! ```bash
 //! cargo run --release --bin fig_native_walltime            # full ladder
@@ -154,6 +163,11 @@ fn main() {
         let mut full_engine = HypergradEngine::builder().build();
         let mut remat_engine =
             HypergradEngine::builder().checkpoint(remat).build();
+        // Plan-off twin of the full-checkpoint mixflow engine: same
+        // strategy, same persistent arena discipline, but every cycle
+        // records dynamically — the A/B for the compiled-plan speedup.
+        let mut noplan_engine =
+            HypergradEngine::builder().plan(false).build();
         // Telemetry twins: identically configured instrumented engines
         // that run two untimed steps per rung (cold + arena-warm) to
         // source `phase_s` and the exported traces — keeping the timed
@@ -207,6 +221,40 @@ fn main() {
             let naive = naive_h.expect("bench ran at least one iteration");
             let full = full_h.expect("bench ran at least one iteration");
             let rem = rem_h.expect("bench ran at least one iteration");
+
+            // Plan-on/plan-off A/B on the attention rungs (where the
+            // step tapes are large enough for arena probing to show up).
+            let mut noplan = None;
+            if task.starts_with("attention") {
+                let mut noplan_h = None;
+                let s_noplan = bench.run(
+                    &format!("{task}+{opt}/T{unroll}/mixflow_noplan"),
+                    || {
+                        noplan_h = Some(noplan_engine.run(
+                            problem.as_ref(),
+                            &theta0,
+                            &eta,
+                        ));
+                    },
+                );
+                let np = noplan_h.expect("bench ran at least one iteration");
+                let err_pn = rel_err(&full.d_eta, &np.d_eta);
+                if err_pn > 1e-12 {
+                    eprintln!(
+                        "FAIL {task} T={unroll}: plan vs noplan rel err \
+                         {err_pn:.3e}"
+                    );
+                    ok = false;
+                }
+                println!(
+                    "  plan A/B {task}+{opt}/T{unroll}: plan {:.2}ms vs \
+                     noplan {:.2}ms (ratio {:.2})",
+                    s_full.median * 1e3,
+                    s_noplan.median * 1e3,
+                    s_full.median / s_noplan.median.max(1e-12)
+                );
+                noplan = Some((s_noplan, np));
+            }
 
             let err_nf = rel_err(&naive.d_eta, &full.d_eta);
             if err_nf > 1e-6 {
@@ -265,6 +313,16 @@ fn main() {
             );
             row.insert("phase_s", phase_seconds(&tr_remat));
             rows.push(row);
+            if let Some((s_noplan, np)) = &noplan {
+                rows.push(result_row(
+                    task,
+                    opt,
+                    unroll,
+                    "mixflow_noplan",
+                    s_noplan,
+                    np,
+                ));
+            }
 
             trace_cells
                 .push((format!("{task}+{opt}/T{unroll}/naive"), tr_naive));
@@ -284,6 +342,23 @@ fn main() {
                 human_bytes(full.memory.checkpoint_bytes as u64),
                 human_bytes(rem.memory.checkpoint_bytes as u64),
             ]);
+        }
+
+        // The timed mixflow engines must have actually exercised the
+        // compiled-plan path: every rung after the first cycle of a
+        // topology replays, so zero replays means plans never armed.
+        for (name, engine) in
+            [("mixflow", &full_engine), ("remat", &remat_engine)]
+        {
+            let stats = engine.plan_stats();
+            if stats.replays == 0 {
+                eprintln!(
+                    "FAIL {task}: {name} engine never replayed a compiled \
+                     plan (compiles {}, fallbacks {})",
+                    stats.compiles, stats.fallbacks
+                );
+                ok = false;
+            }
         }
     }
 

@@ -35,6 +35,13 @@
 //! ```bash
 //! cargo run --release --bin perf_gate [current.json [baseline.json]]
 //! ```
+//!
+//! `--write-baseline <path>` additionally copies the current results
+//! file to `<path>` (after validating it parses and carries a `results`
+//! array) before the gate runs.  CI uses this to publish every run's
+//! measurements as a candidate-baseline artifact, so refreshing the
+//! committed baseline after an intentional perf change is a download
+//! instead of a local re-run.
 
 use std::collections::BTreeMap;
 
@@ -150,8 +157,58 @@ fn naive_median(
     (naive.median_s > 0.0).then_some(naive.median_s)
 }
 
+/// Copy the current results file to `path` as a candidate baseline,
+/// refusing (exit 1) when the source is missing or not a results
+/// document — a truncated bench run must not overwrite a good artifact.
+fn write_baseline(current_path: &str, path: &str) {
+    let text = match std::fs::read_to_string(current_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!(
+                "FAIL: --write-baseline: cannot read {current_path}: {e}"
+            );
+            std::process::exit(1);
+        }
+    };
+    let ok = Json::parse(&text)
+        .ok()
+        .and_then(|doc| doc.get("results").and_then(Json::as_arr).map(|_| ()))
+        .is_some();
+    if !ok {
+        eprintln!(
+            "FAIL: --write-baseline: {current_path} is not a bench results \
+             document (no `results` array)"
+        );
+        std::process::exit(1);
+    }
+    if let Err(e) = std::fs::write(path, &text) {
+        eprintln!("FAIL: --write-baseline: cannot write {path}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote candidate baseline {path} (copy of {current_path})");
+}
+
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    // `--write-baseline <path>` is a flag with a value; strip it before
+    // the positional [current [baseline]] parse so it composes with
+    // explicit paths in any order.
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = Vec::new();
+    let mut baseline_out: Option<String> = None;
+    let mut it = raw.into_iter();
+    while let Some(a) = it.next() {
+        if a == "--write-baseline" {
+            match it.next() {
+                Some(p) => baseline_out = Some(p),
+                None => {
+                    eprintln!("FAIL: --write-baseline needs a path");
+                    std::process::exit(1);
+                }
+            }
+        } else {
+            args.push(a);
+        }
+    }
     let current_path =
         args.first().map(String::as_str).unwrap_or("BENCH_native.json");
     let baseline_path = args
@@ -163,6 +220,12 @@ fn main() {
          (tolerance {:.0}%)",
         TOLERANCE * 100.0
     );
+
+    // Publish the candidate baseline first: it must exist even when the
+    // gate below is not armed (bootstrap placeholder) or fails.
+    if let Some(out) = &baseline_out {
+        write_baseline(current_path, out);
+    }
 
     // A baseline marked `"bootstrap": true` has no measured rows yet
     // (it was committed from an environment without a Rust toolchain):

@@ -15,6 +15,18 @@
 //! alive), and [`BufferArena::take`] hands each parked buffer out at most
 //! once.  A violation would panic in the tape's `Arc::get_mut`, never
 //! silently corrupt values.
+//!
+//! **Plan mode** (see [`super::plan`]): when a compiled step plan is
+//! replaying, the tape *arms* the arena with a positional slot table —
+//! one optional unique `Arc` per scheduled take, in take order — and
+//! every `take` is served by moving the Arc out of the next slot: direct
+//! indexing, no length-keyed `HashMap` probe.  The same invariant holds
+//! (slots only ever hold strong-count-1 Arcs, each moved out at most
+//! once), and any disagreement with the schedule — a length mismatch, an
+//! empty slot (the buffer escaped to a caller last cycle), or a take
+//! past the scheduled count (the JVP overlay's tangent region) — falls
+//! back to the ordinary free-list path, so a diverged replay can degrade
+//! performance but never values.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -44,10 +56,23 @@ pub struct ArenaStats {
     pub free_buffers: usize,
 }
 
+/// Armed replay state: the positional slot table of a compiled plan.
+struct ArmedPlan {
+    /// One optional unique buffer per scheduled take, in take order.
+    slots: Vec<Option<Arc<Vec<f64>>>>,
+    /// Scheduled element count per take (shared with the `StepPlan`).
+    lens: Arc<[usize]>,
+    /// Next take position.
+    cursor: usize,
+    /// A take's length disagreed with the schedule.
+    diverged: bool,
+}
+
 /// The free list itself: `element count → parked buffers`.
 #[derive(Default)]
 pub struct BufferArena {
     free: HashMap<usize, Vec<Arc<Vec<f64>>>>,
+    plan: Option<ArmedPlan>,
     allocs: usize,
     reuses: usize,
     recycled: usize,
@@ -64,7 +89,27 @@ impl BufferArena {
     /// Hand out a uniquely-owned buffer of exactly `len` elements.  The
     /// contents are unspecified (stale values from a recycled buffer):
     /// every kernel writing into it must overwrite all elements.
+    ///
+    /// While armed (plan replay), the take is served from the plan's
+    /// slot for this position when the scheduled length agrees; slot
+    /// serves count as `reuses` like free-list hits (both bypass the
+    /// allocator).  Disagreements fall through to the free-list path.
     pub fn take(&mut self, len: usize) -> Arc<Vec<f64>> {
+        if let Some(plan) = self.plan.as_mut() {
+            let pos = plan.cursor;
+            plan.cursor += 1;
+            if pos < plan.lens.len() {
+                if plan.lens[pos] == len {
+                    if let Some(buf) = plan.slots[pos].take() {
+                        self.reuses += 1;
+                        self.reuse_bytes += len * ELEM_BYTES;
+                        return buf;
+                    }
+                } else {
+                    plan.diverged = true;
+                }
+            }
+        }
         match self.free.get_mut(&len).and_then(|v| v.pop()) {
             Some(buf) => {
                 self.reuses += 1;
@@ -77,6 +122,43 @@ impl BufferArena {
                 Arc::new(vec![0.0; len])
             }
         }
+    }
+
+    /// Enter plan mode for one replay cycle.  `slots[i]` (when `Some`)
+    /// must hold a strong-count-1 Arc of exactly `lens[i]` elements.
+    pub(crate) fn arm(
+        &mut self,
+        slots: Vec<Option<Arc<Vec<f64>>>>,
+        lens: Arc<[usize]>,
+    ) {
+        debug_assert!(self.plan.is_none(), "arena already armed");
+        debug_assert_eq!(slots.len(), lens.len(), "slot table vs schedule");
+        self.plan = Some(ArmedPlan { slots, lens, cursor: 0, diverged: false });
+    }
+
+    /// Leave plan mode: `(leftover slots, takes observed, diverged)`.
+    /// After a clean replay every slot is `None`; leftovers mean the
+    /// cycle diverged or shrank and should be parked via
+    /// [`BufferArena::park`].
+    pub(crate) fn disarm(&mut self) -> (Vec<Option<Arc<Vec<f64>>>>, usize, bool) {
+        let plan = self.plan.take().expect("arena not armed");
+        (plan.slots, plan.cursor, plan.diverged)
+    }
+
+    /// Park a uniquely-owned raw buffer on the free list (plan-mode
+    /// bookkeeping: leftover slots, takes past the scheduled region).
+    pub(crate) fn park(&mut self, arc: Arc<Vec<f64>>) {
+        debug_assert_eq!(Arc::strong_count(&arc), 1, "parking a shared buffer");
+        self.recycled += 1;
+        self.recycle_bytes += arc.len() * ELEM_BYTES;
+        self.free.entry(arc.len()).or_default().push(arc);
+    }
+
+    /// Count a buffer parked into a plan slot (it bypasses the free
+    /// list but is recycled traffic all the same).
+    pub(crate) fn note_parked(&mut self, len: usize) {
+        self.recycled += 1;
+        self.recycle_bytes += len * ELEM_BYTES;
     }
 
     /// Return a tensor's backing buffer to the free list if this tensor
@@ -160,5 +242,43 @@ mod tests {
         assert_eq!(s.reuse_bytes, 0);
         let _back = arena.take(8);
         assert_eq!(arena.stats().reuse_bytes, 64);
+    }
+
+    #[test]
+    fn armed_takes_serve_slots_positionally() {
+        let mut arena = BufferArena::new();
+        let a = arena.take(4);
+        let b = arena.take(8);
+        let lens: Arc<[usize]> = Arc::from(vec![4usize, 8]);
+        arena.arm(vec![Some(a), Some(b)], lens);
+        let base = arena.stats();
+        let s0 = arena.take(4); // slot 0
+        assert_eq!(s0.len(), 4);
+        let _s1 = arena.take(8); // slot 1
+        let _extra = arena.take(16); // past the schedule: free-list path
+        let (slots, takes, diverged) = arena.disarm();
+        assert!(slots.iter().all(Option::is_none));
+        assert_eq!(takes, 3);
+        assert!(!diverged);
+        let s = arena.stats();
+        assert_eq!(s.reuses - base.reuses, 2, "slot serves count as reuses");
+        assert_eq!(
+            s.allocs - base.allocs,
+            1,
+            "only the off-schedule take allocates"
+        );
+    }
+
+    #[test]
+    fn length_mismatch_marks_divergence_but_stays_correct() {
+        let mut arena = BufferArena::new();
+        let a = arena.take(4);
+        let lens: Arc<[usize]> = Arc::from(vec![4usize]);
+        arena.arm(vec![Some(a)], lens);
+        let wrong = arena.take(6); // schedule said 4
+        assert_eq!(wrong.len(), 6, "fallback hands out the right length");
+        let (slots, _, diverged) = arena.disarm();
+        assert!(diverged);
+        assert!(slots[0].is_some(), "mismatched slot is left for parking");
     }
 }

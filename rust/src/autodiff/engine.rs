@@ -34,6 +34,7 @@ use super::mixflow::{
     BilevelProblem, CheckpointPolicy, Hypergrad, MemoryReport,
 };
 use super::optim::InnerOptimiser;
+use super::plan::PlanKey;
 use super::tape::{NodeId, Tape};
 use super::tensor::Tensor;
 use crate::obs::{Counter, Gauge, MetricsRegistry, Phase, StepTrace};
@@ -202,13 +203,16 @@ fn fd_outer_at(
         theta = next_theta;
         state = next_state;
     }
-    tape.reset();
-    let ids: Vec<NodeId> =
-        theta.iter().map(|v| tape.leaf(v.clone())).collect();
-    let outer = problem.outer_loss(tape, &ids);
-    peak.0 = peak.0.max(tape.stats().bytes);
-    peak.1 = peak.1.max(tape.stats().nodes);
-    tape.value(outer).item()
+    // The outer-loss evaluation shares the `Outer` plan with mixflow's
+    // λ seeding: same graph shape, same slot schedule.
+    tape.plan_step(PlanKey::Outer, |tape| {
+        let ids: Vec<NodeId> =
+            theta.iter().map(|v| tape.leaf(v.clone())).collect();
+        let outer = problem.outer_loss(tape, &ids);
+        peak.0 = peak.0.max(tape.stats().bytes);
+        peak.1 = peak.1.max(tape.stats().nodes);
+        tape.value(outer).item()
+    })
 }
 
 impl HypergradStrategy for FdStrategy {
@@ -267,6 +271,7 @@ impl HypergradStrategy for FdStrategy {
                 kv_peak_bytes: 0,
                 kv_ckpt_alias_bytes: 0,
                 kv_remat_bytes: 0,
+                kv_tangent_bytes: 0,
             },
         }
     }
@@ -282,6 +287,7 @@ pub struct EngineBuilder {
     inner_opt: Option<InnerOptimiser>,
     fd_epsilon: f64,
     telemetry: bool,
+    plan: bool,
 }
 
 impl Default for EngineBuilder {
@@ -292,6 +298,7 @@ impl Default for EngineBuilder {
             inner_opt: None,
             fd_epsilon: DEFAULT_FD_EPSILON,
             telemetry: false,
+            plan: true,
         }
     }
 }
@@ -337,6 +344,20 @@ impl EngineBuilder {
         self
     }
 
+    /// Enable compiled step plans on the engine's tape (default on).
+    /// Off, every cycle records dynamically — the pre-plan behaviour,
+    /// bit-for-bit; the A/B knob behind the `mixflow_noplan` bench
+    /// variant and the plan conformance tests.
+    pub fn plan(mut self, on: bool) -> EngineBuilder {
+        self.plan = on;
+        self
+    }
+
+    /// Whether [`EngineBuilder::plan`] left compiled plans enabled.
+    pub fn plan_enabled(&self) -> bool {
+        self.plan
+    }
+
     pub fn build(self) -> HypergradEngine {
         let strategy: Box<dyn HypergradStrategy> = match self.mode {
             HypergradMode::Naive => Box::new(NaiveStrategy),
@@ -347,6 +368,7 @@ impl EngineBuilder {
         };
         let mut tape = Tape::new();
         tape.obs_mut().set_enabled(self.telemetry);
+        tape.set_plan_enabled(self.plan);
         HypergradEngine {
             tape,
             strategy,
@@ -436,6 +458,23 @@ impl HypergradEngine {
     /// Whether the `obs` telemetry recorder is on for this engine.
     pub fn telemetry_enabled(&self) -> bool {
         self.tape.obs().enabled()
+    }
+
+    /// Whether compiled step plans are on for this engine's tape.
+    pub fn plan_enabled(&self) -> bool {
+        self.tape.plan_enabled()
+    }
+
+    /// Lifetime compile/replay/fallback counters of the tape's plan
+    /// machinery (readable without enabling telemetry).
+    pub fn plan_stats(&self) -> super::plan::PlanStats {
+        self.tape.plan_stats()
+    }
+
+    /// The compiled plan for `key`, if one has been compiled — the
+    /// conformance tests export its liveness as HLO text from here.
+    pub fn plan(&self, key: PlanKey) -> Option<&super::plan::StepPlan> {
+        self.tape.plan(key)
     }
 
     /// Turn the telemetry recorder on/off mid-life (the builder knob

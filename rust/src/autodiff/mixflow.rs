@@ -32,10 +32,12 @@
 //! sweep ([`Tape::jvp`] seeded with `tangent(θ) = w` over the step's live
 //! gradient nodes).  `dη₀` already contains the `(∂P/∂η)ᵀ` learning-rate
 //! path because `P(η)` is built in-graph.  All step tapes — forward,
-//! backward and remat recompute — share ONE [`Tape`] that is
-//! [`Tape::reset`] between steps, so buffers recirculate through the
-//! tape's arena instead of hitting the allocator T times.  For plain SGD
-//! this reduces exactly to the hand-derived
+//! backward and remat recompute — share ONE [`Tape`] whose cycles run
+//! under [`Tape::plan_step`]: the first cycle of each kind compiles a
+//! [`super::plan::StepPlan`] and every later one replays against its
+//! static buffer-slot schedule, so buffers recirculate by direct slot
+//! indexing instead of hitting the allocator (or the free-list probe)
+//! T times.  For plain SGD this reduces exactly to the hand-derived
 //! `λ_t = λ_{t+1} − (∂²L/∂θ²)(P⊙λ_{t+1})` recursion.
 //!
 //! [`CheckpointPolicy`] adds the paper's block-rematerialisation knob on
@@ -56,6 +58,7 @@
 use std::time::Instant;
 
 use super::engine::{FdStrategy, HypergradEngine, HypergradMode};
+use super::plan::PlanKey;
 use super::tape::{NodeId, Tape, TapeStats};
 use super::tensor::Tensor;
 use crate::obs::{Counter, Phase};
@@ -228,6 +231,13 @@ pub struct MemoryReport {
     /// states).  0 under full checkpointing (`K = 1`); grows as the
     /// remat segment K trades recompute for checkpoint memory.
     pub kv_remat_bytes: usize,
+    /// K/V bytes materialised as **JVP tangents**: the dual sweep's
+    /// tangent tensors flowing through K/V-marked nodes, summed over the
+    /// backward steps.  A separate ledger from [`kv_peak_bytes`]
+    /// (`Self::kv_peak_bytes`), which tracks primal projections only —
+    /// the tangent overlay is transient per step and never accumulates
+    /// ∝ T.  0 for the naive and fd paths (no JVP sweep).
+    pub kv_tangent_bytes: usize,
 }
 
 impl MemoryReport {
@@ -290,31 +300,40 @@ pub fn naive_hypergrad_in(
     eta: &[Tensor],
 ) -> Hypergrad {
     let opt = problem.optimiser();
-    tape.reset();
     let arena_before = tape.arena_stats();
-    let t_fwd = Instant::now();
-    tape.obs_mut().phase_begin(Phase::Forward);
-    let mut theta = leaves(tape, theta0);
-    let mut state = leaves(tape, &opt.init_state(theta0));
-    let eta_ids = leaves(tape, eta);
-    for t in 0..problem.unroll() {
-        let loss = problem.inner_loss(tape, &theta, &eta_ids, t);
-        let grads = tape.grad(loss, &theta);
-        let lrs = problem.lr_nodes(tape, &eta_ids);
-        let (next_theta, next_state) =
-            opt.step(tape, &theta, &state, &lrs, &grads, t);
-        theta = next_theta;
-        state = next_state;
-    }
-    let outer = problem.outer_loss(tape, &theta);
-    tape.obs_mut().phase_end(Phase::Forward);
-    let forward_seconds = t_fwd.elapsed().as_secs_f64();
-    let t_bwd = Instant::now();
-    tape.obs_mut().phase_begin(Phase::BackwardVjp);
-    let d_eta_ids = tape.grad(outer, &eta_ids);
-    let d_eta = d_eta_ids.iter().map(|&id| tape.value(id).clone()).collect();
-    tape.obs_mut().phase_end(Phase::BackwardVjp);
-    let backward_seconds = t_bwd.elapsed().as_secs_f64();
+    // The whole monolithic unroll+reverse is one plan cycle: a persistent
+    // engine replays it against the compiled buffer schedule on every
+    // outer step after the first.
+    let (outer, d_eta, forward_seconds, backward_seconds) = tape
+        .plan_step(PlanKey::Naive, |tape| {
+            let t_fwd = Instant::now();
+            tape.obs_mut().phase_begin(Phase::Forward);
+            let mut theta = leaves(tape, theta0);
+            let mut state = leaves(tape, &opt.init_state(theta0));
+            let eta_ids = leaves(tape, eta);
+            for t in 0..problem.unroll() {
+                let loss = problem.inner_loss(tape, &theta, &eta_ids, t);
+                let grads = tape.grad(loss, &theta);
+                let lrs = problem.lr_nodes(tape, &eta_ids);
+                let (next_theta, next_state) =
+                    opt.step(tape, &theta, &state, &lrs, &grads, t);
+                theta = next_theta;
+                state = next_state;
+            }
+            let outer = problem.outer_loss(tape, &theta);
+            tape.obs_mut().phase_end(Phase::Forward);
+            let forward_seconds = t_fwd.elapsed().as_secs_f64();
+            let t_bwd = Instant::now();
+            tape.obs_mut().phase_begin(Phase::BackwardVjp);
+            let d_eta_ids = tape.grad(outer, &eta_ids);
+            let d_eta: Vec<Tensor> = d_eta_ids
+                .iter()
+                .map(|&id| tape.value(id).clone())
+                .collect();
+            tape.obs_mut().phase_end(Phase::BackwardVjp);
+            let backward_seconds = t_bwd.elapsed().as_secs_f64();
+            (outer, d_eta, forward_seconds, backward_seconds)
+        });
     let stats = tape.stats();
     let arena = tape.arena_stats();
     Hypergrad {
@@ -335,6 +354,7 @@ pub fn naive_hypergrad_in(
             kv_peak_bytes: stats.kv_bytes,
             kv_ckpt_alias_bytes: 0,
             kv_remat_bytes: 0,
+            kv_tangent_bytes: 0,
         },
     }
 }
@@ -353,20 +373,24 @@ pub fn inner_step_values_into(
     step: usize,
 ) -> (Vec<Tensor>, Vec<Tensor>, TapeStats) {
     let opt = problem.optimiser();
-    tape.reset();
-    let theta_ids = leaves(tape, theta);
-    let state_ids = leaves(tape, state);
-    let eta_ids = leaves(tape, eta);
-    let loss = problem.inner_loss(tape, &theta_ids, &eta_ids, step);
-    let grads = tape.grad(loss, &theta_ids);
-    let lrs = problem.lr_nodes(tape, &eta_ids);
-    let (next_theta, next_state) =
-        opt.step(tape, &theta_ids, &state_ids, &lrs, &grads, step);
-    let theta_out =
-        next_theta.iter().map(|&id| tape.value(id).clone()).collect();
-    let state_out =
-        next_state.iter().map(|&id| tape.value(id).clone()).collect();
-    (theta_out, state_out, tape.stats())
+    // One inner step is the canonical steady-state cycle: the mixflow
+    // forward sweep, remat segment rebuilds and FD unrolls all replay
+    // the same `Inner` plan after the first step compiles it.
+    tape.plan_step(PlanKey::Inner, |tape| {
+        let theta_ids = leaves(tape, theta);
+        let state_ids = leaves(tape, state);
+        let eta_ids = leaves(tape, eta);
+        let loss = problem.inner_loss(tape, &theta_ids, &eta_ids, step);
+        let grads = tape.grad(loss, &theta_ids);
+        let lrs = problem.lr_nodes(tape, &eta_ids);
+        let (next_theta, next_state) =
+            opt.step(tape, &theta_ids, &state_ids, &lrs, &grads, step);
+        let theta_out =
+            next_theta.iter().map(|&id| tape.value(id).clone()).collect();
+        let state_out =
+            next_state.iter().map(|&id| tape.value(id).clone()).collect();
+        (theta_out, state_out, tape.stats())
+    })
 }
 
 /// [`inner_step_values_into`] on a throwaway tape — kept for callers that
@@ -436,11 +460,11 @@ pub fn mixflow_hypergrad_in(
     let k = policy.segment_for(unroll).clamp(1, unroll.max(1));
 
     // ONE tape for every step — forward, λ seeding, remat recompute and
-    // backward all reset-and-reuse it, so buffers recirculate through
-    // its arena instead of being reallocated T times; when the tape
-    // belongs to a persistent engine, the recirculation also spans
-    // outer steps.
-    tape.reset();
+    // backward cycles all run through `Tape::plan_step`, which drains
+    // the previous cycle into the arena (or the previous plan's slot
+    // table) before recording, so buffers recirculate instead of being
+    // reallocated T times; when the tape belongs to a persistent engine,
+    // the recirculation also spans outer steps.
     let arena_before = tape.arena_stats();
     let mut peak_tape = 0usize;
     let mut peak_nodes = 0usize;
@@ -453,6 +477,7 @@ pub fn mixflow_hypergrad_in(
     let mut kv_peak = 0usize;
     let mut kv_ckpt_alias = 0usize;
     let mut kv_remat = 0usize;
+    let mut kv_tangent = 0usize;
 
     // ---- forward: checkpoint (θ_t, s_t) at segment boundaries ----------
     let t_fwd = Instant::now();
@@ -497,8 +522,7 @@ pub fn mixflow_hypergrad_in(
     // ---- λ_T = (∇_θ L_val(θ_T), 0 state adjoint) -----------------------
     let t_bwd = Instant::now();
     tape.obs_mut().phase_begin(Phase::LambdaSeed);
-    let (mut lambda, outer_loss) = {
-        tape.reset();
+    let (mut lambda, outer_loss) = tape.plan_step(PlanKey::Outer, |tape| {
         let theta_ids = leaves(tape, &theta);
         let outer = problem.outer_loss(tape, &theta_ids);
         let grads = tape.grad(outer, &theta_ids);
@@ -517,7 +541,7 @@ pub fn mixflow_hypergrad_in(
             grads.iter().map(|&id| tape.value(id).clone()).collect();
         lambda.extend(state.iter().map(|s| Tensor::zeros(&s.shape)));
         (lambda, tape.value(outer).item())
-    };
+    });
     tape.obs_mut().phase_end(Phase::LambdaSeed);
     drop(theta);
     drop(state);
@@ -570,110 +594,121 @@ pub fn mixflow_hypergrad_in(
             // already counted in `live_state`.
             let overlap = pair_bytes(theta_t, state_t);
             tape.obs_mut().phase_begin(Phase::BackwardVjp);
-            tape.reset();
-            let theta_ids = leaves(tape, theta_t);
-            let state_ids = leaves(tape, state_t);
-            let eta_ids = leaves(tape, eta);
-            let ns = state_ids.len();
-            let loss = problem.inner_loss(tape, &theta_ids, &eta_ids, t);
-            // One reverse sweep for the *live* ∇_θL and ∇_ηL nodes — the
-            // targets of the dual sweep below.
-            let mut gwrt = theta_ids.clone();
-            gwrt.extend(eta_ids.iter().copied());
-            let live = tape.grad(loss, &gwrt);
-            let (g_theta_live, g_eta_live) = live.split_at(nt);
+            // One backward step — VJP plus JVP overlay — is its own plan
+            // cycle: every t replays the `Backward` plan compiled at the
+            // first backward step.
+            tape.plan_step(PlanKey::Backward, |tape| {
+                let theta_ids = leaves(tape, theta_t);
+                let state_ids = leaves(tape, state_t);
+                let eta_ids = leaves(tape, eta);
+                let ns = state_ids.len();
+                let loss = problem.inner_loss(tape, &theta_ids, &eta_ids, t);
+                // One reverse sweep for the *live* ∇_θL and ∇_ηL nodes —
+                // the targets of the dual sweep below.
+                let mut gwrt = theta_ids.clone();
+                gwrt.extend(eta_ids.iter().copied());
+                let live = tape.grad(loss, &gwrt);
+                let (g_theta_live, g_eta_live) = live.split_at(nt);
 
-            // Stop-gradient copies of ∇_θL: the optimiser update is built
-            // over these constants, so the reverse sweep of c below is the
-            // φ-level VJP — first-order, over the tiny update subgraph
-            // only.  (The "copy" is an O(1) buffer alias.)
-            let g_const: Vec<NodeId> = g_theta_live
-                .iter()
-                .map(|&g| {
-                    let v = tape.value(g).clone();
-                    tape.constant(v)
-                })
-                .collect();
-            let lr_ids = problem.lr_nodes(tape, &eta_ids);
-            let (theta_next, state_next) = opt.step(
-                tape, &theta_ids, &state_ids, &lr_ids, &g_const, t,
-            );
-
-            // c = Σ ⟨λ, Φ outputs⟩; ∇c gives every direct adjoint at once.
-            let outs: Vec<NodeId> = theta_next
-                .iter()
-                .chain(state_next.iter())
-                .copied()
-                .collect();
-            assert_eq!(outs.len(), lambda.len(), "λ / Φ output arity");
-            let mut c: Option<NodeId> = None;
-            for (&o, lam) in outs.iter().zip(lambda.iter()) {
-                let l = tape.constant(lam.clone());
-                let p = tape.mul(l, o);
-                let s = tape.sum(p);
-                c = Some(match c {
-                    Some(prev) => tape.add(prev, s),
-                    None => s,
-                });
-            }
-            let c = c.expect("optimiser step produced no outputs");
-            let mut wrt: Vec<NodeId> = theta_ids.clone();
-            wrt.extend(state_ids.iter().copied());
-            wrt.extend(g_const.iter().copied());
-            wrt.extend(eta_ids.iter().copied());
-            let adj = tape.grad(c, &wrt);
-            let d_theta_direct = &adj[..nt];
-            let d_state = &adj[nt..nt + ns];
-            let w_ids = &adj[nt + ns..nt + ns + nt];
-            let d_eta_direct = &adj[nt + ns + nt..];
-
-            // Forward-over-reverse: tangents of the live gradient nodes,
-            // seeded with tangent(θ) = w.  Tangent of ∇_θL is the HVP;
-            // tangent of ∇_ηL is the mixed ∂² product.
-            let seeds: Vec<(NodeId, Tensor)> = theta_ids
-                .iter()
-                .copied()
-                .zip(w_ids.iter().map(|&id| tape.value(id).clone()))
-                .collect();
-            let mut targets: Vec<NodeId> = g_theta_live.to_vec();
-            targets.extend(g_eta_live.iter().copied());
-            tape.obs_mut().phase_begin(Phase::Jvp);
-            let (tangents, tangent_bytes) = tape.jvp(&seeds, &targets);
-            tape.obs_mut().phase_end(Phase::Jvp);
-            let (hvp, mixed) = tangents.split_at(nt);
-
-            let mut new_lambda = Vec::with_capacity(nt + ns);
-            for i in 0..nt {
-                new_lambda.push(
-                    tape.value(d_theta_direct[i]).zip(&hvp[i], |p, q| p + q),
+                // Stop-gradient copies of ∇_θL: the optimiser update is
+                // built over these constants, so the reverse sweep of c
+                // below is the φ-level VJP — first-order, over the tiny
+                // update subgraph only.  (The "copy" is an O(1) buffer
+                // alias.)
+                let g_const: Vec<NodeId> = g_theta_live
+                    .iter()
+                    .map(|&g| {
+                        let v = tape.value(g).clone();
+                        tape.constant(v)
+                    })
+                    .collect();
+                let lr_ids = problem.lr_nodes(tape, &eta_ids);
+                let (theta_next, state_next) = opt.step(
+                    tape, &theta_ids, &state_ids, &lr_ids, &g_const, t,
                 );
-            }
-            for &id in d_state {
-                new_lambda.push(tape.value(id).clone());
-            }
-            lambda = new_lambda;
-            for i in 0..d_eta.len() {
-                let updated = d_eta[i]
-                    .zip(tape.value(d_eta_direct[i]), |p, q| p + q)
-                    .zip(&mixed[i], |p, q| p + q);
-                d_eta[i] = updated;
-            }
 
-            peak_tape = peak_tape.max(tape.stats().bytes + tangent_bytes);
-            peak_nodes = peak_nodes.max(tape.stats().nodes);
-            peak_total = peak_total.max(
-                tape.stats().bytes + tangent_bytes + (live_state - overlap),
-            );
-            // This backward step rebuilt step t's K/V projections.  At a
-            // segment boundary the (θ_t, s_t) seed is an alias of a
-            // stored checkpoint; inside a segment it was rematerialised
-            // by the recompute pass above.
-            kv_peak = kv_peak.max(tape.stats().kv_bytes);
-            if t == seg_start {
-                kv_ckpt_alias += tape.stats().kv_bytes;
-            } else {
-                kv_remat += tape.stats().kv_bytes;
-            }
+                // c = Σ ⟨λ, Φ outputs⟩; ∇c gives every direct adjoint at
+                // once.
+                let outs: Vec<NodeId> = theta_next
+                    .iter()
+                    .chain(state_next.iter())
+                    .copied()
+                    .collect();
+                assert_eq!(outs.len(), lambda.len(), "λ / Φ output arity");
+                let mut c: Option<NodeId> = None;
+                for (&o, lam) in outs.iter().zip(lambda.iter()) {
+                    let l = tape.constant(lam.clone());
+                    let p = tape.mul(l, o);
+                    let s = tape.sum(p);
+                    c = Some(match c {
+                        Some(prev) => tape.add(prev, s),
+                        None => s,
+                    });
+                }
+                let c = c.expect("optimiser step produced no outputs");
+                let mut wrt: Vec<NodeId> = theta_ids.clone();
+                wrt.extend(state_ids.iter().copied());
+                wrt.extend(g_const.iter().copied());
+                wrt.extend(eta_ids.iter().copied());
+                let adj = tape.grad(c, &wrt);
+                let d_theta_direct = &adj[..nt];
+                let d_state = &adj[nt..nt + ns];
+                let w_ids = &adj[nt + ns..nt + ns + nt];
+                let d_eta_direct = &adj[nt + ns + nt..];
+
+                // Forward-over-reverse: tangents of the live gradient
+                // nodes, seeded with tangent(θ) = w.  Tangent of ∇_θL is
+                // the HVP; tangent of ∇_ηL is the mixed ∂² product.
+                let seeds: Vec<(NodeId, Tensor)> = theta_ids
+                    .iter()
+                    .copied()
+                    .zip(w_ids.iter().map(|&id| tape.value(id).clone()))
+                    .collect();
+                let mut targets: Vec<NodeId> = g_theta_live.to_vec();
+                targets.extend(g_eta_live.iter().copied());
+                tape.obs_mut().phase_begin(Phase::Jvp);
+                let (tangents, tangent_bytes) = tape.jvp(&seeds, &targets);
+                tape.obs_mut().phase_end(Phase::Jvp);
+                kv_tangent += tape.jvp_kv_bytes();
+                let (hvp, mixed) = tangents.split_at(nt);
+
+                let mut new_lambda = Vec::with_capacity(nt + ns);
+                for i in 0..nt {
+                    new_lambda.push(
+                        tape.value(d_theta_direct[i])
+                            .zip(&hvp[i], |p, q| p + q),
+                    );
+                }
+                for &id in d_state {
+                    new_lambda.push(tape.value(id).clone());
+                }
+                lambda = new_lambda;
+                for i in 0..d_eta.len() {
+                    let updated = d_eta[i]
+                        .zip(tape.value(d_eta_direct[i]), |p, q| p + q)
+                        .zip(&mixed[i], |p, q| p + q);
+                    d_eta[i] = updated;
+                }
+
+                peak_tape =
+                    peak_tape.max(tape.stats().bytes + tangent_bytes);
+                peak_nodes = peak_nodes.max(tape.stats().nodes);
+                peak_total = peak_total.max(
+                    tape.stats().bytes
+                        + tangent_bytes
+                        + (live_state - overlap),
+                );
+                // This backward step rebuilt step t's K/V projections.
+                // At a segment boundary the (θ_t, s_t) seed is an alias
+                // of a stored checkpoint; inside a segment it was
+                // rematerialised by the recompute pass above.
+                kv_peak = kv_peak.max(tape.stats().kv_bytes);
+                if t == seg_start {
+                    kv_ckpt_alias += tape.stats().kv_bytes;
+                } else {
+                    kv_remat += tape.stats().kv_bytes;
+                }
+            });
             tape.obs_mut().phase_end(Phase::BackwardVjp);
         }
 
@@ -701,6 +736,7 @@ pub fn mixflow_hypergrad_in(
             kv_peak_bytes: kv_peak,
             kv_ckpt_alias_bytes: kv_ckpt_alias,
             kv_remat_bytes: kv_remat,
+            kv_tangent_bytes: kv_tangent,
         },
     }
 }

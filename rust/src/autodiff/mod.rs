@@ -14,7 +14,16 @@
 //!   sweeps borrow ops, `Reshape` aliases its input buffer.  Batched
 //!   rank-3 matmul and column concat/split ops carry the multi-head
 //!   attention stack, and `Tape::mark_kv` tags K/V projections for the
-//!   [`mixflow::MemoryReport`] KV-reuse counters.
+//!   [`mixflow::MemoryReport`] KV-reuse counters (primal and JVP
+//!   tangent).  `Tape::plan_step` brackets each steady-state cycle for
+//!   the compiled-plan machinery.
+//! * [`plan`] — compiled step plans: a [`plan::StepPlan`] captures a
+//!   recorded cycle's op schedule, resolved shapes, last-use liveness
+//!   and static take schedule; replays arm the arena with a positional
+//!   slot table (direct indexing instead of free-list probing) and fall
+//!   back to dynamic taping when the topology changes.  Exports its
+//!   liveness as HLO text so [`crate::hlo::memory`] can be conformance-
+//!   checked against the native peak.
 //! * [`optim`] — differentiable inner-loop optimisers (SGD, momentum,
 //!   Adam) whose per-step update — moment state and bias correction
 //!   included — is built in-graph on the step tape.
@@ -52,11 +61,13 @@ pub mod arena;
 pub mod engine;
 pub mod mixflow;
 pub mod optim;
+pub mod plan;
 pub mod problems;
 pub mod tape;
 pub mod tensor;
 
 pub use arena::{ArenaStats, BufferArena};
+pub use plan::{PlanKey, PlanStats, StepPlan};
 pub use engine::{
     EngineBuilder, FdStrategy, HypergradEngine, HypergradMode,
     HypergradStrategy, MixflowStrategy, NaiveStrategy,

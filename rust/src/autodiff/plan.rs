@@ -1,0 +1,576 @@
+//! Compiled step plans: static schedules extracted from a recorded
+//! step-tape.
+//!
+//! MixFlow-MG's hot loop re-records the *same* tape topology T times per
+//! outer step (and again for every remat segment rebuild): only the leaf
+//! values and per-step payloads (data constants, label indices, Adam
+//! bias-correction immediates) change.  A [`StepPlan`] captures the
+//! stable part once — the topologically ordered op sequence with resolved
+//! shapes, per-node last-use liveness, and the positional buffer-take
+//! schedule — so subsequent cycles replay against a static buffer-slot
+//! assignment instead of probing the [`super::arena::BufferArena`]
+//! free-list `HashMap` per node.
+//!
+//! The lifecycle (driven by [`super::tape::Tape::plan_step`]):
+//!
+//! 1. **Record** — the first cycle under a [`PlanKey`] runs exactly as a
+//!    dynamic tape; at cycle end the plan is **compiled** from the
+//!    recorded nodes.
+//! 2. **Replay** — later cycles re-record through the same builder code
+//!    (payloads are per-step, so ops must re-execute), but every buffer
+//!    take is served from the plan's slot for that position: direct
+//!    indexing, no free-list probe, and bit-for-bit the same values
+//!    because the plan never changes *what* is computed, only *where*
+//!    the output buffer comes from.
+//! 3. **Fallback** — a take whose length disagrees with the schedule, or
+//!    a recorded cycle whose ops/shapes no longer match the plan,
+//!    invalidates it: the cycle completes on the dynamic free-list path
+//!    (values stay correct by construction) and the plan is recompiled
+//!    from the cycle just recorded.
+//!
+//! Plan signatures are deliberately payload-insensitive: `Scale`/`Offset`
+//! immediates, `Const` values and gather/scatter index *contents* vary
+//! across steps without changing the schedule, so they are excluded from
+//! the match.  Structure — operand wiring, transpose flags, shapes,
+//! index lengths — is pinned exactly.
+//!
+//! The compiled liveness doubles as the calibration vehicle for
+//! [`crate::hlo::memory`]: [`StepPlan::to_hlo_text`] exports the recorded
+//! graph in HLO text form under the *same* buffer model the simulator
+//! uses (aliases forward liveness, params/constants static, ROOT survives
+//! to the end), so `analyze_text(..).peak_dynamic` must equal
+//! [`StepPlan::peak_bytes`] exactly — a conformance test pins this.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use super::tape::{NodeId, Op};
+use super::tensor::ELEM_BYTES;
+
+/// Which steady-state cycle a plan describes.  One persistent tape holds
+/// at most one plan per key; the keys partition the cycles the three
+/// hypergradient strategies run:
+///
+/// * [`PlanKey::Inner`] — one inner optimisation step
+///   (`inner_step_values_into`): the MixFlow forward sweep, remat segment
+///   rebuilds and FD unrolls all share it.
+/// * [`PlanKey::Backward`] — the MixFlow per-step backward cycle
+///   (VJP + JVP overlay).
+/// * [`PlanKey::Outer`] — an outer-loss evaluation cycle (MixFlow's
+///   λ-seed, FD's probe losses).
+/// * [`PlanKey::Naive`] — the naive strategy's monolithic
+///   unroll-plus-reverse tape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKey {
+    Inner,
+    Backward,
+    Outer,
+    Naive,
+}
+
+impl PlanKey {
+    /// Number of plan keys (sizing the tape's plan table).
+    pub const COUNT: usize = 4;
+
+    pub(crate) fn idx(self) -> usize {
+        match self {
+            PlanKey::Inner => 0,
+            PlanKey::Backward => 1,
+            PlanKey::Outer => 2,
+            PlanKey::Naive => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanKey::Inner => "inner",
+            PlanKey::Backward => "backward",
+            PlanKey::Outer => "outer",
+            PlanKey::Naive => "naive",
+        }
+    }
+}
+
+/// Lifetime counters for a tape's plan machinery (telemetry-free mirror
+/// of the `plan.compiles` / `plan.replays` / `plan.fallbacks` obs
+/// counters, so tests and reports can read them without enabling
+/// tracing).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanStats {
+    /// Plans compiled from a recorded cycle (first cycles + recompiles
+    /// after a fallback).
+    pub compiles: u64,
+    /// Cycles replayed against a valid plan.
+    pub replays: u64,
+    /// Replays whose recorded cycle diverged from the plan (the cycle
+    /// still completed correctly on the dynamic path).
+    pub fallbacks: u64,
+}
+
+/// Payload-insensitive structural signature of one tape op.  Everything
+/// that determines the buffer schedule is kept (operand wiring, transpose
+/// flags, split offsets, index lengths); everything that legitimately
+/// varies across steady-state steps (float immediates, constant values,
+/// index contents) is dropped.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum OpSig {
+    Leaf,
+    Const,
+    Add(NodeId, NodeId),
+    Sub(NodeId, NodeId),
+    Mul(NodeId, NodeId),
+    Div(NodeId, NodeId),
+    Scale(NodeId),
+    Offset(NodeId),
+    Matmul { a: NodeId, b: NodeId, ta: bool, tb: bool },
+    BatchMatmul { a: NodeId, b: NodeId, ta: bool, tb: bool },
+    ConcatCols(Vec<NodeId>),
+    SplitCols(NodeId, usize, usize),
+    Relu(NodeId),
+    Step(NodeId),
+    Tanh(NodeId),
+    Exp(NodeId),
+    Sqrt(NodeId),
+    Sum(NodeId),
+    Broadcast(NodeId),
+    RowSum(NodeId),
+    RowBroadcast(NodeId, usize),
+    ColSum(NodeId),
+    ColBroadcast(NodeId, usize),
+    SoftmaxRows(NodeId),
+    LogSumExpRows(NodeId),
+    GatherCols(NodeId, usize),
+    ScatterCols(NodeId, usize, usize),
+    Reshape(NodeId),
+}
+
+impl OpSig {
+    pub(crate) fn of(op: &Op) -> OpSig {
+        match op {
+            Op::Leaf => OpSig::Leaf,
+            Op::Const => OpSig::Const,
+            Op::Add(a, b) => OpSig::Add(*a, *b),
+            Op::Sub(a, b) => OpSig::Sub(*a, *b),
+            Op::Mul(a, b) => OpSig::Mul(*a, *b),
+            Op::Div(a, b) => OpSig::Div(*a, *b),
+            Op::Scale(a, _) => OpSig::Scale(*a),
+            Op::Offset(a, _) => OpSig::Offset(*a),
+            Op::Matmul { a, b, ta, tb } => {
+                OpSig::Matmul { a: *a, b: *b, ta: *ta, tb: *tb }
+            }
+            Op::BatchMatmul { a, b, ta, tb } => {
+                OpSig::BatchMatmul { a: *a, b: *b, ta: *ta, tb: *tb }
+            }
+            Op::ConcatCols(parts) => OpSig::ConcatCols(parts.clone()),
+            Op::SplitCols(a, o, w) => OpSig::SplitCols(*a, *o, *w),
+            Op::Relu(a) => OpSig::Relu(*a),
+            Op::Step(a) => OpSig::Step(*a),
+            Op::Tanh(a) => OpSig::Tanh(*a),
+            Op::Exp(a) => OpSig::Exp(*a),
+            Op::Sqrt(a) => OpSig::Sqrt(*a),
+            Op::Sum(a) => OpSig::Sum(*a),
+            Op::Broadcast(a, _) => OpSig::Broadcast(*a),
+            Op::RowSum(a) => OpSig::RowSum(*a),
+            Op::RowBroadcast(a, n) => OpSig::RowBroadcast(*a, *n),
+            Op::ColSum(a) => OpSig::ColSum(*a),
+            Op::ColBroadcast(a, m) => OpSig::ColBroadcast(*a, *m),
+            Op::SoftmaxRows(a) => OpSig::SoftmaxRows(*a),
+            Op::LogSumExpRows(a) => OpSig::LogSumExpRows(*a),
+            Op::GatherCols(a, idx) => OpSig::GatherCols(*a, idx.len()),
+            Op::ScatterCols(a, idx, n) => {
+                OpSig::ScatterCols(*a, idx.len(), *n)
+            }
+            Op::Reshape(a, _) => OpSig::Reshape(*a),
+        }
+    }
+
+    /// Operand node ids, appended to `out` (reused scratch).
+    fn operands_into(&self, out: &mut Vec<NodeId>) {
+        out.clear();
+        match self {
+            OpSig::Leaf | OpSig::Const => {}
+            OpSig::Add(a, b)
+            | OpSig::Sub(a, b)
+            | OpSig::Mul(a, b)
+            | OpSig::Div(a, b)
+            | OpSig::Matmul { a, b, .. }
+            | OpSig::BatchMatmul { a, b, .. } => out.extend([*a, *b]),
+            OpSig::ConcatCols(parts) => out.extend_from_slice(parts),
+            OpSig::Scale(a)
+            | OpSig::Offset(a)
+            | OpSig::SplitCols(a, _, _)
+            | OpSig::Relu(a)
+            | OpSig::Step(a)
+            | OpSig::Tanh(a)
+            | OpSig::Exp(a)
+            | OpSig::Sqrt(a)
+            | OpSig::Sum(a)
+            | OpSig::Broadcast(a)
+            | OpSig::RowSum(a)
+            | OpSig::RowBroadcast(a, _)
+            | OpSig::ColSum(a)
+            | OpSig::ColBroadcast(a, _)
+            | OpSig::SoftmaxRows(a)
+            | OpSig::LogSumExpRows(a)
+            | OpSig::GatherCols(a, _)
+            | OpSig::ScatterCols(a, _, _)
+            | OpSig::Reshape(a) => out.push(*a),
+        }
+    }
+
+    /// Does the builder for this op draw exactly one arena buffer?
+    /// Leaves and constants share their caller's buffer; `Reshape`
+    /// aliases its input.  Everything else routes through `arena_tensor`
+    /// exactly once, in push order — the invariant the positional slot
+    /// assignment rests on.
+    pub(crate) fn takes_buffer(&self) -> bool {
+        !matches!(self, OpSig::Leaf | OpSig::Const | OpSig::Reshape(_))
+    }
+}
+
+/// A compiled step plan: the static schedule of one steady-state cycle.
+pub struct StepPlan {
+    /// Per-node structural signatures (payload-insensitive).
+    sigs: Vec<OpSig>,
+    /// Per-node resolved output shapes.
+    shapes: Vec<Vec<usize>>,
+    /// Element counts of the arena takes, in take (= push) order over
+    /// buffer-owning nodes.  Shared with the arena while armed.
+    take_lens: Arc<[usize]>,
+    /// Per-node index of the last op consuming it (the node's own index
+    /// when nothing does; `nodes()` for the surviving ROOT).  Aliases
+    /// forward their uses to the owning node, mirroring
+    /// [`crate::hlo::memory`].
+    last_use: Vec<usize>,
+    /// Peak live bytes over the schedule under last-use liveness —
+    /// the exact quantity `hlo::memory::MemoryReport::peak_dynamic`
+    /// estimates for the same graph.
+    peak_bytes: usize,
+}
+
+impl StepPlan {
+    /// Compile a plan from a recorded cycle's `(op, shape)` sequence.
+    pub(crate) fn compile<'a, I>(nodes: I) -> StepPlan
+    where
+        I: Iterator<Item = (&'a Op, &'a [usize])>,
+    {
+        let mut sigs = Vec::new();
+        let mut shapes: Vec<Vec<usize>> = Vec::new();
+        let mut take_lens = Vec::new();
+        for (op, shape) in nodes {
+            let sig = OpSig::of(op);
+            if sig.takes_buffer() {
+                take_lens.push(shape.iter().product::<usize>());
+            }
+            sigs.push(sig);
+            shapes.push(shape.to_vec());
+        }
+        let n = sigs.len();
+
+        // Alias-resolved buffer owner per node: `None` for statically
+        // backed nodes (leaves, constants and views of them).
+        let mut owner: Vec<Option<usize>> = Vec::with_capacity(n);
+        for (i, sig) in sigs.iter().enumerate() {
+            owner.push(match sig {
+                OpSig::Leaf | OpSig::Const => None,
+                OpSig::Reshape(a) => owner[*a],
+                _ => Some(i),
+            });
+        }
+
+        // Last use per node (by owning buffer), ROOT = final node
+        // surviving to the end — the same model `hlo::memory` walks.
+        let mut last_use: Vec<usize> = (0..n).collect();
+        let mut operands = Vec::new();
+        for (i, sig) in sigs.iter().enumerate() {
+            sig.operands_into(&mut operands);
+            for &a in &operands {
+                if let Some(o) = owner[a] {
+                    last_use[o] = i;
+                }
+            }
+        }
+        if let Some(&Some(root)) = owner.last() {
+            last_use[root] = n;
+        }
+
+        // Program-order walk: allocate at definition, free after last
+        // use, track the peak.
+        let mut frees: Vec<Vec<usize>> = vec![Vec::new(); n + 1];
+        let mut live = 0usize;
+        let mut peak = 0usize;
+        for i in 0..n {
+            if owner[i] == Some(i) {
+                let bytes =
+                    shapes[i].iter().product::<usize>() * ELEM_BYTES;
+                live += bytes;
+                frees[last_use[i]].push(bytes);
+            }
+            peak = peak.max(live);
+            for &b in &frees[i] {
+                live -= b;
+            }
+        }
+
+        StepPlan {
+            sigs,
+            shapes,
+            take_lens: take_lens.into(),
+            last_use,
+            peak_bytes: peak,
+        }
+    }
+
+    /// Does a just-recorded cycle match this plan structurally?
+    pub(crate) fn matches<'a, I>(&self, nodes: I) -> bool
+    where
+        I: Iterator<Item = (&'a Op, &'a [usize])>,
+    {
+        let mut count = 0usize;
+        for (i, (op, shape)) in nodes.enumerate() {
+            if i >= self.sigs.len()
+                || self.sigs[i] != OpSig::of(op)
+                || self.shapes[i] != shape
+            {
+                return false;
+            }
+            count += 1;
+        }
+        count == self.sigs.len()
+    }
+
+    /// Number of nodes in the compiled cycle.
+    pub fn nodes(&self) -> usize {
+        self.sigs.len()
+    }
+
+    /// Number of arena takes the cycle performs (buffer-owning nodes).
+    pub fn take_count(&self) -> usize {
+        self.take_lens.len()
+    }
+
+    /// The take schedule, shared with the arena while armed.
+    pub(crate) fn take_lens_arc(&self) -> Arc<[usize]> {
+        Arc::clone(&self.take_lens)
+    }
+
+    /// Peak live bytes of the schedule under last-use liveness.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Index of the last op consuming node `i` (its own index if unused;
+    /// `nodes()` for the ROOT's buffer, which survives the cycle).
+    pub fn last_use(&self, i: NodeId) -> usize {
+        self.last_use[i]
+    }
+
+    /// Export the compiled graph as HLO text for
+    /// [`crate::hlo::memory::analyze_text`].  The mapping preserves the
+    /// buffer model exactly: leaves → entry `parameter`s (static),
+    /// constants → `constant`s (static), `Reshape` → the simulator's
+    /// aliasing `reshape`, every buffer-owning op → a non-alias opcode
+    /// with its resolved `f64` shape, final node → ROOT.  With both
+    /// sides walking identical last-use liveness over identical byte
+    /// counts (`ELEM_BYTES` = `f64` = 8), the simulator's `peak_dynamic`
+    /// equals [`StepPlan::peak_bytes`] with zero tolerance.
+    pub fn to_hlo_text(&self) -> String {
+        let mut s = String::from("HloModule plan\n\nENTRY plan {\n");
+        let mut params = 0usize;
+        for (i, sig) in self.sigs.iter().enumerate() {
+            let root = if i + 1 == self.sigs.len() { "ROOT " } else { "" };
+            let shape = shape_text(&self.shapes[i]);
+            let body = match sig {
+                OpSig::Leaf => {
+                    let t = format!("parameter({params})");
+                    params += 1;
+                    t
+                }
+                OpSig::Const => "constant(0)".to_string(),
+                OpSig::Reshape(a) => format!("reshape(n{a})"),
+                OpSig::Add(a, b) => format!("add(n{a}, n{b})"),
+                OpSig::Sub(a, b) => format!("subtract(n{a}, n{b})"),
+                OpSig::Mul(a, b) => format!("multiply(n{a}, n{b})"),
+                OpSig::Div(a, b) => format!("divide(n{a}, n{b})"),
+                OpSig::Scale(a) => format!("scale(n{a})"),
+                OpSig::Offset(a) => format!("offset(n{a})"),
+                OpSig::Matmul { a, b, .. } => format!("dot(n{a}, n{b})"),
+                OpSig::BatchMatmul { a, b, .. } => {
+                    format!("batch-dot(n{a}, n{b})")
+                }
+                OpSig::ConcatCols(parts) => {
+                    let mut ops = String::new();
+                    for (k, p) in parts.iter().enumerate() {
+                        if k > 0 {
+                            ops.push_str(", ");
+                        }
+                        let _ = write!(ops, "n{p}");
+                    }
+                    format!("concatenate({ops})")
+                }
+                OpSig::SplitCols(a, _, _) => format!("slice(n{a})"),
+                OpSig::Relu(a) => format!("relu(n{a})"),
+                OpSig::Step(a) => format!("step(n{a})"),
+                OpSig::Tanh(a) => format!("tanh(n{a})"),
+                OpSig::Exp(a) => format!("exponential(n{a})"),
+                OpSig::Sqrt(a) => format!("sqrt(n{a})"),
+                OpSig::Sum(a) => format!("reduce-sum(n{a})"),
+                OpSig::Broadcast(a) => format!("broadcast(n{a})"),
+                OpSig::RowSum(a) => format!("row-sum(n{a})"),
+                OpSig::RowBroadcast(a, _) => format!("row-broadcast(n{a})"),
+                OpSig::ColSum(a) => format!("col-sum(n{a})"),
+                OpSig::ColBroadcast(a, _) => format!("col-broadcast(n{a})"),
+                OpSig::SoftmaxRows(a) => format!("softmax-rows(n{a})"),
+                OpSig::LogSumExpRows(a) => {
+                    format!("logsumexp-rows(n{a})")
+                }
+                OpSig::GatherCols(a, _) => format!("gather(n{a})"),
+                OpSig::ScatterCols(a, _, _) => format!("scatter(n{a})"),
+            };
+            let _ = writeln!(s, "  {root}n{i} = {shape} {body}");
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// `f64[2,3]{1,0}`-style shape text (descending layout, empty for
+/// scalars) — the grammar `hlo::parser` reads.
+fn shape_text(shape: &[usize]) -> String {
+    if shape.is_empty() {
+        return "f64[]".to_string();
+    }
+    let mut s = String::from("f64[");
+    for (i, d) in shape.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{d}");
+    }
+    s.push(']');
+    s.push('{');
+    for (i, d) in (0..shape.len()).rev().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{d}");
+    }
+    s.push('}');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc as StdArc;
+
+    fn sig_nodes(ops: &[(Op, Vec<usize>)]) -> StepPlan {
+        StepPlan::compile(
+            ops.iter().map(|(op, sh)| (op, sh.as_slice())),
+        )
+    }
+
+    #[test]
+    fn chain_liveness_peak_counts_two_intermediates() {
+        // leaf -> a -> b -> c (ROOT): at `b` both a and b are live; the
+        // ROOT c survives, so the walk peaks at b+c as well — 2 buffers.
+        let plan = sig_nodes(&[
+            (Op::Leaf, vec![4]),
+            (Op::Scale(0, 2.0), vec![4]),
+            (Op::Scale(1, 2.0), vec![4]),
+            (Op::Scale(2, 2.0), vec![4]),
+        ]);
+        assert_eq!(plan.take_count(), 3);
+        assert_eq!(plan.peak_bytes(), 2 * 4 * ELEM_BYTES);
+        // a's last use is b (index 2); the ROOT survives to the end.
+        assert_eq!(plan.last_use(1), 2);
+        assert_eq!(plan.last_use(3), 4);
+    }
+
+    #[test]
+    fn reshape_aliases_forward_liveness_to_owner() {
+        // owner -> reshape view -> consumer: the owner must stay live
+        // through the consumer, and the view itself owns nothing.
+        let plan = sig_nodes(&[
+            (Op::Leaf, vec![6]),
+            (Op::Scale(0, 1.0), vec![6]),
+            (Op::Reshape(1, vec![2, 3]), vec![2, 3]),
+            (Op::Scale(2, 1.0), vec![2, 3]),
+        ]);
+        assert_eq!(plan.take_count(), 2, "reshape must not take a buffer");
+        assert_eq!(plan.last_use(1), 3, "alias use extends the owner");
+    }
+
+    #[test]
+    fn matches_ignores_payloads_but_pins_structure() {
+        let base = vec![
+            (Op::Leaf, vec![2]),
+            (Op::Scale(0, 2.0), vec![2]),
+            (Op::Sum(1), vec![]),
+        ];
+        let plan = sig_nodes(&base);
+        // Same structure, different immediate: still a match.
+        let other = vec![
+            (Op::Leaf, vec![2]),
+            (Op::Scale(0, 7.5), vec![2]),
+            (Op::Sum(1), vec![]),
+        ];
+        assert!(plan.matches(
+            other.iter().map(|(op, sh)| (op, sh.as_slice()))
+        ));
+        // Different wiring: no match.
+        let rewired = vec![
+            (Op::Leaf, vec![2]),
+            (Op::Offset(0, 2.0), vec![2]),
+            (Op::Sum(1), vec![]),
+        ];
+        assert!(!plan.matches(
+            rewired.iter().map(|(op, sh)| (op, sh.as_slice()))
+        ));
+        // Shorter cycle: no match.
+        assert!(!plan.matches(
+            base[..2].iter().map(|(op, sh)| (op, sh.as_slice()))
+        ));
+    }
+
+    #[test]
+    fn index_length_is_structural_contents_are_not() {
+        let a: StdArc<[usize]> = StdArc::from(vec![0usize, 1]);
+        let b: StdArc<[usize]> = StdArc::from(vec![1usize, 0]);
+        let plan = sig_nodes(&[
+            (Op::Leaf, vec![2, 3]),
+            (Op::GatherCols(0, a), vec![2]),
+        ]);
+        let same_len = vec![
+            (Op::Leaf, vec![2, 3]),
+            (Op::GatherCols(0, b), vec![2]),
+        ];
+        assert!(plan.matches(
+            same_len.iter().map(|(op, sh)| (op, sh.as_slice()))
+        ));
+        let longer: StdArc<[usize]> = StdArc::from(vec![0usize, 1, 1]);
+        let diff = vec![
+            (Op::Leaf, vec![3, 3]),
+            (Op::GatherCols(0, longer), vec![3]),
+        ];
+        assert!(!plan.matches(
+            diff.iter().map(|(op, sh)| (op, sh.as_slice()))
+        ));
+    }
+
+    #[test]
+    fn hlo_export_round_trips_through_the_parser() {
+        let plan = sig_nodes(&[
+            (Op::Leaf, vec![2, 3]),
+            (Op::Const, vec![2, 3]),
+            (Op::Mul(0, 1), vec![2, 3]),
+            (Op::Reshape(2, vec![6]), vec![6]),
+            (Op::Sum(3), vec![]),
+        ]);
+        let text = plan.to_hlo_text();
+        let report = crate::hlo::memory::analyze_text(&text)
+            .expect("exported plan text must parse");
+        assert_eq!(report.peak_dynamic as usize, plan.peak_bytes());
+        assert_eq!(report.instructions, plan.nodes());
+    }
+}

@@ -27,12 +27,22 @@
 //! the JVP overlay reports the tangent bytes it *materialises* — aliased
 //! pass-through tangents and zero tangents cost nothing, mirroring the
 //! paper's Ω-sparsity exploitation.
+//!
+//! Steady-state cycles go through [`Tape::plan_step`]: the first cycle
+//! under a [`PlanKey`] records dynamically and **compiles** a
+//! [`StepPlan`] (static op schedule, last-use liveness, positional
+//! buffer-take assignment); later cycles **replay** — the builders
+//! re-execute (payloads are per-step) but every buffer take is served by
+//! direct slot indexing instead of an arena free-list probe, and any
+//! topology change falls back to the dynamic path and recompiles.  See
+//! [`super::plan`] for the lifecycle and invariants.
 
 use std::sync::Arc;
 
 use super::arena::{ArenaStats, BufferArena};
+use super::plan::{PlanKey, PlanStats, StepPlan};
 use super::tensor::Tensor;
-use crate::obs::{Counter, Gauge, Telemetry};
+use crate::obs::{Counter, Gauge, Phase, Telemetry};
 
 /// Index of a node on the tape.
 pub type NodeId = usize;
@@ -120,12 +130,36 @@ pub struct TapeStats {
     pub kv_bytes: usize,
 }
 
+/// One compiled plan plus the buffers parked for its next replay.
+struct PlanEntry {
+    plan: StepPlan,
+    /// Uniquely-owned buffers awaiting the next replay, one optional
+    /// slot per scheduled take, in take order.
+    slots: Vec<Option<Arc<Vec<f64>>>>,
+}
+
 /// The Wengert list.
 pub struct Tape {
     nodes: Vec<Node>,
     bytes: usize,
     kv_bytes: usize,
+    /// Nodes tagged via [`Tape::mark_kv`] this cycle — the JVP overlay
+    /// reads them to split tangent bytes into a KV-specific ledger.
+    kv_marks: Vec<NodeId>,
+    /// Tangent bytes the last [`Tape::jvp`] sweep materialised for
+    /// marked K/V nodes.
+    jvp_kv_bytes: usize,
     arena: BufferArena,
+    /// Compiled step plans, one optional entry per [`PlanKey`].
+    plans: Vec<Option<PlanEntry>>,
+    /// Key of the cycle whose nodes currently sit on the tape — the
+    /// drain at the next [`Tape::plan_step`] parks their buffers into
+    /// that plan's slots.
+    last_cycle_key: Option<PlanKey>,
+    plan_enabled: bool,
+    plan_stats: PlanStats,
+    /// The current cycle runs against an armed arena.
+    replaying: bool,
     /// Telemetry recorder (disabled by default).  Living here means the
     /// strategies — which already hold `&mut Tape` — and the tape's own
     /// hot paths all reach the same recorder without signature changes.
@@ -310,13 +344,28 @@ fn arena_tensor(
     Tensor::from_shared(shape, buf)
 }
 
+/// Does this op's builder draw a buffer from the arena?  Leaves and
+/// constants share their caller's buffer, `Reshape` aliases its input;
+/// every other builder calls [`arena_tensor`] exactly once before its
+/// push — the positional invariant the plan slot assignment rests on.
+fn takes_buffer(op: &Op) -> bool {
+    !matches!(op, Op::Leaf | Op::Const | Op::Reshape(..))
+}
+
 impl Tape {
     pub fn new() -> Tape {
         Tape {
             nodes: Vec::new(),
             bytes: 0,
             kv_bytes: 0,
+            kv_marks: Vec::new(),
+            jvp_kv_bytes: 0,
             arena: BufferArena::new(),
+            plans: (0..PlanKey::COUNT).map(|_| None).collect(),
+            last_cycle_key: None,
+            plan_enabled: true,
+            plan_stats: PlanStats::default(),
+            replaying: false,
             obs: Telemetry::new(),
         }
     }
@@ -363,10 +412,18 @@ impl Tape {
     pub fn mark_kv(&mut self, id: NodeId) {
         let bytes = self.nodes[id].value.bytes();
         self.kv_bytes += bytes;
+        self.kv_marks.push(id);
         if self.obs.enabled() {
             self.obs.count(Counter::KvBytes, bytes as u64);
             self.obs.gauge_max(Gauge::KvPeakBytes, self.kv_bytes as u64);
         }
+    }
+
+    /// Tangent bytes the most recent [`Tape::jvp`] sweep materialised
+    /// for nodes tagged via [`Tape::mark_kv`] — the JVP-overlay half of
+    /// the KV ledger (the primal half is [`TapeStats::kv_bytes`]).
+    pub fn jvp_kv_bytes(&self) -> usize {
+        self.jvp_kv_bytes
     }
 
     /// Traffic counters of the tape's buffer arena.
@@ -379,12 +436,187 @@ impl Tape {
     /// (checkpoints, gradients, aliases) keep their buffers alive.  All
     /// `NodeId`s from before the reset are invalidated.
     pub fn reset(&mut self) {
-        let Tape { nodes, arena, bytes, kv_bytes, .. } = self;
+        let Tape { nodes, arena, bytes, kv_bytes, kv_marks, last_cycle_key, .. } =
+            self;
         for node in nodes.drain(..) {
             arena.recycle(node.value);
         }
         *bytes = 0;
         *kv_bytes = 0;
+        kv_marks.clear();
+        // The drained buffers went to the free list, so positional
+        // parking for the previous key no longer applies.
+        *last_cycle_key = None;
+    }
+
+    // ---- compiled step plans -------------------------------------------
+
+    /// Enable or disable compiled step plans (on by default).  Disabled,
+    /// [`Tape::plan_step`] degenerates to [`Tape::reset`] + record —
+    /// the pre-plan dynamic behaviour, bit-for-bit.
+    pub fn set_plan_enabled(&mut self, enabled: bool) {
+        self.plan_enabled = enabled;
+    }
+
+    pub fn plan_enabled(&self) -> bool {
+        self.plan_enabled
+    }
+
+    /// Lifetime compile/replay/fallback counters (telemetry-free mirror
+    /// of the `plan.*` obs counters).
+    pub fn plan_stats(&self) -> PlanStats {
+        self.plan_stats
+    }
+
+    /// The compiled plan for `key`, if one exists.
+    pub fn plan(&self, key: PlanKey) -> Option<&StepPlan> {
+        self.plans[key.idx()].as_ref().map(|e| &e.plan)
+    }
+
+    /// Run one record-or-replay cycle under `key`.  Subsumes the
+    /// per-cycle [`Tape::reset`]: the previous cycle's nodes are drained
+    /// on entry (parking their buffers into the previous key's plan
+    /// slots when one exists), the closure records the cycle, and on
+    /// exit the plan for `key` is compiled (first cycle), validated
+    /// (replay) or dropped-and-recompiled (fallback).  Cycles must not
+    /// nest — a `plan_step` closure must not itself call `plan_step`.
+    pub fn plan_step<R>(
+        &mut self,
+        key: PlanKey,
+        f: impl FnOnce(&mut Tape) -> R,
+    ) -> R {
+        self.plan_begin(key);
+        let out = f(self);
+        self.plan_end(key);
+        out
+    }
+
+    fn plan_begin(&mut self, key: PlanKey) {
+        if !self.plan_enabled {
+            self.reset();
+            return;
+        }
+        self.drain_cycle();
+        if let Some(entry) = self.plans[key.idx()].as_mut() {
+            let mut slots = std::mem::take(&mut entry.slots);
+            let lens = entry.plan.take_lens_arc();
+            // First replay after a compile has no parked buffers yet;
+            // missing slots simply serve from the free list.
+            slots.resize(lens.len(), None);
+            self.arena.arm(slots, lens);
+            self.replaying = true;
+            self.obs.phase_begin(Phase::PlanReplay);
+        }
+    }
+
+    /// Drain the previous cycle's nodes.  With a plan for the previous
+    /// key, uniquely-owned buffers of take-backed nodes park
+    /// positionally into that plan's slots; everything else recycles
+    /// onto the free list exactly like [`Tape::reset`].  The walk runs
+    /// in reverse node order so `Reshape` aliases release their clones
+    /// before the owning node is inspected for uniqueness.
+    fn drain_cycle(&mut self) {
+        let Tape {
+            nodes,
+            arena,
+            bytes,
+            kv_bytes,
+            kv_marks,
+            plans,
+            last_cycle_key,
+            ..
+        } = self;
+        *bytes = 0;
+        *kv_bytes = 0;
+        kv_marks.clear();
+        let prev = *last_cycle_key;
+        let Some(entry) = prev.and_then(|k| plans[k.idx()].as_mut()) else {
+            for node in nodes.drain(..) {
+                arena.recycle(node.value);
+            }
+            return;
+        };
+        let n_takes = entry.plan.take_count();
+        let mut slots = std::mem::take(&mut entry.slots);
+        slots.clear();
+        slots.resize(n_takes, None);
+        let mut pos = nodes.iter().filter(|n| takes_buffer(&n.op)).count();
+        for node in nodes.drain(..).rev() {
+            if takes_buffer(&node.op) {
+                pos -= 1;
+                let arc = node.value.into_data().into_arc();
+                if Arc::strong_count(&arc) != 1 {
+                    continue; // escaped to a caller: stays alive there
+                }
+                if pos < n_takes {
+                    arena.note_parked(arc.len());
+                    slots[pos] = Some(arc);
+                } else {
+                    arena.park(arc);
+                }
+            } else {
+                arena.recycle(node.value);
+            }
+        }
+        entry.slots = slots;
+    }
+
+    fn plan_end(&mut self, key: PlanKey) {
+        if !self.plan_enabled {
+            return;
+        }
+        self.last_cycle_key = Some(key);
+        if self.replaying {
+            self.replaying = false;
+            self.obs.phase_end(Phase::PlanReplay);
+            let (mut slots, takes, diverged) = self.arena.disarm();
+            let valid = {
+                let entry =
+                    self.plans[key.idx()].as_ref().expect("armed without a plan");
+                !diverged
+                    && takes >= entry.plan.take_count()
+                    && entry.plan.matches(
+                        self.nodes
+                            .iter()
+                            .map(|n| (&n.op, n.value.shape.as_slice())),
+                    )
+            };
+            if valid {
+                self.plan_stats.replays += 1;
+                if self.obs.enabled() {
+                    self.obs.count(Counter::PlanReplays, 1);
+                }
+                slots.clear();
+                self.plans[key.idx()].as_mut().unwrap().slots = slots;
+            } else {
+                // Topology changed under the plan.  The cycle itself
+                // completed on the dynamic path (values are correct);
+                // drop the stale plan, return its parked buffers to the
+                // free list, and recompile from the cycle just recorded.
+                self.plan_stats.fallbacks += 1;
+                if self.obs.enabled() {
+                    self.obs.count(Counter::PlanFallbacks, 1);
+                }
+                for arc in slots.into_iter().flatten() {
+                    self.arena.park(arc);
+                }
+                self.plans[key.idx()] = None;
+                self.compile_plan(key);
+            }
+        } else if self.plans[key.idx()].is_none() {
+            self.compile_plan(key);
+        }
+    }
+
+    fn compile_plan(&mut self, key: PlanKey) {
+        let plan = StepPlan::compile(
+            self.nodes.iter().map(|n| (&n.op, n.value.shape.as_slice())),
+        );
+        self.plan_stats.compiles += 1;
+        if self.obs.enabled() {
+            self.obs.count(Counter::PlanCompiles, 1);
+        }
+        self.plans[key.idx()] = Some(PlanEntry { plan, slots: Vec::new() });
     }
 
     fn push(&mut self, op: Op, value: Tensor) -> NodeId {
@@ -999,7 +1231,7 @@ impl Tape {
         seeds: &[(NodeId, Tensor)],
         targets: &[NodeId],
     ) -> (Vec<Tensor>, usize) {
-        let Tape { nodes, arena, .. } = self;
+        let Tape { nodes, arena, kv_marks, .. } = self;
         for (id, t) in seeds {
             assert_eq!(
                 t.shape, nodes[*id].value.shape,
@@ -1373,10 +1605,24 @@ impl Tape {
                 None => Tensor::zeros(&nodes[t].value.shape),
             })
             .collect();
+        // KV ledger for the tangent overlay: tangents flowing through
+        // nodes tagged by `mark_kv` on the primal sweep are the K/V
+        // duals mixflow materialises per step.  Counted per sweep, not
+        // accumulated — the backward step reads it after each `jvp`.
+        let mut kv_tangent = 0usize;
+        for &id in kv_marks.iter() {
+            if let Some(t) = tan.get(id).and_then(Option::as_ref) {
+                kv_tangent += t.bytes();
+            }
+        }
         // The returned targets were cloned above, so their buffers are
         // shared and survive; everything else goes back to the arena.
         for t in tan.into_iter().flatten() {
             arena.recycle(t);
+        }
+        self.jvp_kv_bytes = kv_tangent;
+        if self.obs.enabled() {
+            self.obs.count(Counter::KvTangentBytes, kv_tangent as u64);
         }
         (out, bytes)
     }
@@ -1719,5 +1965,86 @@ mod tests {
             )
         });
         assert!(shared, "scatter adjoint must share the gather index Arc");
+    }
+
+    /// One record-or-replay cycle of a tiny fixed-topology step.
+    fn plan_cycle(tape: &mut Tape, c: f64) -> f64 {
+        tape.plan_step(PlanKey::Inner, |tape| {
+            let x = tape.leaf(Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]));
+            let s = tape.scale(x, c);
+            let m = tape.mul(s, x);
+            let y = tape.sum(m);
+            tape.value(y).item()
+        })
+    }
+
+    #[test]
+    fn plan_replay_is_warm_after_first_replay() {
+        let mut tape = Tape::new();
+        let v0 = plan_cycle(&mut tape, 2.0); // records + compiles
+        let v1 = plan_cycle(&mut tape, 2.0); // first replay: fills slots
+        let a1 = tape.arena_stats();
+        let v2 = plan_cycle(&mut tape, 2.0); // warm replay
+        let a2 = tape.arena_stats();
+        assert_eq!(v0, v1);
+        assert_eq!(v1, v2);
+        assert_eq!(
+            a2.allocs, a1.allocs,
+            "a warm replay must not touch the allocator"
+        );
+        let stats = tape.plan_stats();
+        assert_eq!(stats.compiles, 1);
+        assert_eq!(stats.replays, 2);
+        assert_eq!(stats.fallbacks, 0);
+    }
+
+    #[test]
+    fn topology_change_falls_back_and_recompiles() {
+        let mut tape = Tape::new();
+        let _ = plan_cycle(&mut tape, 2.0);
+        // Same key, different topology: Offset instead of Scale+Mul.
+        let v = tape.plan_step(PlanKey::Inner, |tape| {
+            let x = tape.leaf(Tensor::new(vec![4], vec![1.0, 1.0, 1.0, 1.0]));
+            let o = tape.offset(x, 1.0);
+            let y = tape.sum(o);
+            tape.value(y).item()
+        });
+        assert_eq!(v, 8.0, "fallback cycle still computes correct values");
+        let stats = tape.plan_stats();
+        assert_eq!(stats.compiles, 2, "fallback recompiles from the new cycle");
+        assert_eq!(stats.fallbacks, 1);
+        assert_eq!(stats.replays, 0);
+    }
+
+    #[test]
+    fn payload_changes_replay_without_fallback() {
+        let mut tape = Tape::new();
+        let v0 = plan_cycle(&mut tape, 2.0);
+        let v1 = plan_cycle(&mut tape, 3.0); // same topology, new immediate
+        assert_eq!(v0, 2.0 * 30.0);
+        assert_eq!(v1, 3.0 * 30.0);
+        let stats = tape.plan_stats();
+        assert_eq!(stats.compiles, 1, "payload change must not recompile");
+        assert_eq!(stats.replays, 1);
+        assert_eq!(stats.fallbacks, 0);
+    }
+
+    #[test]
+    fn jvp_counts_tangents_of_marked_kv_nodes() {
+        let mut tape = Tape::new();
+        let x = tape.leaf(Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]));
+        let k = tape.scale(x, 2.0);
+        tape.mark_kv(k);
+        let m = tape.mul(k, x);
+        let y = tape.sum(m);
+        let (_, _) =
+            tape.jvp(&[(x, Tensor::new(vec![4], vec![1.0; 4]))], &[y]);
+        assert_eq!(
+            tape.jvp_kv_bytes(),
+            4 * 8,
+            "the marked node's materialised tangent is KV traffic"
+        );
+        let (_, _) = tape.jvp(&[], &[y]);
+        assert_eq!(tape.jvp_kv_bytes(), 0, "no seeds, no tangent, no KV bytes");
     }
 }

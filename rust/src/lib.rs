@@ -19,7 +19,11 @@
 //!   concat/split for head-stacking), differentiable inner optimisers
 //!   (SGD, momentum, Adam — updates built in-graph), the naive / mixflow
 //!   bilevel paths with block rematerialisation and a KV-reuse analysis
-//!   for the attention workloads, and
+//!   for the attention workloads, compiled step plans
+//!   (`autodiff::plan`: static tape schedules with liveness-driven
+//!   buffer-slot assignment, compiled once per cycle topology and
+//!   replayed every steady-state step, with dynamic fallback on
+//!   topology changes), and
 //!   `autodiff::engine::HypergradEngine` — the unified persistent solver
 //!   API (one tape + arena reused across outer steps; naive, mixflow and
 //!   fd strategies behind a fluent builder) that every native driver

@@ -225,7 +225,8 @@ impl NativeMetaTrainer {
             .mode(self.engine.mode())
             .checkpoint(self.engine.policy())
             .fd_epsilon(self.engine.fd_epsilon())
-            .telemetry(self.engine.telemetry_enabled());
+            .telemetry(self.engine.telemetry_enabled())
+            .plan(self.engine.plan_enabled());
         if let Some(opt) = self.engine.inner_opt() {
             base = base.inner_opt(opt);
         }
@@ -255,6 +256,17 @@ impl NativeMetaTrainer {
     /// Central-difference step for the fd path.
     pub fn with_fd_epsilon(mut self, epsilon: f64) -> NativeMetaTrainer {
         self.reconfigure(|b| b.fd_epsilon(epsilon));
+        self
+    }
+
+    /// Enable/disable compiled step plans on the engine tape (on by
+    /// default; see `autodiff::plan`).  Off means every cycle records
+    /// dynamically against the free-list arena — the pre-plan behaviour,
+    /// kept reachable for A/B timing in the walltime bench.
+    pub fn with_plan(mut self, on: bool) -> NativeMetaTrainer {
+        if on != self.engine.plan_enabled() {
+            self.reconfigure(|b| b.plan(on));
+        }
         self
     }
 
@@ -397,8 +409,8 @@ impl SweepSpec {
             tasks: vec![cfg.task],
             inner_opts: vec![cfg.inner_opt],
             modes: vec![cfg.mode],
-            heads: vec![1],
-            batch: 1,
+            heads: vec![cfg.heads.max(1)],
+            batch: cfg.batch.max(1),
             remat: cfg.remat,
             fd_epsilon: crate::autodiff::engine::DEFAULT_FD_EPSILON,
             unroll: cfg.unroll,
@@ -501,6 +513,48 @@ pub struct NativeSweepConfig {
     pub remat: CheckpointPolicy,
     pub unroll: usize,
     pub steps: usize,
+    /// Attention head count (first-class sweep knob; the non-attention
+    /// tasks ignore it but carry it in their labels' `hH` segment).
+    pub heads: usize,
+    /// Sequences per attention batch (ignored by the other tasks).
+    pub batch: usize,
+}
+
+impl NativeSweepConfig {
+    /// The single-head, single-sequence baseline for `task × mode ×
+    /// opt`: the historical constructor shape, so call sites that never
+    /// cared about attention geometry keep their one-liner.
+    pub fn new(
+        task: NativeTask,
+        mode: HypergradMode,
+        inner_opt: InnerOptimiser,
+        remat: CheckpointPolicy,
+        unroll: usize,
+        steps: usize,
+    ) -> NativeSweepConfig {
+        NativeSweepConfig {
+            task,
+            mode,
+            inner_opt,
+            remat,
+            unroll,
+            steps,
+            heads: 1,
+            batch: 1,
+        }
+    }
+
+    /// Attention geometry in one call (clamped to ≥ 1 like the trainer
+    /// knobs).
+    pub fn with_attention_shape(
+        mut self,
+        heads: usize,
+        batch: usize,
+    ) -> NativeSweepConfig {
+        self.heads = heads.max(1);
+        self.batch = batch.max(1);
+        self
+    }
 }
 
 /// One seed's result from [`run_seed_sweep`].
@@ -911,14 +965,14 @@ mod tests {
 
     #[test]
     fn seed_sweep_runs_on_the_pool_and_sorts_by_seed() {
-        let cfg = NativeSweepConfig {
-            task: NativeTask::HyperLr,
-            mode: HypergradMode::Mixflow,
-            inner_opt: InnerOptimiser::Sgd,
-            remat: CheckpointPolicy::Full,
-            unroll: 2,
-            steps: 2,
-        };
+        let cfg = NativeSweepConfig::new(
+            NativeTask::HyperLr,
+            HypergradMode::Mixflow,
+            InnerOptimiser::Sgd,
+            CheckpointPolicy::Full,
+            2,
+            2,
+        );
         let runs = run_seed_sweep(cfg, 11, 3);
         assert_eq!(runs.len(), 3);
         let seeds: Vec<u64> = runs.iter().map(|r| r.seed).collect();
@@ -934,6 +988,35 @@ mod tests {
             runs.windows(2).any(|w| w[0].report.losses != w[1].report.losses),
             "all seeds produced identical losses"
         );
+    }
+
+    #[test]
+    fn seed_sweep_carries_the_attention_geometry() {
+        // Satellite of the plan PR: the heads axis is a first-class
+        // NativeSweepConfig knob, so a seed sweep can cover multi-head
+        // batched attention without graduating to a full SweepSpec.
+        let cfg = NativeSweepConfig::new(
+            NativeTask::Attention,
+            HypergradMode::Mixflow,
+            InnerOptimiser::adam(),
+            CheckpointPolicy::Full,
+            2,
+            1,
+        )
+        .with_attention_shape(2, 2);
+        assert_eq!((cfg.heads, cfg.batch), (2, 2));
+        let runs = run_seed_sweep(cfg, 5, 2);
+        assert_eq!(runs.len(), 2);
+        for run in &runs {
+            assert!(run.report.losses[0].is_finite());
+            assert!(
+                run.report.artifact.ends_with("attention/mixflow/adam/h2/b2"),
+                "got {:?}",
+                run.report.artifact
+            );
+            let mem = run.memory.as_ref().expect("memory recorded");
+            assert!(mem.kv_peak_bytes > 0, "multi-head K/V must be tagged");
+        }
     }
 
     #[test]

@@ -44,11 +44,20 @@ pub enum Counter {
     /// Inner steps re-run by the mixflow backward sweep to rebuild
     /// intra-segment states (0 under full checkpointing).
     RematRebuilds,
+    /// Bytes of JVP tangents flowing through K/V-marked nodes
+    /// (the tangent-overlay extension of `KvBytes`).
+    KvTangentBytes,
+    /// Step plans compiled from a recorded cycle (`autodiff::plan`).
+    PlanCompiles,
+    /// Cycles replayed under an armed plan that validated cleanly.
+    PlanReplays,
+    /// Armed replays whose topology diverged, forcing a recompile.
+    PlanFallbacks,
 }
 
 impl Counter {
     /// Every counter, in reporting order.
-    pub const ALL: [Counter; 12] = [
+    pub const ALL: [Counter; 16] = [
         Counter::TapeNodes,
         Counter::TapeBytes,
         Counter::KvBytes,
@@ -61,6 +70,10 @@ impl Counter {
         Counter::CheckpointStores,
         Counter::CheckpointBytes,
         Counter::RematRebuilds,
+        Counter::KvTangentBytes,
+        Counter::PlanCompiles,
+        Counter::PlanReplays,
+        Counter::PlanFallbacks,
     ];
 
     /// Number of counters (array backing size).
@@ -81,6 +94,10 @@ impl Counter {
             Counter::CheckpointStores => "checkpoint.stores",
             Counter::CheckpointBytes => "checkpoint.bytes",
             Counter::RematRebuilds => "remat.rebuilds",
+            Counter::KvTangentBytes => "kv.tangent_bytes",
+            Counter::PlanCompiles => "plan.compiles",
+            Counter::PlanReplays => "plan.replays",
+            Counter::PlanFallbacks => "plan.fallbacks",
         }
     }
 

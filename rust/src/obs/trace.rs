@@ -36,10 +36,11 @@ use crate::util::table::Table;
 /// The traced phases of one hypergradient computation.
 ///
 /// Which phases appear depends on the strategy: `naive` emits
-/// `forward` + `backward_vjp`; `mixflow` emits all six (with
-/// `remat_rebuild` only under a `Remat{segment ≥ 2}` policy); `fd` wraps
-/// its unrolled evaluations in `forward` spans (one for the base point,
-/// one per ± pair).
+/// `forward` + `backward_vjp`; `mixflow` emits all seven (with
+/// `remat_rebuild` only under a `Remat{segment ≥ 2}` policy, and
+/// `plan_replay` whenever a compiled step plan is armed — from the
+/// second inner step on); `fd` wraps its unrolled evaluations in
+/// `forward` spans (one for the base point, one per ± pair).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     /// Inner unroll(s): recording inner steps and the outer loss.
@@ -55,17 +56,21 @@ pub enum Phase {
     /// The forward-over-reverse JVP that advances λ (nested inside
     /// `backward_vjp`).
     Jvp,
+    /// A step cycle re-recorded under an armed compiled plan (nested
+    /// inside whichever phase owns the cycle; see `autodiff::plan`).
+    PlanReplay,
 }
 
 impl Phase {
     /// Every phase, in canonical reporting order.
-    pub const ALL: [Phase; 6] = [
+    pub const ALL: [Phase; 7] = [
         Phase::Forward,
         Phase::CheckpointStore,
         Phase::LambdaSeed,
         Phase::RematRebuild,
         Phase::BackwardVjp,
         Phase::Jvp,
+        Phase::PlanReplay,
     ];
 
     /// The snake_case phase name used in trace records and histograms.
@@ -77,6 +82,7 @@ impl Phase {
             Phase::RematRebuild => "remat_rebuild",
             Phase::BackwardVjp => "backward_vjp",
             Phase::Jvp => "jvp",
+            Phase::PlanReplay => "plan_replay",
         }
     }
 }

@@ -1,0 +1,310 @@
+//! Acceptance tests for compiled step plans (`autodiff::plan`): replay
+//! must be bit-for-bit equal to dynamic taping across every strategy and
+//! checkpoint policy, warm replays must stop touching the allocator, a
+//! topology change must fall back (correctly) and recompile, and the
+//! plan's liveness schedule must agree exactly with the `hlo::memory`
+//! analyzer on the plan's own HLO export.
+
+use mixflow::autodiff::engine::HypergradEngine;
+use mixflow::autodiff::mixflow::CheckpointPolicy;
+use mixflow::autodiff::optim::InnerOptimiser;
+use mixflow::autodiff::problems::{
+    AttentionProblem, HyperLrProblem, LossWeightingProblem,
+    MultiHeadAttentionProblem,
+};
+use mixflow::autodiff::tensor::Tensor;
+use mixflow::autodiff::{BilevelProblem, PlanKey};
+use mixflow::hlo::memory::analyze_text;
+use mixflow::meta::HypergradMode;
+use mixflow::util::proptest;
+
+/// Plan replay re-records the same builder ops against the same values —
+/// only the buffer *sourcing* changes — so plan-on and plan-off runs are
+/// expected to agree exactly (0.0); the assertion bound is 1e-12.
+const PLAN_TOL: f64 = 1e-12;
+
+fn max_abs_diff(a: &[Tensor], b: &[Tensor]) -> f64 {
+    assert_eq!(a.len(), b.len(), "gradient pytree arity");
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.max_abs_diff(y))
+        .fold(0.0, f64::max)
+}
+
+/// Random small bilevel instance spanning all four tasks and all three
+/// inner optimisers (same family as the equivalence properties in
+/// `rust/tests/autodiff.rs`).
+fn random_problem(g: &mut proptest::Gen) -> Box<dyn BilevelProblem> {
+    let seed = g.rng.next_u64();
+    let d = g.usize(2, 4);
+    let hidden = g.usize(2, 5);
+    let classes = g.usize(2, 4);
+    let batch = g.usize(2, 5);
+    let unroll = g.usize(1, 4);
+    let alpha = g.f64(0.02, 0.12);
+    let opt = *g.choose(&[
+        InnerOptimiser::Sgd,
+        InnerOptimiser::momentum(),
+        InnerOptimiser::adam(),
+    ]);
+    match g.usize(0, 3) {
+        0 => Box::new(
+            HyperLrProblem::with_config(
+                seed, d, hidden, classes, batch, unroll, alpha,
+            )
+            .with_optimiser(opt),
+        ),
+        1 => Box::new(
+            LossWeightingProblem::with_config(
+                seed,
+                d,
+                hidden,
+                classes,
+                batch,
+                unroll,
+                alpha,
+                g.f64(0.0, 0.6),
+            )
+            .with_optimiser(opt),
+        ),
+        2 => Box::new(
+            AttentionProblem::with_config(
+                seed, d, batch, classes, unroll, alpha,
+            )
+            .with_optimiser(opt),
+        ),
+        _ => {
+            let heads = g.usize(1, 3);
+            let d_model = heads * g.usize(1, 2);
+            let seqs = g.usize(1, 3);
+            Box::new(
+                MultiHeadAttentionProblem::with_config(
+                    seed,
+                    d_model,
+                    heads,
+                    seqs,
+                    g.usize(2, 4),
+                    classes,
+                    unroll,
+                    alpha,
+                )
+                .with_optimiser(opt),
+            )
+        }
+    }
+}
+
+#[test]
+fn property_plan_replay_is_bitwise_equal_to_dynamic_taping() {
+    // Two persistent engines, identical except for the plan knob, run the
+    // same outer steps; cold (compile) and warm (replay) hypergradients
+    // must both match the always-dynamic engine.  Covers naive / mixflow
+    // / fd strategies and all three checkpoint policies over the random
+    // task × optimiser family.
+    proptest::check("plan≡dynamic", 10, |g| {
+        let problem = random_problem(g);
+        let mode = *g.choose(&[
+            HypergradMode::Naive,
+            HypergradMode::Mixflow,
+            HypergradMode::Fd,
+        ]);
+        let policy = *g.choose(&[
+            CheckpointPolicy::Full,
+            CheckpointPolicy::Remat { segment: 2 },
+            CheckpointPolicy::Auto,
+        ]);
+        let mut planned = HypergradEngine::builder()
+            .mode(mode)
+            .checkpoint(policy)
+            .build();
+        let mut dynamic = HypergradEngine::builder()
+            .mode(mode)
+            .checkpoint(policy)
+            .plan(false)
+            .build();
+        let theta0 = problem.theta0();
+        let eta = problem.eta0();
+        for step in 0..2 {
+            let a = planned.run(problem.as_ref(), &theta0, &eta);
+            let b = dynamic.run(problem.as_ref(), &theta0, &eta);
+            let diff = max_abs_diff(&a.d_eta, &b.d_eta);
+            if diff > PLAN_TOL {
+                return Err(format!(
+                    "{mode:?}/{policy:?} step {step}: plan vs dynamic \
+                     d_eta diff {diff:.3e} (expected exactly 0)"
+                ));
+            }
+            let ldiff = (a.outer_loss - b.outer_loss).abs();
+            if ldiff > PLAN_TOL {
+                return Err(format!(
+                    "{mode:?}/{policy:?} step {step}: plan vs dynamic \
+                     outer_loss diff {ldiff:.3e}"
+                ));
+            }
+        }
+        let stats = planned.plan_stats();
+        if stats.fallbacks != 0 {
+            return Err(format!(
+                "{mode:?}/{policy:?}: steady-state topology must never \
+                 fall back (got {} fallbacks)",
+                stats.fallbacks
+            ));
+        }
+        if stats.replays == 0 {
+            return Err(format!(
+                "{mode:?}/{policy:?}: two outer steps compiled {} plans \
+                 but never replayed one",
+                stats.compiles
+            ));
+        }
+        let off = dynamic.plan_stats();
+        if off.compiles != 0 || off.replays != 0 {
+            return Err(format!(
+                "plan(false) engine still ran the plan machinery \
+                 (compiles {}, replays {})",
+                off.compiles, off.replays
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn warm_replay_allocator_traffic_plateaus() {
+    // Persistent mixflow engine, full checkpointing, T = 4: the cycle
+    // stream per run is 4 Inner + 1 Outer + 4 Backward.  Run 1 compiles
+    // one plan per key (and already replays the later Inner/Backward
+    // cycles); from run 2 every cycle replays warm against its slot
+    // table.  Cycle-internal take-backed buffers then never touch the
+    // allocator (the tape-level zero-alloc pin lives in the `tape.rs`
+    // unit tests); what remains per warm run is the constant set of
+    // buffers that *escape* the tape by design — checkpoints and
+    // returned JVP tangents are cloned out and freed to the system, so
+    // they re-alloc identically every run.  The pin is therefore a
+    // plateau: warm allocs strictly below cold, and exactly equal
+    // between consecutive warm runs.
+    let problem = HyperLrProblem::with_config(7, 3, 4, 3, 4, 4, 0.05)
+        .with_optimiser(InnerOptimiser::adam());
+    let mut engine = HypergradEngine::builder().build();
+    let theta0 = problem.theta0();
+    let eta = problem.eta0();
+
+    let h1 = engine.run(&problem, &theta0, &eta);
+    let h2 = engine.run(&problem, &theta0, &eta);
+    let h3 = engine.run(&problem, &theta0, &eta);
+
+    assert!(h1.memory.arena_allocs > 0, "cold run must allocate");
+    assert!(
+        h2.memory.arena_allocs < h1.memory.arena_allocs,
+        "warm run allocs ({}) must drop strictly below cold ({})",
+        h2.memory.arena_allocs,
+        h1.memory.arena_allocs
+    );
+    assert_eq!(
+        h3.memory.arena_allocs, h2.memory.arena_allocs,
+        "warm replays must plateau: no new allocator traffic beyond \
+         the per-run escaped-buffer set"
+    );
+    assert!(
+        h2.memory.arena_reuses > 0 && h3.memory.arena_reuses > 0,
+        "warm runs must recirculate buffers"
+    );
+
+    // Replays are bit-for-bit: the plan only changes where buffers come
+    // from, never what is written into them.
+    assert_eq!(
+        max_abs_diff(&h1.d_eta, &h3.d_eta),
+        0.0,
+        "cold vs warm hypergradients must be bitwise identical"
+    );
+    assert_eq!(h1.outer_loss.to_bits(), h3.outer_loss.to_bits());
+
+    // Exactly one compile per key — Inner, Outer, Backward — and every
+    // later cycle a replay: run 1 replays 3 Inner + 3 Backward cycles,
+    // runs 2 and 3 replay all 9 each.
+    let stats = engine.plan_stats();
+    assert_eq!(stats.compiles, 3, "one compile per plan key");
+    assert_eq!(stats.fallbacks, 0);
+    assert_eq!(stats.replays, 6 + 9 + 9);
+}
+
+#[test]
+fn engine_plans_export_hlo_that_matches_the_memory_analyzer() {
+    // The compiled plan IS a liveness schedule; exporting it as HLO text
+    // and running the repo's hlo::memory simulator over it must
+    // reproduce the plan's own peak-bytes number exactly (zero
+    // tolerance: same last-use liveness, same 8-byte f64 elements), with
+    // one HLO instruction per tape node.
+    let problem = AttentionProblem::with_config(11, 3, 4, 3, 3, 0.05)
+        .with_optimiser(InnerOptimiser::adam());
+    let mut engine = HypergradEngine::builder().build();
+    let theta0 = problem.theta0();
+    let eta = problem.eta0();
+    engine.run(&problem, &theta0, &eta);
+
+    for key in [PlanKey::Inner, PlanKey::Outer, PlanKey::Backward] {
+        let plan = engine
+            .plan(key)
+            .unwrap_or_else(|| panic!("no compiled {} plan", key.name()));
+        let text = plan.to_hlo_text();
+        let report = analyze_text(&text).unwrap_or_else(|e| {
+            panic!("{} plan exported unparseable HLO: {e:?}", key.name())
+        });
+        assert_eq!(
+            report.peak_dynamic as usize,
+            plan.peak_bytes(),
+            "{} plan: hlo::memory peak vs plan liveness peak",
+            key.name()
+        );
+        assert_eq!(
+            report.instructions,
+            plan.nodes(),
+            "{} plan: one HLO instruction per tape node",
+            key.name()
+        );
+    }
+}
+
+#[test]
+fn topology_change_falls_back_recompiles_and_stays_correct() {
+    // Re-using one engine across two differently-shaped problems: each
+    // key's first cycle under the new shape diverges from its armed
+    // plan, completes on the dynamic path (values correct), counts one
+    // fallback and recompiles; after that the new plans replay cleanly.
+    let small = HyperLrProblem::with_config(3, 2, 3, 2, 3, 2, 0.05);
+    let big = HyperLrProblem::with_config(3, 4, 5, 3, 4, 2, 0.05);
+    let mut engine = HypergradEngine::builder().build();
+
+    engine.run(&small, &small.theta0(), &small.eta0());
+    assert_eq!(engine.plan_stats().compiles, 3);
+    assert_eq!(engine.plan_stats().fallbacks, 0);
+
+    let big_theta0 = big.theta0();
+    let big_eta = big.eta0();
+    let h_big = engine.run(&big, &big_theta0, &big_eta);
+    let stats = engine.plan_stats();
+    assert_eq!(
+        stats.fallbacks, 3,
+        "each key's first cycle under the new shape must fall back once"
+    );
+    assert_eq!(stats.compiles, 6, "each fallback recompiles its key");
+
+    // The fallback cycles recorded dynamically, so the result is still
+    // exactly the no-plan hypergradient.
+    let mut reference = HypergradEngine::builder().plan(false).build();
+    let h_ref = reference.run(&big, &big_theta0, &big_eta);
+    let diff = max_abs_diff(&h_big.d_eta, &h_ref.d_eta);
+    assert!(
+        diff <= PLAN_TOL,
+        "fallback run drifted from dynamic taping by {diff:.3e}"
+    );
+
+    // The recompiled plans are healthy: another outer step replays with
+    // no further fallbacks.
+    let before = engine.plan_stats();
+    engine.run(&big, &big_theta0, &big_eta);
+    let after = engine.plan_stats();
+    assert_eq!(after.fallbacks, before.fallbacks);
+    assert_eq!(after.compiles, before.compiles);
+    assert!(after.replays > before.replays);
+}
