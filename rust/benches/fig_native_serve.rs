@@ -1,0 +1,244 @@
+//! Serving-throughput figure: jobs/sec of the fault-tolerant
+//! hypergradient serving pool across worker counts, clean and under
+//! deterministic chaos.
+//!
+//! Two sweeps over the worker axis:
+//!
+//! * **clean** — no injected faults: every job must serve `ok` in one
+//!   attempt, pinning the pool's happy-path overhead (queue, engine
+//!   checkout, record assembly) and reporting the throughput scaling
+//!   headroom.
+//! * **chaos** — the deterministic fault harness at a fixed rate/seed:
+//!   the same job list survives injected panics, NaNs, slowdowns and
+//!   allocation spikes.  The bench exits nonzero if any job loses its
+//!   record, any terminal counter stops reconciling with the records,
+//!   or the chaos outcome differs across worker counts (fault plans are
+//!   a pure function of `(seed, job, attempt)`, so per-job terminal
+//!   status must be scheduling-independent whenever retries don't race
+//!   a shared circuit breaker — the bench keeps the breaker wide open).
+//!
+//! Writes every row to `BENCH_serve.json`.  Scaling ratios are
+//! reported, not gated — CI boxes have unpredictable core counts.
+//!
+//! ```bash
+//! cargo run --release --bin fig_native_serve            # full ladder
+//! cargo run --release --bin fig_native_serve -- --smoke # CI mode
+//! ```
+
+use mixflow::autodiff::HypergradMode;
+use mixflow::meta::NativeTask;
+use mixflow::obs::Counter;
+use mixflow::serve::{
+    serve_jobs, ChaosConfig, JobSpec, JobStatus, ServeConfig, ServeOutcome,
+};
+use mixflow::util::json::Json;
+use mixflow::util::table::Table;
+
+/// A small mixed workload: two tasks × two modes, several seeds, so the
+/// pool exercises engine-key coalescing and not just one hot engine.
+fn job_list(n: usize) -> Vec<JobSpec> {
+    (0..n)
+        .map(|i| JobSpec {
+            id: format!("job-{i}"),
+            task: if i % 4 == 3 {
+                NativeTask::LossWeighting
+            } else {
+                NativeTask::HyperLr
+            },
+            mode: if i % 2 == 0 {
+                HypergradMode::Mixflow
+            } else {
+                HypergradMode::Naive
+            },
+            unroll: 4,
+            seed: (i / 4) as u64,
+            ..JobSpec::default()
+        })
+        .collect()
+}
+
+fn serve_config(workers: usize, chaos: Option<ChaosConfig>) -> ServeConfig {
+    ServeConfig {
+        workers,
+        max_retries: 2,
+        backoff_base_ms: 1,
+        backoff_cap_ms: 4,
+        // Effectively no circuit breaker: the bench pins scheduling-
+        // independent per-job outcomes, and a shared breaker tripping
+        // at different moments under different worker counts would
+        // break that on purpose-built grounds.
+        quarantine_limit: usize::MAX / 2,
+        chaos,
+        ..ServeConfig::default()
+    }
+}
+
+fn outcome_row(workers: usize, label: &str, out: &ServeOutcome, seconds: f64) -> Json {
+    let mut row = Json::obj();
+    row.insert("variant", Json::Str(label.to_string()));
+    row.insert("workers", Json::Num(workers as f64));
+    row.insert("jobs", Json::Num(out.records.len() as f64));
+    row.insert("seconds", Json::Num(seconds));
+    row.insert(
+        "jobs_per_s",
+        Json::Num(out.records.len() as f64 / seconds.max(1e-9)),
+    );
+    for (key, counter) in [
+        ("ok", Counter::ServeJobsOk),
+        ("failed", Counter::ServeJobsFailed),
+        ("shed", Counter::ServeJobsShed),
+        ("retried", Counter::ServeJobsRetried),
+        ("quarantines", Counter::ServeEngineQuarantines),
+        ("deadline_exceeded", Counter::ServeDeadlineExceeded),
+    ] {
+        row.insert(key, Json::Num(out.counter(counter) as f64));
+    }
+    row.insert("engines_built", Json::Num(out.engines_built as f64));
+    row
+}
+
+/// Counter/record reconciliation — the invariant every serve run must
+/// hold whatever the fault mix.  Returns an error string on violation.
+fn reconcile(out: &ServeOutcome, jobs: usize) -> Result<(), String> {
+    if out.records.len() != jobs {
+        return Err(format!(
+            "{} records for {jobs} jobs — jobs were lost",
+            out.records.len()
+        ));
+    }
+    let ok = out.counter(Counter::ServeJobsOk);
+    let failed = out.counter(Counter::ServeJobsFailed);
+    let shed = out.counter(Counter::ServeJobsShed);
+    if ok + failed + shed != jobs as u64 {
+        return Err(format!(
+            "terminal counters don't cover the jobs: ok {ok} + failed \
+             {failed} + shed {shed} != {jobs}"
+        ));
+    }
+    let retried: u64 =
+        out.records.iter().map(|r| r.attempts.saturating_sub(1)).sum();
+    if out.counter(Counter::ServeJobsRetried) != retried {
+        return Err(format!(
+            "retried counter {} != Σ(attempts-1) {retried}",
+            out.counter(Counter::ServeJobsRetried)
+        ));
+    }
+    let quarantined: usize =
+        out.records.iter().map(|r| r.quarantined.len()).sum();
+    if out.quarantined_generations.len() != quarantined
+        || out.counter(Counter::ServeEngineQuarantines)
+            != quarantined as u64
+    {
+        return Err(format!(
+            "quarantine ledgers disagree: pool {}, records {quarantined}, \
+             counter {}",
+            out.quarantined_generations.len(),
+            out.counter(Counter::ServeEngineQuarantines)
+        ));
+    }
+    Ok(())
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n_jobs = if smoke { 8 } else { 32 };
+    let worker_ladder: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let chaos = ChaosConfig {
+        seed: 1234,
+        panic_rate: 0.15,
+        nan_rate: 0.15,
+        slow_rate: 0.1,
+        alloc_rate: 0.1,
+        slow_ms: 2,
+        alloc_bytes: 1 << 20,
+    };
+    println!(
+        "Figure (native) — serving throughput: clean vs chaos{}",
+        if smoke { "  [smoke]" } else { "" }
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut table = Table::new(&[
+        "variant", "workers", "jobs/s", "ok", "failed", "retried",
+        "quarantines",
+    ])
+    .numeric_cols(&[1, 2, 3, 4, 5, 6]);
+    let mut ok = true;
+    // Per-job terminal statuses of the chaos runs, by worker count —
+    // chaos is deterministic, so these must all agree.
+    let mut chaos_statuses: Vec<Vec<JobStatus>> = Vec::new();
+
+    for &workers in worker_ladder {
+        for (label, chaos_cfg) in
+            [("clean", None), ("chaos", Some(chaos))]
+        {
+            let cfg = serve_config(workers, chaos_cfg);
+            let t0 = std::time::Instant::now();
+            let out = serve_jobs(job_list(n_jobs), &cfg);
+            let seconds = t0.elapsed().as_secs_f64();
+            if let Err(e) = reconcile(&out, n_jobs) {
+                eprintln!("FAIL {label}/w{workers}: {e}");
+                ok = false;
+            }
+            if label == "clean"
+                && out.counter(Counter::ServeJobsOk) != n_jobs as u64
+            {
+                eprintln!(
+                    "FAIL clean/w{workers}: {} of {n_jobs} ok — clean \
+                     serving must not fail jobs",
+                    out.counter(Counter::ServeJobsOk)
+                );
+                ok = false;
+            }
+            if label == "chaos" {
+                chaos_statuses.push(
+                    out.records.iter().map(|r| r.status).collect(),
+                );
+            }
+            table.row(vec![
+                label.to_string(),
+                workers.to_string(),
+                format!(
+                    "{:.1}",
+                    n_jobs as f64 / seconds.max(1e-9)
+                ),
+                out.counter(Counter::ServeJobsOk).to_string(),
+                out.counter(Counter::ServeJobsFailed).to_string(),
+                out.counter(Counter::ServeJobsRetried).to_string(),
+                out.counter(Counter::ServeEngineQuarantines).to_string(),
+            ]);
+            rows.push(outcome_row(workers, label, &out, seconds));
+        }
+    }
+
+    for (i, statuses) in chaos_statuses.iter().enumerate().skip(1) {
+        if statuses != &chaos_statuses[0] {
+            eprintln!(
+                "FAIL: chaos outcome at workers={} differs from workers={} \
+                 — fault injection must be scheduling-independent",
+                worker_ladder[i], worker_ladder[0]
+            );
+            ok = false;
+        }
+    }
+
+    println!("{}", table.render());
+
+    let mut doc = Json::obj();
+    doc.insert("bench", Json::Str("fig_native_serve".to_string()));
+    doc.insert("smoke", Json::Bool(smoke));
+    doc.insert("jobs", Json::Num(n_jobs as f64));
+    doc.insert("chaos_seed", Json::Num(chaos.seed as f64));
+    doc.insert("results", Json::Arr(rows));
+    let path = "BENCH_serve.json";
+    if let Err(e) = std::fs::write(path, doc.pretty() + "\n") {
+        eprintln!("FAIL: could not write {path}: {e}");
+        ok = false;
+    }
+
+    if !ok {
+        eprintln!("FAIL: fig_native_serve checks did not hold");
+        std::process::exit(1);
+    }
+    println!("fig_native_serve OK ({path} written)");
+}

@@ -145,6 +145,13 @@ impl BufferArena {
         (plan.slots, plan.cursor, plan.diverged)
     }
 
+    /// Whether a replay plan is currently armed.  A `true` outside a
+    /// plan cycle means an unwind escaped between `arm` and `disarm` —
+    /// one of the invariants `Tape::invariants_ok` checks.
+    pub(crate) fn is_armed(&self) -> bool {
+        self.plan.is_some()
+    }
+
     /// Park a uniquely-owned raw buffer on the free list (plan-mode
     /// bookkeeping: leftover slots, takes past the scheduled region).
     pub(crate) fn park(&mut self, arc: Arc<Vec<f64>>) {

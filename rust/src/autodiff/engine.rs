@@ -288,6 +288,7 @@ pub struct EngineBuilder {
     fd_epsilon: f64,
     telemetry: bool,
     plan: bool,
+    guard: bool,
 }
 
 impl Default for EngineBuilder {
@@ -299,6 +300,7 @@ impl Default for EngineBuilder {
             fd_epsilon: DEFAULT_FD_EPSILON,
             telemetry: false,
             plan: true,
+            guard: false,
         }
     }
 }
@@ -358,6 +360,22 @@ impl EngineBuilder {
         self.plan
     }
 
+    /// Enable the tape's non-finite guard (default off).  On, every
+    /// node push scans its value and unwinds with a typed
+    /// [`super::tape::NonFiniteSignal`] on the first NaN/inf — the
+    /// serving layer turns this into `HypergradError::NonFinite`.  Off,
+    /// the guard is a single untaken branch and hypergradients stay
+    /// bit-identical to a guard-free build.
+    pub fn guard(mut self, on: bool) -> EngineBuilder {
+        self.guard = on;
+        self
+    }
+
+    /// Whether [`EngineBuilder::guard`] enabled the non-finite guard.
+    pub fn guard_enabled(&self) -> bool {
+        self.guard
+    }
+
     pub fn build(self) -> HypergradEngine {
         let strategy: Box<dyn HypergradStrategy> = match self.mode {
             HypergradMode::Naive => Box::new(NaiveStrategy),
@@ -369,6 +387,7 @@ impl EngineBuilder {
         let mut tape = Tape::new();
         tape.obs_mut().set_enabled(self.telemetry);
         tape.set_plan_enabled(self.plan);
+        tape.set_guard_enabled(self.guard);
         HypergradEngine {
             tape,
             strategy,
@@ -481,6 +500,42 @@ impl HypergradEngine {
     /// [`EngineBuilder::telemetry`] is the usual way).
     pub fn set_telemetry(&mut self, on: bool) {
         self.tape.obs_mut().set_enabled(on);
+    }
+
+    /// The builder this engine was configured from — `config().build()`
+    /// yields a fresh engine with identical knobs (how the serving
+    /// supervisor rebuilds a quarantined engine).
+    pub fn config(&self) -> EngineBuilder {
+        self.config
+    }
+
+    /// Whether the tape's non-finite guard is on for this engine.
+    pub fn guard_enabled(&self) -> bool {
+        self.tape.guard_enabled()
+    }
+
+    /// Toggle the non-finite guard mid-life (the builder knob
+    /// [`EngineBuilder::guard`] is the usual way).
+    pub fn set_guard(&mut self, on: bool) {
+        self.tape.set_guard_enabled(on);
+    }
+
+    /// Attach (or with `None` detach) a cooperative cancellation token;
+    /// the tape polls it at phase boundaries and unwinds with a typed
+    /// [`super::tape::CancelSignal`] once it fires.
+    pub fn set_cancel(
+        &mut self,
+        cancel: Option<std::sync::Arc<super::tape::CancelToken>>,
+    ) {
+        self.tape.set_cancel(cancel);
+    }
+
+    /// Whether the persistent tape's structural invariants hold (no
+    /// replay in flight, arena disarmed, no open phase span).  `false`
+    /// after a caught unwind means the engine must be rebuilt before it
+    /// serves again — the supervisor's quarantine trigger.
+    pub fn invariants_ok(&self) -> bool {
+        self.tape.invariants_ok()
     }
 
     /// The engine's metrics registry (counters/gauges/histograms,

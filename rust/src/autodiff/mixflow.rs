@@ -485,6 +485,8 @@ pub fn mixflow_hypergrad_in(
     let mut theta = theta0.to_vec();
     let mut state = opt.init_state(theta0);
     for t in 0..unroll {
+        // Cooperative cancellation fires between steps, never mid-step.
+        tape.check_cancel();
         // The step tape's (θ, s) leaves are O(1) aliases; when the pair
         // is also checkpointed it sits in `live_state` AND in the tape's
         // byte counter, so the physical-peak accounting subtracts the
@@ -552,6 +554,7 @@ pub fn mixflow_hypergrad_in(
 
     // ---- backward sweep, newest segment first --------------------------
     for j in (0..ckpt.len()).rev() {
+        tape.check_cancel();
         let seg_start = j * k;
         let seg_end = (seg_start + k).min(unroll);
         let seed = ckpt[j].take().expect("segment checkpoint stored once");

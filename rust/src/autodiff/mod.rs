@@ -79,5 +79,7 @@ pub use mixflow::{
     Hypergrad, MemoryReport,
 };
 pub use optim::InnerOptimiser;
-pub use tape::{NodeId, Op, Tape, TapeStats};
+pub use tape::{
+    CancelSignal, CancelToken, NodeId, NonFiniteSignal, Op, Tape, TapeStats,
+};
 pub use tensor::{Buf, Tensor, ELEM_BYTES};

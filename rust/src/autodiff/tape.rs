@@ -37,7 +37,9 @@
 //! topology change falls back to the dynamic path and recompiles.  See
 //! [`super::plan`] for the lifecycle and invariants.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::arena::{ArenaStats, BufferArena};
 use super::plan::{PlanKey, PlanStats, StepPlan};
@@ -46,6 +48,66 @@ use crate::obs::{Counter, Gauge, Phase, Telemetry};
 
 /// Index of a node on the tape.
 pub type NodeId = usize;
+
+// ---- robustness signals ---------------------------------------------------
+//
+// The serving layer (`crate::serve`) needs failures on the tape's hot
+// paths to be *classifiable* after a `catch_unwind`.  Rather than parse
+// panic message strings, the guard and the cancellation check unwind
+// with these typed payloads via `std::panic::panic_any`; the supervisor
+// downcasts them back into its error taxonomy.  They live here — not in
+// `serve` — so autodiff never depends on the serving layer.
+
+/// Panic payload raised by the non-finite guard ([`Tape::set_guard_enabled`])
+/// when a freshly pushed node value contains a NaN or infinity.
+#[derive(Debug, Clone)]
+pub struct NonFiniteSignal {
+    /// Index the offending node would have occupied on the tape.
+    pub node: usize,
+    /// Name of the innermost open telemetry phase (`"forward"` when no
+    /// span is open), attributing the blow-up to a sweep.
+    pub phase: &'static str,
+}
+
+/// Panic payload raised by [`Tape::check_cancel`] when the attached
+/// [`CancelToken`] has fired (explicit cancel or deadline expiry).
+#[derive(Debug, Clone, Copy)]
+pub struct CancelSignal;
+
+/// Cooperative cancellation handle shared between a supervisor thread
+/// and the tape it is watching.  The tape polls it at phase boundaries
+/// — cancellation is *cooperative*, never preemptive, so a fired token
+/// stops the job at the next boundary rather than mid-kernel.
+#[derive(Debug, Default)]
+pub struct CancelToken {
+    flag: AtomicBool,
+    /// Instant after which the token counts as fired even without an
+    /// explicit [`CancelToken::cancel`] call.
+    deadline: Option<Instant>,
+}
+
+impl CancelToken {
+    /// A token that only fires on explicit [`CancelToken::cancel`].
+    pub fn new() -> CancelToken {
+        CancelToken { flag: AtomicBool::new(false), deadline: None }
+    }
+
+    /// A token that also fires once `deadline` has passed.
+    pub fn with_deadline(deadline: Instant) -> CancelToken {
+        CancelToken { flag: AtomicBool::new(false), deadline: Some(deadline) }
+    }
+
+    /// Fire the token explicitly.
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Release);
+    }
+
+    /// Whether the token has fired (explicitly or by deadline).
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Acquire)
+            || self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
 
 /// Primitive operations.  The set is closed under both `grad` (VJPs are
 /// expressed via these same ops) and `jvp` (linearisations are computed
@@ -160,6 +222,14 @@ pub struct Tape {
     plan_stats: PlanStats,
     /// The current cycle runs against an armed arena.
     replaying: bool,
+    /// Non-finite guard (off by default): when set, [`Tape::push`]
+    /// scans each new node value and unwinds with [`NonFiniteSignal`]
+    /// on the first NaN/inf.  Off, the scan is a single untaken branch
+    /// — the fast path stays bit-identical and unmeasurably close in
+    /// cost (pinned by `rust/tests/serve.rs`).
+    guard_enabled: bool,
+    /// Cooperative cancellation token polled at phase boundaries.
+    cancel: Option<Arc<CancelToken>>,
     /// Telemetry recorder (disabled by default).  Living here means the
     /// strategies — which already hold `&mut Tape` — and the tape's own
     /// hot paths all reach the same recorder without signature changes.
@@ -366,8 +436,51 @@ impl Tape {
             plan_enabled: true,
             plan_stats: PlanStats::default(),
             replaying: false,
+            guard_enabled: false,
+            cancel: None,
             obs: Telemetry::new(),
         }
+    }
+
+    // ---- robustness: guard, cancellation, invariants -------------------
+
+    /// Enable or disable the non-finite guard (off by default).  See
+    /// the field doc on `guard_enabled` for the cost discipline.
+    pub fn set_guard_enabled(&mut self, enabled: bool) {
+        self.guard_enabled = enabled;
+    }
+
+    pub fn guard_enabled(&self) -> bool {
+        self.guard_enabled
+    }
+
+    /// Attach (or with `None` detach) a cancellation token.  The tape
+    /// polls it in [`Tape::check_cancel`] and at each plan-cycle entry.
+    pub fn set_cancel(&mut self, cancel: Option<Arc<CancelToken>>) {
+        self.cancel = cancel;
+    }
+
+    /// Unwind with [`CancelSignal`] if the attached token has fired.
+    /// Strategies call this at phase boundaries (checkpoint-segment and
+    /// backward-segment edges); with no token attached it is one branch.
+    pub fn check_cancel(&self) {
+        if let Some(token) = &self.cancel {
+            if token.is_cancelled() {
+                std::panic::panic_any(CancelSignal);
+            }
+        }
+    }
+
+    /// Whether the tape's structural invariants hold — no replay in
+    /// flight, arena not armed, no telemetry phase span left open.  An
+    /// unwind that escapes mid-cycle (guard trip, injected panic,
+    /// deadline) violates at least one of these; the serving supervisor
+    /// uses that as its quarantine trigger, and a `true` here means the
+    /// engine is safe to keep warm.
+    pub fn invariants_ok(&self) -> bool {
+        !self.replaying
+            && !self.arena.is_armed()
+            && self.obs.open_phases() == 0
     }
 
     /// The tape's telemetry recorder (disabled by default).
@@ -492,6 +605,7 @@ impl Tape {
     }
 
     fn plan_begin(&mut self, key: PlanKey) {
+        self.check_cancel();
         if !self.plan_enabled {
             self.reset();
             return;
@@ -620,6 +734,16 @@ impl Tape {
     }
 
     fn push(&mut self, op: Op, value: Tensor) -> NodeId {
+        if self.guard_enabled && value.data.iter().any(|v| !v.is_finite()) {
+            std::panic::panic_any(NonFiniteSignal {
+                node: self.nodes.len(),
+                phase: self
+                    .obs
+                    .current_phase()
+                    .map(Phase::name)
+                    .unwrap_or("forward"),
+            });
+        }
         let bytes = value.bytes();
         self.bytes += bytes;
         if self.obs.enabled() {

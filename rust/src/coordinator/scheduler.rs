@@ -10,6 +10,7 @@
 //! (On a 1-core CI box the pool degenerates gracefully to sequential.)
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
@@ -19,6 +20,34 @@ pub struct Job<T: Send + 'static> {
     /// Estimated resident bytes while the job runs (admission control).
     pub cost_bytes: u64,
     pub work: Box<dyn FnOnce() -> T + Send + 'static>,
+}
+
+/// A job whose closure panicked.  The pool catches the unwind, releases
+/// the job's admission budget, and returns this in the job's result slot
+/// — completed work is never dropped because a sibling blew up.
+#[derive(Debug, Clone)]
+pub struct JobPanic {
+    /// The panic payload rendered to text (`&str`/`String` payloads
+    /// verbatim; typed payloads fall back to a placeholder — callers
+    /// that need to classify those catch the unwind themselves).
+    pub message: String,
+}
+
+impl std::fmt::Display for JobPanic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job panicked: {}", self.message)
+    }
+}
+
+/// Render a caught panic payload to text.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Pool state shared between workers.
@@ -31,18 +60,21 @@ struct SchedState<T: Send + 'static> {
     jobs: VecDeque<Job<T>>,
     in_flight_bytes: u64,
     in_flight_jobs: usize,
-    results: Vec<(String, T)>,
+    results: Vec<(String, Result<T, JobPanic>)>,
     closed: bool,
 }
 
 /// Run all jobs on `workers` threads with at most `budget_bytes` of
 /// estimated resident cost admitted simultaneously.  Returns results in
-/// completion order tagged by job name.
+/// completion order tagged by job name — exactly one entry per job, with
+/// a panicking job contributing `Err(JobPanic)` instead of aborting the
+/// pool (the unwind is caught *before* the admission counters are
+/// released, so a panicker cannot strand condvar waiters either).
 pub fn run_pool<T: Send + 'static>(
     jobs: Vec<Job<T>>,
     workers: usize,
     budget_bytes: u64,
-) -> Vec<(String, T)> {
+) -> Vec<(String, Result<T, JobPanic>)> {
     let workers = workers.max(1);
     let shared = Arc::new(Shared {
         queue: Mutex::new(SchedState {
@@ -87,7 +119,11 @@ pub fn run_pool<T: Send + 'static>(
             };
             let name = job.name;
             let cost = job.cost_bytes;
-            let result = (job.work)();
+            let work = job.work;
+            let result = catch_unwind(AssertUnwindSafe(move || work()))
+                .map_err(|payload| JobPanic {
+                    message: panic_message(payload.as_ref()),
+                });
             let mut st = shared.queue.lock().unwrap();
             st.in_flight_bytes -= cost;
             st.in_flight_jobs -= 1;
@@ -95,10 +131,16 @@ pub fn run_pool<T: Send + 'static>(
             shared.cv.notify_all();
         }));
     }
+    // Worker bodies catch per-job unwinds, so a join error would mean a
+    // panic in the pool plumbing itself; surface whatever results exist
+    // rather than aborting the caller.
     for h in handles {
-        h.join().expect("scheduler worker panicked");
+        let _ = h.join();
     }
-    let mut st = shared.queue.lock().unwrap();
+    let mut st = shared
+        .queue
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner);
     std::mem::take(&mut st.results)
 }
 
@@ -118,11 +160,69 @@ mod tests {
     #[test]
     fn runs_all_jobs() {
         let jobs = (0..20).map(|i| job(&format!("j{i}"), 1, i)).collect();
-        let mut results = run_pool(jobs, 4, 100);
-        results.sort();
+        let results = run_pool(jobs, 4, 100);
         assert_eq!(results.len(), 20);
-        let sum: u64 = results.iter().map(|(_, v)| v).sum();
+        let sum: u64 = results
+            .iter()
+            .map(|(_, v)| *v.as_ref().expect("no job panicked"))
+            .sum();
         assert_eq!(sum, (0..20).sum());
+    }
+
+    #[test]
+    fn panicking_jobs_return_tagged_errors_without_losing_results() {
+        // 8 jobs, 2 panickers: the pool must return 8 tagged results —
+        // the panics contained to their own slots, every completed
+        // sibling's value intact.
+        let jobs: Vec<Job<u64>> = (0..8)
+            .map(|i| {
+                if i == 1 || i == 5 {
+                    Job {
+                        name: format!("j{i}"),
+                        cost_bytes: 1,
+                        work: Box::new(move || panic!("boom {i}")),
+                    }
+                } else {
+                    job(&format!("j{i}"), 1, i)
+                }
+            })
+            .collect();
+        let mut results = run_pool(jobs, 3, 100);
+        assert_eq!(results.len(), 8, "one result per job, panics included");
+        results.sort_by(|a, b| a.0.cmp(&b.0));
+        let failed: Vec<&str> = results
+            .iter()
+            .filter(|(_, r)| r.is_err())
+            .map(|(n, _)| n.as_str())
+            .collect();
+        assert_eq!(failed, ["j1", "j5"]);
+        let err = results
+            .iter()
+            .find_map(|(_, r)| r.as_ref().err())
+            .expect("two panickers");
+        assert!(err.message.contains("boom"), "payload text preserved");
+        let sum: u64 = results
+            .iter()
+            .filter_map(|(_, r)| r.as_ref().ok().copied())
+            .sum();
+        assert_eq!(sum, 2 + 3 + 4 + 6 + 7);
+    }
+
+    #[test]
+    fn panicker_releases_budget_for_condvar_waiters() {
+        // The panicker is admitted holding 60 of a 100-byte budget; if
+        // the unwind escaped before the in-flight counters were released
+        // the remaining workers would block on the admission condvar
+        // forever.  Completion of all 5 results is the pin.
+        let mut jobs = vec![Job {
+            name: "panicker".to_string(),
+            cost_bytes: 60,
+            work: Box::new(|| -> u64 { panic!("die holding budget") }),
+        }];
+        jobs.extend((0..4).map(|i| job(&format!("j{i}"), 60, i)));
+        let results = run_pool(jobs, 2, 100);
+        assert_eq!(results.len(), 5);
+        assert_eq!(results.iter().filter(|(_, r)| r.is_err()).count(), 1);
     }
 
     #[test]

@@ -46,6 +46,13 @@
 //!   `SweepSpec` grid (task × inner-optimiser × mode × heads × seed)
 //!   fanned over the coordinator's worker pool with a mean ± std JSON
 //!   report.
+//! * [`serve`] — fault-tolerant hypergradient serving: a bounded job
+//!   queue with reject/block backpressure over a supervised pool of
+//!   warm engines, with typed errors, per-attempt deadlines, bounded
+//!   retries with jittered backoff, graceful degradation (non-finite →
+//!   fd, remat escalation under memory pressure), quarantine-and-
+//!   rebuild of corrupted engines, and a deterministic fault-injection
+//!   harness; `mixflow serve` is its JSONL front end.
 //!
 //! Feature `pjrt` links an `xla` crate for artifact execution; without it
 //! the crate builds, tests and serves the native path on any toolchain.
@@ -56,6 +63,7 @@ pub mod hlo;
 pub mod meta;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result type.

@@ -20,6 +20,16 @@
 //!   Every valid-value error list is derived from the enums'
 //!   `CliEnum::variants()`, so new modes can't silently go missing from
 //!   the messages.
+//! * `serve --jobs <f|->`   — fault-tolerant hypergradient serving: read
+//!   JSONL job specs (file or stdin), drive them through the supervised
+//!   warm-engine pool (`--workers`, bounded `--queue` with
+//!   `--backpressure reject|block`, per-attempt `--deadline-ms`,
+//!   `--max-retries` with jittered exponential `--backoff-ms`), and
+//!   emit exactly one JSONL result record per job (stdout or `--out`)
+//!   plus a counter summary on stderr.  `--chaos-rate`/`--chaos-seed`
+//!   switch on the deterministic fault-injection harness (injected
+//!   panics, NaNs, slowdowns, allocation spikes); `--no-guard` disables
+//!   the tape's non-finite guard (bit-identical fast path).
 //! * `run <key>`            — execute one exec-tier artifact (pjrt)
 //! * `sweep --group <g>`    — run a figure group, print ratios (pjrt)
 //! * `train --task <t>`     — artifact E2E meta-training loop (pjrt)
@@ -37,7 +47,7 @@ use mixflow::coordinator::ResultsStore;
 use mixflow::hlo::{flops::CostModel, parser, MemorySimulator};
 use mixflow::meta::{
     print_train_summary, run_sweep, sweep_report_json, HypergradMode,
-    NativeMetaTrainer, NativeTask, SweepSpec,
+    NativeMetaTrainer, NativeTask, SweepRun, SweepSpec,
 };
 use mixflow::obs::{print_trace_summary, write_trace, TraceFormat};
 use mixflow::runtime::Manifest;
@@ -100,7 +110,10 @@ fn main() {
         "mixflow",
         "MixFlow-MG coordinator: run + analyse AOT meta-gradient artifacts",
     )
-    .positional("command", "info|analyze|native|run|sweep|train|report|verify")
+    .positional(
+        "command",
+        "info|analyze|native|serve|run|sweep|train|report|verify",
+    )
     .flag("key", None, "artifact key (analyze/run)")
     .flag("group", None, "manifest group (sweep/report)")
     .flag(
@@ -164,8 +177,42 @@ fn main() {
             TraceFormat::valid_values()
         ),
     )
+    .flag("jobs", None, "JSONL job-spec file for serve ('-' = stdin)")
+    .flag("workers", Some("2"), "serve worker threads")
+    .flag("queue", Some("64"), "serve request-queue capacity")
+    .flag(
+        "backpressure",
+        Some("block"),
+        "serve policy when the queue is full: reject (shed) | block",
+    )
+    .flag("deadline-ms", None, "serve per-attempt deadline in ms")
+    .flag(
+        "max-retries",
+        Some("2"),
+        "serve retries beyond the first attempt",
+    )
+    .flag(
+        "backoff-ms",
+        Some("5"),
+        "serve backoff base in ms (doubles per retry, jittered)",
+    )
+    .flag(
+        "chaos-rate",
+        None,
+        "serve fault-injection rate per axis, 0..1 (off when unset)",
+    )
+    .flag("chaos-seed", Some("0"), "serve fault-injection stream seed")
+    .flag(
+        "out",
+        None,
+        "serve: write result JSONL to this path instead of stdout",
+    )
     .flag("iters", Some("5"), "timing iterations")
     .flag("seed", Some("0"), "input seed")
+    .switch(
+        "no-guard",
+        "serve: disable the tape non-finite guard (bit-identical fast path)",
+    )
     .switch("no-exec", "analysis only (skip PJRT execution)")
     .switch("timeline", "print the Fig.2-style memory timeline (analyze)");
 
@@ -190,6 +237,7 @@ fn dispatch(args: &mixflow::util::args::Args) -> Result<()> {
             args.get_bool("timeline"),
         ),
         "native" => cmd_native(args),
+        "serve" => cmd_serve(args),
         "run" => cmd_run(
             args.get("key").ok_or_else(|| anyhow!("--key required"))?,
             args.get_usize("iters").map_err(|e| anyhow!(e))?,
@@ -410,6 +458,22 @@ fn cmd_native(args: &Args) -> Result<()> {
     .numeric_cols(&[3, 4, 5, 6, 7, 8]);
     let mut finals = Vec::with_capacity(runs.len());
     for run in &runs {
+        if run.error.is_some() {
+            // Failed cells keep their grid row but print distinctly;
+            // their (empty) loss curves stay out of the summary stats.
+            t.row(vec![
+                run.cell.task.name().to_string(),
+                run.cell.inner_opt.name().to_string(),
+                run.cell.mode.name().to_string(),
+                run.cell.heads.to_string(),
+                run.cell.seed.to_string(),
+                "-".to_string(),
+                "-".to_string(),
+                "FAILED".to_string(),
+                "-".to_string(),
+            ]);
+            continue;
+        }
         let (head, tail) = run.report.improvement(10);
         let last = run.report.losses.last().copied().unwrap_or(f64::NAN);
         finals.push(last);
@@ -426,6 +490,18 @@ fn cmd_native(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    let failed: Vec<&SweepRun> =
+        runs.iter().filter(|r| r.error.is_some()).collect();
+    if !failed.is_empty() {
+        println!("{} of {} cells FAILED:", failed.len(), runs.len());
+        for run in &failed {
+            println!(
+                "  {}: {}",
+                run.cell.label(),
+                run.error.as_deref().unwrap_or("unknown")
+            );
+        }
+    }
 
     // Per-configuration mean ± std over the seed axis (the same
     // aggregation the JSON dump carries).
@@ -463,7 +539,7 @@ fn cmd_native(args: &Args) -> Result<()> {
     println!(
         "final val loss over {} runs: mean {:.4} ± {:.4} (min {:.4}, max \
          {:.4})",
-        runs.len(),
+        finals.len(),
         s.mean,
         s.stddev,
         s.min,
@@ -492,6 +568,142 @@ fn cmd_native(args: &Args) -> Result<()> {
             .map_err(|e| anyhow!("could not write {tp}: {e}"))?;
         println!("trace ({}) written to {tp}", trace_format.name());
     }
+    Ok(())
+}
+
+/// `mixflow serve` — JSONL front end over [`mixflow::serve::serve_jobs`].
+///
+/// Reads one job spec per line (blank lines and `#` comments skipped;
+/// unparseable lines are reported on stderr and skipped, so one typo
+/// cannot take down a batch), serves everything through the supervised
+/// engine pool, writes exactly one result record per job, and prints
+/// the supervisor's counter summary to stderr (stderr so that piping
+/// stdout stays pure JSONL).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use mixflow::obs::Counter;
+    use mixflow::serve::{
+        serve_jobs, BackpressurePolicy, ChaosConfig, JobSpec, ServeConfig,
+    };
+    use mixflow::util::json::Json;
+
+    let jobs_path = args
+        .get("jobs")
+        .ok_or_else(|| anyhow!("--jobs <file|-> required for serve"))?;
+    let raw = if jobs_path == "-" {
+        use std::io::Read;
+        let mut s = String::new();
+        std::io::stdin()
+            .read_to_string(&mut s)
+            .map_err(|e| anyhow!("could not read stdin: {e}"))?;
+        s
+    } else {
+        std::fs::read_to_string(jobs_path)
+            .map_err(|e| anyhow!("could not read {jobs_path}: {e}"))?
+    };
+    let mut specs: Vec<JobSpec> = Vec::new();
+    let mut skipped = 0usize;
+    for (lineno, line) in raw.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fallback = format!("job-{}", specs.len());
+        let parsed = Json::parse(line)
+            .map_err(|e| e.to_string())
+            .and_then(|doc| JobSpec::from_json(&doc, &fallback));
+        match parsed {
+            Ok(spec) => specs.push(spec),
+            Err(e) => {
+                skipped += 1;
+                eprintln!("serve: skipping line {}: {e}", lineno + 1);
+            }
+        }
+    }
+    if specs.is_empty() {
+        return Err(anyhow!(
+            "no valid job specs in {jobs_path} ({skipped} skipped)"
+        ));
+    }
+
+    let backpressure_raw = args.get("backpressure").unwrap_or("block");
+    let backpressure = BackpressurePolicy::parse(backpressure_raw)
+        .ok_or_else(|| {
+            anyhow!(
+                "--backpressure {backpressure_raw:?} invalid; valid \
+                 values: reject|block"
+            )
+        })?;
+    let chaos = match args.get("chaos-rate") {
+        None => None,
+        Some(raw) => {
+            let rate: f64 = raw.parse().map_err(|_| {
+                anyhow!("--chaos-rate {raw:?} invalid; expected 0..1")
+            })?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(anyhow!(
+                    "--chaos-rate {rate} out of range; expected 0..1"
+                ));
+            }
+            Some(ChaosConfig::uniform(
+                args.get_usize("chaos-seed").map_err(|e| anyhow!(e))?
+                    as u64,
+                rate,
+            ))
+        }
+    };
+    let deadline_ms = match args.get("deadline-ms") {
+        None => None,
+        Some(raw) => Some(raw.parse::<u64>().map_err(|_| {
+            anyhow!("--deadline-ms {raw:?} invalid; expected ms >= 1")
+        })?),
+    };
+    let cfg = ServeConfig {
+        workers: args.get_usize("workers").map_err(|e| anyhow!(e))?,
+        queue_capacity: args.get_usize("queue").map_err(|e| anyhow!(e))?,
+        backpressure,
+        deadline_ms,
+        max_retries: args.get_usize("max-retries").map_err(|e| anyhow!(e))?
+            as u64,
+        backoff_base_ms: args
+            .get_usize("backoff-ms")
+            .map_err(|e| anyhow!(e))? as u64,
+        seed: args.get_usize("seed").map_err(|e| anyhow!(e))? as u64,
+        guard: !args.get_bool("no-guard"),
+        chaos,
+        ..ServeConfig::default()
+    };
+
+    let n_jobs = specs.len();
+    let t0 = std::time::Instant::now();
+    let outcome = serve_jobs(specs, &cfg);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut lines = String::new();
+    for record in &outcome.records {
+        lines.push_str(&record.to_json().compact());
+        lines.push('\n');
+    }
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &lines)
+                .map_err(|e| anyhow!("could not write {path}: {e}"))?;
+            eprintln!("serve: {n_jobs} result records written to {path}");
+        }
+        None => print!("{lines}"),
+    }
+    eprintln!(
+        "serve: {n_jobs} jobs in {elapsed:.2}s ({:.1} jobs/s) — ok {}, \
+         failed {}, shed {}, retried {}, quarantines {}, deadline {}, \
+         engines built {}",
+        n_jobs as f64 / elapsed.max(1e-9),
+        outcome.counter(Counter::ServeJobsOk),
+        outcome.counter(Counter::ServeJobsFailed),
+        outcome.counter(Counter::ServeJobsShed),
+        outcome.counter(Counter::ServeJobsRetried),
+        outcome.counter(Counter::ServeEngineQuarantines),
+        outcome.counter(Counter::ServeDeadlineExceeded),
+        outcome.engines_built,
+    );
     Ok(())
 }
 

@@ -110,8 +110,10 @@ impl NativeMetaTrainer {
     /// into a problem, so the `with_*` shape knobs rebuild exactly what
     /// the constructor built.  `heads`/`batch` only shape the attention
     /// task; its d_model is the base width 6 rounded up to the nearest
-    /// multiple of `heads` so any head count divides evenly.
-    fn build_problem(
+    /// multiple of `heads` so any head count divides evenly.  Public
+    /// because the serving layer ([`crate::serve`]) materialises the
+    /// same problems from job specs.
+    pub fn build_problem(
         task: NativeTask,
         seed: u64,
         unroll: usize,
@@ -501,6 +503,12 @@ pub struct SweepRun {
     /// on its own engine-private recorder, and the traces ride back
     /// through `run_pool` with the rest of the result.
     pub traces: Vec<StepTrace>,
+    /// `Some(message)` when the cell's trainer panicked (divergence
+    /// guard, bad knob, injected fault): the grid keeps its full shape —
+    /// one run per cell — with the failure recorded in place instead of
+    /// poisoning the whole sweep.  A failed cell carries an empty report
+    /// and no memory split.
+    pub error: Option<String>,
 }
 
 /// Configuration of one native multi-seed sweep (everything but the
@@ -563,6 +571,9 @@ pub struct SeedRun {
     pub seed: u64,
     pub report: TrainReport,
     pub memory: Option<MemoryReport>,
+    /// Panic message when this seed's trainer failed (see
+    /// [`SweepRun::error`]).
+    pub error: Option<String>,
 }
 
 /// Fan a [`SweepSpec`] grid out over the coordinator's worker pool.
@@ -602,6 +613,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepRun> {
                     report,
                     memory: trainer.last_memory,
                     traces,
+                    error: None,
                 }
             }),
         })
@@ -610,9 +622,29 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepRun> {
         .map(|n| n.get())
         .unwrap_or(1)
         .min(cells.len().max(1));
+    // The pool catches per-cell panics; a failed cell is reconstructed
+    // from its label (pool job names are cell labels) so the grid comes
+    // back complete — one run per cell, failures tagged in place.
+    let by_label: std::collections::HashMap<String, SweepCell> =
+        cells.iter().map(|c| (c.label(), *c)).collect();
     let mut runs: Vec<SweepRun> = run_pool(jobs, workers, u64::MAX / 2)
         .into_iter()
-        .map(|(_, run)| run)
+        .map(|(label, outcome)| match outcome {
+            Ok(run) => run,
+            Err(p) => SweepRun {
+                cell: by_label[&label],
+                report: TrainReport {
+                    artifact: label,
+                    losses: Vec::new(),
+                    steps: 0,
+                    seconds: 0.0,
+                    steps_per_second: 0.0,
+                },
+                memory: None,
+                traces: Vec::new(),
+                error: Some(p.message),
+            },
+        })
         .collect();
     // Back into grid order (the pool returns completion order); labels
     // are unique per cell, so they key the ordering.
@@ -636,6 +668,7 @@ pub fn run_seed_sweep(
             seed: run.cell.seed,
             report: run.report,
             memory: run.memory,
+            error: run.error,
         })
         .collect()
 }
@@ -688,6 +721,11 @@ pub fn sweep_report_json(spec: &SweepSpec, runs: &[SweepRun]) -> Json {
                 Json::Num(mem.kv_peak_bytes as f64),
             );
         }
+        // Failed cells keep their row (grid-order completeness) with the
+        // panic message attached; their numeric fields emit as null.
+        if let Some(err) = &run.error {
+            row.insert("error", Json::Str(err.clone()));
+        }
         cells.push(row);
     }
     doc.insert("cells", Json::Arr(cells));
@@ -698,14 +736,21 @@ pub fn sweep_report_json(spec: &SweepSpec, runs: &[SweepRun]) -> Json {
     let mut aggregates = Vec::new();
     let n = spec.n_seeds.max(1);
     for chunk in runs.chunks(n) {
+        // Failed seeds drop out of the aggregate instead of NaN-ing the
+        // whole configuration; `n_failed` records how many were lost.
         let finals: Vec<f64> = chunk
             .iter()
+            .filter(|r| r.error.is_none())
             .map(|r| r.report.losses.last().copied().unwrap_or(f64::NAN))
             .collect();
         let s = Summary::of(&finals);
         let mut row = Json::obj();
         row.insert("config", Json::Str(chunk[0].cell.config_label()));
         row.insert("n_seeds", Json::Num(chunk.len() as f64));
+        row.insert(
+            "n_failed",
+            Json::Num(chunk.iter().filter(|r| r.error.is_some()).count() as f64),
+        );
         row.insert("final_mean", Json::Num(s.mean));
         row.insert("final_std", Json::Num(s.stddev));
         aggregates.push(row);
@@ -1107,5 +1152,69 @@ mod tests {
         }
         // Same seed + task + mode, different optimiser ⇒ different curves.
         assert_ne!(runs[0].report.losses, runs[2].report.losses);
+    }
+
+    #[test]
+    fn failed_cells_are_tagged_without_poisoning_the_sweep() {
+        // fd mode with a negative epsilon panics inside the cell job
+        // (the engine builder asserts epsilon > 0); mixflow cells share
+        // the grid and must come back intact.
+        let spec = SweepSpec {
+            tasks: vec![NativeTask::HyperLr],
+            inner_opts: vec![InnerOptimiser::Sgd],
+            modes: vec![HypergradMode::Mixflow, HypergradMode::Fd],
+            heads: vec![1],
+            batch: 1,
+            remat: CheckpointPolicy::Full,
+            fd_epsilon: -1.0,
+            unroll: 2,
+            steps: 1,
+            base_seed: 11,
+            n_seeds: 2,
+            telemetry: false,
+        };
+        let runs = run_sweep(&spec);
+        assert_eq!(runs.len(), 4, "failed cells keep their grid slots");
+        for run in &runs {
+            match run.cell.mode {
+                HypergradMode::Mixflow => {
+                    assert!(run.error.is_none(), "{}", run.cell.label());
+                    assert!(run.report.losses[0].is_finite());
+                }
+                _ => {
+                    let err = run.error.as_ref().expect("fd cell must fail");
+                    assert!(
+                        err.contains("epsilon"),
+                        "panic message preserved, got {err:?}"
+                    );
+                    assert!(run.report.losses.is_empty());
+                    assert!(run.memory.is_none());
+                }
+            }
+        }
+        // The JSON dump keeps grid-order completeness, tags the failed
+        // cells, and drops them from the seed aggregates.
+        let doc = sweep_report_json(&spec, &runs);
+        let aggs = doc.get("aggregates").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(aggs.len(), 2);
+        assert_eq!(
+            aggs[1].get("n_failed").and_then(|v| v.as_f64()),
+            Some(2.0)
+        );
+        // The serialised dump must stay valid JSON (NaN → null) and keep
+        // grid-order completeness with failed cells tagged.
+        let parsed = Json::parse(&doc.pretty()).expect("dump re-parses");
+        let cells = parsed.get("cells").and_then(|c| c.as_arr()).unwrap();
+        assert_eq!(cells.len(), 4);
+        for cell in cells {
+            let is_fd = cell.get("mode").and_then(|m| m.as_str())
+                == Some("fd");
+            assert_eq!(cell.get("error").is_some(), is_fd);
+            if is_fd {
+                // Empty loss curve: final_loss round-trips as null, not
+                // a bare NaN (invalid JSON).
+                assert!(cell.get("final_loss").is_some_and(Json::is_null));
+            }
+        }
     }
 }

@@ -53,11 +53,23 @@ pub enum Counter {
     PlanReplays,
     /// Armed replays whose topology diverged, forcing a recompile.
     PlanFallbacks,
+    /// Serving jobs that reached a successful terminal state.
+    ServeJobsOk,
+    /// Extra attempts spent retrying serving jobs (attempts − 1, summed).
+    ServeJobsRetried,
+    /// Serving jobs that exhausted their retries and failed terminally.
+    ServeJobsFailed,
+    /// Serving jobs shed at admission (bounded queue full).
+    ServeJobsShed,
+    /// Engines quarantined after a failure violated tape/arena invariants.
+    ServeEngineQuarantines,
+    /// Per-attempt deadline expiries observed by the serving supervisor.
+    ServeDeadlineExceeded,
 }
 
 impl Counter {
     /// Every counter, in reporting order.
-    pub const ALL: [Counter; 16] = [
+    pub const ALL: [Counter; 22] = [
         Counter::TapeNodes,
         Counter::TapeBytes,
         Counter::KvBytes,
@@ -74,6 +86,12 @@ impl Counter {
         Counter::PlanCompiles,
         Counter::PlanReplays,
         Counter::PlanFallbacks,
+        Counter::ServeJobsOk,
+        Counter::ServeJobsRetried,
+        Counter::ServeJobsFailed,
+        Counter::ServeJobsShed,
+        Counter::ServeEngineQuarantines,
+        Counter::ServeDeadlineExceeded,
     ];
 
     /// Number of counters (array backing size).
@@ -98,6 +116,12 @@ impl Counter {
             Counter::PlanCompiles => "plan.compiles",
             Counter::PlanReplays => "plan.replays",
             Counter::PlanFallbacks => "plan.fallbacks",
+            Counter::ServeJobsOk => "serve.jobs.ok",
+            Counter::ServeJobsRetried => "serve.jobs.retried",
+            Counter::ServeJobsFailed => "serve.jobs.failed",
+            Counter::ServeJobsShed => "serve.jobs.shed",
+            Counter::ServeEngineQuarantines => "serve.engine.quarantines",
+            Counter::ServeDeadlineExceeded => "serve.deadline.exceeded",
         }
     }
 

@@ -178,6 +178,13 @@ pub struct Telemetry {
     current: Option<OpenStep>,
     /// Open phase spans, innermost last.
     stack: Vec<(Phase, Instant)>,
+    /// Phase identities of the open spans, maintained even while the
+    /// recorder is disabled (a `Copy` push/pop, no clock reads): the
+    /// tape's non-finite guard attributes a bad value to the innermost
+    /// open phase via [`Telemetry::current_phase`], and the serving
+    /// layer's engine-invariant check uses emptiness between runs as a
+    /// "no span was torn mid-flight by an unwind" witness.
+    live: Vec<Phase>,
 }
 
 impl Default for Telemetry {
@@ -196,11 +203,26 @@ impl Telemetry {
             steps: Vec::new(),
             current: None,
             stack: Vec::new(),
+            live: Vec::new(),
         }
     }
 
     pub fn enabled(&self) -> bool {
         self.enabled
+    }
+
+    /// The innermost open phase, tracked whether or not the recorder is
+    /// enabled (phase identity is maintained separately from timing).
+    /// `None` outside any span.
+    pub fn current_phase(&self) -> Option<Phase> {
+        self.live.last().copied()
+    }
+
+    /// Number of phase spans currently open.  Between engine runs this
+    /// must be 0; a non-zero count means an unwind tore through an open
+    /// span, which the serving layer treats as an invariant violation.
+    pub fn open_phases(&self) -> usize {
+        self.live.len()
     }
 
     pub fn set_enabled(&mut self, on: bool) {
@@ -283,6 +305,7 @@ impl Telemetry {
     /// step (strategy run directly on an enabled tape) lazily opens an
     /// anonymous step so the span is never lost.
     pub fn phase_begin(&mut self, phase: Phase) {
+        self.live.push(phase);
         if !self.enabled {
             return;
         }
@@ -295,6 +318,9 @@ impl Telemetry {
     /// Close the innermost open span of `phase`.  A stray end (no
     /// matching begin) is ignored.
     pub fn phase_end(&mut self, phase: Phase) {
+        if let Some(i) = self.live.iter().rposition(|p| *p == phase) {
+            self.live.remove(i);
+        }
         if !self.enabled {
             return;
         }

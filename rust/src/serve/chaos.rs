@@ -1,0 +1,193 @@
+//! Deterministic fault injection for the serving supervisor.
+//!
+//! Chaos is a *pure function* of `(chaos seed, job index, attempt)`:
+//! the per-attempt [`FaultPlan`] is drawn from a
+//! [`Prng`](crate::util::prng::Prng) stream folded over both indices,
+//! so a failing fault mix replays bit-for-bit from its seed — the
+//! integration suite pins supervisor behaviour (no job loss, retry
+//! counts, quarantine bookkeeping) against exact injected histories
+//! instead of flaky timing.
+//!
+//! Four independent fault axes, drawn in a fixed order so adding a rate
+//! never perturbs the other axes' draws:
+//!
+//! 1. `panic` — the attempt panics with [`PANIC_MESSAGE`] before it
+//!    touches the engine (models a driver bug).
+//! 2. `nan` — the job's η is corrupted with a NaN before the run
+//!    (models numerically divergent upstream state; trips the tape's
+//!    non-finite guard mid-phase, so the engine quarantines).
+//! 3. `slow` — the attempt sleeps `slow_ms` before running (models a
+//!    stalled host; drives deadline coverage).
+//! 4. `alloc` — the attempt holds a `alloc_bytes` ballast allocation
+//!    across the run (models memory pressure; a failure under this
+//!    fault escalates the remat policy).
+
+use crate::util::prng::Prng;
+
+/// Panic payload text of an injected chaos panic (distinctive so test
+/// assertions and humans reading JSONL can tell chaos from real bugs).
+pub const PANIC_MESSAGE: &str = "chaos: injected panic";
+
+/// Fault-injection configuration: per-axis Bernoulli rates plus the
+/// magnitudes of the slow/alloc faults.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    /// Root seed of the chaos stream (independent of job seeds).
+    pub seed: u64,
+    /// P(injected panic) per attempt.
+    pub panic_rate: f64,
+    /// P(NaN-corrupted η) per attempt.
+    pub nan_rate: f64,
+    /// P(pre-run sleep) per attempt.
+    pub slow_rate: f64,
+    /// P(held ballast allocation) per attempt.
+    pub alloc_rate: f64,
+    /// Sleep length of a `slow` fault.
+    pub slow_ms: u64,
+    /// Ballast size of an `alloc` fault.
+    pub alloc_bytes: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            seed: 0,
+            panic_rate: 0.0,
+            nan_rate: 0.0,
+            slow_rate: 0.0,
+            alloc_rate: 0.0,
+            slow_ms: 20,
+            alloc_bytes: 8 << 20,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// A config injecting every axis at `rate` (test/bench convenience).
+    pub fn uniform(seed: u64, rate: f64) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            panic_rate: rate,
+            nan_rate: rate,
+            slow_rate: rate,
+            alloc_rate: rate,
+            ..ChaosConfig::default()
+        }
+    }
+
+    /// The faults injected into attempt `attempt` (1-based) of job
+    /// `job_index`.  Deterministic: same `(seed, job, attempt)` → same
+    /// plan, independent of thread scheduling or wall clock.
+    pub fn plan(&self, job_index: u64, attempt: u64) -> FaultPlan {
+        let mut p =
+            Prng::new(self.seed).fold_in(job_index).fold_in(attempt);
+        // Fixed draw order — panic, nan, slow, alloc — so one axis's
+        // rate never shifts another axis's randomness.
+        FaultPlan {
+            panic: p.next_f64() < self.panic_rate,
+            nan: p.next_f64() < self.nan_rate,
+            slow: p.next_f64() < self.slow_rate,
+            alloc: p.next_f64() < self.alloc_rate,
+        }
+    }
+}
+
+/// The faults chosen for one attempt of one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    pub panic: bool,
+    pub nan: bool,
+    pub slow: bool,
+    pub alloc: bool,
+}
+
+impl FaultPlan {
+    /// No faults (what attempts run under when chaos is off).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn any(&self) -> bool {
+        self.panic || self.nan || self.slow || self.alloc
+    }
+
+    /// `"panic+nan"` / `"clean"` — the degradation-chain label segment.
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.panic {
+            parts.push("panic");
+        }
+        if self.nan {
+            parts.push("nan");
+        }
+        if self.slow {
+            parts.push("slow");
+        }
+        if self.alloc {
+            parts.push("alloc");
+        }
+        if parts.is_empty() {
+            "clean".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_in_seed_job_attempt() {
+        let c = ChaosConfig::uniform(42, 0.5);
+        for job in 0..20u64 {
+            for attempt in 1..=4u64 {
+                assert_eq!(
+                    c.plan(job, attempt),
+                    c.plan(job, attempt),
+                    "replaying the same coordinates must replay the plan"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rate_extremes_are_exact() {
+        let off = ChaosConfig::uniform(7, 0.0);
+        let on = ChaosConfig::uniform(7, 1.0);
+        for job in 0..10u64 {
+            assert!(!off.plan(job, 1).any(), "rate 0 injects nothing");
+            let all = on.plan(job, 1);
+            assert!(
+                all.panic && all.nan && all.slow && all.alloc,
+                "rate 1 injects everything"
+            );
+        }
+    }
+
+    #[test]
+    fn attempts_draw_independent_faults() {
+        // At rate 0.5 over 64 (job, attempt) coordinates, seeing the
+        // same plan everywhere would mean the fold_in stream is stuck.
+        let c = ChaosConfig::uniform(3, 0.5);
+        let mut distinct = std::collections::BTreeSet::new();
+        for job in 0..16u64 {
+            for attempt in 1..=4u64 {
+                distinct.insert(c.plan(job, attempt).label());
+            }
+        }
+        assert!(
+            distinct.len() > 2,
+            "fault mix should vary across coordinates, got {distinct:?}"
+        );
+    }
+
+    #[test]
+    fn labels_read_as_fault_lists() {
+        assert_eq!(FaultPlan::none().label(), "clean");
+        let p = FaultPlan { panic: true, nan: false, slow: true, alloc: false };
+        assert_eq!(p.label(), "panic+slow");
+    }
+}

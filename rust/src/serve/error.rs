@@ -1,0 +1,213 @@
+//! Typed failure taxonomy for the serving layer.
+//!
+//! Every way a hypergradient job can fail is a [`HypergradError`]
+//! variant, so the supervisor's retry/degradation policy dispatches on
+//! structure instead of string-matching panic text.  The autodiff layer
+//! stays ignorant of serving: the tape unwinds with its own typed
+//! payloads ([`NonFiniteSignal`], [`CancelSignal`]) and
+//! [`classify_unwind`] is the single place those payloads are turned
+//! into serve-level errors.
+
+use std::any::Any;
+
+use crate::autodiff::tape::{CancelSignal, NonFiniteSignal};
+use crate::coordinator::scheduler::panic_message;
+use crate::util::json::Json;
+
+/// Why a job attempt (or the job as a whole) failed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HypergradError {
+    /// The tape's non-finite guard tripped: node `node` was about to be
+    /// pushed with a NaN/inf value during `phase`.  With the guard off,
+    /// the supervisor still raises this (phase `"result"`, node 0) when
+    /// the finished hypergradient itself contains non-finite values.
+    NonFinite { phase: String, node: usize },
+    /// The job's closure panicked with an untyped payload (a bug or an
+    /// injected chaos panic); `message` is the rendered payload.
+    Panic { message: String },
+    /// The per-attempt deadline fired and the tape unwound at the next
+    /// cooperative cancellation point.
+    DeadlineExceeded { deadline_ms: u64 },
+    /// The request queue was full under the reject backpressure policy;
+    /// the job was shed without ever running.
+    QueueFull { capacity: usize },
+    /// The circuit breaker for this job's engine key is open: at least
+    /// `generation`'s engine (and the per-key quarantine limit in total)
+    /// was quarantined, so the supervisor refuses to build more engines
+    /// for a configuration that keeps corrupting them.
+    EngineQuarantined { generation: u64 },
+}
+
+impl HypergradError {
+    /// Stable machine-readable discriminant (the `error.kind` JSONL
+    /// field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            HypergradError::NonFinite { .. } => "non_finite",
+            HypergradError::Panic { .. } => "panic",
+            HypergradError::DeadlineExceeded { .. } => "deadline_exceeded",
+            HypergradError::QueueFull { .. } => "queue_full",
+            HypergradError::EngineQuarantined { .. } => "engine_quarantined",
+        }
+    }
+
+    /// Whether the supervisor should spend another attempt on the job.
+    /// Shed jobs never ran and an open circuit breaker will not close by
+    /// retrying, so both are terminal; everything else may be transient
+    /// (chaos faults are per-attempt) or degradable (non-finite → fd).
+    pub fn retryable(&self) -> bool {
+        !matches!(
+            self,
+            HypergradError::QueueFull { .. }
+                | HypergradError::EngineQuarantined { .. }
+        )
+    }
+
+    /// The `error` object of a JSONL result record.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("kind", Json::Str(self.kind().to_string()));
+        match self {
+            HypergradError::NonFinite { phase, node } => {
+                o.insert("phase", Json::Str(phase.clone()));
+                o.insert("node", Json::Num(*node as f64));
+            }
+            HypergradError::Panic { message } => {
+                o.insert("message", Json::Str(message.clone()));
+            }
+            HypergradError::DeadlineExceeded { deadline_ms } => {
+                o.insert("deadline_ms", Json::Num(*deadline_ms as f64));
+            }
+            HypergradError::QueueFull { capacity } => {
+                o.insert("capacity", Json::Num(*capacity as f64));
+            }
+            HypergradError::EngineQuarantined { generation } => {
+                o.insert("generation", Json::Num(*generation as f64));
+            }
+        }
+        o
+    }
+}
+
+impl std::fmt::Display for HypergradError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HypergradError::NonFinite { phase, node } => {
+                write!(f, "non-finite value at node {node} during {phase}")
+            }
+            HypergradError::Panic { message } => {
+                write!(f, "job panicked: {message}")
+            }
+            HypergradError::DeadlineExceeded { deadline_ms } => {
+                write!(f, "deadline of {deadline_ms} ms exceeded")
+            }
+            HypergradError::QueueFull { capacity } => {
+                write!(f, "queue full (capacity {capacity}), job shed")
+            }
+            HypergradError::EngineQuarantined { generation } => {
+                write!(
+                    f,
+                    "engine key quarantined (last generation {generation})"
+                )
+            }
+        }
+    }
+}
+
+/// Classify a payload caught from a job attempt's unwind.  The tape's
+/// typed signals map to their dedicated variants; anything else is a
+/// plain [`HypergradError::Panic`] with the payload rendered to text.
+/// `deadline_ms` is the attempt's configured deadline, recorded into
+/// [`HypergradError::DeadlineExceeded`] (0 when a cancellation fired
+/// without a configured deadline — an explicit `CancelToken::cancel`).
+pub fn classify_unwind(
+    payload: Box<dyn Any + Send>,
+    deadline_ms: Option<u64>,
+) -> HypergradError {
+    let payload = match payload.downcast::<NonFiniteSignal>() {
+        Ok(sig) => {
+            return HypergradError::NonFinite {
+                phase: sig.phase.to_string(),
+                node: sig.node,
+            }
+        }
+        Err(other) => other,
+    };
+    let payload = match payload.downcast::<CancelSignal>() {
+        Ok(_) => {
+            return HypergradError::DeadlineExceeded {
+                deadline_ms: deadline_ms.unwrap_or(0),
+            }
+        }
+        Err(other) => other,
+    };
+    HypergradError::Panic { message: panic_message(payload.as_ref()) }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, panic_any};
+
+    #[test]
+    fn classifies_typed_tape_signals() {
+        let payload = catch_unwind(|| {
+            panic_any(NonFiniteSignal { node: 7, phase: "forward" })
+        })
+        .unwrap_err();
+        let err = classify_unwind(payload, None);
+        assert_eq!(
+            err,
+            HypergradError::NonFinite { phase: "forward".to_string(), node: 7 }
+        );
+        assert_eq!(err.kind(), "non_finite");
+
+        let payload = catch_unwind(|| panic_any(CancelSignal)).unwrap_err();
+        let err = classify_unwind(payload, Some(250));
+        assert_eq!(err, HypergradError::DeadlineExceeded { deadline_ms: 250 });
+        assert!(err.retryable());
+    }
+
+    #[test]
+    fn untyped_panics_keep_their_message() {
+        let payload =
+            catch_unwind(|| panic!("boom at step {}", 3)).unwrap_err();
+        let err = classify_unwind(payload, None);
+        match &err {
+            HypergradError::Panic { message } => {
+                assert!(message.contains("boom at step 3"));
+            }
+            other => panic!("expected Panic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn terminal_errors_are_not_retryable() {
+        assert!(!HypergradError::QueueFull { capacity: 4 }.retryable());
+        assert!(
+            !HypergradError::EngineQuarantined { generation: 2 }.retryable()
+        );
+        assert!(
+            HypergradError::NonFinite { phase: "x".into(), node: 0 }
+                .retryable()
+        );
+        assert!(HypergradError::Panic { message: "m".into() }.retryable());
+    }
+
+    #[test]
+    fn json_carries_kind_and_fields() {
+        let e = HypergradError::NonFinite {
+            phase: "backward_vjp".to_string(),
+            node: 42,
+        };
+        let j = e.to_json();
+        assert_eq!(j.get("kind").and_then(Json::as_str), Some("non_finite"));
+        assert_eq!(j.get("node").and_then(Json::as_u64), Some(42));
+        let round = Json::parse(&j.compact()).unwrap();
+        assert_eq!(
+            round.get("phase").and_then(Json::as_str),
+            Some("backward_vjp")
+        );
+    }
+}

@@ -1,0 +1,352 @@
+//! Job specs and result records — the serving layer's JSONL wire types.
+//!
+//! A [`JobSpec`] names one hypergradient request (task, mode, shape,
+//! seed); a [`JobRecord`] is its single terminal result: exactly one
+//! record per submitted job, whatever mix of retries, degradations and
+//! quarantines happened on the way.  Both sides round-trip through the
+//! repo's own [`Json`] so `mixflow serve` needs no external formats.
+
+use crate::autodiff::{
+    CheckpointPolicy, HypergradMode, InnerOptimiser,
+};
+use crate::meta::native::NativeTask;
+use crate::util::json::Json;
+
+use super::error::HypergradError;
+
+/// One hypergradient request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Caller-chosen id, echoed into the result record.
+    pub id: String,
+    pub task: NativeTask,
+    pub mode: HypergradMode,
+    pub inner_opt: InnerOptimiser,
+    pub remat: CheckpointPolicy,
+    /// Attention head count (non-attention tasks carry it inertly).
+    pub heads: usize,
+    /// Sequences per attention batch.
+    pub batch: usize,
+    pub unroll: usize,
+    /// Problem seed — data and initialisation.
+    pub seed: u64,
+}
+
+impl Default for JobSpec {
+    fn default() -> JobSpec {
+        JobSpec {
+            id: String::new(),
+            task: NativeTask::HyperLr,
+            mode: HypergradMode::Mixflow,
+            inner_opt: InnerOptimiser::Sgd,
+            remat: CheckpointPolicy::Full,
+            heads: 1,
+            batch: 1,
+            unroll: 4,
+            seed: 0,
+        }
+    }
+}
+
+impl JobSpec {
+    /// The engine-pool coalescing key for this spec under (possibly
+    /// degraded) `mode`/`remat`.  Two jobs with equal keys can reuse
+    /// one warm engine: same task topology and shape means the tape's
+    /// compiled step plans replay instead of recompiling.
+    pub fn engine_key(
+        &self,
+        mode: HypergradMode,
+        remat: CheckpointPolicy,
+    ) -> String {
+        format!(
+            "{}/{}/{}/h{}/b{}/u{}/{}",
+            self.task.name(),
+            self.inner_opt.name(),
+            mode.name(),
+            self.heads,
+            self.batch,
+            self.unroll,
+            remat.name()
+        )
+    }
+
+    /// Parse one JSONL request object.  Every field except `id` has a
+    /// default (the [`JobSpec::default`] values); `fallback_id` fills a
+    /// missing `id` so line N of a job file is addressable as `job-N`.
+    /// Unknown enum values are errors, not silent defaults — a typoed
+    /// `"mode":"mixfow"` must not quietly serve the wrong path.
+    pub fn from_json(doc: &Json, fallback_id: &str) -> Result<JobSpec, String> {
+        let mut spec = JobSpec {
+            id: doc
+                .get("id")
+                .and_then(Json::as_str)
+                .unwrap_or(fallback_id)
+                .to_string(),
+            ..JobSpec::default()
+        };
+        if let Some(v) = doc.get("task") {
+            let s = v.as_str().ok_or("task must be a string")?;
+            spec.task = NativeTask::parse(s)
+                .ok_or_else(|| format!("unknown task {s:?}"))?;
+        }
+        if let Some(v) = doc.get("mode") {
+            let s = v.as_str().ok_or("mode must be a string")?;
+            spec.mode = HypergradMode::parse(s)
+                .ok_or_else(|| format!("unknown mode {s:?}"))?;
+        }
+        if let Some(v) = doc.get("inner_opt") {
+            let s = v.as_str().ok_or("inner_opt must be a string")?;
+            spec.inner_opt = InnerOptimiser::parse(s)
+                .ok_or_else(|| format!("unknown inner_opt {s:?}"))?;
+        }
+        if let Some(v) = doc.get("remat") {
+            let s = v.as_str().ok_or("remat must be a string")?;
+            spec.remat = CheckpointPolicy::parse(s)
+                .ok_or_else(|| format!("unknown remat policy {s:?}"))?;
+        }
+        for (key, slot) in [
+            ("heads", &mut spec.heads as &mut usize),
+            ("batch", &mut spec.batch),
+            ("unroll", &mut spec.unroll),
+        ] {
+            if let Some(v) = doc.get(key) {
+                let n = v
+                    .as_u64()
+                    .ok_or_else(|| format!("{key} must be a number"))?;
+                if n == 0 {
+                    return Err(format!("{key} must be >= 1"));
+                }
+                *slot = n as usize;
+            }
+        }
+        if let Some(v) = doc.get("seed") {
+            spec.seed =
+                v.as_u64().ok_or("seed must be a number".to_string())?;
+        }
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("id", Json::Str(self.id.clone()));
+        o.insert("task", Json::Str(self.task.name().to_string()));
+        o.insert("mode", Json::Str(self.mode.name().to_string()));
+        o.insert(
+            "inner_opt",
+            Json::Str(self.inner_opt.name().to_string()),
+        );
+        o.insert("remat", Json::Str(self.remat.name()));
+        o.insert("heads", Json::Num(self.heads as f64));
+        o.insert("batch", Json::Num(self.batch as f64));
+        o.insert("unroll", Json::Num(self.unroll as f64));
+        o.insert("seed", Json::Num(self.seed as f64));
+        o
+    }
+}
+
+/// A job's terminal state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    /// A hypergradient was produced (possibly after retries/degradation).
+    Ok,
+    /// Every admissible attempt failed; `error` holds the last failure.
+    Failed,
+    /// Rejected at admission by queue backpressure — never ran.
+    Shed,
+}
+
+impl JobStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobStatus::Ok => "ok",
+            JobStatus::Failed => "failed",
+            JobStatus::Shed => "shed",
+        }
+    }
+}
+
+/// The single terminal result record for one job.
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: String,
+    pub status: JobStatus,
+    /// Engine attempts actually run (0 for shed jobs).
+    pub attempts: u64,
+    /// Mode the caller asked for.
+    pub mode_requested: HypergradMode,
+    /// Mode of the final attempt (differs after a non-finite → fd
+    /// degradation).
+    pub mode_used: HypergradMode,
+    /// Remat policy of the final attempt (escalates under alloc faults).
+    pub remat_used: CheckpointPolicy,
+    /// Human-readable degradation chain, oldest first, e.g.
+    /// `["nonfinite:mixflow->fd"]`.
+    pub degradation: Vec<String>,
+    /// Engine generation serving each attempt, in order.
+    pub generations: Vec<u64>,
+    /// Generations quarantined while serving this job.
+    pub quarantined: Vec<u64>,
+    /// Total backoff slept between this job's attempts.
+    pub backoff_ms: u64,
+    /// Last error (present for `failed` and `shed`).
+    pub error: Option<HypergradError>,
+    pub outer_loss: Option<f64>,
+    /// ‖dF/dη‖₂ of the served hypergradient.
+    pub hypergrad_norm: Option<f64>,
+    /// Wall time from dequeue to terminal state (backoff included).
+    pub seconds: f64,
+    /// Per-phase wall time of the successful attempt (telemetry on).
+    pub phases: Vec<(String, f64)>,
+}
+
+impl JobRecord {
+    /// One JSONL result line.  Optional numeric fields are omitted when
+    /// absent rather than set to NaN — the JSON layer would serialise
+    /// NaN as `null`, but an absent key is cheaper for consumers to
+    /// test and cannot be confused with "ran and produced non-finite".
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("id", Json::Str(self.id.clone()));
+        o.insert("status", Json::Str(self.status.name().to_string()));
+        o.insert("attempts", Json::Num(self.attempts as f64));
+        o.insert(
+            "mode_requested",
+            Json::Str(self.mode_requested.name().to_string()),
+        );
+        o.insert("mode_used", Json::Str(self.mode_used.name().to_string()));
+        o.insert("remat_used", Json::Str(self.remat_used.name()));
+        o.insert(
+            "degradation",
+            Json::Arr(
+                self.degradation
+                    .iter()
+                    .map(|d| Json::Str(d.clone()))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "generations",
+            Json::Arr(
+                self.generations
+                    .iter()
+                    .map(|g| Json::Num(*g as f64))
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "quarantined",
+            Json::Arr(
+                self.quarantined
+                    .iter()
+                    .map(|g| Json::Num(*g as f64))
+                    .collect(),
+            ),
+        );
+        o.insert("backoff_ms", Json::Num(self.backoff_ms as f64));
+        if let Some(err) = &self.error {
+            o.insert("error", err.to_json());
+        }
+        if let Some(loss) = self.outer_loss {
+            o.insert("outer_loss", Json::Num(loss));
+        }
+        if let Some(norm) = self.hypergrad_norm {
+            o.insert("hypergrad_norm", Json::Num(norm));
+        }
+        o.insert("seconds", Json::Num(self.seconds));
+        if !self.phases.is_empty() {
+            let mut ph = Json::obj();
+            for (name, secs) in &self.phases {
+                ph.insert(name, Json::Num(*secs));
+            }
+            o.insert("phases", ph);
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips_through_json() {
+        let spec = JobSpec {
+            id: "j7".to_string(),
+            task: NativeTask::Attention,
+            mode: HypergradMode::Naive,
+            inner_opt: InnerOptimiser::adam(),
+            remat: CheckpointPolicy::Remat { segment: 2 },
+            heads: 2,
+            batch: 3,
+            unroll: 6,
+            seed: 99,
+        };
+        let round =
+            JobSpec::from_json(&spec.to_json(), "fallback").unwrap();
+        assert_eq!(round, spec);
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let doc = Json::parse(r#"{"task":"hyperlr"}"#).unwrap();
+        let spec = JobSpec::from_json(&doc, "job-3").unwrap();
+        assert_eq!(spec.id, "job-3", "fallback id fills a missing id");
+        assert_eq!(spec.mode, HypergradMode::Mixflow);
+        assert_eq!(spec.unroll, 4);
+    }
+
+    #[test]
+    fn unknown_enums_and_bad_shapes_are_rejected() {
+        let bad_mode = Json::parse(r#"{"mode":"mixfow"}"#).unwrap();
+        assert!(JobSpec::from_json(&bad_mode, "x")
+            .unwrap_err()
+            .contains("unknown mode"));
+        let zero_unroll = Json::parse(r#"{"unroll":0}"#).unwrap();
+        assert!(JobSpec::from_json(&zero_unroll, "x")
+            .unwrap_err()
+            .contains(">= 1"));
+    }
+
+    #[test]
+    fn engine_key_tracks_degraded_mode_and_remat() {
+        let spec = JobSpec { id: "a".to_string(), ..JobSpec::default() };
+        let warm = spec.engine_key(spec.mode, spec.remat);
+        let degraded =
+            spec.engine_key(HypergradMode::Fd, CheckpointPolicy::Auto);
+        assert_eq!(warm, "hyperlr/sgd/mixflow/h1/b1/u4/full");
+        assert_ne!(warm, degraded, "degraded attempts use a different pool");
+    }
+
+    #[test]
+    fn record_json_has_one_terminal_status() {
+        let rec = JobRecord {
+            id: "j0".to_string(),
+            status: JobStatus::Failed,
+            attempts: 3,
+            mode_requested: HypergradMode::Mixflow,
+            mode_used: HypergradMode::Fd,
+            remat_used: CheckpointPolicy::Full,
+            degradation: vec!["nonfinite:mixflow->fd".to_string()],
+            generations: vec![1, 4, 5],
+            quarantined: vec![1],
+            backoff_ms: 15,
+            error: Some(HypergradError::Panic {
+                message: "boom".to_string(),
+            }),
+            outer_loss: None,
+            hypergrad_norm: None,
+            seconds: 0.5,
+            phases: Vec::new(),
+        };
+        let j = Json::parse(&rec.to_json().compact()).unwrap();
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("failed"));
+        assert_eq!(j.get("attempts").and_then(Json::as_u64), Some(3));
+        assert_eq!(
+            j.path(&["error", "kind"]).and_then(Json::as_str),
+            Some("panic")
+        );
+        assert!(j.get("outer_loss").is_none(), "failed jobs omit the loss");
+        assert_eq!(j.get("generations").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

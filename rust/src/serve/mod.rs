@@ -1,0 +1,44 @@
+//! Fault-tolerant hypergradient serving.
+//!
+//! A long-running job-queue service over a supervised pool of warm
+//! [`HypergradEngine`](crate::autodiff::HypergradEngine)s: callers
+//! submit [`JobSpec`]s (task, mode, shape, seed), the supervisor drives
+//! each to exactly one terminal [`JobRecord`] through bounded retries,
+//! per-attempt deadlines, graceful degradation and engine quarantine.
+//! The `mixflow serve` CLI command is a thin JSONL front end over
+//! [`serve_jobs`].
+//!
+//! * [`error`] — the typed [`HypergradError`] taxonomy and the single
+//!   place the tape's unwind payloads are classified.
+//! * [`queue`] — bounded request queue with reject/block backpressure.
+//! * [`chaos`] — deterministic fault injection (Prng-seeded panics,
+//!   NaNs, slowdowns, allocation spikes), a pure function of
+//!   `(seed, job, attempt)` so failures replay bit-for-bit.
+//! * [`job`] — JSONL wire types: job specs and result records.
+//! * [`supervisor`] — the worker pool, warm-engine coalescing,
+//!   retry/backoff/degradation policy, quarantine-and-rebuild, and the
+//!   `serve.*` registry counters.
+//!
+//! Design rule: the autodiff layer never depends on `serve`.  The tape
+//! raises typed signals
+//! ([`NonFiniteSignal`](crate::autodiff::tape::NonFiniteSignal),
+//! [`CancelSignal`](crate::autodiff::tape::CancelSignal)); only this
+//! module interprets them.  See `docs/serve.md` for the full lifecycle
+//! and the JSONL schemas.
+
+// A serving layer must not abort the process it serves from: every
+// panic path has to be a typed error or a supervised unwind.  Deny the
+// footguns outright (tests opt back in locally).
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod chaos;
+pub mod error;
+pub mod job;
+pub mod queue;
+pub mod supervisor;
+
+pub use chaos::{ChaosConfig, FaultPlan};
+pub use error::{classify_unwind, HypergradError};
+pub use job::{JobRecord, JobSpec, JobStatus};
+pub use queue::{BackpressurePolicy, BoundedQueue};
+pub use supervisor::{serve_jobs, ServeConfig, ServeOutcome};

@@ -1,0 +1,246 @@
+//! Bounded MPMC request queue with configurable backpressure.
+//!
+//! The serving front end pushes jobs, the worker pool pops them.  The
+//! queue is deliberately tiny — a mutex-guarded `VecDeque` with two
+//! condvars — because the jobs it carries are seconds-scale engine
+//! runs, not microsecond messages; contention on the lock is noise.
+//!
+//! Backpressure is a policy, not an accident: under
+//! [`BackpressurePolicy::Reject`] a full queue bounces the push back to
+//! the caller (the supervisor sheds the job with
+//! [`crate::serve::HypergradError::QueueFull`]); under
+//! [`BackpressurePolicy::Block`] the producer parks until a worker
+//! drains a slot, so admission is lossless and the bound caps memory,
+//! not throughput.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, PoisonError};
+
+/// What a full queue does to the producer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackpressurePolicy {
+    /// Bounce the push back immediately (lossy shed, bounded latency).
+    Reject,
+    /// Park the producer until space frees (lossless, bounded memory).
+    Block,
+}
+
+impl BackpressurePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackpressurePolicy::Reject => "reject",
+            BackpressurePolicy::Block => "block",
+        }
+    }
+
+    /// Case- and whitespace-insensitive name lookup.
+    pub fn parse(s: &str) -> Option<BackpressurePolicy> {
+        match s.trim().to_lowercase().as_str() {
+            "reject" | "shed" => Some(BackpressurePolicy::Reject),
+            "block" | "wait" => Some(BackpressurePolicy::Block),
+            _ => None,
+        }
+    }
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded FIFO shared between one producer and N worker threads.
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    /// Signalled when a slot frees (push-side waiters under `Block`).
+    space: Condvar,
+    /// Signalled when an item arrives or the queue closes (pop-side).
+    items: Condvar,
+    capacity: usize,
+    policy: BackpressurePolicy,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `capacity` (min 1) queued items.
+    pub fn new(capacity: usize, policy: BackpressurePolicy) -> BoundedQueue<T> {
+        BoundedQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            space: Condvar::new(),
+            items: Condvar::new(),
+            capacity: capacity.max(1),
+            policy,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn policy(&self) -> BackpressurePolicy {
+        self.policy
+    }
+
+    /// Enqueue `item`.  Returns it back via `Err` when it cannot be
+    /// admitted: the queue is full under [`BackpressurePolicy::Reject`],
+    /// or the queue has been closed (any policy — a closed queue never
+    /// admits, even for a blocked producer, so shutdown cannot deadlock).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.capacity {
+                st.items.push_back(item);
+                self.items.notify_one();
+                return Ok(());
+            }
+            match self.policy {
+                BackpressurePolicy::Reject => return Err(item),
+                BackpressurePolicy::Block => {
+                    st = self
+                        .space
+                        .wait(st)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+    }
+
+    /// Dequeue the next item, blocking while the queue is open but
+    /// empty.  `None` means closed-and-drained: the worker's signal to
+    /// exit its loop.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.space.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self
+                .items
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Close the queue: queued items still drain, new pushes bounce,
+    /// and idle workers wake to observe the shutdown.
+    pub fn close(&self) {
+        let mut st = self
+            .state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        st.closed = true;
+        self.items.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Currently queued (not in-flight) items.
+    pub fn len(&self) -> usize {
+        self.state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .items
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_and_close_drain() {
+        let q: BoundedQueue<u32> =
+            BoundedQueue::new(8, BackpressurePolicy::Reject);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let drained: Vec<u32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, [0, 1, 2, 3, 4]);
+        assert!(q.pop().is_none(), "closed and drained stays None");
+    }
+
+    #[test]
+    fn reject_policy_bounces_when_full() {
+        let q: BoundedQueue<u32> =
+            BoundedQueue::new(2, BackpressurePolicy::Reject);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(3), "full queue returns the item");
+        assert_eq!(q.pop(), Some(1));
+        q.push(3).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn block_policy_waits_for_a_consumer() {
+        let q: Arc<BoundedQueue<u32>> =
+            Arc::new(BoundedQueue::new(1, BackpressurePolicy::Block));
+        q.push(0).unwrap();
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.push(1).is_ok())
+        };
+        // The producer is parked on the full queue until this pop.
+        assert_eq!(q.pop(), Some(0));
+        assert!(producer.join().unwrap(), "blocked push completes");
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn close_unblocks_a_parked_producer() {
+        let q: Arc<BoundedQueue<u32>> =
+            Arc::new(BoundedQueue::new(1, BackpressurePolicy::Block));
+        q.push(0).unwrap();
+        let producer = {
+            let q = Arc::clone(&q);
+            thread::spawn(move || q.push(1))
+        };
+        // Give the producer a moment to park, then close underneath it.
+        thread::sleep(std::time::Duration::from_millis(10));
+        q.close();
+        assert_eq!(
+            producer.join().unwrap(),
+            Err(1),
+            "closing hands the item back instead of deadlocking"
+        );
+    }
+
+    #[test]
+    fn parse_accepts_aliases() {
+        assert_eq!(
+            BackpressurePolicy::parse(" Reject\n"),
+            Some(BackpressurePolicy::Reject)
+        );
+        assert_eq!(
+            BackpressurePolicy::parse("BLOCK"),
+            Some(BackpressurePolicy::Block)
+        );
+        assert_eq!(
+            BackpressurePolicy::parse("shed"),
+            Some(BackpressurePolicy::Reject)
+        );
+        assert_eq!(BackpressurePolicy::parse("drop"), None);
+    }
+}

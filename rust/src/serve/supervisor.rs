@@ -1,0 +1,810 @@
+//! The serving supervisor: a worker pool over warm, pooled
+//! [`HypergradEngine`]s with retries, deadlines, degradation and
+//! quarantine.
+//!
+//! ## Lifecycle of one job
+//!
+//! 1. **Admission** — the producer pushes the job into the
+//!    [`BoundedQueue`]; a full queue under the reject policy sheds it
+//!    with a [`HypergradError::QueueFull`] record (status `shed`).
+//! 2. **Attempts** — a worker checks a warm engine out of the pool
+//!    (coalesced by [`JobSpec::engine_key`]: same task/shape/mode jobs
+//!    share engines, so compiled step plans and arena buffers stay
+//!    warm), arms the per-attempt deadline token, and runs the
+//!    hypergradient under `catch_unwind`.  Failures are classified into
+//!    the typed [`HypergradError`] taxonomy.
+//! 3. **Quarantine** — after a failed attempt the engine's structural
+//!    invariants are checked; a violated engine (e.g. an unwind left a
+//!    phase open mid-sweep) is quarantined: its generation is retired,
+//!    it never serves again, and the next attempt builds a fresh
+//!    engine.  A per-key circuit breaker stops rebuilding after
+//!    [`ServeConfig::quarantine_limit`] quarantines.
+//! 4. **Degradation** — a non-finite failure on a non-fd mode retries
+//!    as finite differences (`nonfinite:<mode>->fd`): slower but
+//!    numerically decoupled from the taped path.  A failure while an
+//!    allocation-spike fault was held escalates the remat policy one
+//!    rung (`full → auto → remat{T}`, `remat{k} → remat{min(2k, T)}`),
+//!    trading recompute for a smaller live set under memory pressure.
+//! 5. **Retry pacing** — between attempts the worker sleeps an
+//!    exponential backoff (`base·2^(n−1)`, capped) plus a jitter drawn
+//!    from a deterministic per-job [`Prng`] stream.
+//! 6. **Terminal record** — exactly one [`JobRecord`] per submitted
+//!    job, whatever happened: `ok`, `failed` or `shed`, carrying the
+//!    attempt count, degradation chain, engine generations and error.
+//!
+//! The registry counters (`serve.jobs.*`, `serve.engine.quarantines`,
+//! `serve.deadline.exceeded`) are updated so they always reconcile with
+//! the records: `ok + failed + shed == jobs`, `retried == Σ(attempts−1)`.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::autodiff::tape::CancelToken;
+use crate::autodiff::{
+    CheckpointPolicy, HypergradEngine, HypergradMode,
+};
+use crate::meta::native::NativeMetaTrainer;
+use crate::obs::{Counter, MetricsRegistry};
+use crate::util::prng::Prng;
+
+use super::chaos::{ChaosConfig, FaultPlan, PANIC_MESSAGE};
+use super::error::{classify_unwind, HypergradError};
+use super::job::{JobRecord, JobSpec, JobStatus};
+use super::queue::{BackpressurePolicy, BoundedQueue};
+
+/// Supervisor configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeConfig {
+    /// Worker threads (min 1).
+    pub workers: usize,
+    /// Queue bound; what happens when it fills is `backpressure`.
+    pub queue_capacity: usize,
+    pub backpressure: BackpressurePolicy,
+    /// Per-attempt deadline; `None` = unbounded.
+    pub deadline_ms: Option<u64>,
+    /// Retries beyond the first attempt.
+    pub max_retries: u64,
+    /// First backoff sleep; doubles per retry.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling (jitter rides on top).
+    pub backoff_cap_ms: u64,
+    /// Seed of the backoff-jitter stream (folded per job).
+    pub seed: u64,
+    /// Engine telemetry (phase timings in records).
+    pub telemetry: bool,
+    /// Tape non-finite guard (off = bit-identical fast path; non-finite
+    /// results are then only caught by the terminal result check).
+    pub guard: bool,
+    /// Quarantines per engine key before the circuit breaker opens.
+    pub quarantine_limit: usize,
+    /// Deterministic fault injection; `None` = no chaos.
+    pub chaos: Option<ChaosConfig>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: 2,
+            queue_capacity: 64,
+            backpressure: BackpressurePolicy::Block,
+            deadline_ms: None,
+            max_retries: 2,
+            backoff_base_ms: 5,
+            backoff_cap_ms: 50,
+            seed: 0,
+            telemetry: true,
+            guard: true,
+            quarantine_limit: 8,
+            chaos: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    fn build_engine(
+        &self,
+        mode: HypergradMode,
+        remat: CheckpointPolicy,
+        inner_opt: crate::autodiff::InnerOptimiser,
+    ) -> HypergradEngine {
+        HypergradEngine::builder()
+            .mode(mode)
+            .checkpoint(remat)
+            .inner_opt(inner_opt)
+            .telemetry(self.telemetry)
+            .guard(self.guard)
+            .build()
+    }
+}
+
+/// Everything `serve_jobs` returns: one record per job plus the
+/// supervisor-wide ledgers the integration suite reconciles.
+#[derive(Debug)]
+pub struct ServeOutcome {
+    /// One terminal record per submitted job, in submission order.
+    pub records: Vec<JobRecord>,
+    /// Supervisor-wide counters (`serve.jobs.*`, quarantines, …).
+    pub metrics: MetricsRegistry,
+    /// Every quarantined engine generation, supervisor-wide.
+    pub quarantined_generations: Vec<u64>,
+    /// Engines built over the run (warm reuse keeps this below the
+    /// attempt count).
+    pub engines_built: u64,
+}
+
+impl ServeOutcome {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.metrics.counter(c)
+    }
+}
+
+/// A warm engine plus its immutable generation tag.
+struct PooledEngine {
+    engine: HypergradEngine,
+    generation: u64,
+}
+
+struct PoolState {
+    idle: HashMap<String, Vec<PooledEngine>>,
+    /// Retired generations, in quarantine order.
+    quarantined: Vec<u64>,
+    /// Per-key: (quarantine count, last quarantined generation).
+    breaker: HashMap<String, (usize, u64)>,
+}
+
+/// The warm-engine pool: coalesces jobs by engine key, retires
+/// quarantined generations, and opens a per-key circuit breaker once a
+/// key keeps corrupting engines.
+struct EnginePool {
+    state: Mutex<PoolState>,
+    next_generation: AtomicU64,
+    quarantine_limit: usize,
+}
+
+impl EnginePool {
+    fn new(quarantine_limit: usize) -> EnginePool {
+        EnginePool {
+            state: Mutex::new(PoolState {
+                idle: HashMap::new(),
+                quarantined: Vec::new(),
+                breaker: HashMap::new(),
+            }),
+            next_generation: AtomicU64::new(1),
+            quarantine_limit: quarantine_limit.max(1),
+        }
+    }
+
+    /// Check out a warm engine for `key`, or build a fresh one.  Errs
+    /// with [`HypergradError::EngineQuarantined`] when the key's
+    /// breaker is open.
+    fn checkout(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> HypergradEngine,
+    ) -> Result<PooledEngine, HypergradError> {
+        {
+            let mut st = self
+                .state
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            if let Some(&(count, last)) = st.breaker.get(key) {
+                if count >= self.quarantine_limit {
+                    return Err(HypergradError::EngineQuarantined {
+                        generation: last,
+                    });
+                }
+            }
+            if let Some(engine) =
+                st.idle.get_mut(key).and_then(Vec::pop)
+            {
+                return Ok(engine);
+            }
+        }
+        // Build outside the lock — engine construction is not free and
+        // siblings should keep checking warm engines out meanwhile.
+        let generation =
+            self.next_generation.fetch_add(1, Ordering::SeqCst);
+        Ok(PooledEngine { engine: build(), generation })
+    }
+
+    fn check_in(&self, key: &str, engine: PooledEngine) {
+        let mut st =
+            self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.idle.entry(key.to_string()).or_default().push(engine);
+    }
+
+    /// Retire an engine whose invariants no longer hold.  The engine is
+    /// dropped here — a quarantined generation can never serve again
+    /// because the pool is the only path to an engine.
+    fn quarantine(&self, key: &str, engine: PooledEngine) {
+        let mut st =
+            self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        st.quarantined.push(engine.generation);
+        let entry = st.breaker.entry(key.to_string()).or_insert((0, 0));
+        entry.0 += 1;
+        entry.1 = engine.generation;
+        drop(engine);
+    }
+
+    fn quarantined(&self) -> Vec<u64> {
+        self.state
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .quarantined
+            .clone()
+    }
+
+    fn engines_built(&self) -> u64 {
+        self.next_generation.load(Ordering::SeqCst) - 1
+    }
+}
+
+/// What a successful attempt hands back to the job loop.
+struct AttemptOk {
+    outer_loss: f64,
+    hypergrad_norm: f64,
+    phases: Vec<(String, f64)>,
+}
+
+/// One engine attempt: inject faults, arm the deadline, run under
+/// `catch_unwind`, classify any failure.
+fn run_attempt(
+    spec: &JobSpec,
+    engine: &mut HypergradEngine,
+    cfg: &ServeConfig,
+    fault: FaultPlan,
+) -> Result<AttemptOk, HypergradError> {
+    // The deadline covers the whole attempt, so an injected slowdown
+    // eats into the budget exactly like a real stall would.
+    let token = cfg.deadline_ms.map(|ms| {
+        Arc::new(CancelToken::with_deadline(
+            Instant::now() + Duration::from_millis(ms),
+        ))
+    });
+    let chaos = cfg.chaos.unwrap_or_default();
+    if fault.slow {
+        thread::sleep(Duration::from_millis(chaos.slow_ms));
+    }
+    // Ballast held across the run models memory pressure; volatile
+    // writes keep the allocation from being optimised away.
+    let _ballast: Option<Vec<u8>> = if fault.alloc {
+        let mut v = vec![0u8; chaos.alloc_bytes.max(1)];
+        v[0] = 1;
+        Some(v)
+    } else {
+        None
+    };
+    let mut problem = NativeMetaTrainer::build_problem(
+        spec.task,
+        spec.seed,
+        spec.unroll,
+        spec.heads,
+        spec.batch,
+    );
+    engine.configure_problem(problem.as_mut());
+    let theta0 = problem.theta0();
+    let mut eta = problem.eta0();
+    if fault.nan {
+        eta[0].data[0] = f64::NAN;
+    }
+    engine.set_cancel(token.clone());
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        if fault.panic {
+            std::panic::panic_any(PANIC_MESSAGE.to_string());
+        }
+        engine.run(problem.as_ref(), &theta0, &eta)
+    }));
+    engine.set_cancel(None);
+    let h = match result {
+        Ok(h) => h,
+        Err(payload) => {
+            return Err(classify_unwind(payload, cfg.deadline_ms))
+        }
+    };
+    // Guard-off safety net: a NaN that flowed through untripped must
+    // still never be served as a valid hypergradient.
+    let finite = h.outer_loss.is_finite()
+        && h.d_eta
+            .iter()
+            .all(|g| g.data.iter().all(|v| v.is_finite()));
+    if !finite {
+        return Err(HypergradError::NonFinite {
+            phase: "result".to_string(),
+            node: 0,
+        });
+    }
+    let norm = h
+        .d_eta
+        .iter()
+        .flat_map(|g| g.data.iter())
+        .map(|v| v * v)
+        .sum::<f64>()
+        .sqrt();
+    let phases = engine
+        .take_step_traces()
+        .last()
+        .map(|t| {
+            t.phases
+                .iter()
+                .map(|p| (p.phase.name().to_string(), p.seconds))
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(AttemptOk {
+        outer_loss: h.outer_loss,
+        hypergrad_norm: norm,
+        phases,
+    })
+}
+
+/// One rung down the memory-pressure ladder: fewer live checkpoints,
+/// more recompute.  `None` once fully degraded.
+fn escalate_remat(
+    policy: CheckpointPolicy,
+    unroll: usize,
+) -> Option<CheckpointPolicy> {
+    let max_seg = unroll.max(2);
+    match policy {
+        CheckpointPolicy::Full => Some(CheckpointPolicy::Auto),
+        CheckpointPolicy::Auto => {
+            Some(CheckpointPolicy::Remat { segment: max_seg })
+        }
+        CheckpointPolicy::Remat { segment } => {
+            let next = (segment * 2).min(max_seg);
+            (next > segment)
+                .then_some(CheckpointPolicy::Remat { segment: next })
+        }
+    }
+}
+
+fn count(metrics: &Mutex<MetricsRegistry>, c: Counter, delta: u64) {
+    if delta > 0 {
+        metrics
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .add(c, delta);
+    }
+}
+
+/// Drive one job to its terminal state (everything but admission).
+fn process_job(
+    index: u64,
+    spec: &JobSpec,
+    cfg: &ServeConfig,
+    pool: &EnginePool,
+    metrics: &Mutex<MetricsRegistry>,
+) -> JobRecord {
+    let t0 = Instant::now();
+    let mut mode = spec.mode;
+    let mut remat = spec.remat;
+    let mut degradation: Vec<String> = Vec::new();
+    let mut generations: Vec<u64> = Vec::new();
+    let mut quarantined: Vec<u64> = Vec::new();
+    let mut backoff_ms = 0u64;
+    let mut last_err: Option<HypergradError> = None;
+    let mut success: Option<AttemptOk> = None;
+    // Jitter stream: deterministic per (supervisor seed, job index),
+    // deliberately decoupled from the chaos stream.
+    let mut jitter = Prng::new(cfg.seed ^ 0x6a_17_7e_72).fold_in(index);
+    let max_attempts = cfg.max_retries + 1;
+
+    for attempt in 1..=max_attempts {
+        let fault = cfg
+            .chaos
+            .as_ref()
+            .map(|c| c.plan(index, attempt))
+            .unwrap_or_else(FaultPlan::none);
+        let key = spec.engine_key(mode, remat);
+        let mut pooled = match pool.checkout(&key, || {
+            cfg.build_engine(mode, remat, spec.inner_opt)
+        }) {
+            Ok(p) => p,
+            Err(err) => {
+                // Circuit breaker open: terminal, no attempt consumed.
+                last_err = Some(err);
+                break;
+            }
+        };
+        generations.push(pooled.generation);
+        match run_attempt(spec, &mut pooled.engine, cfg, fault) {
+            Ok(ok) => {
+                pool.check_in(&key, pooled);
+                success = Some(ok);
+                break;
+            }
+            Err(err) => {
+                if matches!(
+                    err,
+                    HypergradError::DeadlineExceeded { .. }
+                ) {
+                    count(metrics, Counter::ServeDeadlineExceeded, 1);
+                }
+                if pooled.engine.invariants_ok() {
+                    // Structurally sound: drain any half-recorded
+                    // telemetry and keep the engine warm.
+                    let _ = pooled.engine.take_step_traces();
+                    pool.check_in(&key, pooled);
+                } else {
+                    quarantined.push(pooled.generation);
+                    pool.quarantine(&key, pooled);
+                    count(metrics, Counter::ServeEngineQuarantines, 1);
+                }
+                let retrying =
+                    attempt < max_attempts && err.retryable();
+                if retrying {
+                    // Graceful degradation before the next attempt.
+                    if matches!(err, HypergradError::NonFinite { .. })
+                        && mode != HypergradMode::Fd
+                    {
+                        degradation.push(format!(
+                            "nonfinite:{}->fd",
+                            mode.name()
+                        ));
+                        mode = HypergradMode::Fd;
+                    } else if fault.alloc
+                        && mode == HypergradMode::Mixflow
+                    {
+                        if let Some(next) =
+                            escalate_remat(remat, spec.unroll)
+                        {
+                            degradation.push(format!(
+                                "alloc:{}->{}",
+                                remat.name(),
+                                next.name()
+                            ));
+                            remat = next;
+                        }
+                    }
+                    let exp = cfg
+                        .backoff_base_ms
+                        .saturating_mul(1u64 << (attempt - 1).min(20))
+                        .min(cfg.backoff_cap_ms);
+                    let delay = exp
+                        + jitter
+                            .next_below(
+                                cfg.backoff_base_ms.clamp(1, u32::MAX as u64)
+                                    as u32,
+                            ) as u64;
+                    backoff_ms += delay;
+                    thread::sleep(Duration::from_millis(delay));
+                }
+                last_err = Some(err);
+                if !retrying {
+                    break;
+                }
+            }
+        }
+    }
+
+    let attempts = generations.len() as u64;
+    count(metrics, Counter::ServeJobsRetried, attempts.saturating_sub(1));
+    let status = if success.is_some() {
+        count(metrics, Counter::ServeJobsOk, 1);
+        JobStatus::Ok
+    } else {
+        count(metrics, Counter::ServeJobsFailed, 1);
+        JobStatus::Failed
+    };
+    let (error, outer_loss, hypergrad_norm, phases) = match success {
+        Some(ok) => {
+            (None, Some(ok.outer_loss), Some(ok.hypergrad_norm), ok.phases)
+        }
+        None => (last_err, None, None, Vec::new()),
+    };
+    JobRecord {
+        id: spec.id.clone(),
+        status,
+        attempts,
+        mode_requested: spec.mode,
+        mode_used: mode,
+        remat_used: remat,
+        degradation,
+        generations,
+        quarantined,
+        backoff_ms,
+        error,
+        outer_loss,
+        hypergrad_norm,
+        seconds: t0.elapsed().as_secs_f64(),
+        phases,
+    }
+}
+
+/// Serve every job to a terminal state and return the records in
+/// submission order plus the supervisor's ledgers.
+pub fn serve_jobs(specs: Vec<JobSpec>, cfg: &ServeConfig) -> ServeOutcome {
+    let metrics = Mutex::new(MetricsRegistry::new());
+    let pool = EnginePool::new(cfg.quarantine_limit);
+    let queue: BoundedQueue<(u64, JobSpec)> =
+        BoundedQueue::new(cfg.queue_capacity, cfg.backpressure);
+    let results: Mutex<Vec<(u64, JobRecord)>> = Mutex::new(Vec::new());
+
+    thread::scope(|s| {
+        for _ in 0..cfg.workers.max(1) {
+            s.spawn(|| {
+                while let Some((index, spec)) = queue.pop() {
+                    let record = process_job(
+                        index, &spec, cfg, &pool, &metrics,
+                    );
+                    results
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .push((index, record));
+                }
+            });
+        }
+        // Admission runs on the scope's own thread; under the block
+        // policy a full queue parks us here while workers drain.
+        for (index, spec) in specs.into_iter().enumerate() {
+            let index = index as u64;
+            if let Err((_, spec)) = queue.push((index, spec)) {
+                count(&metrics, Counter::ServeJobsShed, 1);
+                let record = JobRecord {
+                    id: spec.id.clone(),
+                    status: JobStatus::Shed,
+                    attempts: 0,
+                    mode_requested: spec.mode,
+                    mode_used: spec.mode,
+                    remat_used: spec.remat,
+                    degradation: Vec::new(),
+                    generations: Vec::new(),
+                    quarantined: Vec::new(),
+                    backoff_ms: 0,
+                    error: Some(HypergradError::QueueFull {
+                        capacity: queue.capacity(),
+                    }),
+                    outer_loss: None,
+                    hypergrad_norm: None,
+                    seconds: 0.0,
+                    phases: Vec::new(),
+                };
+                results
+                    .lock()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .push((index, record));
+            }
+        }
+        queue.close();
+    });
+
+    let mut records = results
+        .into_inner()
+        .unwrap_or_else(PoisonError::into_inner);
+    records.sort_by_key(|(index, _)| *index);
+    ServeOutcome {
+        records: records.into_iter().map(|(_, r)| r).collect(),
+        metrics: metrics
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner),
+        quarantined_generations: pool.quarantined(),
+        engines_built: pool.engines_built(),
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    fn quick_spec(id: &str, seed: u64) -> JobSpec {
+        JobSpec {
+            id: id.to_string(),
+            unroll: 3,
+            seed,
+            ..JobSpec::default()
+        }
+    }
+
+    fn quick_cfg() -> ServeConfig {
+        ServeConfig {
+            workers: 2,
+            max_retries: 1,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 2,
+            ..ServeConfig::default()
+        }
+    }
+
+    #[test]
+    fn clean_jobs_all_serve_ok_with_warm_reuse() {
+        let specs: Vec<JobSpec> =
+            (0..4).map(|i| quick_spec(&format!("j{i}"), i)).collect();
+        let cfg = ServeConfig { workers: 1, ..quick_cfg() };
+        let out = serve_jobs(specs, &cfg);
+        assert_eq!(out.records.len(), 4);
+        assert!(out
+            .records
+            .iter()
+            .all(|r| r.status == JobStatus::Ok && r.attempts == 1));
+        assert!(out
+            .records
+            .iter()
+            .all(|r| r.hypergrad_norm.unwrap() > 0.0));
+        assert_eq!(out.counter(Counter::ServeJobsOk), 4);
+        assert_eq!(out.counter(Counter::ServeJobsFailed), 0);
+        assert_eq!(out.counter(Counter::ServeJobsRetried), 0);
+        // Single worker + identical engine keys ⇒ one engine serves all
+        // four jobs warm.
+        assert_eq!(out.engines_built, 1, "warm engine coalescing");
+        assert!(out.quarantined_generations.is_empty());
+        // Telemetry is on by default: phase timings surface per record.
+        assert!(out.records[0]
+            .phases
+            .iter()
+            .any(|(name, _)| name == "forward"));
+    }
+
+    #[test]
+    fn injected_panics_retry_then_fail_without_quarantine() {
+        let chaos = ChaosConfig {
+            seed: 5,
+            panic_rate: 1.0,
+            ..ChaosConfig::default()
+        };
+        let cfg = ServeConfig { chaos: Some(chaos), ..quick_cfg() };
+        let out = serve_jobs(vec![quick_spec("p0", 0)], &cfg);
+        let rec = &out.records[0];
+        assert_eq!(rec.status, JobStatus::Failed);
+        assert_eq!(rec.attempts, 2, "first attempt + one retry");
+        match rec.error.as_ref().unwrap() {
+            HypergradError::Panic { message } => {
+                assert!(message.contains("chaos"))
+            }
+            other => panic!("expected Panic, got {other:?}"),
+        }
+        // The panic fired before the engine was touched: invariants
+        // hold, nothing to quarantine.
+        assert!(out.quarantined_generations.is_empty());
+        assert_eq!(out.counter(Counter::ServeJobsRetried), 1);
+        assert_eq!(out.counter(Counter::ServeJobsFailed), 1);
+    }
+
+    #[test]
+    fn nan_injection_quarantines_and_degrades_to_fd() {
+        let chaos = ChaosConfig {
+            seed: 9,
+            nan_rate: 1.0,
+            ..ChaosConfig::default()
+        };
+        let cfg = ServeConfig { chaos: Some(chaos), ..quick_cfg() };
+        let out = serve_jobs(vec![quick_spec("n0", 1)], &cfg);
+        let rec = &out.records[0];
+        assert_eq!(rec.status, JobStatus::Failed);
+        assert_eq!(rec.attempts, 2);
+        assert_eq!(rec.degradation, ["nonfinite:mixflow->fd"]);
+        assert_eq!(rec.mode_used, HypergradMode::Fd);
+        match rec.error.as_ref().unwrap() {
+            HypergradError::NonFinite { .. } => {}
+            other => panic!("expected NonFinite, got {other:?}"),
+        }
+        // Both attempts unwound mid-phase ⇒ both engines quarantined,
+        // and the record's ledger matches the pool's.
+        assert_eq!(rec.quarantined, out.quarantined_generations);
+        assert_eq!(
+            out.counter(Counter::ServeEngineQuarantines),
+            out.quarantined_generations.len() as u64
+        );
+        assert!(!out.quarantined_generations.is_empty());
+    }
+
+    #[test]
+    fn slow_jobs_exceed_their_deadline() {
+        let chaos = ChaosConfig {
+            seed: 2,
+            slow_rate: 1.0,
+            slow_ms: 40,
+            ..ChaosConfig::default()
+        };
+        let cfg = ServeConfig {
+            chaos: Some(chaos),
+            deadline_ms: Some(5),
+            max_retries: 0,
+            ..quick_cfg()
+        };
+        let out = serve_jobs(vec![quick_spec("s0", 3)], &cfg);
+        let rec = &out.records[0];
+        assert_eq!(rec.status, JobStatus::Failed);
+        assert_eq!(
+            rec.error,
+            Some(HypergradError::DeadlineExceeded { deadline_ms: 5 })
+        );
+        assert_eq!(out.counter(Counter::ServeDeadlineExceeded), 1);
+        // The pre-run stall means the cancel fires at the first between-
+        // steps check, before any phase opens: a clean unwind, engine
+        // stays serviceable.
+        assert!(out.quarantined_generations.is_empty());
+    }
+
+    #[test]
+    fn reject_backpressure_sheds_into_records() {
+        let chaos = ChaosConfig {
+            seed: 4,
+            slow_rate: 1.0,
+            slow_ms: 60,
+            ..ChaosConfig::default()
+        };
+        let cfg = ServeConfig {
+            workers: 1,
+            queue_capacity: 1,
+            backpressure: BackpressurePolicy::Reject,
+            max_retries: 0,
+            chaos: Some(chaos),
+            ..ServeConfig::default()
+        };
+        let specs: Vec<JobSpec> =
+            (0..5).map(|i| quick_spec(&format!("q{i}"), i)).collect();
+        let out = serve_jobs(specs, &cfg);
+        assert_eq!(out.records.len(), 5, "shed jobs still get records");
+        let shed = out
+            .records
+            .iter()
+            .filter(|r| r.status == JobStatus::Shed)
+            .count() as u64;
+        assert!(shed >= 1, "a 60 ms/job single worker must shed some of 5");
+        assert_eq!(out.counter(Counter::ServeJobsShed), shed);
+        assert_eq!(
+            out.counter(Counter::ServeJobsOk)
+                + out.counter(Counter::ServeJobsFailed)
+                + shed,
+            5,
+            "every job reaches exactly one terminal counter"
+        );
+        for r in out.records.iter().filter(|r| r.status == JobStatus::Shed) {
+            assert_eq!(r.attempts, 0);
+            assert_eq!(
+                r.error,
+                Some(HypergradError::QueueFull { capacity: 1 })
+            );
+        }
+    }
+
+    #[test]
+    fn circuit_breaker_opens_after_repeated_quarantines() {
+        let chaos = ChaosConfig {
+            seed: 11,
+            nan_rate: 1.0,
+            ..ChaosConfig::default()
+        };
+        // Limit 1: the first quarantine opens the breaker; the retry
+        // (degraded to fd ⇒ different key) still runs, but a second
+        // mixflow job on the same key is refused outright.
+        let cfg = ServeConfig {
+            workers: 1,
+            quarantine_limit: 1,
+            chaos: Some(chaos),
+            ..quick_cfg()
+        };
+        let specs = vec![quick_spec("a", 0), quick_spec("b", 1)];
+        let out = serve_jobs(specs, &cfg);
+        let second = &out.records[1];
+        assert_eq!(second.status, JobStatus::Failed);
+        assert_eq!(
+            second.attempts, 0,
+            "an open breaker refuses before any engine is built"
+        );
+        match second.error.as_ref().unwrap() {
+            HypergradError::EngineQuarantined { generation } => {
+                assert!(out.quarantined_generations.contains(generation));
+            }
+            other => panic!("expected EngineQuarantined, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn escalation_ladder_is_monotone() {
+        let u = 8;
+        let a = escalate_remat(CheckpointPolicy::Full, u).unwrap();
+        assert_eq!(a, CheckpointPolicy::Auto);
+        let b = escalate_remat(a, u).unwrap();
+        assert_eq!(b, CheckpointPolicy::Remat { segment: 8 });
+        assert_eq!(escalate_remat(b, u), None, "ladder bottoms out");
+        assert_eq!(
+            escalate_remat(CheckpointPolicy::Remat { segment: 2 }, u),
+            Some(CheckpointPolicy::Remat { segment: 4 })
+        );
+    }
+}

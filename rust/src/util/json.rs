@@ -493,6 +493,27 @@ mod tests {
     }
 
     #[test]
+    fn non_finite_numbers_serialise_as_null() {
+        // JSON has no NaN/Infinity tokens: a bare `NaN` in a sink would
+        // make the whole document unparseable, so the writer must
+        // degrade non-finite values to null in every mode.
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).compact(), "null");
+            assert_eq!(Json::Num(v).pretty(), "null");
+        }
+        let mut o = Json::obj();
+        o.insert("bad", Json::Num(f64::NAN));
+        o.insert("worse", Json::Arr(vec![Json::Num(f64::INFINITY)]));
+        let text = o.pretty();
+        let back = Json::parse(&text).expect("document stays valid JSON");
+        assert!(back.get("bad").unwrap().is_null());
+        assert!(back.get("worse").unwrap().as_arr().unwrap()[0].is_null());
+        // The degradation is one-way: null does not parse back as a
+        // number, so readers see Option::None rather than a bogus 0.
+        assert_eq!(back.get("bad").unwrap().as_f64(), None);
+    }
+
+    #[test]
     fn builder_api() {
         let mut o = Json::obj();
         o.insert("k", Json::Num(1.0));
