@@ -30,9 +30,13 @@
 //!   bit-for-bit in practice),
 //! * remat fails to shrink peak checkpoint bytes for T > K,
 //! * plan-on and plan-off mixflow disagree beyond 1e-12 (plans only
-//!   change where buffers come from, so they are bit-for-bit), or
+//!   change where buffers come from, so they are bit-for-bit),
 //! * a timed mixflow engine finishes the ladder without a single plan
-//!   replay (the compiled-plan path never engaged).
+//!   replay (the compiled-plan path never engaged), or
+//! * the kernel-pool thread ladder (threads ∈ {1, 2, 4} on a widened
+//!   `attention_mh2b2` cell) breaks bit-identity at any thread count,
+//!   never dispatches a parallel region, or — full mode only — fails
+//!   to put the best multi-threaded median below single-threaded.
 //!
 //! ```bash
 //! cargo run --release --bin fig_native_walltime            # full ladder
@@ -363,6 +367,111 @@ fn main() {
     }
 
     println!("{}", table.render());
+
+    // ---- kernel-pool thread ladder ---------------------------------
+    // The same attention_mh2b2 task shape-scaled up (d_model 32, seq 32
+    // — the default bench cell is too tiny for a pool wake to amortise)
+    // timed at threads ∈ {1, 2, 4} on otherwise identical engines.  Two
+    // checks: hypergradients must be bit-for-bit identical at every
+    // thread count (the pool's determinism contract), and in full mode
+    // the best multi-threaded median must beat single-threaded (the
+    // speedup `perf_gate` tracks once the baseline carries these rows).
+    // The smoke run keeps the rows (schema + CI artifact) but skips the
+    // strict-win check — shared runners don't guarantee idle cores.
+    let ladder_threads: &[usize] = &[1, 2, 4];
+    let ladder_unroll = if smoke { 2 } else { 8 };
+    let ladder_problem: Box<dyn BilevelProblem> = Box::new(
+        MultiHeadAttentionProblem::with_config(
+            1,
+            32,
+            2,
+            2,
+            32,
+            4,
+            ladder_unroll,
+            0.01,
+        )
+        .with_optimiser(InnerOptimiser::adam()),
+    );
+    let theta0 = ladder_problem.theta0();
+    let eta = ladder_problem.eta0();
+    let mut ladder: Vec<(usize, Summary, Hypergrad)> = Vec::new();
+    for &threads in ladder_threads {
+        let mut engine =
+            HypergradEngine::builder().threads(threads).build();
+        let mut h = None;
+        let s = bench.run(
+            &format!(
+                "attention_mh2b2+adam/T{ladder_unroll}/mixflow_t{threads}"
+            ),
+            || {
+                h = Some(engine.run(
+                    ladder_problem.as_ref(),
+                    &theta0,
+                    &eta,
+                ));
+            },
+        );
+        let h = h.expect("bench ran at least one iteration");
+        if threads > 1 && engine.pool_stats().jobs == 0 {
+            eprintln!(
+                "FAIL thread ladder: threads={threads} engine never \
+                 dispatched a parallel region"
+            );
+            ok = false;
+        }
+        ladder.push((threads, s, h));
+    }
+    for (threads, _, h) in &ladder[1..] {
+        let base = &ladder[0].2;
+        let diff = base
+            .d_eta
+            .iter()
+            .zip(h.d_eta.iter())
+            .map(|(a, b)| a.max_abs_diff(b))
+            .fold(0.0f64, f64::max);
+        if diff != 0.0 {
+            eprintln!(
+                "FAIL thread ladder: threads={threads} hypergradient \
+                 differs from threads=1 by {diff:.3e} (must be \
+                 bit-for-bit)"
+            );
+            ok = false;
+        }
+    }
+    let t1_median = ladder[0].1.median;
+    let best_multi = ladder[1..]
+        .iter()
+        .map(|(_, s, _)| s.median)
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "thread ladder attention_mh2b2 (d32/s32, T={ladder_unroll}): \
+         t1 {:.2}ms, best multi {:.2}ms (ratio {:.2})",
+        t1_median * 1e3,
+        best_multi * 1e3,
+        best_multi / t1_median.max(1e-12)
+    );
+    if !smoke && best_multi >= t1_median {
+        eprintln!(
+            "FAIL thread ladder: best multi-threaded median \
+             {best_multi:.4e}s not below single-threaded \
+             {t1_median:.4e}s"
+        );
+        ok = false;
+    }
+    for (threads, s, h) in &ladder {
+        let mut row = result_row(
+            "attention_mh2b2",
+            "adam",
+            ladder_unroll,
+            &format!("mixflow_t{threads}"),
+            s,
+            h,
+        );
+        row.insert("threads", Json::Num(*threads as f64));
+        rows.push(row);
+    }
+
     bench.report();
 
     let mut doc = Json::obj();

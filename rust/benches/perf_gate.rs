@@ -17,6 +17,11 @@
 //!   sub-10% ones are timer noise — and at a wider 35% tolerance, since
 //!   single phases are shorter and noisier than whole steps.  This is
 //!   what turns "mixflow got 20% slower" into "the jvp phase did".
+//! * **thread-ladder walltime** — the kernel-pool ladder rows
+//!   (`mixflow_t1`/`mixflow_t2`/`mixflow_t4` on the widened
+//!   `attention_mh2b2` cell) have no naive twin, so each multi-threaded
+//!   row is gated as its `mixflow_tN / mixflow_t1` median ratio — the
+//!   parallel speedup itself — under the same 20% tolerance.
 //!
 //! Every `mixflow*` row the smoke bench emits is gated — including the
 //! multi-head batched attention cell (`attention_mh2b2+adam`) — as soon
@@ -138,6 +143,34 @@ fn walltime_ratio(
         return None;
     }
     Some(var.median_s / naive.median_s)
+}
+
+/// `mixflow_tN walltime / mixflow_t1 walltime` for one (task, opt, T)
+/// within a single results file — the thread-ladder speedup signal,
+/// machine-independent for the same reason the mixflow/naive ratio is.
+fn ladder_ratio(
+    rows: &BTreeMap<Key, Row>,
+    task: &str,
+    opt: &str,
+    unroll: u64,
+    variant: &str,
+) -> Option<f64> {
+    let t1 = rows.get(&(
+        task.to_string(),
+        opt.to_string(),
+        unroll,
+        "mixflow_t1".to_string(),
+    ))?;
+    let var = rows.get(&(
+        task.to_string(),
+        opt.to_string(),
+        unroll,
+        variant.to_string(),
+    ))?;
+    if t1.median_s <= 0.0 {
+        return None;
+    }
+    Some(var.median_s / t1.median_s)
 }
 
 /// The naive row's median for one (task, opt, T) within a file — the
@@ -290,9 +323,22 @@ fn main() {
         } else {
             0.0
         };
-        let wall_now = walltime_ratio(&current, task, opt, *unroll, variant);
-        let wall_base =
-            walltime_ratio(&baseline, task, opt, *unroll, variant);
+        // Thread-ladder rows normalise against their own mixflow_t1 row
+        // (there is no naive twin on the ladder cell); everything else
+        // normalises against the naive row as before.
+        let is_ladder =
+            variant.starts_with("mixflow_t") && variant != "mixflow_t1";
+        let (wall_now, wall_base) = if is_ladder {
+            (
+                ladder_ratio(&current, task, opt, *unroll, variant),
+                ladder_ratio(&baseline, task, opt, *unroll, variant),
+            )
+        } else {
+            (
+                walltime_ratio(&current, task, opt, *unroll, variant),
+                walltime_ratio(&baseline, task, opt, *unroll, variant),
+            )
+        };
         let wall_rel = match (wall_now, wall_base) {
             (Some(now), Some(base)) if base > 0.0 => Some(now / base - 1.0),
             _ => None,
@@ -312,8 +358,9 @@ fn main() {
         if let Some(rel) = wall_rel {
             if rel > TOLERANCE {
                 verdict = "FAIL";
+                let norm = if is_ladder { "mixflow_t1" } else { "naive" };
                 failures.push(format!(
-                    "{task}+{opt}/T{unroll}/{variant}: mixflow/naive \
+                    "{task}+{opt}/T{unroll}/{variant}: {variant}/{norm} \
                      walltime ratio {:.3} vs baseline {:.3} (+{:.1}%)",
                     wall_now.unwrap_or(f64::NAN),
                     wall_base.unwrap_or(f64::NAN),

@@ -37,6 +37,7 @@ use super::optim::InnerOptimiser;
 use super::plan::PlanKey;
 use super::tape::{NodeId, Tape};
 use super::tensor::Tensor;
+use crate::kernels::{DetPool, PoolStats};
 use crate::obs::{Counter, Gauge, MetricsRegistry, Phase, StepTrace};
 use crate::util::args::CliEnum;
 
@@ -289,6 +290,7 @@ pub struct EngineBuilder {
     telemetry: bool,
     plan: bool,
     guard: bool,
+    threads: usize,
 }
 
 impl Default for EngineBuilder {
@@ -301,6 +303,7 @@ impl Default for EngineBuilder {
             telemetry: false,
             plan: true,
             guard: false,
+            threads: crate::kernels::pool::default_threads(),
         }
     }
 }
@@ -376,6 +379,20 @@ impl EngineBuilder {
         self.guard
     }
 
+    /// Kernel worker threads for the engine's [`DetPool`] (default:
+    /// `MIXFLOW_THREADS` or 1).  Clamped to the pool's supported range
+    /// at build time.  Hypergradients are bit-for-bit identical at
+    /// every thread count — the pool only splits disjoint-output axes.
+    pub fn threads(mut self, threads: usize) -> EngineBuilder {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// The configured kernel thread count.
+    pub fn threads_configured(&self) -> usize {
+        self.threads
+    }
+
     pub fn build(self) -> HypergradEngine {
         let strategy: Box<dyn HypergradStrategy> = match self.mode {
             HypergradMode::Naive => Box::new(NaiveStrategy),
@@ -388,6 +405,7 @@ impl EngineBuilder {
         tape.obs_mut().set_enabled(self.telemetry);
         tape.set_plan_enabled(self.plan);
         tape.set_guard_enabled(self.guard);
+        tape.set_pool(std::sync::Arc::new(DetPool::new(self.threads)));
         HypergradEngine {
             tape,
             strategy,
@@ -472,6 +490,18 @@ impl HypergradEngine {
     /// [`MemoryReport::arena_allocs`]/[`MemoryReport::arena_reuses`]).
     pub fn arena_stats(&self) -> super::arena::ArenaStats {
         self.tape.arena_stats()
+    }
+
+    /// Worker-thread count of the engine's kernel pool (after clamping).
+    pub fn threads(&self) -> usize {
+        self.tape.pool().threads()
+    }
+
+    /// Lifetime parallel-region counters of the engine's kernel pool
+    /// (readable without enabling telemetry; serial fast-path dispatches
+    /// are not counted).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.tape.pool().stats()
     }
 
     /// Whether the `obs` telemetry recorder is on for this engine.
@@ -592,9 +622,11 @@ impl HypergradEngine {
         // the strategy's MemoryReport rides along in the trace for
         // conformance checking against the registry deltas.
         let arena0 = tape.arena_stats();
+        let pool0 = tape.pool().stats();
         tape.obs_mut().step_begin(step, strategy.name());
         let h = strategy.run(tape, problem, theta0, eta);
         let arena = tape.arena_stats();
+        let pool = tape.pool().stats();
         let obs = tape.obs_mut();
         let d = |now: usize, was: usize| (now - was) as u64;
         obs.count(Counter::ArenaAllocs, d(arena.allocs, arena0.allocs));
@@ -615,6 +647,8 @@ impl HypergradEngine {
             Counter::ArenaRecycleBytes,
             d(arena.recycle_bytes, arena0.recycle_bytes),
         );
+        obs.count(Counter::PoolJobs, pool.jobs - pool0.jobs);
+        obs.count(Counter::PoolChunks, pool.chunks - pool0.chunks);
         obs.gauge_max(
             Gauge::CheckpointPeakBytes,
             h.memory.checkpoint_bytes as u64,

@@ -44,6 +44,7 @@ use std::time::Instant;
 use super::arena::{ArenaStats, BufferArena};
 use super::plan::{PlanKey, PlanStats, StepPlan};
 use super::tensor::Tensor;
+use crate::kernels::DetPool;
 use crate::obs::{Counter, Gauge, Phase, Telemetry};
 
 /// Index of a node on the tape.
@@ -234,6 +235,13 @@ pub struct Tape {
     /// strategies — which already hold `&mut Tape` — and the tape's own
     /// hot paths all reach the same recorder without signature changes.
     obs: Telemetry,
+    /// The kernel thread pool every builder/VJP/JVP kernel call runs
+    /// against.  Defaults to the process-wide serial singleton; the
+    /// engine installs its own pool at build time
+    /// (`EngineBuilder::threads`).  Pooled kernels parallelise only
+    /// disjoint-output axes, so tape values are bit-identical at every
+    /// thread count.
+    pool: Arc<DetPool>,
 }
 
 impl Default for Tape {
@@ -296,33 +304,18 @@ fn t_col_broadcast_into(v: &Tensor, m: usize, out: &mut Vec<f64>) {
     }
 }
 
-fn t_softmax_rows_into(z: &Tensor, out: &mut Vec<f64>) {
+fn t_softmax_rows_into(pool: &DetPool, z: &Tensor, out: &mut Vec<f64>) {
     let (m, n) = z.dims2();
     out.clear();
     out.resize(m * n, 0.0);
-    for i in 0..m {
-        let row = &z.data[i * n..(i + 1) * n];
-        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let mut denom = 0.0;
-        for j in 0..n {
-            let e = (row[j] - mx).exp();
-            out[i * n + j] = e;
-            denom += e;
-        }
-        for j in 0..n {
-            out[i * n + j] /= denom;
-        }
-    }
+    crate::kernels::rows::softmax_rows_into(pool, &z.data, m, n, out);
 }
 
-fn t_logsumexp_rows_into(z: &Tensor, out: &mut Vec<f64>) {
+fn t_logsumexp_rows_into(pool: &DetPool, z: &Tensor, out: &mut Vec<f64>) {
     let (m, n) = z.dims2();
     out.clear();
-    out.extend((0..m).map(|i| {
-        let row = &z.data[i * n..(i + 1) * n];
-        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        mx + row.iter().map(|x| (x - mx).exp()).sum::<f64>().ln()
-    }));
+    out.resize(m, 0.0);
+    crate::kernels::rows::logsumexp_rows_into(pool, &z.data, m, n, out);
 }
 
 fn t_gather_cols_into(z: &Tensor, idx: &[usize], out: &mut Vec<f64>) {
@@ -439,7 +432,21 @@ impl Tape {
             guard_enabled: false,
             cancel: None,
             obs: Telemetry::new(),
+            pool: Arc::new(DetPool::new(1)),
         }
+    }
+
+    /// Install the kernel thread pool (the engine builds one per
+    /// [`super::engine::EngineBuilder::threads`] and shares the handle
+    /// for stats).  Purely a scheduling change: values stay
+    /// bit-identical at every thread count.
+    pub fn set_pool(&mut self, pool: Arc<DetPool>) {
+        self.pool = pool;
+    }
+
+    /// The kernel thread pool the tape dispatches through.
+    pub fn pool(&self) -> &Arc<DetPool> {
+        &self.pool
     }
 
     // ---- robustness: guard, cancellation, invariants -------------------
@@ -790,12 +797,15 @@ impl Tape {
         &mut self,
         a: NodeId,
         op: Op,
-        f: impl Fn(f64) -> f64,
+        f: impl Fn(f64) -> f64 + Sync,
     ) -> NodeId {
+        self.obs.count(Counter::KernelMapCalls, 1);
         let value = {
-            let Tape { nodes, arena, .. } = self;
+            let Tape { nodes, arena, pool, .. } = self;
             let va = &nodes[a].value;
-            arena_tensor(arena, va.shape.clone(), |o| va.map_into(&f, o))
+            arena_tensor(arena, va.shape.clone(), |o| {
+                va.map_into_pooled(pool, &f, o)
+            })
         };
         self.push(op, value)
     }
@@ -807,13 +817,14 @@ impl Tape {
         a: NodeId,
         b: NodeId,
         op: Op,
-        f: impl Fn(f64, f64) -> f64,
+        f: impl Fn(f64, f64) -> f64 + Sync,
     ) -> NodeId {
+        self.obs.count(Counter::KernelZipCalls, 1);
         let value = {
-            let Tape { nodes, arena, .. } = self;
+            let Tape { nodes, arena, pool, .. } = self;
             let (va, vb) = (&nodes[a].value, &nodes[b].value);
             arena_tensor(arena, va.shape.clone(), |o| {
-                va.zip_into(vb, &f, o)
+                va.zip_into_pooled(pool, vb, &f, o)
             })
         };
         self.push(op, value)
@@ -844,6 +855,7 @@ impl Tape {
     }
 
     pub fn matmul(&mut self, a: NodeId, b: NodeId, ta: bool, tb: bool) -> NodeId {
+        self.obs.count(Counter::KernelGemmCalls, 1);
         let value = {
             let Tape { nodes, arena, .. } = self;
             let (va, vb) = (&nodes[a].value, &nodes[b].value);
@@ -865,12 +877,13 @@ impl Tape {
         ta: bool,
         tb: bool,
     ) -> NodeId {
+        self.obs.count(Counter::KernelGemmCalls, 1);
         let value = {
-            let Tape { nodes, arena, .. } = self;
+            let Tape { nodes, arena, pool, .. } = self;
             let (va, vb) = (&nodes[a].value, &nodes[b].value);
             let (g, m, n) = va.bmm_dims(vb, ta, tb);
             arena_tensor(arena, vec![g, m, n], |o| {
-                va.bmm_into(vb, ta, tb, o);
+                va.bmm_into_pooled(pool, vb, ta, tb, o);
             })
         };
         self.push(Op::BatchMatmul { a, b, ta, tb }, value)
@@ -1012,21 +1025,27 @@ impl Tape {
     }
 
     pub fn softmax_rows(&mut self, a: NodeId) -> NodeId {
+        self.obs.count(Counter::KernelRowsCalls, 1);
         let value = {
-            let Tape { nodes, arena, .. } = self;
+            let Tape { nodes, arena, pool, .. } = self;
             let va = &nodes[a].value;
             let (m, n) = va.dims2();
-            arena_tensor(arena, vec![m, n], |o| t_softmax_rows_into(va, o))
+            arena_tensor(arena, vec![m, n], |o| {
+                t_softmax_rows_into(pool, va, o)
+            })
         };
         self.push(Op::SoftmaxRows(a), value)
     }
 
     pub fn logsumexp_rows(&mut self, a: NodeId) -> NodeId {
+        self.obs.count(Counter::KernelRowsCalls, 1);
         let value = {
-            let Tape { nodes, arena, .. } = self;
+            let Tape { nodes, arena, pool, .. } = self;
             let va = &nodes[a].value;
             let m = va.dims2().0;
-            arena_tensor(arena, vec![m], |o| t_logsumexp_rows_into(va, o))
+            arena_tensor(arena, vec![m], |o| {
+                t_logsumexp_rows_into(pool, va, o)
+            })
         };
         self.push(Op::LogSumExpRows(a), value)
     }
@@ -1355,7 +1374,7 @@ impl Tape {
         seeds: &[(NodeId, Tensor)],
         targets: &[NodeId],
     ) -> (Vec<Tensor>, usize) {
-        let Tape { nodes, arena, kv_marks, .. } = self;
+        let Tape { nodes, arena, kv_marks, pool, obs, .. } = self;
         for (id, t) in seeds {
             assert_eq!(
                 t.shape, nodes[*id].value.shape,
@@ -1378,7 +1397,7 @@ impl Tape {
                 Op::Add(a, b) => match (&tan[*a], &tan[*b]) {
                     (Some(x), Some(y)) => {
                         Some(arena_tensor(arena, x.shape.clone(), |o| {
-                            x.zip_into(y, |p, q| p + q, o)
+                            x.zip_into_pooled(pool, y, |p, q| p + q, o)
                         }))
                     }
                     (Some(x), None) => Some(x.clone()),
@@ -1388,13 +1407,13 @@ impl Tape {
                 Op::Sub(a, b) => match (&tan[*a], &tan[*b]) {
                     (Some(x), Some(y)) => {
                         Some(arena_tensor(arena, x.shape.clone(), |o| {
-                            x.zip_into(y, |p, q| p - q, o)
+                            x.zip_into_pooled(pool, y, |p, q| p - q, o)
                         }))
                     }
                     (Some(x), None) => Some(x.clone()),
                     (None, Some(y)) => {
                         Some(arena_tensor(arena, y.shape.clone(), |o| {
-                            y.map_into(|q| -q, o)
+                            y.map_into_pooled(pool, |q| -q, o)
                         }))
                     }
                     (None, None) => None,
@@ -1405,22 +1424,29 @@ impl Tape {
                     match (&tan[*a], &tan[*b]) {
                         (Some(x), Some(y)) => {
                             // ẋ·b + a·ẏ fused into one output pass.
+                            let len = va.data.len();
                             Some(arena_tensor(arena, va.shape.clone(), |o| {
                                 o.clear();
-                                o.extend((0..va.data.len()).map(|j| {
-                                    x.data[j] * vb.data[j]
-                                        + va.data[j] * y.data[j]
-                                }));
+                                o.resize(len, 0.0);
+                                crate::kernels::elementwise::fill_indexed(
+                                    pool,
+                                    len,
+                                    |j| {
+                                        x.data[j] * vb.data[j]
+                                            + va.data[j] * y.data[j]
+                                    },
+                                    o,
+                                );
                             }))
                         }
                         (Some(x), None) => {
                             Some(arena_tensor(arena, va.shape.clone(), |o| {
-                                x.zip_into(vb, |p, q| p * q, o)
+                                x.zip_into_pooled(pool, vb, |p, q| p * q, o)
                             }))
                         }
                         (None, Some(y)) => {
                             Some(arena_tensor(arena, va.shape.clone(), |o| {
-                                va.zip_into(y, |p, q| p * q, o)
+                                va.zip_into_pooled(pool, y, |p, q| p * q, o)
                             }))
                         }
                         (None, None) => None,
@@ -1432,25 +1458,40 @@ impl Tape {
                     let vb = &nodes[*b].value;
                     match (&tan[*a], &tan[*b]) {
                         (Some(x), Some(bt)) => {
+                            let len = vy.data.len();
                             Some(arena_tensor(arena, vy.shape.clone(), |o| {
                                 o.clear();
-                                o.extend((0..vy.data.len()).map(|j| {
-                                    (x.data[j] - vy.data[j] * bt.data[j])
-                                        / vb.data[j]
-                                }));
+                                o.resize(len, 0.0);
+                                crate::kernels::elementwise::fill_indexed(
+                                    pool,
+                                    len,
+                                    |j| {
+                                        (x.data[j] - vy.data[j] * bt.data[j])
+                                            / vb.data[j]
+                                    },
+                                    o,
+                                );
                             }))
                         }
                         (Some(x), None) => {
                             Some(arena_tensor(arena, vy.shape.clone(), |o| {
-                                x.zip_into(vb, |p, q| p / q, o)
+                                x.zip_into_pooled(pool, vb, |p, q| p / q, o)
                             }))
                         }
                         (None, Some(bt)) => {
+                            let len = vy.data.len();
                             Some(arena_tensor(arena, vy.shape.clone(), |o| {
                                 o.clear();
-                                o.extend((0..vy.data.len()).map(|j| {
-                                    -(vy.data[j] * bt.data[j]) / vb.data[j]
-                                }));
+                                o.resize(len, 0.0);
+                                crate::kernels::elementwise::fill_indexed(
+                                    pool,
+                                    len,
+                                    |j| {
+                                        -(vy.data[j] * bt.data[j])
+                                            / vb.data[j]
+                                    },
+                                    o,
+                                );
                             }))
                         }
                         (None, None) => None,
@@ -1460,7 +1501,7 @@ impl Tape {
                     let c = *c;
                     tan[*a].as_ref().map(|t| {
                         arena_tensor(arena, t.shape.clone(), |o| {
-                            t.map_into(|x| x * c, o)
+                            t.map_into_pooled(pool, |x| x * c, o)
                         })
                     })
                 }
@@ -1474,6 +1515,7 @@ impl Tape {
                             // ẋ·B into one arena buffer, A·ẏ into a
                             // second, summed in place (the left buffer is
                             // uniquely owned), second buffer recycled.
+                            obs.count(Counter::KernelGemmCalls, 2);
                             let (m, n) = x.matmul_dims(vb, ta, tb);
                             let mut left =
                                 arena_tensor(arena, vec![m, n], |o| {
@@ -1492,12 +1534,14 @@ impl Tape {
                             Some(left)
                         }
                         (Some(x), None) => {
+                            obs.count(Counter::KernelGemmCalls, 1);
                             let (m, n) = x.matmul_dims(vb, ta, tb);
                             Some(arena_tensor(arena, vec![m, n], |o| {
                                 x.matmul_into(vb, ta, tb, o);
                             }))
                         }
                         (None, Some(y)) => {
+                            obs.count(Counter::KernelGemmCalls, 1);
                             let (m, n) = va.matmul_dims(y, ta, tb);
                             Some(arena_tensor(arena, vec![m, n], |o| {
                                 va.matmul_into(y, ta, tb, o);
@@ -1514,14 +1558,15 @@ impl Tape {
                     let (ta, tb) = (*ta, *tb);
                     match (&tan[*a], &tan[*b]) {
                         (Some(x), Some(y)) => {
+                            obs.count(Counter::KernelGemmCalls, 2);
                             let (g, m, n) = x.bmm_dims(vb, ta, tb);
                             let mut left =
                                 arena_tensor(arena, vec![g, m, n], |o| {
-                                    x.bmm_into(vb, ta, tb, o);
+                                    x.bmm_into_pooled(pool, vb, ta, tb, o);
                                 });
                             let right =
                                 arena_tensor(arena, vec![g, m, n], |o| {
-                                    va.bmm_into(y, ta, tb, o);
+                                    va.bmm_into_pooled(pool, y, ta, tb, o);
                                 });
                             for (d, s) in
                                 left.data.iter_mut().zip(right.data.iter())
@@ -1532,15 +1577,17 @@ impl Tape {
                             Some(left)
                         }
                         (Some(x), None) => {
+                            obs.count(Counter::KernelGemmCalls, 1);
                             let (g, m, n) = x.bmm_dims(vb, ta, tb);
                             Some(arena_tensor(arena, vec![g, m, n], |o| {
-                                x.bmm_into(vb, ta, tb, o);
+                                x.bmm_into_pooled(pool, vb, ta, tb, o);
                             }))
                         }
                         (None, Some(y)) => {
+                            obs.count(Counter::KernelGemmCalls, 1);
                             let (g, m, n) = va.bmm_dims(y, ta, tb);
                             Some(arena_tensor(arena, vec![g, m, n], |o| {
-                                va.bmm_into(y, ta, tb, o);
+                                va.bmm_into_pooled(pool, y, ta, tb, o);
                             }))
                         }
                         (None, None) => None,
@@ -1577,7 +1624,8 @@ impl Tape {
                     let va = &nodes[*a].value;
                     tan[*a].as_ref().map(|t| {
                         arena_tensor(arena, t.shape.clone(), |o| {
-                            t.zip_into(
+                            t.zip_into_pooled(
+                                pool,
                                 va,
                                 |p, x| if x > 0.0 { p } else { 0.0 },
                                 o,
@@ -1589,7 +1637,12 @@ impl Tape {
                     let vy = &nodes[i].value;
                     tan[*a].as_ref().map(|t| {
                         arena_tensor(arena, t.shape.clone(), |o| {
-                            t.zip_into(vy, |p, y| p * (1.0 - y * y), o)
+                            t.zip_into_pooled(
+                                pool,
+                                vy,
+                                |p, y| p * (1.0 - y * y),
+                                o,
+                            )
                         })
                     })
                 }
@@ -1597,7 +1650,7 @@ impl Tape {
                     let vy = &nodes[i].value;
                     tan[*a].as_ref().map(|t| {
                         arena_tensor(arena, t.shape.clone(), |o| {
-                            t.zip_into(vy, |p, y| p * y, o)
+                            t.zip_into_pooled(pool, vy, |p, y| p * y, o)
                         })
                     })
                 }
@@ -1605,7 +1658,12 @@ impl Tape {
                     let vy = &nodes[i].value;
                     tan[*a].as_ref().map(|t| {
                         arena_tensor(arena, t.shape.clone(), |o| {
-                            t.zip_into(vy, |p, y| p / (2.0 * y), o)
+                            t.zip_into_pooled(
+                                pool,
+                                vy,
+                                |p, y| p / (2.0 * y),
+                                o,
+                            )
                         })
                     })
                 }
@@ -1644,24 +1702,38 @@ impl Tape {
                     let s = &nodes[i].value;
                     tan[*a].as_ref().map(|t| {
                         // ṡ_ij = s_ij (ż_ij − Σ_k s_ik ż_ik), per row in
-                        // one pass with no softmax/row-sum temporaries.
+                        // one pass with no softmax/row-sum temporaries;
+                        // rows are independent, so the row kernel driver
+                        // may fan them across the pool.
+                        obs.count(Counter::KernelRowsCalls, 1);
                         arena_tensor(arena, s.shape.clone(), |o| {
-                            o.clear();
                             let (m, n) = s.dims2();
-                            for r in 0..m {
-                                let srow = &s.data[r * n..(r + 1) * n];
-                                let trow = &t.data[r * n..(r + 1) * n];
-                                let dot: f64 = srow
-                                    .iter()
-                                    .zip(trow.iter())
-                                    .map(|(p, q)| p * q)
-                                    .sum();
-                                o.extend(
-                                    srow.iter()
+                            o.clear();
+                            o.resize(m * n, 0.0);
+                            crate::kernels::rows::for_each_row(
+                                pool,
+                                m,
+                                n,
+                                n,
+                                o,
+                                |r, orow| {
+                                    let srow =
+                                        &s.data[r * n..(r + 1) * n];
+                                    let trow =
+                                        &t.data[r * n..(r + 1) * n];
+                                    let dot: f64 = srow
+                                        .iter()
                                         .zip(trow.iter())
-                                        .map(|(p, q)| p * (q - dot)),
-                                );
-                            }
+                                        .map(|(p, q)| p * q)
+                                        .sum();
+                                    for (ov, (p, q)) in orow
+                                        .iter_mut()
+                                        .zip(srow.iter().zip(trow.iter()))
+                                    {
+                                        *ov = p * (q - dot);
+                                    }
+                                },
+                            );
                         })
                     })
                 }
@@ -1672,28 +1744,40 @@ impl Tape {
                         // softmax; each term is (e_j/denom)·ż_j summed
                         // left-to-right — the identical float-op order the
                         // softmax+rowsum composition used, so the fusion is
-                        // bit-for-bit.
+                        // bit-for-bit.  One output scalar per row, so rows
+                        // chunk across the pool.
+                        obs.count(Counter::KernelRowsCalls, 1);
                         arena_tensor(arena, vec![vz.dims2().0], |o| {
-                            o.clear();
                             let (m, n) = vz.dims2();
-                            for r in 0..m {
-                                let zrow = &vz.data[r * n..(r + 1) * n];
-                                let trow = &t.data[r * n..(r + 1) * n];
-                                let mx = zrow
-                                    .iter()
-                                    .cloned()
-                                    .fold(f64::NEG_INFINITY, f64::max);
-                                let denom: f64 = zrow
-                                    .iter()
-                                    .map(|&z| (z - mx).exp())
-                                    .sum();
-                                let mut acc = 0.0;
-                                for j in 0..n {
-                                    let e = (zrow[j] - mx).exp();
-                                    acc += (e / denom) * trow[j];
-                                }
-                                o.push(acc);
-                            }
+                            o.clear();
+                            o.resize(m, 0.0);
+                            crate::kernels::rows::for_each_row(
+                                pool,
+                                m,
+                                1,
+                                n,
+                                o,
+                                |r, orow| {
+                                    let zrow =
+                                        &vz.data[r * n..(r + 1) * n];
+                                    let trow =
+                                        &t.data[r * n..(r + 1) * n];
+                                    let mx = zrow
+                                        .iter()
+                                        .cloned()
+                                        .fold(f64::NEG_INFINITY, f64::max);
+                                    let denom: f64 = zrow
+                                        .iter()
+                                        .map(|&z| (z - mx).exp())
+                                        .sum();
+                                    let mut acc = 0.0;
+                                    for j in 0..n {
+                                        let e = (zrow[j] - mx).exp();
+                                        acc += (e / denom) * trow[j];
+                                    }
+                                    orow[0] = acc;
+                                },
+                            );
                         })
                     })
                 }

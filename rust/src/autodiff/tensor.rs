@@ -14,6 +14,7 @@ use std::fmt;
 use std::ops::{Deref, DerefMut};
 use std::sync::Arc;
 
+use crate::kernels::DetPool;
 use crate::util::prng::Prng;
 
 /// Bytes per element (everything is f64).
@@ -214,9 +215,28 @@ impl Tensor {
     }
 
     /// Elementwise map writing into a recycled buffer (cleared first).
-    pub fn map_into(&self, f: impl Fn(f64) -> f64, out: &mut Vec<f64>) {
+    /// Serial wrapper over the fused kernel; the tape uses
+    /// [`Tensor::map_into_pooled`] with the engine's pool instead.
+    pub fn map_into(
+        &self,
+        f: impl Fn(f64) -> f64 + Sync,
+        out: &mut Vec<f64>,
+    ) {
+        self.map_into_pooled(DetPool::serial_ref(), f, out);
+    }
+
+    /// Elementwise map through `crate::kernels::elementwise`, row
+    /// chunks fanned across `pool` (bit-identical to the serial path
+    /// at every thread count).
+    pub fn map_into_pooled(
+        &self,
+        pool: &DetPool,
+        f: impl Fn(f64) -> f64 + Sync,
+        out: &mut Vec<f64>,
+    ) {
         out.clear();
-        out.extend(self.data.iter().map(|&x| f(x)));
+        out.resize(self.data.len(), 0.0);
+        crate::kernels::elementwise::map_into(pool, &self.data, f, out);
     }
 
     /// Elementwise combine with an identically-shaped tensor.
@@ -227,11 +247,25 @@ impl Tensor {
     }
 
     /// Elementwise combine writing into a recycled buffer (cleared
-    /// first).
+    /// first).  Serial wrapper over the fused kernel; the tape uses
+    /// [`Tensor::zip_into_pooled`] with the engine's pool instead.
     pub fn zip_into(
         &self,
         other: &Tensor,
-        f: impl Fn(f64, f64) -> f64,
+        f: impl Fn(f64, f64) -> f64 + Sync,
+        out: &mut Vec<f64>,
+    ) {
+        self.zip_into_pooled(DetPool::serial_ref(), other, f, out);
+    }
+
+    /// Elementwise combine through `crate::kernels::elementwise`,
+    /// chunks fanned across `pool` (bit-identical to the serial path
+    /// at every thread count).
+    pub fn zip_into_pooled(
+        &self,
+        pool: &DetPool,
+        other: &Tensor,
+        f: impl Fn(f64, f64) -> f64 + Sync,
         out: &mut Vec<f64>,
     ) {
         assert_eq!(
@@ -240,11 +274,13 @@ impl Tensor {
             self.shape, other.shape
         );
         out.clear();
-        out.extend(
-            self.data
-                .iter()
-                .zip(other.data.iter())
-                .map(|(&a, &b)| f(a, b)),
+        out.resize(self.data.len(), 0.0);
+        crate::kernels::elementwise::zip_into(
+            pool,
+            &self.data,
+            &other.data,
+            f,
+            out,
         );
     }
 
@@ -259,15 +295,21 @@ impl Tensor {
         (m, n)
     }
 
-    /// `C = op(A, ta) · op(B, tb)`; plain loops — the native engine's
-    /// models are small enough that clarity wins.
+    /// `C = op(A, ta) · op(B, tb)` through the cache-blocked
+    /// `crate::kernels::gemm` kernel (bit-identical to the scalar
+    /// reference loop).
     pub fn matmul(&self, other: &Tensor, ta: bool, tb: bool) -> Tensor {
         let mut out = Vec::new();
         let (m, n) = self.matmul_into(other, ta, tb, &mut out);
         Tensor { shape: vec![m, n], data: Buf::new(out) }
     }
 
-    /// Matmul writing into a recycled buffer (zeroed to `m·n` first).
+    /// Matmul writing into a recycled buffer (zeroed to `m·n` first)
+    /// through the cache-blocked `crate::kernels::gemm` kernel, which
+    /// is bit-for-bit the scalar reference loop — and, unlike the old
+    /// in-place loop, carries no `ail == 0.0` zero-skip: a zero times
+    /// a NaN/Inf contribution propagates as NaN instead of silently
+    /// becoming 0, and the branch-free inner loop auto-vectorises.
     /// Returns the output dims `(m, n)`.
     pub fn matmul_into(
         &self,
@@ -278,35 +320,12 @@ impl Tensor {
     ) -> (usize, usize) {
         let (m, n) = self.matmul_dims(other, ta, tb);
         let (ar, ac) = self.dims2();
-        let (_, bc) = other.dims2();
-        let k = if ta { ar } else { ac };
-        let a = |i: usize, j: usize| {
-            if ta {
-                self.data[j * ac + i]
-            } else {
-                self.data[i * ac + j]
-            }
-        };
-        let b = |i: usize, j: usize| {
-            if tb {
-                other.data[j * bc + i]
-            } else {
-                other.data[i * bc + j]
-            }
-        };
+        let (br, bc) = other.dims2();
         out.clear();
         out.resize(m * n, 0.0);
-        for i in 0..m {
-            for l in 0..k {
-                let ail = a(i, l);
-                if ail == 0.0 {
-                    continue;
-                }
-                for j in 0..n {
-                    out[i * n + j] += ail * b(l, j);
-                }
-            }
-        }
+        crate::kernels::gemm::gemm_into(
+            &self.data, ar, ac, ta, &other.data, br, bc, tb, out,
+        );
         (m, n)
     }
 
@@ -330,11 +349,27 @@ impl Tensor {
     }
 
     /// Batched matmul writing into a recycled buffer (zeroed to `g·m·n`
-    /// first).  Per group the loop order and zero-skip are identical to
-    /// [`Tensor::matmul_into`], so a single-group batched product is
-    /// bit-for-bit the rank-2 product.  Returns `(g, m, n)`.
+    /// first).  Serial wrapper over [`Tensor::bmm_into_pooled`]; per
+    /// group the kernel is exactly [`Tensor::matmul_into`]'s, so a
+    /// single-group batched product is bit-for-bit the rank-2 product.
+    /// Returns `(g, m, n)`.
     pub fn bmm_into(
         &self,
+        other: &Tensor,
+        ta: bool,
+        tb: bool,
+        out: &mut Vec<f64>,
+    ) -> (usize, usize, usize) {
+        self.bmm_into_pooled(DetPool::serial_ref(), other, ta, tb, out)
+    }
+
+    /// Batched matmul through `crate::kernels::gemm::bmm_into`, the
+    /// batch·head group axis fanned across `pool` — group outputs are
+    /// disjoint, so results are bit-identical to the serial path at
+    /// every thread count.
+    pub fn bmm_into_pooled(
+        &self,
+        pool: &DetPool,
         other: &Tensor,
         ta: bool,
         tb: bool,
@@ -343,39 +378,21 @@ impl Tensor {
         let (g, m, n) = self.bmm_dims(other, ta, tb);
         let (_, ar, ac) = self.dims3();
         let (_, br, bc) = other.dims3();
-        let k = if ta { ar } else { ac };
         out.clear();
         out.resize(g * m * n, 0.0);
-        for gi in 0..g {
-            let ao = gi * ar * ac;
-            let bo = gi * br * bc;
-            let oo = gi * m * n;
-            let a = |i: usize, j: usize| {
-                if ta {
-                    self.data[ao + j * ac + i]
-                } else {
-                    self.data[ao + i * ac + j]
-                }
-            };
-            let b = |i: usize, j: usize| {
-                if tb {
-                    other.data[bo + j * bc + i]
-                } else {
-                    other.data[bo + i * bc + j]
-                }
-            };
-            for i in 0..m {
-                for l in 0..k {
-                    let ail = a(i, l);
-                    if ail == 0.0 {
-                        continue;
-                    }
-                    for j in 0..n {
-                        out[oo + i * n + j] += ail * b(l, j);
-                    }
-                }
-            }
-        }
+        crate::kernels::gemm::bmm_into(
+            pool,
+            g,
+            &self.data,
+            ar,
+            ac,
+            ta,
+            &other.data,
+            br,
+            bc,
+            tb,
+            out,
+        );
         (g, m, n)
     }
 

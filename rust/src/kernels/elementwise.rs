@@ -1,0 +1,113 @@
+//! Fused elementwise map/zip kernels.
+//!
+//! Every output element is a pure function of the input element(s) at
+//! the same index, so any chunking of the index space is bit-identical
+//! to the serial sweep — the pool only decides which thread writes
+//! which disjoint range.  Chunk geometry depends solely on the input
+//! length (never on the thread count), and chunks below [`CHUNK`]
+//! elements collapse to the serial path, so tiny tensors never pay
+//! pool dispatch.
+
+use super::pool::DetPool;
+use super::SendPtr;
+
+/// Elements per parallel chunk.  One chunk of f64s is 64 KiB — big
+/// enough to amortise a pool wake, small enough to split the repo's
+/// larger tensors across a few cores.
+pub const CHUNK: usize = 8192;
+
+/// `out[i] = f(src[i])`.  `out` must be exactly `src.len()` long.
+pub fn map_into<F: Fn(f64) -> f64 + Sync>(
+    pool: &DetPool,
+    src: &[f64],
+    f: F,
+    out: &mut [f64],
+) {
+    assert_eq!(src.len(), out.len(), "map kernel length mismatch");
+    let n = src.len();
+    let nchunks = n.div_ceil(CHUNK.max(1)).max(1);
+    if pool.threads() == 1 || nchunks <= 1 {
+        for (o, s) in out.iter_mut().zip(src) {
+            *o = f(*s);
+        }
+        return;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(nchunks, &|c| {
+        let lo = c * CHUNK;
+        let hi = (lo + CHUNK).min(n);
+        // SAFETY: chunks run exactly once each over disjoint ranges.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(optr.0.add(lo), hi - lo)
+        };
+        for (o, s) in dst.iter_mut().zip(&src[lo..hi]) {
+            *o = f(*s);
+        }
+    });
+}
+
+/// `out[i] = f(i)` — the fully general fused elementwise form, used
+/// by the tape's multi-operand JVP rules (e.g. the fused
+/// `ẋ·b + a·ẏ` product dual) where `f` indexes several captured
+/// slices at once.  Same chunking and determinism story as
+/// [`map_into`]: every element independent, chunk geometry a function
+/// of `n` alone.
+pub fn fill_indexed<F: Fn(usize) -> f64 + Sync>(
+    pool: &DetPool,
+    n: usize,
+    f: F,
+    out: &mut [f64],
+) {
+    assert_eq!(n, out.len(), "fill kernel length mismatch");
+    let nchunks = n.div_ceil(CHUNK.max(1)).max(1);
+    if pool.threads() == 1 || nchunks <= 1 {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        return;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(nchunks, &|c| {
+        let lo = c * CHUNK;
+        let hi = (lo + CHUNK).min(n);
+        // SAFETY: chunks run exactly once each over disjoint ranges.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(optr.0.add(lo), hi - lo)
+        };
+        for (i, o) in dst.iter_mut().enumerate() {
+            *o = f(lo + i);
+        }
+    });
+}
+
+/// `out[i] = f(a[i], b[i])`.  All three slices must share a length.
+pub fn zip_into<F: Fn(f64, f64) -> f64 + Sync>(
+    pool: &DetPool,
+    a: &[f64],
+    b: &[f64],
+    f: F,
+    out: &mut [f64],
+) {
+    assert_eq!(a.len(), b.len(), "zip kernel operand length mismatch");
+    assert_eq!(a.len(), out.len(), "zip kernel output length mismatch");
+    let n = a.len();
+    let nchunks = n.div_ceil(CHUNK.max(1)).max(1);
+    if pool.threads() == 1 || nchunks <= 1 {
+        for i in 0..n {
+            out[i] = f(a[i], b[i]);
+        }
+        return;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(nchunks, &|c| {
+        let lo = c * CHUNK;
+        let hi = (lo + CHUNK).min(n);
+        // SAFETY: chunks run exactly once each over disjoint ranges.
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(optr.0.add(lo), hi - lo)
+        };
+        for (i, o) in dst.iter_mut().enumerate() {
+            *o = f(a[lo + i], b[lo + i]);
+        }
+    });
+}

@@ -1,0 +1,293 @@
+//! Cache-blocked GEMM / batched-GEMM micro-kernels.
+//!
+//! The contract every kernel here honours (and the tests pin):
+//! **per-output-element accumulation order is exactly the scalar
+//! reference's** — `out[i][j] += Σ_l a[i][l]·b[l][j]` with `l` strictly
+//! ascending — so the blocked, packed and (for the batch kernel)
+//! pooled paths are bit-for-bit identical to [`gemm_ref_into`] on any
+//! input, non-finites included.
+//!
+//! ## Blocking scheme
+//!
+//! The classic three-loop blocking: the `n` axis in panels of
+//! [`NC`], the `k` axis in depth blocks of [`KC`] (visited in
+//! ascending order — this is what preserves the accumulation order),
+//! the `m` axis in blocks of [`MC`].  For each (k, n) block the
+//! operand panels are **packed** into contiguous row-major scratch
+//! (`apack`: mc×kc, `bpack`: kc×nc), which turns every transpose
+//! combination into the same unit-stride inner loop:
+//!
+//! ```text
+//! for i in 0..mc           // rows of the A block
+//!   for l in 0..kc         // ascending depth within the block
+//!     out_row[j] += apack[i][l] * bpack_row[j]   // j = 0..nc, branch-free
+//! ```
+//!
+//! The inner `j` loop is a pure `slice[j] += scalar * slice[j]` sweep
+//! over contiguous memory with no data-dependent branches — exactly
+//! the shape LLVM auto-vectorises.  (The old `Tensor::matmul_into`
+//! zero-skip `if ail == 0.0 { continue }` is deliberately gone: it
+//! broke vectorisation *and* silently turned `0·NaN` / `0·Inf`
+//! contributions into `0` instead of propagating them.)
+//!
+//! Packing scratch lives in thread-locals, so steady-state GEMMs
+//! allocate nothing; the pool's persistent workers each keep their
+//! own scratch warm for the batched kernel.
+//!
+//! ## Parallelism
+//!
+//! Rank-2 GEMM is always single-threaded — its output rows share the
+//! packed B panel and the repo's shapes are small.  The batched kernel
+//! [`bmm_into`] parallelises over the batch·head **group** axis (one
+//! chunk per group, disjoint output slices) once the region clears
+//! [`MIN_PAR_FLOPS`]; below that, dispatch overhead would dwarf the
+//! work.  Thresholds never affect results, only scheduling.
+
+use super::pool::DetPool;
+use super::SendPtr;
+use std::cell::RefCell;
+
+/// Row-block size of the packed A panel (`mc × kc` f64 ≈ 32 KiB —
+/// comfortably L1-resident alongside one B-panel row).
+pub const MC: usize = 32;
+/// Depth-block size; `k` blocks are visited in ascending order to
+/// preserve the per-output accumulation order.
+pub const KC: usize = 128;
+/// Column-panel width of the packed B panel (`kc × nc` f64 = 128 KiB,
+/// L2-resident).
+pub const NC: usize = 128;
+
+/// Don't fan a batched GEMM out to the pool below this many
+/// multiply-adds (`g·m·k·n`): a pool region costs a couple of
+/// microseconds of wake/barrier, which only pays for itself once the
+/// groups carry real work.
+pub const MIN_PAR_FLOPS: usize = 65_536;
+
+thread_local! {
+    /// Per-thread packing scratch: (apack, bpack).  Workers are
+    /// persistent, so this amortises to zero allocations per step.
+    static SCRATCH: RefCell<(Vec<f64>, Vec<f64>)> =
+        const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// Effective (rows, cols) of an operand stored as `rows × cols`
+/// row-major once the transpose flag is applied.
+#[inline]
+fn eff(rows: usize, cols: usize, t: bool) -> (usize, usize) {
+    if t {
+        (cols, rows)
+    } else {
+        (rows, cols)
+    }
+}
+
+/// The scalar reference kernel: the exact loop nest the blocked paths
+/// must match bit for bit.  `out` must be `m·n` long and pre-zeroed
+/// (or hold the values to accumulate onto).
+pub fn gemm_ref_into(
+    a: &[f64],
+    a_rows: usize,
+    a_cols: usize,
+    ta: bool,
+    b: &[f64],
+    b_rows: usize,
+    b_cols: usize,
+    tb: bool,
+    out: &mut [f64],
+) {
+    let (m, k) = eff(a_rows, a_cols, ta);
+    let (kb, n) = eff(b_rows, b_cols, tb);
+    assert_eq!(k, kb, "gemm inner dims {k} vs {kb}");
+    assert_eq!(a.len(), a_rows * a_cols, "gemm lhs buffer length");
+    assert_eq!(b.len(), b_rows * b_cols, "gemm rhs buffer length");
+    assert_eq!(out.len(), m * n, "gemm out buffer length");
+    let av = |i: usize, l: usize| {
+        if ta {
+            a[l * a_cols + i]
+        } else {
+            a[i * a_cols + l]
+        }
+    };
+    let bv = |l: usize, j: usize| {
+        if tb {
+            b[j * b_cols + l]
+        } else {
+            b[l * b_cols + j]
+        }
+    };
+    for i in 0..m {
+        for l in 0..k {
+            let ail = av(i, l);
+            for j in 0..n {
+                out[i * n + j] += ail * bv(l, j);
+            }
+        }
+    }
+}
+
+/// Pack the `mc × kc` block of A starting at `(i0, l0)` (post-
+/// transpose coordinates) into row-major `apack`.
+#[inline]
+fn pack_a(
+    a: &[f64],
+    a_cols: usize,
+    ta: bool,
+    i0: usize,
+    mc: usize,
+    l0: usize,
+    kc: usize,
+    apack: &mut [f64],
+) {
+    if ta {
+        // A is stored k-major: element (i, l) lives at a[l·lda + i].
+        for i in 0..mc {
+            for l in 0..kc {
+                apack[i * kc + l] = a[(l0 + l) * a_cols + (i0 + i)];
+            }
+        }
+    } else {
+        for i in 0..mc {
+            let src = &a[(i0 + i) * a_cols + l0..(i0 + i) * a_cols + l0 + kc];
+            apack[i * kc..i * kc + kc].copy_from_slice(src);
+        }
+    }
+}
+
+/// Pack the `kc × nc` panel of B starting at `(l0, j0)` (post-
+/// transpose coordinates) into row-major `bpack`.
+#[inline]
+fn pack_b(
+    b: &[f64],
+    b_cols: usize,
+    tb: bool,
+    l0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+    bpack: &mut [f64],
+) {
+    if tb {
+        // B is stored n-major: element (l, j) lives at b[j·ldb + l].
+        for l in 0..kc {
+            for j in 0..nc {
+                bpack[l * nc + j] = b[(j0 + j) * b_cols + (l0 + l)];
+            }
+        }
+    } else {
+        for l in 0..kc {
+            let src = &b[(l0 + l) * b_cols + j0..(l0 + l) * b_cols + j0 + nc];
+            bpack[l * nc..l * nc + nc].copy_from_slice(src);
+        }
+    }
+}
+
+/// Cache-blocked `out += A(ta)·B(tb)`; bit-identical to
+/// [`gemm_ref_into`].  Single-threaded by design (see module docs);
+/// `out` must be `m·n` long and pre-zeroed or carrying accumulands.
+pub fn gemm_into(
+    a: &[f64],
+    a_rows: usize,
+    a_cols: usize,
+    ta: bool,
+    b: &[f64],
+    b_rows: usize,
+    b_cols: usize,
+    tb: bool,
+    out: &mut [f64],
+) {
+    let (m, k) = eff(a_rows, a_cols, ta);
+    let (kb, n) = eff(b_rows, b_cols, tb);
+    assert_eq!(k, kb, "gemm inner dims {k} vs {kb}");
+    assert_eq!(a.len(), a_rows * a_cols, "gemm lhs buffer length");
+    assert_eq!(b.len(), b_rows * b_cols, "gemm rhs buffer length");
+    assert_eq!(out.len(), m * n, "gemm out buffer length");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    SCRATCH.with(|s| {
+        let (apack, bpack) = &mut *s.borrow_mut();
+        apack.resize(MC * KC, 0.0);
+        bpack.resize(KC * NC, 0.0);
+        for j0 in (0..n).step_by(NC) {
+            let nc = NC.min(n - j0);
+            // Ascending k blocks: the accumulation-order keystone.
+            for l0 in (0..k).step_by(KC) {
+                let kc = KC.min(k - l0);
+                pack_b(b, b_cols, tb, l0, kc, j0, nc, bpack);
+                for i0 in (0..m).step_by(MC) {
+                    let mc = MC.min(m - i0);
+                    pack_a(a, a_cols, ta, i0, mc, l0, kc, apack);
+                    for i in 0..mc {
+                        let orow = &mut out
+                            [(i0 + i) * n + j0..(i0 + i) * n + j0 + nc];
+                        for l in 0..kc {
+                            let ail = apack[i * kc + l];
+                            let brow = &bpack[l * nc..l * nc + nc];
+                            for (o, bb) in orow.iter_mut().zip(brow) {
+                                *o += ail * bb;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Batched `out[g] += A[g](ta)·B[g](tb)` over `g` independent groups
+/// (batch·head pairs), parallelised across the pool one group per
+/// chunk.  Group outputs are disjoint slices of `out`, and each group
+/// runs the same serial blocked kernel, so results are bit-identical
+/// to a `gemm_into` per group at every thread count.  Dims are per
+/// group; `out` must be `g·m·n` long, pre-zeroed or accumulating.
+#[allow(clippy::too_many_arguments)]
+pub fn bmm_into(
+    pool: &DetPool,
+    g: usize,
+    a: &[f64],
+    a_rows: usize,
+    a_cols: usize,
+    ta: bool,
+    b: &[f64],
+    b_rows: usize,
+    b_cols: usize,
+    tb: bool,
+    out: &mut [f64],
+) {
+    let (m, k) = eff(a_rows, a_cols, ta);
+    let (kb, n) = eff(b_rows, b_cols, tb);
+    assert_eq!(k, kb, "bmm inner dims {k} vs {kb}");
+    assert_eq!(a.len(), g * a_rows * a_cols, "bmm lhs buffer length");
+    assert_eq!(b.len(), g * b_rows * b_cols, "bmm rhs buffer length");
+    assert_eq!(out.len(), g * m * n, "bmm out buffer length");
+    let (asz, bsz, osz) = (a_rows * a_cols, b_rows * b_cols, m * n);
+    let flops = g * m * k * n;
+    let group = |gi: usize, og: &mut [f64]| {
+        gemm_into(
+            &a[gi * asz..(gi + 1) * asz],
+            a_rows,
+            a_cols,
+            ta,
+            &b[gi * bsz..(gi + 1) * bsz],
+            b_rows,
+            b_cols,
+            tb,
+            og,
+        );
+    };
+    if pool.threads() == 1 || g <= 1 || flops < MIN_PAR_FLOPS {
+        for gi in 0..g {
+            group(gi, &mut out[gi * osz..(gi + 1) * osz]);
+        }
+        return;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(g, &|gi| {
+        // SAFETY: chunk indices are executed exactly once each, and
+        // group output slices are disjoint by construction.
+        let og = unsafe {
+            std::slice::from_raw_parts_mut(optr.0.add(gi * osz), osz)
+        };
+        group(gi, og);
+    });
+}

@@ -1,0 +1,47 @@
+//! The compute subsystem: cache-blocked, auto-vectorisable micro-
+//! kernels behind every hot tensor operation, plus the deterministic
+//! thread pool that fans their disjoint-output axes across cores.
+//!
+//! Layering: `kernels` sits *below* `autodiff` — every function here
+//! operates on plain `&[f64]` slices plus dimensions, with no
+//! knowledge of tensors, tapes or arenas.  `Tensor`'s
+//! `matmul_into`/`bmm_into`/`map_into`/`zip_into` are shape-checking
+//! wrappers over these kernels, and the tape routes its builders, VJP
+//! and JVP arms through them with the engine's pool.
+//!
+//! * [`pool`] — [`pool::DetPool`], the deterministic scoped thread
+//!   pool (built once per engine; `--threads` / `MIXFLOW_THREADS`,
+//!   default 1).  Parallelises only disjoint-output axes, so results
+//!   are bit-for-bit identical to the serial path at every thread
+//!   count.
+//! * [`gemm`] — cache-blocked matmul/bmm with packed operand panels
+//!   and a branch-free unit-stride inner loop; per-output-element
+//!   accumulation order is exactly the scalar reference's.  The batch
+//!   kernel parallelises over batch·head groups.
+//! * [`elementwise`] — fused map/zip sweeps, chunked by index range.
+//! * [`rows`] — fused softmax / log-sum-exp / layernorm row kernels
+//!   and the generic [`rows::for_each_row`] driver, chunked by row.
+//!
+//! The determinism contract, blocking scheme and pool lifecycle are
+//! documented in `docs/perf/kernels.md`.
+
+pub mod elementwise;
+pub mod gemm;
+pub mod pool;
+pub mod rows;
+
+pub use pool::{DetPool, PoolStats};
+
+/// A raw `*mut f64` that may cross threads.  The kernels hand each
+/// pool chunk a disjoint sub-slice of one output buffer; Rust cannot
+/// prove the disjointness through a shared closure, so the pointer is
+/// wrapped and the slices rebuilt per chunk.  Safety rests on the
+/// pool's exactly-once chunk execution plus the kernels' disjoint
+/// chunk geometry.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub(crate) *mut f64);
+
+// SAFETY: see the type docs — only ever used for disjoint writes
+// inside one `DetPool::run` region, which the caller outlives.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}

@@ -1,0 +1,410 @@
+//! Deterministic scoped thread pool for the kernel subsystem.
+//!
+//! [`DetPool`] is a tiny persistent worker pool built once per engine
+//! (see `EngineBuilder::threads`, CLI `--threads`, env
+//! `MIXFLOW_THREADS`; default 1 = fully serial).  It parallelises only
+//! **disjoint-output** axes — batch·head groups in `BatchMatmul`, row
+//! or element chunks in the map/zip/softmax/layernorm kernels — so the
+//! floating-point accumulation order *per output element* never
+//! depends on the thread count.  Results are bit-for-bit identical to
+//! the serial reference at every `threads` value; the only thing the
+//! pool changes is which core writes which disjoint slice.
+//!
+//! ## How a parallel region runs
+//!
+//! [`DetPool::run`]`(nchunks, f)` executes `f(0), f(1), …,
+//! f(nchunks-1)`, each chunk exactly once.  Chunks are claimed from a
+//! shared atomic counter by the caller *and* the workers, so the
+//! caller is never idle; the call returns only after every chunk has
+//! finished and every worker has gone back to sleep (a full barrier —
+//! this is what makes the lifetime-erased borrow of `f` sound).  With
+//! `threads == 1` (no workers) or `nchunks <= 1` the region degrades
+//! to a plain serial loop with no locking at all.
+//!
+//! ## Panics
+//!
+//! A panic inside a chunk is caught, the first payload is kept, the
+//! region is drained, and the payload is re-raised on the calling
+//! thread via `resume_unwind` — so the typed panic payloads the
+//! serving layer's error taxonomy relies on cross the pool intact.
+//!
+//! ## Invariants
+//!
+//! * One region at a time: a `DetPool` must not receive concurrent
+//!   `run` calls.  Each engine owns its pool exclusively (the serial
+//!   singleton never dispatches, so sharing it is safe).
+//! * Not reentrant: a chunk closure must not call back into the same
+//!   pool.  Kernels keep nested work (e.g. the blocked GEMM inside a
+//!   `BatchMatmul` group) serial for this reason.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Upper clamp for `--threads` / `MIXFLOW_THREADS`: enough for any
+/// machine this repo targets, small enough that a typo ("1000") cannot
+/// spawn an absurd worker herd.
+pub const MAX_THREADS: usize = 64;
+
+/// Resolve the default thread count: `MIXFLOW_THREADS` when set to a
+/// positive integer (clamped to [`MAX_THREADS`]), else 1 (serial — the
+/// bit-identity-by-construction default).
+pub fn default_threads() -> usize {
+    match std::env::var("MIXFLOW_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n.min(MAX_THREADS),
+            _ => 1,
+        },
+        Err(_) => 1,
+    }
+}
+
+/// Lifetime-erased pointer to the caller's chunk closure.  Only ever
+/// dereferenced between the moment `run` publishes it and the barrier
+/// at the end of the same `run` call, so the erased borrow is live for
+/// every use.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are
+// fine) and `run` keeps it alive until every worker is done with it.
+unsafe impl Send for JobPtr {}
+
+/// Mutex-guarded pool state.  User code never runs under this lock —
+/// only small field updates do — so the mutex cannot be poisoned by a
+/// kernel panic.
+struct Slot {
+    /// Current region's closure, `None` between regions.
+    job: Option<JobPtr>,
+    /// Chunk count of the current region.
+    nchunks: usize,
+    /// Region sequence number; workers run each epoch exactly once.
+    epoch: u64,
+    /// Workers that have not yet finished the current epoch.
+    running: usize,
+    /// First panic payload raised inside a chunk this region.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    /// Tells sleeping workers to exit (pool drop).
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers sleep here between regions.
+    work_cv: Condvar,
+    /// The caller sleeps here waiting for `running == 0`.
+    done_cv: Condvar,
+    /// Next unclaimed chunk index of the current region.
+    next: AtomicUsize,
+}
+
+/// Cumulative dispatch counters, mirrored into the obs registry
+/// (`pool.jobs` / `pool.chunks`) by the engine after each run.  Serial
+/// fallbacks (one-chunk regions, `threads == 1`) are *not* counted:
+/// zero here means the pool genuinely never engaged.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Parallel regions dispatched to the workers.
+    pub jobs: u64,
+    /// Chunks executed within those regions.
+    pub chunks: u64,
+}
+
+/// The deterministic worker pool.  See the module docs for the
+/// execution and determinism contract.
+pub struct DetPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+    jobs: AtomicU64,
+    chunks: AtomicU64,
+}
+
+impl DetPool {
+    /// Build a pool driving `threads` threads total: the caller plus
+    /// `threads - 1` persistent workers.  `threads` is clamped to
+    /// `1..=MAX_THREADS`; 1 spawns nothing and every region runs
+    /// serially.
+    pub fn new(threads: usize) -> DetPool {
+        let threads = threads.clamp(1, MAX_THREADS);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                job: None,
+                nchunks: 0,
+                epoch: 0,
+                running: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let workers = (1..threads)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        DetPool {
+            shared,
+            workers,
+            threads,
+            jobs: AtomicU64::new(0),
+            chunks: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide serial pool — what `Tensor`'s plain kernel
+    /// wrappers use when no engine pool is in play.  Never dispatches,
+    /// so it is freely shared between threads.
+    pub fn serial_ref() -> &'static DetPool {
+        static SERIAL: OnceLock<DetPool> = OnceLock::new();
+        SERIAL.get_or_init(|| DetPool::new(1))
+    }
+
+    /// Total thread count this pool drives (caller included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Cumulative dispatch counters since construction.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            chunks: self.chunks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute `f(0) .. f(nchunks - 1)`, each chunk exactly once,
+    /// across the pool's threads; returns after all chunks finished.
+    /// Chunks must write disjoint outputs — the pool guarantees
+    /// exactly-once execution, not any particular assignment of chunk
+    /// to thread.  Panics in chunks are re-raised here with their
+    /// original payload.
+    pub fn run(&self, nchunks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if self.workers.is_empty() || nchunks <= 1 {
+            for c in 0..nchunks {
+                f(c);
+            }
+            return;
+        }
+        self.jobs.fetch_add(1, Ordering::Relaxed);
+        self.chunks.fetch_add(nchunks as u64, Ordering::Relaxed);
+
+        // Publish the region and wake the workers.
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            debug_assert!(slot.job.is_none(), "DetPool::run is not reentrant");
+            self.shared.next.store(0, Ordering::Relaxed);
+            slot.job = Some(JobPtr(f as *const _));
+            slot.nchunks = nchunks;
+            slot.epoch += 1;
+            slot.running = self.workers.len();
+            self.shared.work_cv.notify_all();
+        }
+
+        // The caller drains chunks too; its panics must be caught so
+        // the stack frame holding `f` survives until the barrier.
+        let caller_panic = drain_chunks(&self.shared, f, nchunks);
+
+        // Barrier: wait for every worker to finish this epoch.  Only
+        // after this is the borrow of `f` (and of everything the
+        // chunks captured) dead on all threads.
+        let payload = {
+            let mut slot = self.shared.slot.lock().unwrap();
+            while slot.running > 0 {
+                slot = self.shared.done_cv.wait(slot).unwrap();
+            }
+            slot.job = None;
+            let mut payload = slot.panic.take();
+            if payload.is_none() {
+                payload = caller_panic;
+            }
+            payload
+        };
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for DetPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Claim-and-run chunks until the shared counter passes `nchunks`.
+/// Returns the first panic payload seen on *this* thread (already
+/// recorded payloads from other threads stay in the slot).  After a
+/// panic the thread stops claiming — the region is unwinding anyway —
+/// but the remaining chunks are still claimed (and skipped) so the
+/// counter drains and no thread spins forever.
+fn drain_chunks(
+    shared: &Shared,
+    f: &(dyn Fn(usize) + Sync),
+    nchunks: usize,
+) -> Option<Box<dyn std::any::Any + Send>> {
+    let mut first: Option<Box<dyn std::any::Any + Send>> = None;
+    loop {
+        let c = shared.next.fetch_add(1, Ordering::Relaxed);
+        if c >= nchunks {
+            return first;
+        }
+        if first.is_some() {
+            continue;
+        }
+        if let Err(p) =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(c)))
+        {
+            first = Some(p);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        // Sleep until a region we have not run yet (or shutdown).
+        let (job, nchunks) = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.job.is_some() && slot.epoch != last_epoch {
+                    last_epoch = slot.epoch;
+                    break (slot.job.unwrap(), slot.nchunks);
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        // SAFETY: `run` blocks until `running == 0`, which we only
+        // signal below — the closure is alive for the whole drain.
+        let f = unsafe { &*job.0 };
+        let panic = drain_chunks(shared, f, nchunks);
+        {
+            let mut slot = shared.slot.lock().unwrap();
+            if let Some(p) = panic {
+                slot.panic.get_or_insert(p);
+            }
+            slot.running -= 1;
+            if slot.running == 0 {
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn serial_pool_runs_every_chunk_in_order() {
+        let pool = DetPool::new(1);
+        let order = Mutex::new(Vec::new());
+        pool.run(5, &|c| order.lock().unwrap().push(c));
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+        // Serial fallback never counts as a dispatch.
+        assert_eq!(pool.stats(), PoolStats::default());
+    }
+
+    #[test]
+    fn every_chunk_runs_exactly_once_at_every_thread_count() {
+        for threads in [1usize, 2, 3, 4, 8] {
+            let pool = DetPool::new(threads);
+            let nchunks = 97;
+            let marks: Vec<AtomicUsize> =
+                (0..nchunks).map(|_| AtomicUsize::new(0)).collect();
+            // Several regions back to back: epochs must not bleed.
+            for _ in 0..10 {
+                pool.run(nchunks, &|c| {
+                    marks[c].fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            for (c, m) in marks.iter().enumerate() {
+                assert_eq!(
+                    m.load(Ordering::Relaxed),
+                    10,
+                    "chunk {c} at threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_writes_cover_the_output() {
+        let pool = DetPool::new(4);
+        let n = 10_000usize;
+        let mut out = vec![0.0f64; n];
+        let chunk = 64;
+        let nchunks = n.div_ceil(chunk);
+        {
+            let ptr = crate::kernels::SendPtr(out.as_mut_ptr());
+            pool.run(nchunks, &|c| {
+                let lo = c * chunk;
+                let hi = (lo + chunk).min(n);
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(lo), hi - lo)
+                };
+                for (i, d) in dst.iter_mut().enumerate() {
+                    *d = (lo + i) as f64;
+                }
+            });
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+        let stats = pool.stats();
+        assert_eq!(stats.jobs, 1);
+        assert_eq!(stats.chunks, nchunks as u64);
+    }
+
+    #[test]
+    fn chunk_panic_payload_crosses_the_pool_typed() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        for threads in [1usize, 4] {
+            let pool = DetPool::new(threads);
+            let caught = std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    pool.run(16, &|c| {
+                        if c == 7 {
+                            std::panic::panic_any(Typed(42));
+                        }
+                    });
+                }),
+            )
+            .expect_err("the chunk panic must surface");
+            let typed = caught
+                .downcast_ref::<Typed>()
+                .expect("payload must stay typed through the pool");
+            assert_eq!(*typed, Typed(42));
+            // The pool must stay usable after a panicked region.
+            let ran = AtomicUsize::new(0);
+            pool.run(8, &|_| {
+                ran.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(ran.load(Ordering::Relaxed), 8);
+        }
+    }
+
+    #[test]
+    fn env_default_parses_and_clamps() {
+        // Not touching the real env (tests run in parallel); exercise
+        // the clamp via new() instead.
+        assert_eq!(DetPool::new(0).threads(), 1);
+        assert_eq!(DetPool::new(3).threads(), 3);
+        assert_eq!(DetPool::new(10_000).threads(), MAX_THREADS);
+        assert_eq!(DetPool::serial_ref().threads(), 1);
+    }
+}

@@ -1,0 +1,132 @@
+//! Fused row kernels: softmax, log-sum-exp, layernorm, and the
+//! generic disjoint-row driver they (and the tape's fused JVP rules)
+//! are built on.
+//!
+//! Rows are independent — every output row is a pure function of the
+//! matching input row — so the pool may hand row chunks to different
+//! threads while each row's *internal* float-op order stays exactly
+//! the serial reference's: results are bit-identical at every thread
+//! count.  The per-row orders here deliberately mirror the tape's
+//! scalar helpers (`t_softmax_rows_into`, `t_logsumexp_rows_into`, the
+//! `layernorm_rows` composite) operation for operation; the kernel
+//! test suite pins those equivalences bit for bit.
+
+use super::pool::DetPool;
+use super::SendPtr;
+
+/// Target elements per row chunk: rows are grouped so one chunk
+/// carries roughly this many f64s (≥ 1 row), amortising pool dispatch
+/// on skinny matrices while still splitting tall ones.
+pub const ROW_CHUNK_ELEMS: usize = 4096;
+
+/// Run `f(i, out_row)` for every row `i in 0..m`, where `out_row` is
+/// the `i`-th length-`stride` slice of `out`.  Rows are grouped into
+/// chunks of `max(1, ROW_CHUNK_ELEMS / max(n_hint, 1))` rows and the
+/// chunks fanned across the pool; chunk geometry depends only on the
+/// shape, never the thread count.  `f` must treat rows independently
+/// (it only ever sees disjoint `out` slices).
+pub fn for_each_row<F: Fn(usize, &mut [f64]) + Sync>(
+    pool: &DetPool,
+    m: usize,
+    stride: usize,
+    n_hint: usize,
+    out: &mut [f64],
+    f: F,
+) {
+    assert_eq!(out.len(), m * stride, "row kernel output length");
+    let rows_per_chunk = (ROW_CHUNK_ELEMS / n_hint.max(1)).max(1);
+    let nchunks = m.div_ceil(rows_per_chunk).max(1);
+    if pool.threads() == 1 || nchunks <= 1 {
+        for i in 0..m {
+            f(i, &mut out[i * stride..(i + 1) * stride]);
+        }
+        return;
+    }
+    let optr = SendPtr(out.as_mut_ptr());
+    pool.run(nchunks, &|c| {
+        let lo = c * rows_per_chunk;
+        let hi = (lo + rows_per_chunk).min(m);
+        for i in lo..hi {
+            // SAFETY: chunks run exactly once each and row slices are
+            // disjoint by construction.
+            let row = unsafe {
+                std::slice::from_raw_parts_mut(optr.0.add(i * stride), stride)
+            };
+            f(i, row);
+        }
+    });
+}
+
+/// Row softmax of an `m × n` matrix: max-shifted exp, one denominator
+/// accumulation pass (ascending `j`), one divide pass — the exact
+/// per-row order of the tape's scalar helper.
+pub fn softmax_rows_into(
+    pool: &DetPool,
+    z: &[f64],
+    m: usize,
+    n: usize,
+    out: &mut [f64],
+) {
+    assert_eq!(z.len(), m * n, "softmax input length");
+    for_each_row(pool, m, n, n, out, |i, orow| {
+        let row = &z[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut denom = 0.0;
+        for j in 0..n {
+            let e = (row[j] - mx).exp();
+            orow[j] = e;
+            denom += e;
+        }
+        for o in orow.iter_mut() {
+            *o /= denom;
+        }
+    });
+}
+
+/// Row log-sum-exp of an `m × n` matrix into a length-`m` vector:
+/// `mx + ln(Σ_j exp(z_ij − mx))`, sum ascending in `j`.
+pub fn logsumexp_rows_into(
+    pool: &DetPool,
+    z: &[f64],
+    m: usize,
+    n: usize,
+    out: &mut [f64],
+) {
+    assert_eq!(z.len(), m * n, "logsumexp input length");
+    for_each_row(pool, m, 1, n, out, |i, orow| {
+        let row = &z[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        orow[0] =
+            mx + row.iter().map(|x| (x - mx).exp()).sum::<f64>().ln();
+    });
+}
+
+/// Fused row layernorm: `(z − μ) / √(σ² + eps)` per row, with μ and
+/// σ² the mean and (biased) variance of the row.  The per-row float-op
+/// order replicates the tape's `layernorm_rows` composite exactly —
+/// sum, `· (1/n)`, centre, square-sum, `· (1/n)`, `+ eps`, sqrt,
+/// divide — so the fused value is bit-identical to the op-by-op graph
+/// (pinned by the kernel tests).
+pub fn layernorm_rows_into(
+    pool: &DetPool,
+    z: &[f64],
+    m: usize,
+    n: usize,
+    eps: f64,
+    out: &mut [f64],
+) {
+    assert_eq!(z.len(), m * n, "layernorm input length");
+    let inv_n = 1.0 / n as f64;
+    for_each_row(pool, m, n, n, out, |i, orow| {
+        let row = &z[i * n..(i + 1) * n];
+        let mu = row.iter().sum::<f64>() * inv_n;
+        for (o, x) in orow.iter_mut().zip(row) {
+            *o = x - mu;
+        }
+        let var = orow.iter().map(|c| c * c).sum::<f64>() * inv_n;
+        let std = (var + eps).sqrt();
+        for o in orow.iter_mut() {
+            *o /= std;
+        }
+    });
+}

@@ -29,6 +29,15 @@
 //!   fd strategies behind a fluent builder) that every native driver
 //!   constructs hypergradients through.  The first path in the repo
 //!   where the whole meta-gradient is computed by Rust alone.
+//! * [`kernels`] — the compute subsystem under `autodiff`:
+//!   cache-blocked matmul/bmm with packed operand panels and
+//!   branch-free auto-vectorisable inner loops, fused elementwise
+//!   map/zip kernels, fused softmax/logsumexp/layernorm row kernels,
+//!   and `kernels::pool::DetPool` — a deterministic scoped thread pool
+//!   (one per engine; `--threads` / `MIXFLOW_THREADS`, default 1) that
+//!   parallelises only disjoint-output axes (batch·head groups in
+//!   `BatchMatmul`, row/element chunks elsewhere), keeping results
+//!   bit-for-bit identical to the serial path at every thread count.
 //! * [`obs`] — engine observability: the `MetricsRegistry` of counters,
 //!   gauges and per-phase wall-time histograms, the span-scoped
 //!   `Telemetry` recorder threaded through tape/arena/engine, and the
@@ -60,6 +69,7 @@
 pub mod autodiff;
 pub mod coordinator;
 pub mod hlo;
+pub mod kernels;
 pub mod meta;
 pub mod obs;
 pub mod runtime;

@@ -164,6 +164,12 @@ fn main() {
     .flag("seeds", Some("1"), "native seed-sweep width; combined with multi-value --task/--mode/--inner-opt/--heads it fans the whole grid over the scheduler pool")
     .flag("fd-eps", Some("1e-5"), "central-difference epsilon for --mode fd")
     .flag(
+        "threads",
+        None,
+        "kernel threads per native engine (default MIXFLOW_THREADS or 1; \
+         results are bit-identical at any value)",
+    )
+    .flag(
         "trace",
         None,
         "write per-outer-step engine telemetry to this path (native); \
@@ -365,6 +371,17 @@ fn cmd_native(args: &Args) -> Result<()> {
     if fd_eps <= 0.0 {
         return Err(anyhow!("--fd-eps must be positive, got {fd_eps}"));
     }
+    let threads = match args.get("threads") {
+        Some(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                return Err(anyhow!(
+                    "--threads {s:?} invalid; valid values: an integer >= 1"
+                ))
+            }
+        },
+        None => mixflow::kernels::pool::default_threads(),
+    };
     let seeds = args.get_usize("seeds").map_err(|e| anyhow!(e))?;
     if seeds == 0 {
         return Err(anyhow!(
@@ -401,7 +418,8 @@ fn cmd_native(args: &Args) -> Result<()> {
                 .with_remat(remat)
                 .with_fd_epsilon(fd_eps)
                 .with_attention_shape(heads[0], batch)
-                .with_telemetry(trace_path.is_some());
+                .with_telemetry(trace_path.is_some())
+                .with_threads(threads);
         let report = trainer.train(steps);
         print_train_summary(&report, trainer.last_memory.as_ref());
         println!(
@@ -442,6 +460,7 @@ fn cmd_native(args: &Args) -> Result<()> {
         base_seed: seed,
         n_seeds: seeds,
         telemetry: trace_path.is_some(),
+        threads,
     };
     let runs = run_sweep(&spec);
     let mut t = Table::new(&[

@@ -228,7 +228,8 @@ impl NativeMetaTrainer {
             .checkpoint(self.engine.policy())
             .fd_epsilon(self.engine.fd_epsilon())
             .telemetry(self.engine.telemetry_enabled())
-            .plan(self.engine.plan_enabled());
+            .plan(self.engine.plan_enabled())
+            .threads(self.engine.threads());
         if let Some(opt) = self.engine.inner_opt() {
             base = base.inner_opt(opt);
         }
@@ -258,6 +259,17 @@ impl NativeMetaTrainer {
     /// Central-difference step for the fd path.
     pub fn with_fd_epsilon(mut self, epsilon: f64) -> NativeMetaTrainer {
         self.reconfigure(|b| b.fd_epsilon(epsilon));
+        self
+    }
+
+    /// Kernel threads for the engine's deterministic pool (default:
+    /// `MIXFLOW_THREADS` or 1).  Hypergradients are bit-for-bit
+    /// identical at every thread count, so this is purely a walltime
+    /// knob.
+    pub fn with_threads(mut self, threads: usize) -> NativeMetaTrainer {
+        if threads.max(1) != self.engine.threads() {
+            self.reconfigure(|b| b.threads(threads));
+        }
         self
     }
 
@@ -397,6 +409,11 @@ pub struct SweepSpec {
     /// Record per-outer-step telemetry traces on every cell's engine
     /// (each [`SweepRun`] then carries its [`SweepRun::traces`]).
     pub telemetry: bool,
+    /// Kernel threads per cell engine (shared by every cell; results
+    /// are bit-identical at any value — a walltime knob only).  Note
+    /// cells already fan out across the coordinator pool, so >1 only
+    /// pays off when the grid is narrower than the machine.
+    pub threads: usize,
 }
 
 impl SweepSpec {
@@ -420,6 +437,7 @@ impl SweepSpec {
             base_seed,
             n_seeds,
             telemetry: false,
+            threads: crate::kernels::pool::default_threads(),
         }
     }
 
@@ -591,6 +609,7 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepRun> {
     let fd_epsilon = spec.fd_epsilon;
     let batch = spec.batch;
     let telemetry = spec.telemetry;
+    let threads = spec.threads;
     let jobs: Vec<Job<SweepRun>> = cells
         .iter()
         .map(|&cell| Job {
@@ -605,7 +624,8 @@ pub fn run_sweep(spec: &SweepSpec) -> Vec<SweepRun> {
                 .with_remat(remat)
                 .with_fd_epsilon(fd_epsilon)
                 .with_attention_shape(cell.heads, batch)
-                .with_telemetry(telemetry);
+                .with_telemetry(telemetry)
+                .with_threads(threads);
                 let report = trainer.train(steps);
                 let traces = trainer.take_traces();
                 SweepRun {
@@ -687,6 +707,7 @@ pub fn sweep_report_json(spec: &SweepSpec, runs: &[SweepRun]) -> Json {
     doc.insert("steps", Json::Num(spec.steps as f64));
     doc.insert("batch", Json::Num(spec.batch as f64));
     doc.insert("remat", Json::Str(spec.remat.name()));
+    doc.insert("threads", Json::Num(spec.threads as f64));
     doc.insert("base_seed", Json::Num(spec.base_seed as f64));
     doc.insert("n_seeds", Json::Num(spec.n_seeds as f64));
 
@@ -1079,6 +1100,7 @@ mod tests {
             base_seed: 7,
             n_seeds: 2,
             telemetry: false,
+            threads: 1,
         };
         let cells = spec.cells();
         assert_eq!(cells.len(), 2 * 2 * 2 * 2 * 2);
@@ -1116,6 +1138,7 @@ mod tests {
             base_seed: 11,
             n_seeds: 1,
             telemetry: true,
+            threads: 1,
         };
         let runs = run_sweep(&spec);
         assert_eq!(runs.len(), 4);
@@ -1172,6 +1195,7 @@ mod tests {
             base_seed: 11,
             n_seeds: 2,
             telemetry: false,
+            threads: 1,
         };
         let runs = run_sweep(&spec);
         assert_eq!(runs.len(), 4, "failed cells keep their grid slots");

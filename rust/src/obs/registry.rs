@@ -65,11 +65,25 @@ pub enum Counter {
     ServeEngineQuarantines,
     /// Per-attempt deadline expiries observed by the serving supervisor.
     ServeDeadlineExceeded,
+    /// Rank-2/rank-3 GEMM kernel dispatches (value + JVP dual passes).
+    KernelGemmCalls,
+    /// Fused elementwise map kernel dispatches.
+    KernelMapCalls,
+    /// Fused elementwise zip kernel dispatches.
+    KernelZipCalls,
+    /// Fused row kernel dispatches (softmax / log-sum-exp and their
+    /// JVP duals).
+    KernelRowsCalls,
+    /// Parallel regions executed by the engine's `DetPool` (serial
+    /// fast-path dispatches are not counted).
+    PoolJobs,
+    /// Work chunks executed inside those parallel regions.
+    PoolChunks,
 }
 
 impl Counter {
     /// Every counter, in reporting order.
-    pub const ALL: [Counter; 22] = [
+    pub const ALL: [Counter; 28] = [
         Counter::TapeNodes,
         Counter::TapeBytes,
         Counter::KvBytes,
@@ -92,6 +106,12 @@ impl Counter {
         Counter::ServeJobsShed,
         Counter::ServeEngineQuarantines,
         Counter::ServeDeadlineExceeded,
+        Counter::KernelGemmCalls,
+        Counter::KernelMapCalls,
+        Counter::KernelZipCalls,
+        Counter::KernelRowsCalls,
+        Counter::PoolJobs,
+        Counter::PoolChunks,
     ];
 
     /// Number of counters (array backing size).
@@ -122,6 +142,12 @@ impl Counter {
             Counter::ServeJobsShed => "serve.jobs.shed",
             Counter::ServeEngineQuarantines => "serve.engine.quarantines",
             Counter::ServeDeadlineExceeded => "serve.deadline.exceeded",
+            Counter::KernelGemmCalls => "kernels.gemm.calls",
+            Counter::KernelMapCalls => "kernels.map.calls",
+            Counter::KernelZipCalls => "kernels.zip.calls",
+            Counter::KernelRowsCalls => "kernels.rows.calls",
+            Counter::PoolJobs => "pool.jobs",
+            Counter::PoolChunks => "pool.chunks",
         }
     }
 

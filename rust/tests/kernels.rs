@@ -1,0 +1,413 @@
+//! Acceptance tests for the kernel subsystem (`mixflow::kernels`).
+//!
+//! The subsystem's contract is *bit-for-bit determinism*: the blocked
+//! GEMM must equal the scalar reference loop nest exactly, every pooled
+//! kernel must produce identical bits at every thread count, and whole
+//! hypergradients (naive / mixflow / fd, all tasks × optimisers) must
+//! not change by a single ULP when `--threads` changes.  Also pins the
+//! zero-skip removal: a 0.0 operand must propagate NaN/∞ from the other
+//! side per IEEE-754, not mask it.
+
+use mixflow::autodiff::engine::HypergradEngine;
+use mixflow::autodiff::optim::InnerOptimiser;
+use mixflow::autodiff::problems::{
+    AttentionProblem, HyperLrProblem, LossWeightingProblem,
+    MultiHeadAttentionProblem,
+};
+use mixflow::autodiff::tape::Tape;
+use mixflow::autodiff::tensor::Tensor;
+use mixflow::autodiff::BilevelProblem;
+use mixflow::kernels::{elementwise, gemm, rows, DetPool};
+use mixflow::meta::HypergradMode;
+use mixflow::util::prng::Prng;
+use mixflow::util::proptest;
+
+fn randv(rng: &mut Prng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.next_f64() * 2.0 - 1.0).collect()
+}
+
+/// Bitwise slice equality — distinguishes `-0.0` from `0.0` and treats
+/// identical NaN payloads as equal, which plain `==` would not.
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b.iter())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn max_abs_diff(a: &[Tensor], b: &[Tensor]) -> f64 {
+    assert_eq!(a.len(), b.len(), "gradient pytree arity");
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.max_abs_diff(y))
+        .fold(0.0, f64::max)
+}
+
+// ---- blocked GEMM ≡ scalar reference -------------------------------------
+
+#[test]
+fn blocked_gemm_is_bitwise_equal_to_the_scalar_reference() {
+    // Shapes straddle the MC=32 / KC=128 / NC=128 block edges (exact
+    // multiples, one-off each side, multi-block) across every transpose
+    // combination.  Blocking with ascending k-blocks preserves the
+    // reference per-output accumulation order, so equality is exact.
+    let mut rng = Prng::new(0x6e11);
+    let shapes = [
+        (1, 1, 1),
+        (3, 7, 5),
+        (32, 128, 128),
+        (33, 129, 130),
+        (65, 257, 66),
+        (40, 300, 17),
+    ];
+    for &(m, k, n) in &shapes {
+        for &(ta, tb) in
+            &[(false, false), (true, false), (false, true), (true, true)]
+        {
+            let (ar, ac) = if ta { (k, m) } else { (m, k) };
+            let (br, bc) = if tb { (n, k) } else { (k, n) };
+            let a = randv(&mut rng, ar * ac);
+            let b = randv(&mut rng, br * bc);
+            let mut want = vec![0.0; m * n];
+            let mut got = vec![0.0; m * n];
+            gemm::gemm_ref_into(&a, ar, ac, ta, &b, br, bc, tb, &mut want);
+            gemm::gemm_into(&a, ar, ac, ta, &b, br, bc, tb, &mut got);
+            assert!(
+                bits_eq(&want, &got),
+                "blocked gemm {m}x{k}x{n} ta={ta} tb={tb} diverged \
+                 from the scalar reference"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_gemm_accumulates_onto_existing_output() {
+    // Both kernels are += kernels: a pre-seeded `out` must accumulate
+    // identically (the tape uses this for gradient fan-in).
+    let mut rng = Prng::new(0xacc);
+    let (m, k, n) = (33, 129, 34);
+    let a = randv(&mut rng, m * k);
+    let b = randv(&mut rng, k * n);
+    let seed = randv(&mut rng, m * n);
+    let mut want = seed.clone();
+    let mut got = seed;
+    gemm::gemm_ref_into(&a, m, k, false, &b, k, n, false, &mut want);
+    gemm::gemm_into(&a, m, k, false, &b, k, n, false, &mut got);
+    assert!(bits_eq(&want, &got), "accumulating gemm diverged");
+}
+
+// ---- NaN/∞ propagation (zero-skip removal regression) --------------------
+
+#[test]
+fn matmul_propagates_nan_and_inf_through_zero_operands() {
+    // Regression for the removed `if ail == 0.0 { continue }` zero-skip:
+    // IEEE-754 defines 0·NaN = NaN and 0·∞ = NaN, so a structural zero
+    // in one operand must not mask a NaN/∞ in the other.  The finite
+    // lane must stay finite — propagation is targeted, not blanket.
+    let a = [0.0, 1.0]; // 1×2
+    let b = [f64::NAN, 3.0, 2.0, 4.0]; // 2×2: NaN reachable only via the 0
+    let mut out = [0.0, 0.0];
+    gemm::gemm_ref_into(&a, 1, 2, false, &b, 2, 2, false, &mut out);
+    assert!(out[0].is_nan(), "reference kernel skipped 0·NaN");
+    assert_eq!(out[1], 4.0, "finite lane contaminated");
+    let mut out = [0.0, 0.0];
+    gemm::gemm_into(&a, 1, 2, false, &b, 2, 2, false, &mut out);
+    assert!(out[0].is_nan(), "blocked kernel skipped 0·NaN");
+    assert_eq!(out[1], 4.0, "finite lane contaminated");
+
+    let b_inf = [f64::INFINITY, 3.0, 2.0, 4.0];
+    let mut out = [0.0, 0.0];
+    gemm::gemm_into(&a, 1, 2, false, &b_inf, 2, 2, false, &mut out);
+    assert!(out[0].is_nan(), "blocked kernel skipped 0·∞ (must be NaN)");
+
+    // Tensor level — the tape's matmul/bmm paths.
+    let ta = Tensor::new(vec![1, 2], vec![0.0, 1.0]);
+    let tb = Tensor::new(vec![2, 2], vec![f64::NAN, 3.0, 2.0, 4.0]);
+    let prod = ta.matmul(&tb, false, false);
+    assert!(prod.data[0].is_nan(), "Tensor::matmul skipped 0·NaN");
+    assert_eq!(prod.data[1], 4.0);
+
+    let pool = DetPool::new(2);
+    let g = 2usize;
+    let ba: Vec<f64> = [0.0, 1.0].repeat(g);
+    let bb: Vec<f64> = [f64::NAN, 3.0, 2.0, 4.0].repeat(g);
+    let mut out = vec![0.0; g * 2];
+    gemm::bmm_into(&pool, g, &ba, 1, 2, false, &bb, 2, 2, false, &mut out);
+    for gi in 0..g {
+        assert!(out[gi * 2].is_nan(), "bmm group {gi} skipped 0·NaN");
+        assert_eq!(out[gi * 2 + 1], 4.0);
+    }
+}
+
+// ---- per-kernel thread-count bit-identity --------------------------------
+
+#[test]
+fn every_pooled_kernel_is_bit_identical_across_thread_counts() {
+    // Inputs sized to cross the parallelism thresholds (MIN_PAR_FLOPS
+    // for bmm, CHUNK for elementwise, the per-row element budget for
+    // row kernels) so the multi-threaded pools genuinely dispatch.
+    let mut rng = Prng::new(0x7bead);
+    let pools: Vec<DetPool> =
+        [1usize, 2, 4].iter().map(|&t| DetPool::new(t)).collect();
+
+    // bmm: 8 groups of 24×24 · 24×24 → 8·24³ = 110 592 flops.
+    let (g, m, k, n) = (8usize, 24usize, 24usize, 24usize);
+    let a = randv(&mut rng, g * m * k);
+    let b = randv(&mut rng, g * k * n);
+    let mut want = vec![0.0; g * m * n];
+    gemm::bmm_into(&pools[0], g, &a, m, k, false, &b, k, n, false, &mut want);
+    for pool in &pools[1..] {
+        let mut got = vec![0.0; g * m * n];
+        gemm::bmm_into(pool, g, &a, m, k, false, &b, k, n, false, &mut got);
+        assert!(
+            bits_eq(&want, &got),
+            "bmm diverged at {} threads",
+            pool.threads()
+        );
+    }
+    assert!(
+        pools[2].stats().jobs > 0,
+        "bmm above MIN_PAR_FLOPS never dispatched to the 4-thread pool"
+    );
+
+    // Elementwise map / zip / fill_indexed: 3 chunks + a ragged tail.
+    let nelem = 3 * 8192 + 17;
+    let x = randv(&mut rng, nelem);
+    let y = randv(&mut rng, nelem);
+    let mut want_map = vec![0.0; nelem];
+    let mut want_zip = vec![0.0; nelem];
+    let mut want_fill = vec![0.0; nelem];
+    elementwise::map_into(&pools[0], &x, |v| v.tanh(), &mut want_map);
+    elementwise::zip_into(&pools[0], &x, &y, |p, q| p * q + q, &mut want_zip);
+    elementwise::fill_indexed(
+        &pools[0],
+        nelem,
+        |i| (i as f64).sqrt(),
+        &mut want_fill,
+    );
+    for pool in &pools[1..] {
+        let mut got = vec![0.0; nelem];
+        elementwise::map_into(pool, &x, |v| v.tanh(), &mut got);
+        assert!(bits_eq(&want_map, &got), "map diverged");
+        elementwise::zip_into(pool, &x, &y, |p, q| p * q + q, &mut got);
+        assert!(bits_eq(&want_zip, &got), "zip diverged");
+        elementwise::fill_indexed(pool, nelem, |i| (i as f64).sqrt(), &mut got);
+        assert!(bits_eq(&want_fill, &got), "fill_indexed diverged");
+    }
+
+    // Row kernels: 600 rows of width 12 → multiple row chunks.
+    let (rm, rn) = (600usize, 12usize);
+    let z = randv(&mut rng, rm * rn);
+    let mut want_sm = vec![0.0; rm * rn];
+    let mut want_lse = vec![0.0; rm];
+    let mut want_ln = vec![0.0; rm * rn];
+    rows::softmax_rows_into(&pools[0], &z, rm, rn, &mut want_sm);
+    rows::logsumexp_rows_into(&pools[0], &z, rm, rn, &mut want_lse);
+    rows::layernorm_rows_into(&pools[0], &z, rm, rn, 1e-5, &mut want_ln);
+    for pool in &pools[1..] {
+        let mut sm = vec![0.0; rm * rn];
+        let mut lse = vec![0.0; rm];
+        let mut ln = vec![0.0; rm * rn];
+        rows::softmax_rows_into(pool, &z, rm, rn, &mut sm);
+        rows::logsumexp_rows_into(pool, &z, rm, rn, &mut lse);
+        rows::layernorm_rows_into(pool, &z, rm, rn, 1e-5, &mut ln);
+        assert!(bits_eq(&want_sm, &sm), "softmax diverged");
+        assert!(bits_eq(&want_lse, &lse), "logsumexp diverged");
+        assert!(bits_eq(&want_ln, &ln), "layernorm diverged");
+    }
+}
+
+// ---- fused row kernels ≡ tape composites ---------------------------------
+
+#[test]
+fn fused_layernorm_matches_the_tape_composite_bit_for_bit() {
+    // `Tape::layernorm_rows` is a composite of primitive ops (row_sum,
+    // scale, broadcast, sub, mul, offset, sqrt, div); the fused kernel
+    // replicates its per-row float-op order exactly, so the two must
+    // agree to the bit — that equality is what lets the JVP overlay use
+    // the composite while dense forward paths use the fused kernel.
+    let mut rng = Prng::new(0x1a7e);
+    let (m, n) = (37usize, 11usize);
+    let z = Tensor::randn(&[m, n], 1.0, &mut rng);
+    let mut tape = Tape::new();
+    let zid = tape.leaf(z.clone());
+    let ln = tape.layernorm_rows(zid, 1e-5);
+    let want = tape.value(ln).clone();
+    let pool = DetPool::new(1);
+    let mut got = vec![0.0; m * n];
+    rows::layernorm_rows_into(&pool, &z.data, m, n, 1e-5, &mut got);
+    assert!(
+        bits_eq(&want.data, &got),
+        "fused layernorm diverged from the tape composite"
+    );
+}
+
+#[test]
+fn tape_softmax_and_logsumexp_values_match_the_row_kernels() {
+    // The tape's SoftmaxRows / LogSumExpRows forward values are computed
+    // by these kernels; this pins the wiring (shape, stride, row order).
+    let mut rng = Prng::new(0x50f7);
+    let (m, n) = (19usize, 7usize);
+    let z = Tensor::randn(&[m, n], 1.0, &mut rng);
+    let mut tape = Tape::new();
+    let zid = tape.leaf(z.clone());
+    let sm = tape.softmax_rows(zid);
+    let lse = tape.logsumexp_rows(zid);
+    let pool = DetPool::new(1);
+    let mut got_sm = vec![0.0; m * n];
+    let mut got_lse = vec![0.0; m];
+    rows::softmax_rows_into(&pool, &z.data, m, n, &mut got_sm);
+    rows::logsumexp_rows_into(&pool, &z.data, m, n, &mut got_lse);
+    assert!(bits_eq(&tape.value(sm).data, &got_sm), "softmax wiring");
+    assert!(bits_eq(&tape.value(lse).data, &got_lse), "logsumexp wiring");
+}
+
+// ---- whole-hypergradient thread-count bit-identity (property) ------------
+
+/// Random small bilevel instance spanning all four tasks and all three
+/// inner optimisers (same family as `rust/tests/plan.rs`).
+fn random_problem(g: &mut proptest::Gen) -> Box<dyn BilevelProblem> {
+    let seed = g.rng.next_u64();
+    let d = g.usize(2, 4);
+    let hidden = g.usize(2, 5);
+    let classes = g.usize(2, 4);
+    let batch = g.usize(2, 5);
+    let unroll = g.usize(1, 4);
+    let alpha = g.f64(0.02, 0.12);
+    let opt = *g.choose(&[
+        InnerOptimiser::Sgd,
+        InnerOptimiser::momentum(),
+        InnerOptimiser::adam(),
+    ]);
+    match g.usize(0, 3) {
+        0 => Box::new(
+            HyperLrProblem::with_config(
+                seed, d, hidden, classes, batch, unroll, alpha,
+            )
+            .with_optimiser(opt),
+        ),
+        1 => Box::new(
+            LossWeightingProblem::with_config(
+                seed,
+                d,
+                hidden,
+                classes,
+                batch,
+                unroll,
+                alpha,
+                g.f64(0.0, 0.6),
+            )
+            .with_optimiser(opt),
+        ),
+        2 => Box::new(
+            AttentionProblem::with_config(
+                seed, d, batch, classes, unroll, alpha,
+            )
+            .with_optimiser(opt),
+        ),
+        _ => {
+            let heads = g.usize(1, 3);
+            let d_model = heads * g.usize(1, 2);
+            let seqs = g.usize(1, 3);
+            Box::new(
+                MultiHeadAttentionProblem::with_config(
+                    seed,
+                    d_model,
+                    heads,
+                    seqs,
+                    g.usize(2, 4),
+                    classes,
+                    unroll,
+                    alpha,
+                )
+                .with_optimiser(opt),
+            )
+        }
+    }
+}
+
+#[test]
+fn property_hypergradients_are_bit_identical_across_thread_counts() {
+    // The determinism contract end-to-end: naive / mixflow / fd
+    // hypergradients over the random task × optimiser family must not
+    // change by a single ULP across engines built with 1, 2, and 4
+    // kernel threads.  Diffs are compared to literal 0.0, not a
+    // tolerance.
+    proptest::check("hypergrad-thread-bit-identity", 8, |g| {
+        let problem = random_problem(g);
+        let mode = *g.choose(&[
+            HypergradMode::Naive,
+            HypergradMode::Mixflow,
+            HypergradMode::Fd,
+        ]);
+        let theta0 = problem.theta0();
+        let eta = problem.eta0();
+        let mut reference = None;
+        for &t in &[1usize, 2, 4] {
+            let mut engine =
+                HypergradEngine::builder().mode(mode).threads(t).build();
+            let r = engine.run(problem.as_ref(), &theta0, &eta);
+            match &reference {
+                None => reference = Some(r),
+                Some(base) => {
+                    let diff = max_abs_diff(&base.d_eta, &r.d_eta);
+                    if diff != 0.0 {
+                        return Err(format!(
+                            "{mode:?}: d_eta differs by {diff:.3e} \
+                             between 1 and {t} threads"
+                        ));
+                    }
+                    if base.outer_loss.to_bits() != r.outer_loss.to_bits() {
+                        return Err(format!(
+                            "{mode:?}: outer_loss bits differ between \
+                             1 and {t} threads"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multi_threaded_engine_dispatches_pool_jobs_on_the_ladder_cell() {
+    // The widened attention cell used by the fig_native_walltime thread
+    // ladder (d_model 32, seq 32, 2 heads × 2 batch) is big enough to
+    // cross MIN_PAR_FLOPS: a 4-thread engine must actually dispatch
+    // pool jobs and still match the single-threaded result exactly,
+    // while the 1-thread engine's serial fast path counts none.
+    let problem = MultiHeadAttentionProblem::with_config(
+        1, 32, 2, 2, 32, 4, 2, 0.01,
+    )
+    .with_optimiser(InnerOptimiser::adam());
+    let theta0 = problem.theta0();
+    let eta = problem.eta0();
+    let mut e1 = HypergradEngine::builder()
+        .mode(HypergradMode::Mixflow)
+        .threads(1)
+        .build();
+    let mut e4 = HypergradEngine::builder()
+        .mode(HypergradMode::Mixflow)
+        .threads(4)
+        .build();
+    let r1 = e1.run(&problem, &theta0, &eta);
+    let r4 = e4.run(&problem, &theta0, &eta);
+    assert_eq!(
+        max_abs_diff(&r1.d_eta, &r4.d_eta),
+        0.0,
+        "ladder cell hypergradient changed with thread count"
+    );
+    assert!(
+        e4.pool_stats().jobs > 0,
+        "4-thread engine never dispatched a pool job on the ladder cell"
+    );
+    assert_eq!(
+        e1.pool_stats().jobs,
+        0,
+        "serial fast path must not count pool jobs"
+    );
+    assert_eq!(e1.threads(), 1);
+    assert_eq!(e4.threads(), 4);
+}

@@ -25,6 +25,7 @@ fn small_grid_spec() -> SweepSpec {
         base_seed: 21,
         n_seeds: 2,
         telemetry: false,
+        threads: 1,
     }
 }
 
@@ -144,6 +145,7 @@ fn sweep_heads_axis_changes_the_attention_cells_only() {
         base_seed: 5,
         n_seeds: 1,
         telemetry: false,
+        threads: 1,
     };
     let runs = run_sweep(&spec);
     assert_eq!(runs.len(), 4);
