@@ -5,17 +5,22 @@
 //! loop, the single-head attention + layernorm task driven by an Adam
 //! inner optimiser, and the **multi-head batched** attention workload
 //! (the shape-for-shape match of the paper's benchmark setting) — and
-//! each unroll length T, computes the hypergradient three ways: naive
+//! each unroll length T, computes the hypergradient five ways: naive
 //! reverse-over-reverse on one monolithic tape, MixFlow-MG with full
-//! checkpointing, and MixFlow-MG under `CheckpointPolicy::Auto`
-//! (K ≈ √T), reporting live tape bytes plus the **KV-reuse analysis**:
-//! peak live K/V-projection bytes per path, and the backward-sweep K/V
-//! rebuilds split into checkpoint-alias vs remat bytes.  All three paths
-//! run on ONE persistent [`HypergradEngine`] each, reused across the
-//! whole unroll ladder.  Also cross-checks the paths agree numerically,
-//! and (when an artifact manifest is discoverable) prints the
-//! `hlo::memory` simulator's default/mixflow ratios next to the native
-//! ones so the simulator's trend has a ground-truth oracle.
+//! checkpointing, MixFlow-MG under `CheckpointPolicy::Auto` (K ≈ √T),
+//! truncated back-propagation (`truncated:4` — the mixflow window
+//! confined to the last 4 inner steps), and the EvoGrad population
+//! estimate (no checkpoints at all), reporting live tape bytes plus the
+//! **KV-reuse analysis**: peak live K/V-projection bytes per path, and
+//! the backward-sweep K/V rebuilds split into checkpoint-alias vs remat
+//! bytes.  All five paths run on ONE persistent [`HypergradEngine`]
+//! each, reused across the whole unroll ladder.  Also cross-checks the
+//! paths agree numerically — including the truncated window's exactness
+//! contract: at `T ≤ horizon` it must be bit-for-bit mixflow, and at
+//! `T ≥ 8` (attention + Adam) its peak bytes must sit strictly below
+//! full mixflow — and (when an artifact manifest is discoverable)
+//! prints the `hlo::memory` simulator's default/mixflow ratios next to
+//! the native ones so the simulator's trend has a ground-truth oracle.
 //!
 //! The engines run with telemetry on: every rung conformance-checks the
 //! strategy's own `MemoryReport.arena_allocs/arena_reuses` against the
@@ -40,6 +45,11 @@ use mixflow::autodiff::problems::{
 use mixflow::obs::{write_trace, StepTrace, TraceFormat};
 use mixflow::util::stats::human_bytes;
 use mixflow::util::table::Table;
+
+/// Truncation window for the `truncated` ladder column: full-window
+/// (≡ mixflow, bit-for-bit) on the T ∈ {2, 4} rungs, a proper
+/// truncation on T ∈ {8, 16} where the peak-memory gate applies.
+const TRUNC_HORIZON: usize = 4;
 
 type ProblemBuilder = fn(usize) -> Box<dyn BilevelProblem>;
 
@@ -119,13 +129,15 @@ fn run_config(
         "mixflow tape",
         "mixflow ckpt",
         "ratio",
+        "trunc4 peak",
+        "evograd peak",
         "naive KV",
         "mix KV peak",
         "KV ckpt-alias",
         "KV remat (auto)",
         "max |dEta diff|",
     ])
-    .numeric_cols(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9]);
+    .numeric_cols(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11]);
 
     // One persistent engine per path, shared by the whole ladder: rungs
     // after the first draw their step tapes out of the warm arena.
@@ -139,6 +151,14 @@ fn run_config(
         .checkpoint(CheckpointPolicy::Auto)
         .telemetry(true)
         .build();
+    let mut trunc_engine = HypergradEngine::builder()
+        .mode(HypergradMode::Truncated { horizon: TRUNC_HORIZON })
+        .telemetry(true)
+        .build();
+    let mut evo_engine = HypergradEngine::builder()
+        .mode(HypergradMode::Evograd)
+        .telemetry(true)
+        .build();
 
     let mut ok = true;
     for &unroll in &unrolls {
@@ -148,14 +168,79 @@ fn run_config(
         let naive = naive_engine.run(problem.as_ref(), &theta0, &eta);
         let mixed = mixflow_engine.run(problem.as_ref(), &theta0, &eta);
         let auto = auto_engine.run(problem.as_ref(), &theta0, &eta);
+        let trunc = trunc_engine.run(problem.as_ref(), &theta0, &eta);
+        let evo = evo_engine.run(problem.as_ref(), &theta0, &eta);
         for (variant, trace, h) in [
             ("naive", naive_engine.last_trace(), &naive),
             ("mixflow", mixflow_engine.last_trace(), &mixed),
             ("mixflow-auto", auto_engine.last_trace(), &auto),
+            ("truncated4", trunc_engine.last_trace(), &trunc),
+            ("evograd", evo_engine.last_trace(), &evo),
         ] {
             if !check_trace_conformance(label, unroll, variant, trace, h) {
                 ok = false;
             }
+        }
+        // Truncation contract, both directions of the frontier: a
+        // full-width window is not an approximation (bit-for-bit
+        // mixflow), and a proper truncation must actually buy memory.
+        if unroll <= TRUNC_HORIZON {
+            let diff = mixed
+                .d_eta
+                .iter()
+                .zip(trunc.d_eta.iter())
+                .map(|(a, b)| a.max_abs_diff(b))
+                .fold(0.0f64, f64::max);
+            if diff != 0.0 {
+                eprintln!(
+                    "FAIL {label} T={unroll}: truncated horizon \
+                     {TRUNC_HORIZON} >= T must be bit-for-bit mixflow, \
+                     diff {diff:.3e}"
+                );
+                ok = false;
+            }
+        } else {
+            if trunc.memory.checkpoint_bytes >= mixed.memory.checkpoint_bytes
+            {
+                eprintln!(
+                    "FAIL {label} T={unroll}: truncated checkpoints {} not \
+                     below full mixflow {}",
+                    trunc.memory.checkpoint_bytes,
+                    mixed.memory.checkpoint_bytes
+                );
+                ok = false;
+            }
+            // The headline acceptance: on the attention + Adam configs
+            // the truncated window's peak must sit strictly below full
+            // mixflow once the horizon is a proper subset of T.
+            if check_kv && trunc.memory.peak_bytes >= mixed.memory.peak_bytes
+            {
+                eprintln!(
+                    "FAIL {label} T={unroll}: truncated peak {} not below \
+                     full mixflow {}",
+                    trunc.memory.peak_bytes, mixed.memory.peak_bytes
+                );
+                ok = false;
+            }
+        }
+        // EvoGrad stores nothing across steps: no checkpoints ever, and
+        // a finite estimate (its accuracy is gated statistically in the
+        // strategies integration suite, not here).
+        if evo.memory.checkpoint_bytes != 0 {
+            eprintln!(
+                "FAIL {label} T={unroll}: evograd checkpointed {} bytes",
+                evo.memory.checkpoint_bytes
+            );
+            ok = false;
+        }
+        if !evo.outer_loss.is_finite()
+            || evo
+                .d_eta
+                .iter()
+                .any(|g| g.data.iter().any(|v| !v.is_finite()))
+        {
+            eprintln!("FAIL {label} T={unroll}: evograd went non-finite");
+            ok = false;
         }
         let err = rel_err(&naive.d_eta, &mixed.d_eta);
         let naive_bytes = naive.memory.total_bytes();
@@ -220,6 +305,8 @@ fn run_config(
             human_bytes(mixed.memory.tape_bytes as u64),
             human_bytes(mixed.memory.checkpoint_bytes as u64),
             format!("{:.2}", naive_bytes as f64 / mixed_bytes.max(1) as f64),
+            human_bytes(trunc.memory.peak_bytes as u64),
+            human_bytes(evo.memory.peak_bytes as u64),
             human_bytes(naive.memory.kv_peak_bytes as u64),
             human_bytes(mixed.memory.kv_peak_bytes as u64),
             human_bytes(mixed.memory.kv_ckpt_alias_bytes as u64),
@@ -230,10 +317,13 @@ fn run_config(
     println!("{}", t.render());
     println!(
         "  (persistent engines: naive ran {} ladder rungs on one tape, \
-         mixflow {}, auto-remat {})",
+         mixflow {}, auto-remat {}, truncated{TRUNC_HORIZON} {}, \
+         evograd {})",
         naive_engine.outer_steps(),
         mixflow_engine.outer_steps(),
-        auto_engine.outer_steps()
+        auto_engine.outer_steps(),
+        trunc_engine.outer_steps(),
+        evo_engine.outer_steps()
     );
     cells.push((format!("{slug}/naive"), naive_engine.take_step_traces()));
     cells
@@ -242,6 +332,11 @@ fn run_config(
         format!("{slug}/mixflow-auto"),
         auto_engine.take_step_traces(),
     ));
+    cells.push((
+        format!("{slug}/truncated{TRUNC_HORIZON}"),
+        trunc_engine.take_step_traces(),
+    ));
+    cells.push((format!("{slug}/evograd"), evo_engine.take_step_traces()));
     ok
 }
 
@@ -291,7 +386,10 @@ fn main() {
          moments) — the ratio widens with T on all configurations, and on \
          the attention workloads the KV columns show the K/V projections \
          specifically moving from live-on-tape (naive) to \
-         rebuilt-per-step from checkpoint aliases or remat (mixflow)."
+         rebuilt-per-step from checkpoint aliases or remat (mixflow). \
+         The trunc4/evograd columns chart the bias-for-memory frontier: \
+         the truncated window caps checkpoint growth at the horizon, and \
+         evograd holds no checkpoints at all."
     );
 
     // Cross-check against the HLO buffer-liveness simulator when real

@@ -1,5 +1,10 @@
 //! Native wall-clock + remat figure: naive reverse-over-reverse vs
-//! MixFlow-MG vs MixFlow-MG with block rematerialisation.
+//! MixFlow-MG vs MixFlow-MG with block rematerialisation, plus the
+//! approximate-strategy frontier (truncated back-propagation and
+//! EvoGrad) — every row in `BENCH_native.json` carries
+//! `bias_vs_mixflow` next to `peak_bytes` and `median_s`, so the
+//! artifact charts the bias-vs-memory-vs-walltime trade-off in one
+//! place.
 //!
 //! The paper claims not just a >10x memory reduction but up to 25%
 //! wall-clock improvement; this binary pins the repo's perf trajectory
@@ -28,6 +33,9 @@
 //! * remat (K = 4) leaves the full-checkpoint hypergradient by more
 //!   than 1e-12 (it recomputes the identical op sequence, so it is
 //!   bit-for-bit in practice),
+//! * truncated (horizon = 4) is not bit-for-bit mixflow on the rungs
+//!   where the horizon covers the whole unroll (T ≤ 4), or evograd
+//!   checkpoints anything / goes non-finite anywhere,
 //! * remat fails to shrink peak checkpoint bytes for T > K,
 //! * plan-on and plan-off mixflow disagree beyond 1e-12 (plans only
 //!   change where buffers come from, so they are bit-for-bit),
@@ -152,11 +160,13 @@ fn main() {
         "naive",
         "mixflow",
         "remat4",
+        "trunc4",
+        "evograd",
         "mix/naive",
         "ckpt full",
         "ckpt remat",
     ])
-    .numeric_cols(&[1, 2, 3, 4, 5, 6, 7]);
+    .numeric_cols(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
     let mut ok = true;
 
     for (task, opt, build) in configs {
@@ -172,6 +182,14 @@ fn main() {
         // records dynamically — the A/B for the compiled-plan speedup.
         let mut noplan_engine =
             HypergradEngine::builder().plan(false).build();
+        // The approximate-strategy frontier: a truncated window the
+        // width of the remat segment, and the evograd population
+        // estimate (stochastic, O(1) memory in T).
+        let mut trunc_engine = HypergradEngine::builder()
+            .mode(HypergradMode::Truncated { horizon: REMAT_K })
+            .build();
+        let mut evo_engine =
+            HypergradEngine::builder().mode(HypergradMode::Evograd).build();
         // Telemetry twins: identically configured instrumented engines
         // that run two untimed steps per rung (cold + arena-warm) to
         // source `phase_s` and the exported traces — keeping the timed
@@ -222,9 +240,31 @@ fn main() {
                     ));
                 },
             );
+            let mut trunc_h = None;
+            let s_trunc = bench.run(
+                &format!("{task}+{opt}/T{unroll}/truncated{REMAT_K}"),
+                || {
+                    trunc_h = Some(trunc_engine.run(
+                        problem.as_ref(),
+                        &theta0,
+                        &eta,
+                    ));
+                },
+            );
+            let mut evo_h = None;
+            let s_evo =
+                bench.run(&format!("{task}+{opt}/T{unroll}/evograd"), || {
+                    evo_h = Some(evo_engine.run(
+                        problem.as_ref(),
+                        &theta0,
+                        &eta,
+                    ));
+                });
             let naive = naive_h.expect("bench ran at least one iteration");
             let full = full_h.expect("bench ran at least one iteration");
             let rem = rem_h.expect("bench ran at least one iteration");
+            let trunc = trunc_h.expect("bench ran at least one iteration");
+            let evo = evo_h.expect("bench ran at least one iteration");
 
             // Plan-on/plan-off A/B on the attention rungs (where the
             // step tapes are large enough for arena probing to show up).
@@ -286,6 +326,46 @@ fn main() {
                 );
                 ok = false;
             }
+            // Frontier contracts: a full-width truncation window is
+            // exact (same code path as mixflow), and evograd never
+            // checkpoints and never goes non-finite.  Their truncation
+            // bias / estimator variance elsewhere is *reported* via
+            // `bias_vs_mixflow`, not gated — that's the trade-off the
+            // figure exists to chart.
+            let bias_trunc = rel_err(&full.d_eta, &trunc.d_eta);
+            let bias_evo = rel_err(&full.d_eta, &evo.d_eta);
+            if unroll <= REMAT_K {
+                let diff = full
+                    .d_eta
+                    .iter()
+                    .zip(trunc.d_eta.iter())
+                    .map(|(a, b)| a.max_abs_diff(b))
+                    .fold(0.0f64, f64::max);
+                if diff != 0.0 {
+                    eprintln!(
+                        "FAIL {task} T={unroll}: truncated horizon \
+                         {REMAT_K} >= T must be bit-for-bit mixflow, \
+                         diff {diff:.3e}"
+                    );
+                    ok = false;
+                }
+            }
+            if evo.memory.checkpoint_bytes != 0 {
+                eprintln!(
+                    "FAIL {task} T={unroll}: evograd checkpointed {} bytes",
+                    evo.memory.checkpoint_bytes
+                );
+                ok = false;
+            }
+            if !evo.outer_loss.is_finite()
+                || evo
+                    .d_eta
+                    .iter()
+                    .any(|g| g.data.iter().any(|v| !v.is_finite()))
+            {
+                eprintln!("FAIL {task} T={unroll}: evograd went non-finite");
+                ok = false;
+            }
 
             // Two untimed instrumented steps per rung: the second runs
             // arena-warm, so its trace reflects the same steady state
@@ -302,10 +382,12 @@ fn main() {
             let mut row =
                 result_row(task, opt, unroll, "naive", &s_naive, &naive);
             row.insert("phase_s", phase_seconds(&tr_naive));
+            row.insert("bias_vs_mixflow", Json::Num(err_nf));
             rows.push(row);
             let mut row =
                 result_row(task, opt, unroll, "mixflow", &s_full, &full);
             row.insert("phase_s", phase_seconds(&tr_full));
+            row.insert("bias_vs_mixflow", Json::Num(0.0));
             rows.push(row);
             let mut row = result_row(
                 task,
@@ -316,6 +398,21 @@ fn main() {
                 &rem,
             );
             row.insert("phase_s", phase_seconds(&tr_remat));
+            row.insert("bias_vs_mixflow", Json::Num(err_fr));
+            rows.push(row);
+            let mut row = result_row(
+                task,
+                opt,
+                unroll,
+                &format!("truncated{REMAT_K}"),
+                &s_trunc,
+                &trunc,
+            );
+            row.insert("bias_vs_mixflow", Json::Num(bias_trunc));
+            rows.push(row);
+            let mut row =
+                result_row(task, opt, unroll, "evograd", &s_evo, &evo);
+            row.insert("bias_vs_mixflow", Json::Num(bias_evo));
             rows.push(row);
             if let Some((s_noplan, np)) = &noplan {
                 rows.push(result_row(
@@ -342,6 +439,8 @@ fn main() {
                 format!("{:.2}ms", s_naive.median * 1e3),
                 format!("{:.2}ms", s_full.median * 1e3),
                 format!("{:.2}ms", s_remat.median * 1e3),
+                format!("{:.2}ms", s_trunc.median * 1e3),
+                format!("{:.2}ms", s_evo.median * 1e3),
                 format!("{:.2}", s_full.median / s_naive.median.max(1e-12)),
                 human_bytes(full.memory.checkpoint_bytes as u64),
                 human_bytes(rem.memory.checkpoint_bytes as u64),
@@ -351,9 +450,11 @@ fn main() {
         // The timed mixflow engines must have actually exercised the
         // compiled-plan path: every rung after the first cycle of a
         // topology replays, so zero replays means plans never armed.
-        for (name, engine) in
-            [("mixflow", &full_engine), ("remat", &remat_engine)]
-        {
+        for (name, engine) in [
+            ("mixflow", &full_engine),
+            ("remat", &remat_engine),
+            ("truncated", &trunc_engine),
+        ] {
             let stats = engine.plan_stats();
             if stats.replays == 0 {
                 eprintln!(

@@ -30,8 +30,9 @@
 use std::time::Instant;
 
 use super::mixflow::{
-    inner_step_values_into, mixflow_hypergrad_in, naive_hypergrad_in,
-    BilevelProblem, CheckpointPolicy, Hypergrad, MemoryReport,
+    evograd_hypergrad_in, inner_step_values_into, mixflow_hypergrad_in,
+    naive_hypergrad_in, truncated_hypergrad_in, BilevelProblem,
+    CheckpointPolicy, Hypergrad, MemoryReport,
 };
 use super::optim::InnerOptimiser;
 use super::plan::PlanKey;
@@ -40,6 +41,7 @@ use super::tensor::Tensor;
 use crate::kernels::{DetPool, PoolStats};
 use crate::obs::{Counter, Gauge, MetricsRegistry, Phase, StepTrace};
 use crate::util::args::CliEnum;
+use crate::util::prng::Prng;
 
 /// Which hypergradient path an engine (or the `native` CLI) drives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -51,24 +53,43 @@ pub enum HypergradMode {
     /// Central finite differences over every η element — the slow
     /// numerical oracle, exposed as a first-class mode for cross-checks.
     Fd,
+    /// Truncated back-propagation (Shaban et al.): the mixflow adjoint
+    /// sweep over only the last `horizon` inner steps.  `horizon = T`
+    /// is exactly mixflow, bit-for-bit.
+    Truncated { horizon: usize },
+    /// EvoGrad (Bohdal et al.): a population-based stochastic estimate
+    /// with no second-order terms — O(1) memory in the unroll.
+    Evograd,
 }
 
 impl HypergradMode {
-    pub fn name(&self) -> &'static str {
+    pub fn name(&self) -> String {
         match self {
-            HypergradMode::Naive => "naive",
-            HypergradMode::Mixflow => "mixflow",
-            HypergradMode::Fd => "fd",
+            HypergradMode::Naive => "naive".to_string(),
+            HypergradMode::Mixflow => "mixflow".to_string(),
+            HypergradMode::Fd => "fd".to_string(),
+            HypergradMode::Truncated { horizon } => {
+                format!("truncated:{horizon}")
+            }
+            HypergradMode::Evograd => "evograd".to_string(),
         }
     }
 
     /// Case- and whitespace-insensitive (`--mode Mixflow` must work).
+    /// The windowed mode takes its horizon inline: `truncated:<K>` with
+    /// `K ≥ 1` (the printed names round-trip, like the other CLI enums).
     pub fn parse(s: &str) -> Option<HypergradMode> {
-        match s.trim().to_lowercase().as_str() {
+        let t = s.trim().to_lowercase();
+        match t.as_str() {
             "naive" => Some(HypergradMode::Naive),
             "mixflow" => Some(HypergradMode::Mixflow),
             "fd" => Some(HypergradMode::Fd),
-            _ => None,
+            "evograd" => Some(HypergradMode::Evograd),
+            _ => t
+                .strip_prefix("truncated:")
+                .and_then(|k| k.trim().parse::<usize>().ok())
+                .filter(|&k| k >= 1)
+                .map(|horizon| HypergradMode::Truncated { horizon }),
         }
     }
 }
@@ -76,15 +97,24 @@ impl HypergradMode {
 impl CliEnum for HypergradMode {
     fn name(&self) -> String {
         // Method-call syntax resolves to the inherent `name` above.
-        self.name().to_string()
+        HypergradMode::name(self)
     }
 
     fn parse(s: &str) -> Option<HypergradMode> {
         HypergradMode::parse(s)
     }
 
+    /// Parseable exemplars; the open-ended `truncated:<K>` form is
+    /// described by the [`CliEnum::valid_values`] override below.
     fn variants() -> &'static [&'static str] {
-        &["naive", "mixflow", "fd"]
+        &["naive", "mixflow", "fd", "truncated:4", "evograd"]
+    }
+
+    fn valid_values() -> String {
+        "naive, mixflow, fd, truncated:<K> (mixflow adjoint over the \
+         last K inner steps, K >= 1), or evograd (population estimate, \
+         no second-order terms)"
+            .to_string()
     }
 }
 
@@ -99,6 +129,13 @@ impl CliEnum for HypergradMode {
 pub trait HypergradStrategy: Send {
     /// Short path name, used in artifact labels and reports.
     fn name(&self) -> &'static str;
+
+    /// Re-key any per-run randomness to `seed` and rewind the stream
+    /// (no-op for the deterministic strategies).  The serving
+    /// supervisor calls this before every attempt so an evograd job's
+    /// perturbations depend only on its spec — never on how many jobs
+    /// the pooled engine served before it.
+    fn reseed(&mut self, _seed: u64) {}
 
     /// Compute one hypergradient on the engine's persistent tape.
     fn run(
@@ -151,6 +188,125 @@ impl HypergradStrategy for MixflowStrategy {
         eta: &[Tensor],
     ) -> Hypergrad {
         mixflow_hypergrad_in(tape, problem, theta0, eta, self.policy)
+    }
+}
+
+/// Truncated back-propagation (Shaban et al.): the mixflow
+/// forward-over-reverse machinery — checkpoints, remat, compiled step
+/// plans and all — confined to the last `horizon` inner steps.  The
+/// forward unroll still runs every step (the window state is exact);
+/// only the adjoint sweep is cut short, so checkpoint memory scales
+/// with `horizon` instead of `T` at the cost of a truncation bias.
+/// `horizon = T` is *exactly* [`MixflowStrategy`], bit-for-bit (same
+/// code path, same op sequence).
+#[derive(Debug, Clone, Copy)]
+pub struct TruncatedStrategy {
+    /// Window length K ≥ 1 (clamped to the problem's unroll at run
+    /// time).
+    pub horizon: usize,
+    /// Checkpoint policy *within* the window
+    /// ([`CheckpointPolicy::Auto`] resolves `K' ≈ √horizon`).
+    pub policy: CheckpointPolicy,
+}
+
+impl TruncatedStrategy {
+    pub fn new(horizon: usize, policy: CheckpointPolicy) -> TruncatedStrategy {
+        assert!(horizon >= 1, "truncation horizon must be at least 1");
+        TruncatedStrategy { horizon, policy }
+    }
+}
+
+impl HypergradStrategy for TruncatedStrategy {
+    fn name(&self) -> &'static str {
+        "truncated"
+    }
+
+    fn run(
+        &mut self,
+        tape: &mut Tape,
+        problem: &dyn BilevelProblem,
+        theta0: &[Tensor],
+        eta: &[Tensor],
+    ) -> Hypergrad {
+        truncated_hypergrad_in(
+            tape,
+            problem,
+            theta0,
+            eta,
+            self.policy,
+            self.horizon,
+        )
+    }
+}
+
+/// Default EvoGrad population size ([`EvoGradStrategy`] / the builder's
+/// `evo_population` knob).
+pub const DEFAULT_EVO_POPULATION: usize = 8;
+
+/// Default EvoGrad perturbation scale σ.
+pub const DEFAULT_EVO_SIGMA: f64 = 1e-2;
+
+/// EvoGrad (Bohdal et al.): softmax-weighted population hypergradient
+/// with no second-order terms — see
+/// [`super::mixflow::evograd_hypergrad_in`] for the estimator.  Each
+/// [`HypergradStrategy::run`] draws its antithetic perturbations from
+/// the deterministic per-(seed, outer-step) stream
+/// `Prng::new(seed).fold_in(step)`, so a rebuilt engine (serve
+/// quarantine) or a replayed job reproduces the same estimates
+/// bit-for-bit.
+#[derive(Debug, Clone, Copy)]
+pub struct EvoGradStrategy {
+    /// Population size (rounded up to 2; antithetic pairs).
+    pub population: usize,
+    /// Perturbation scale σ > 0.
+    pub sigma: f64,
+    /// Base seed of the perturbation stream.
+    pub seed: u64,
+    /// Outer-step counter folded into the stream per run.
+    calls: u64,
+}
+
+impl EvoGradStrategy {
+    pub fn new(population: usize, sigma: f64, seed: u64) -> EvoGradStrategy {
+        assert!(sigma > 0.0, "evograd sigma must be positive, got {sigma}");
+        EvoGradStrategy { population: population.max(2), sigma, seed, calls: 0 }
+    }
+}
+
+impl Default for EvoGradStrategy {
+    fn default() -> EvoGradStrategy {
+        EvoGradStrategy::new(DEFAULT_EVO_POPULATION, DEFAULT_EVO_SIGMA, 0)
+    }
+}
+
+impl HypergradStrategy for EvoGradStrategy {
+    fn name(&self) -> &'static str {
+        "evograd"
+    }
+
+    fn reseed(&mut self, seed: u64) {
+        self.seed = seed;
+        self.calls = 0;
+    }
+
+    fn run(
+        &mut self,
+        tape: &mut Tape,
+        problem: &dyn BilevelProblem,
+        theta0: &[Tensor],
+        eta: &[Tensor],
+    ) -> Hypergrad {
+        let mut rng = Prng::new(self.seed).fold_in(self.calls);
+        self.calls += 1;
+        evograd_hypergrad_in(
+            tape,
+            problem,
+            theta0,
+            eta,
+            self.population,
+            self.sigma,
+            &mut rng,
+        )
     }
 }
 
@@ -287,6 +443,9 @@ pub struct EngineBuilder {
     policy: CheckpointPolicy,
     inner_opt: Option<InnerOptimiser>,
     fd_epsilon: f64,
+    evo_population: usize,
+    evo_sigma: f64,
+    evo_seed: u64,
     telemetry: bool,
     plan: bool,
     guard: bool,
@@ -300,6 +459,9 @@ impl Default for EngineBuilder {
             policy: CheckpointPolicy::Full,
             inner_opt: None,
             fd_epsilon: DEFAULT_FD_EPSILON,
+            evo_population: DEFAULT_EVO_POPULATION,
+            evo_sigma: DEFAULT_EVO_SIGMA,
+            evo_seed: 0,
             telemetry: false,
             plan: true,
             guard: false,
@@ -338,6 +500,30 @@ impl EngineBuilder {
     pub fn fd_epsilon(mut self, epsilon: f64) -> EngineBuilder {
         assert!(epsilon > 0.0, "fd epsilon must be positive");
         self.fd_epsilon = epsilon;
+        self
+    }
+
+    /// EvoGrad population size (default 8; rounded up to 2 — the
+    /// estimator needs at least one antithetic pair).  Ignored by the
+    /// other modes.
+    pub fn evo_population(mut self, population: usize) -> EngineBuilder {
+        self.evo_population = population.max(2);
+        self
+    }
+
+    /// EvoGrad perturbation scale σ (default 1e-2).  Ignored by the
+    /// other modes.
+    pub fn evo_sigma(mut self, sigma: f64) -> EngineBuilder {
+        assert!(sigma > 0.0, "evograd sigma must be positive");
+        self.evo_sigma = sigma;
+        self
+    }
+
+    /// Base seed of the EvoGrad perturbation stream (default 0); each
+    /// outer step folds its index in, so replays are deterministic
+    /// per (seed, step).  Ignored by the other modes.
+    pub fn evo_seed(mut self, seed: u64) -> EngineBuilder {
+        self.evo_seed = seed;
         self
     }
 
@@ -400,6 +586,14 @@ impl EngineBuilder {
                 Box::new(MixflowStrategy { policy: self.policy })
             }
             HypergradMode::Fd => Box::new(FdStrategy::new(self.fd_epsilon)),
+            HypergradMode::Truncated { horizon } => {
+                Box::new(TruncatedStrategy::new(horizon, self.policy))
+            }
+            HypergradMode::Evograd => Box::new(EvoGradStrategy::new(
+                self.evo_population,
+                self.evo_sigma,
+                self.evo_seed,
+            )),
         };
         let mut tape = Tape::new();
         tape.obs_mut().set_enabled(self.telemetry);
@@ -537,6 +731,14 @@ impl HypergradEngine {
     /// supervisor rebuilds a quarantined engine).
     pub fn config(&self) -> EngineBuilder {
         self.config
+    }
+
+    /// Re-key the strategy's per-run randomness (evograd's
+    /// perturbation stream) and rewind it to step 0; a no-op for the
+    /// deterministic strategies.  Serving calls this per attempt so
+    /// warm-engine pooling never leaks stream position across jobs.
+    pub fn reseed(&mut self, seed: u64) {
+        self.strategy.reseed(seed);
     }
 
     /// Whether the tape's non-finite guard is on for this engine.

@@ -63,6 +63,7 @@ use super::tape::{NodeId, Tape, TapeStats};
 use super::tensor::Tensor;
 use crate::obs::{Counter, Phase};
 use crate::util::args::CliEnum;
+use crate::util::prng::Prng;
 
 use super::optim::InnerOptimiser;
 
@@ -454,10 +455,46 @@ pub fn mixflow_hypergrad_in(
     eta: &[Tensor],
     policy: CheckpointPolicy,
 ) -> Hypergrad {
+    truncated_hypergrad_in(
+        tape,
+        problem,
+        theta0,
+        eta,
+        policy,
+        problem.unroll(),
+    )
+}
+
+/// Truncated back-propagation through the last `horizon` inner steps
+/// (Shaban et al.) on a caller-owned tape — the engine's truncated
+/// strategy, and the shared core behind [`mixflow_hypergrad_in`].
+///
+/// The forward unroll always runs all `T` steps (the window state
+/// `(θ_{T−K}, s_{T−K})` is exact), but checkpoints are stored only
+/// inside the window `[T−K, T)` and the adjoint sweep stops at the
+/// window edge: λ arriving at `t = T−K` is dropped instead of being
+/// propagated further back, and `dη` accumulates the direct + mixed
+/// terms of the window steps only.  That is the truncation bias; in
+/// exchange, live checkpoints and remat segments scale with `K`
+/// instead of `T`.  `horizon` is clamped to `[1, T]`, and
+/// `horizon = T` takes *exactly* the full mixflow path — same op
+/// sequence, bit-for-bit equal hypergradients.  The
+/// [`CheckpointPolicy`] applies within the window
+/// ([`CheckpointPolicy::Auto`] resolves `K' ≈ √horizon`).
+pub fn truncated_hypergrad_in(
+    tape: &mut Tape,
+    problem: &dyn BilevelProblem,
+    theta0: &[Tensor],
+    eta: &[Tensor],
+    policy: CheckpointPolicy,
+    horizon: usize,
+) -> Hypergrad {
     let unroll = problem.unroll();
     let opt = problem.optimiser();
     let nt = theta0.len();
-    let k = policy.segment_for(unroll).clamp(1, unroll.max(1));
+    let horizon = horizon.clamp(1, unroll.max(1));
+    let start = unroll.saturating_sub(horizon);
+    let k = policy.segment_for(horizon).clamp(1, horizon.max(1));
 
     // ONE tape for every step — forward, λ seeding, remat recompute and
     // backward cycles all run through `Tape::plan_step`, which drains
@@ -481,6 +518,10 @@ pub fn mixflow_hypergrad_in(
 
     // ---- forward: checkpoint (θ_t, s_t) at segment boundaries ----------
     let t_fwd = Instant::now();
+    if start > 0 {
+        tape.obs_mut()
+            .count(Counter::TruncatedSkippedSteps, start as u64);
+    }
     let mut ckpt: Vec<Option<StatePair>> = Vec::new();
     let mut theta = theta0.to_vec();
     let mut state = opt.init_state(theta0);
@@ -490,9 +531,11 @@ pub fn mixflow_hypergrad_in(
         // The step tape's (θ, s) leaves are O(1) aliases; when the pair
         // is also checkpointed it sits in `live_state` AND in the tape's
         // byte counter, so the physical-peak accounting subtracts the
-        // overlap once.
+        // overlap once.  Steps before the truncation window (`t < start`,
+        // empty for the full-horizon case) advance the state but store
+        // nothing — the backward sweep never visits them.
         let mut overlap = 0usize;
-        if t % k == 0 {
+        if t >= start && (t - start) % k == 0 {
             tape.obs_mut().phase_begin(Phase::CheckpointStore);
             let pb = pair_bytes(&theta, &state);
             live_state += pb;
@@ -553,9 +596,12 @@ pub fn mixflow_hypergrad_in(
         eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
 
     // ---- backward sweep, newest segment first --------------------------
+    // Segments cover `[start, unroll)` only; the adjoint λ arriving at
+    // `t = start` is dropped — the truncation cut (a no-op at full
+    // horizon, where start = 0 and λ₀ is unused anyway).
     for j in (0..ckpt.len()).rev() {
         tape.check_cancel();
-        let seg_start = j * k;
+        let seg_start = start + j * k;
         let seg_end = (seg_start + k).min(unroll);
         let seed = ckpt[j].take().expect("segment checkpoint stored once");
         // Rematerialise the intra-segment states (θ_t, s_t) for
@@ -740,6 +786,206 @@ pub fn mixflow_hypergrad_in(
             kv_ckpt_alias_bytes: kv_ckpt_alias,
             kv_remat_bytes: kv_remat,
             kv_tangent_bytes: kv_tangent,
+        },
+    }
+}
+
+/// EvoGrad (Bohdal et al.): a variance-reduced stochastic hypergradient
+/// with **no second-order terms**, on a caller-owned tape — the engine's
+/// evograd strategy.
+///
+/// The unroll runs values-only to `(θ_{T−1}, s_{T−1})`; the tail is one
+/// in-graph cycle: the last optimiser step `θ_T(η)` is built over a
+/// stop-gradient copy of `∇_θ L` (so the learning-rate path `P(η)` stays
+/// differentiable first-order while the Hessian path is severed), a
+/// population of `θ_i = θ_T + ε_i` is perturbed with antithetic
+/// Gaussian noise `ε ~ N(0, σ²)`, and the estimate is
+///
+/// ```text
+/// dη = ∂/∂η  Σ_i softmax(−ℓ(θ_i, η))_i · L_val(θ_i)
+/// ```
+///
+/// — one first-order reverse sweep over a graph that never materialises
+/// a Hessian- or mixed-vector product.  η enters through both the
+/// optimiser path (`θ_T(η)`, e.g. hyper-LR) and the weighting path
+/// (`ℓ(·, η)`, e.g. loss-weighting), so every problem family gets a
+/// non-trivial gradient.  The perturbations are drawn **host-side**
+/// from the caller's deterministic [`Prng`] stream — the tape sees them
+/// as constants, so results are bit-identical at every thread count and
+/// the tail replays the compiled [`PlanKey::Evograd`] plan (constant
+/// payloads and the host-computed softmax shift are excluded from plan
+/// signatures).
+///
+/// The estimator is biased (one-step lookahead, smoothed by σ) but its
+/// memory is O(1) in `T`: no checkpoints, no adjoint sweep, no tangent
+/// overlay — the cheapest point on the bias-vs-memory frontier.
+pub fn evograd_hypergrad_in(
+    tape: &mut Tape,
+    problem: &dyn BilevelProblem,
+    theta0: &[Tensor],
+    eta: &[Tensor],
+    population: usize,
+    sigma: f64,
+    rng: &mut Prng,
+) -> Hypergrad {
+    assert!(sigma > 0.0, "evograd sigma must be positive, got {sigma}");
+    let population = population.max(2);
+    let unroll = problem.unroll();
+    let opt = problem.optimiser();
+    let arena_before = tape.arena_stats();
+    let mut peak_tape = 0usize;
+    let mut peak_nodes = 0usize;
+    let mut kv_peak = 0usize;
+
+    // ---- forward: values-only unroll to (θ_{T−1}, s_{T−1}) -------------
+    let t_fwd = Instant::now();
+    let last = unroll.saturating_sub(1);
+    let mut theta = theta0.to_vec();
+    let mut state = opt.init_state(theta0);
+    for t in 0..last {
+        tape.check_cancel();
+        tape.obs_mut().phase_begin(Phase::Forward);
+        let (next_theta, next_state, stats) =
+            inner_step_values_into(problem, tape, &theta, &state, eta, t);
+        tape.obs_mut().phase_end(Phase::Forward);
+        peak_tape = peak_tape.max(stats.bytes);
+        peak_nodes = peak_nodes.max(stats.nodes);
+        kv_peak = kv_peak.max(stats.kv_bytes);
+        theta = next_theta;
+        state = next_state;
+    }
+    let forward_seconds = t_fwd.elapsed().as_secs_f64();
+
+    // Antithetic perturbation pairs (ε_{2j+1} = −ε_{2j}), drawn
+    // host-side before the tail cycle records.
+    let mut eps: Vec<Vec<Tensor>> = Vec::with_capacity(population);
+    for i in 0..population {
+        if i % 2 == 1 {
+            let neg: Vec<Tensor> =
+                eps[i - 1].iter().map(|e| e.map(|x| -x)).collect();
+            eps.push(neg);
+        } else {
+            eps.push(
+                theta
+                    .iter()
+                    .map(|t| Tensor::randn(&t.shape, sigma, rng))
+                    .collect(),
+            );
+        }
+    }
+    tape.obs_mut()
+        .count(Counter::EvogradPerturbations, population as u64);
+
+    // ---- tail: one first-order cycle under the Evograd plan ------------
+    let t_bwd = Instant::now();
+    tape.check_cancel();
+    tape.obs_mut().phase_begin(Phase::BackwardVjp);
+    let (d_eta, outer_loss) = tape.plan_step(PlanKey::Evograd, |tape| {
+        let theta_ids = leaves(tape, &theta);
+        let state_ids = leaves(tape, &state);
+        let eta_ids = leaves(tape, eta);
+        // Last step in-graph, gradient frozen: first-order through the
+        // η→P(η)→θ_T optimiser path only.
+        let loss = problem.inner_loss(tape, &theta_ids, &eta_ids, last);
+        let g_live = tape.grad(loss, &theta_ids);
+        let g_const: Vec<NodeId> = g_live
+            .iter()
+            .map(|&g| {
+                let v = tape.value(g).clone();
+                tape.constant(v)
+            })
+            .collect();
+        let lr_ids = problem.lr_nodes(tape, &eta_ids);
+        let (theta_next, _state_next) = opt.step(
+            tape, &theta_ids, &state_ids, &lr_ids, &g_const, last,
+        );
+
+        // Population: θ_i = θ_T + ε_i, each scored by its inner loss
+        // (the softmax weighting input) and its outer loss.
+        let mut member_losses: Vec<NodeId> =
+            Vec::with_capacity(population);
+        let mut member_outers: Vec<NodeId> =
+            Vec::with_capacity(population);
+        for member in eps.iter() {
+            let theta_i: Vec<NodeId> = theta_next
+                .iter()
+                .zip(member.iter())
+                .map(|(&th, e)| {
+                    let e_id = tape.constant(e.clone());
+                    tape.add(th, e_id)
+                })
+                .collect();
+            member_losses
+                .push(problem.inner_loss(tape, &theta_i, &eta_ids, last));
+            member_outers.push(problem.outer_loss(tape, &theta_i));
+        }
+
+        // w = softmax(−ℓ), shifted by the host-side minimum for
+        // stability (softmax is shift-invariant, and the shift is a
+        // per-step immediate the plan signature ignores).
+        let m = member_losses
+            .iter()
+            .map(|&id| tape.value(id).item())
+            .fold(f64::INFINITY, f64::min);
+        let shift = if m.is_finite() { m } else { 0.0 };
+        let z: Vec<NodeId> = member_losses
+            .iter()
+            .map(|&id| {
+                let shifted = tape.offset(id, -shift);
+                let neg = tape.scale(shifted, -1.0);
+                tape.exp(neg)
+            })
+            .collect();
+        let mut norm = z[0];
+        for &zi in &z[1..] {
+            norm = tape.add(norm, zi);
+        }
+        // L = Σ w_i · L_val(θ_i), then one reverse sweep for dη.
+        let mut total: Option<NodeId> = None;
+        for (&zi, &oi) in z.iter().zip(member_outers.iter()) {
+            let wi = tape.div(zi, norm);
+            let term = tape.mul(wi, oi);
+            total = Some(match total {
+                Some(prev) => tape.add(prev, term),
+                None => term,
+            });
+        }
+        let total = total.expect("population is at least 2");
+        let d_eta_ids = tape.grad(total, &eta_ids);
+        let d_eta: Vec<Tensor> = d_eta_ids
+            .iter()
+            .map(|&id| tape.value(id).clone())
+            .collect();
+        // Report the *unperturbed* outer loss, comparable across modes.
+        let outer0 = problem.outer_loss(tape, &theta_next);
+        let stats = tape.stats();
+        peak_tape = peak_tape.max(stats.bytes);
+        peak_nodes = peak_nodes.max(stats.nodes);
+        kv_peak = kv_peak.max(stats.kv_bytes);
+        (d_eta, tape.value(outer0).item())
+    });
+    tape.obs_mut().phase_end(Phase::BackwardVjp);
+    let backward_seconds = t_bwd.elapsed().as_secs_f64();
+
+    let arena = tape.arena_stats();
+    Hypergrad {
+        d_eta,
+        outer_loss,
+        memory: MemoryReport {
+            tape_bytes: peak_tape,
+            checkpoint_bytes: 0,
+            nodes: peak_nodes,
+            peak_bytes: peak_tape,
+            arena_allocs: arena.allocs - arena_before.allocs,
+            arena_reuses: arena.reuses - arena_before.reuses,
+            forward_seconds,
+            backward_seconds,
+            // No adjoint sweep: K/V lives one step tape at a time and
+            // nothing is rebuilt or carried as tangents.
+            kv_peak_bytes: kv_peak,
+            kv_ckpt_alias_bytes: 0,
+            kv_remat_bytes: 0,
+            kv_tangent_bytes: 0,
         },
     }
 }

@@ -69,14 +69,16 @@ pub mod tensor;
 pub use arena::{ArenaStats, BufferArena};
 pub use plan::{PlanKey, PlanStats, StepPlan};
 pub use engine::{
-    EngineBuilder, FdStrategy, HypergradEngine, HypergradMode,
-    HypergradStrategy, MixflowStrategy, NaiveStrategy,
+    EngineBuilder, EvoGradStrategy, FdStrategy, HypergradEngine,
+    HypergradMode, HypergradStrategy, MixflowStrategy, NaiveStrategy,
+    TruncatedStrategy, DEFAULT_EVO_POPULATION, DEFAULT_EVO_SIGMA,
 };
 pub use mixflow::{
-    fd_hypergrad, inner_step_values, inner_step_values_into,
-    mixflow_hypergrad, mixflow_hypergrad_in, mixflow_hypergrad_with,
-    naive_hypergrad, naive_hypergrad_in, BilevelProblem, CheckpointPolicy,
-    Hypergrad, MemoryReport,
+    evograd_hypergrad_in, fd_hypergrad, inner_step_values,
+    inner_step_values_into, mixflow_hypergrad, mixflow_hypergrad_in,
+    mixflow_hypergrad_with, naive_hypergrad, naive_hypergrad_in,
+    truncated_hypergrad_in, BilevelProblem, CheckpointPolicy, Hypergrad,
+    MemoryReport,
 };
 pub use optim::InnerOptimiser;
 pub use tape::{

@@ -60,17 +60,20 @@ use super::tensor::ELEM_BYTES;
 ///   λ-seed, FD's probe losses).
 /// * [`PlanKey::Naive`] — the naive strategy's monolithic
 ///   unroll-plus-reverse tape.
+/// * [`PlanKey::Evograd`] — the EvoGrad tail cycle (in-graph last step,
+///   population perturbations, softmax weighting, first-order VJP).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlanKey {
     Inner,
     Backward,
     Outer,
     Naive,
+    Evograd,
 }
 
 impl PlanKey {
     /// Number of plan keys (sizing the tape's plan table).
-    pub const COUNT: usize = 4;
+    pub const COUNT: usize = 5;
 
     pub(crate) fn idx(self) -> usize {
         match self {
@@ -78,6 +81,7 @@ impl PlanKey {
             PlanKey::Backward => 1,
             PlanKey::Outer => 2,
             PlanKey::Naive => 3,
+            PlanKey::Evograd => 4,
         }
     }
 
@@ -87,6 +91,7 @@ impl PlanKey {
             PlanKey::Backward => "backward",
             PlanKey::Outer => "outer",
             PlanKey::Naive => "naive",
+            PlanKey::Evograd => "evograd",
         }
     }
 }

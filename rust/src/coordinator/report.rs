@@ -40,9 +40,12 @@ pub fn aggregate_claims(pairs: &[PairRatios]) -> String {
     if pairs.is_empty() {
         return "no pairs\n".into();
     }
+    // total_cmp: NaN ratios (e.g. a 0/0 memory ratio from an empty
+    // measurement) must sort deterministically, never panic.  NaN orders
+    // after +inf under IEEE total order, so percentiles stay sane.
     let mut dyn_ratios: Vec<f64> =
         pairs.iter().map(|p| p.dynamic_ratio).collect();
-    dyn_ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    dyn_ratios.sort_by(f64::total_cmp);
     let time_ratios: Vec<f64> =
         pairs.iter().filter_map(|p| p.time_ratio).collect();
     let wins = pairs.iter().filter(|p| p.dynamic_ratio > 1.0).count();
@@ -64,7 +67,7 @@ pub fn aggregate_claims(pairs: &[PairRatios]) -> String {
     ));
     if !time_ratios.is_empty() {
         let mut tr = time_ratios.clone();
-        tr.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        tr.sort_by(f64::total_cmp);
         s.push_str(&format!(
             "step-time: geomean={:.2}x  median={:.2}x  max={:.2}x (paper: up to 1.33x ≈ 25% reduction)\n",
             geomean(&tr),
@@ -174,7 +177,7 @@ pub fn timeline_plot(
     if timeline.is_empty() {
         return format!("{title}\n(empty timeline)\n");
     }
-    let max = timeline.iter().map(|(_, b)| *b).max().unwrap().max(1);
+    let max = timeline.iter().map(|(_, b)| *b).max().unwrap_or(0).max(1);
     // Downsample to `width` columns, keeping per-column maxima.
     let mut cols = vec![0u64; width];
     for (i, (_, b)) in timeline.iter().enumerate() {
@@ -259,6 +262,28 @@ mod tests {
     #[test]
     fn aggregate_handles_empty() {
         assert_eq!(aggregate_claims(&[]), "no pairs\n");
+    }
+
+    #[test]
+    fn aggregate_tolerates_nan_ratios() {
+        // Regression: a NaN dynamic or time ratio (0/0 from an empty
+        // measurement) used to panic the partial_cmp sort.  It must
+        // render — NaN degrades the aggregates, never the process.
+        let mut bad = pair(f64::NAN);
+        bad.time_ratio = Some(f64::NAN);
+        let pairs = vec![pair(4.0), bad, pair(2.0)];
+        let s = aggregate_claims(&pairs);
+        assert!(s.contains("pairs=3"), "{s}");
+        assert!(s.contains("step-time"), "{s}");
+    }
+
+    #[test]
+    fn timeline_plot_empty_degrades() {
+        // Regression: an empty timeline must produce the empty-report
+        // path, not unwrap an empty max().
+        let s = timeline_plot("Fig 2", &[], 40, 8);
+        assert!(s.contains("(empty timeline)"), "{s}");
+        assert!(!s.contains('█'));
     }
 
     #[test]

@@ -12,6 +12,9 @@
 //!   batched attention task (e.g. `mixflow native --task attention
 //!   --heads 4 --batch 8 --inner-opt adam --mode naive,mixflow --remat
 //!   auto`); `--mode fd` cross-checks with central differences,
+//!   `--mode truncated:<K>` backprops through only the last K inner
+//!   steps (K = T ≡ mixflow bit-for-bit), `--mode evograd` uses the
+//!   population estimate with no second-order terms, and
 //!   `--remat auto` resolves the remat segment K ≈ √T at run time.
 //!   `--trace <path>` turns on the engine's telemetry and writes
 //!   per-outer-step phase timings + counter deltas (`--trace-format

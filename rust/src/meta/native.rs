@@ -4,8 +4,11 @@
 //! Mirrors the artifact driver's surface: an outer Adam loop over η whose
 //! per-step hypergradient comes from one persistent
 //! [`HypergradEngine`] — naive, mixflow (with a configurable
-//! [`CheckpointPolicy`] remat segment, `auto` included) or fd, selected
-//! by [`HypergradMode`] — producing the same [`super::TrainReport`].
+//! [`CheckpointPolicy`] remat segment, `auto` included), fd,
+//! `truncated:<K>` (the mixflow adjoint over only the last K inner
+//! steps) or evograd (population estimate, no second-order terms),
+//! selected by [`HypergradMode`] — producing the same
+//! [`super::TrainReport`].
 //! Because the engine, its tape and its arena live as long as the
 //! trainer, every outer step after the first draws its buffers from the
 //! previous step's recycled storage.
@@ -155,7 +158,10 @@ impl NativeMetaTrainer {
             unroll,
             heads: 1,
             batch: 1,
-            engine: HypergradEngine::builder().build(),
+            // The EvoGrad perturbation stream is keyed by the trainer
+            // seed, so sweep cells that differ only in seed draw
+            // different populations (and replays stay deterministic).
+            engine: HypergradEngine::builder().evo_seed(seed).build(),
             meta_lr: 0.05,
             eta,
             adam_m,
@@ -213,8 +219,10 @@ impl NativeMetaTrainer {
     }
 
     /// Rebuild the engine from an updated builder, carrying over every
-    /// previously configured knob (mode, policy, fd epsilon, inner
-    /// optimiser).  Cheap before training; mid-training it would drop
+    /// previously configured knob (mode, policy, fd epsilon, EvoGrad
+    /// population/σ/seed, inner optimiser, telemetry, plans, threads —
+    /// the engine's stored [`HypergradEngine::config`] builder *is* the
+    /// knob set).  Cheap before training; mid-training it would drop
     /// the warm arena, so the `with_*` knobs are meant for construction
     /// time.
     fn reconfigure(
@@ -223,17 +231,7 @@ impl NativeMetaTrainer {
             crate::autodiff::engine::EngineBuilder,
         ) -> crate::autodiff::engine::EngineBuilder,
     ) {
-        let mut base = HypergradEngine::builder()
-            .mode(self.engine.mode())
-            .checkpoint(self.engine.policy())
-            .fd_epsilon(self.engine.fd_epsilon())
-            .telemetry(self.engine.telemetry_enabled())
-            .plan(self.engine.plan_enabled())
-            .threads(self.engine.threads());
-        if let Some(opt) = self.engine.inner_opt() {
-            base = base.inner_opt(opt);
-        }
-        self.engine = f(base).build();
+        self.engine = f(self.engine.config()).build();
     }
 
     pub fn with_mode(mut self, mode: HypergradMode) -> NativeMetaTrainer {
@@ -337,10 +335,13 @@ impl NativeMetaTrainer {
             mode.name(),
             self.problem.optimiser().name()
         );
-        // Only the mixflow path has checkpoints to thin, so only a
-        // mixflow run is labelled with its remat policy.
-        if mode == HypergradMode::Mixflow
-            && self.engine.policy() != CheckpointPolicy::Full
+        // Only the checkpointing paths (mixflow, and truncated inside
+        // its window) have checkpoints to thin, so only their runs are
+        // labelled with a remat policy.
+        if matches!(
+            mode,
+            HypergradMode::Mixflow | HypergradMode::Truncated { .. }
+        ) && self.engine.policy() != CheckpointPolicy::Full
         {
             artifact.push('/');
             artifact.push_str(&self.engine.policy().name());
@@ -721,7 +722,7 @@ pub fn sweep_report_json(spec: &SweepSpec, runs: &[SweepRun]) -> Json {
             "inner_opt",
             Json::Str(run.cell.inner_opt.name().to_string()),
         );
-        row.insert("mode", Json::Str(run.cell.mode.name().to_string()));
+        row.insert("mode", Json::Str(run.cell.mode.name()));
         row.insert("heads", Json::Num(run.cell.heads as f64));
         row.insert("seed", Json::Num(run.cell.seed as f64));
         row.insert("label", Json::Str(run.cell.label()));
@@ -856,6 +857,21 @@ mod tests {
         );
         assert_eq!(HypergradMode::parse("naive"), Some(HypergradMode::Naive));
         assert_eq!(HypergradMode::parse("fd"), Some(HypergradMode::Fd));
+        assert_eq!(
+            HypergradMode::parse("truncated:4"),
+            Some(HypergradMode::Truncated { horizon: 4 })
+        );
+        assert_eq!(
+            HypergradMode::parse(" Truncated:12 "),
+            Some(HypergradMode::Truncated { horizon: 12 })
+        );
+        assert_eq!(
+            HypergradMode::parse("evograd"),
+            Some(HypergradMode::Evograd)
+        );
+        assert_eq!(HypergradMode::parse("truncated:0"), None);
+        assert_eq!(HypergradMode::parse("truncated:"), None);
+        assert_eq!(HypergradMode::parse("truncated"), None);
     }
 
     #[test]
@@ -1005,6 +1021,57 @@ mod tests {
         let mem = trainer.last_memory.expect("fd memory recorded");
         assert_eq!(mem.checkpoint_bytes, 0);
         assert!(mem.arena_reuses > 0, "fd reuses the engine tape");
+    }
+
+    #[test]
+    fn truncated_mode_trains_and_labels_the_artifact() {
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(NativeTask::HyperLr, 3, 4)
+                .with_mode(HypergradMode::Truncated { horizon: 2 });
+        let before: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        let report = trainer.train(2);
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+        assert!(
+            report.artifact.ends_with("hyperlr/truncated:2/sgd"),
+            "got {:?}",
+            report.artifact
+        );
+        let after: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        assert_ne!(before, after, "truncated hypergradients must move eta");
+        // Truncated is a checkpointing mode: a non-full policy labels
+        // the artifact just like mixflow's does.
+        let remat = NativeMetaTrainer::with_unroll(NativeTask::HyperLr, 3, 4)
+            .with_mode(HypergradMode::Truncated { horizon: 4 })
+            .with_remat(CheckpointPolicy::Remat { segment: 2 })
+            .train(1);
+        assert!(
+            remat.artifact.ends_with("hyperlr/truncated:4/sgd/remat2"),
+            "got {:?}",
+            remat.artifact
+        );
+    }
+
+    #[test]
+    fn evograd_mode_trains_and_labels_the_artifact() {
+        let mut trainer =
+            NativeMetaTrainer::with_unroll(NativeTask::HyperLr, 3, 3)
+                .with_mode(HypergradMode::Evograd);
+        let before: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        let report = trainer.train(2);
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+        assert!(
+            report.artifact.ends_with("hyperlr/evograd/sgd"),
+            "got {:?}",
+            report.artifact
+        );
+        let after: Vec<f64> =
+            trainer.eta().iter().map(|e| e.data[0]).collect();
+        assert_ne!(before, after, "evograd hypergradients must move eta");
+        let mem = trainer.last_memory.expect("evograd memory recorded");
+        assert_eq!(mem.checkpoint_bytes, 0, "evograd stores no checkpoints");
     }
 
     #[test]

@@ -79,11 +79,16 @@ pub enum Counter {
     PoolJobs,
     /// Work chunks executed inside those parallel regions.
     PoolChunks,
+    /// Inner steps outside the truncation window — unrolled forward but
+    /// never differentiated by the truncated backward sweep.
+    TruncatedSkippedSteps,
+    /// Population perturbations drawn by the EvoGrad estimator.
+    EvogradPerturbations,
 }
 
 impl Counter {
     /// Every counter, in reporting order.
-    pub const ALL: [Counter; 28] = [
+    pub const ALL: [Counter; 30] = [
         Counter::TapeNodes,
         Counter::TapeBytes,
         Counter::KvBytes,
@@ -112,6 +117,8 @@ impl Counter {
         Counter::KernelRowsCalls,
         Counter::PoolJobs,
         Counter::PoolChunks,
+        Counter::TruncatedSkippedSteps,
+        Counter::EvogradPerturbations,
     ];
 
     /// Number of counters (array backing size).
@@ -148,6 +155,8 @@ impl Counter {
             Counter::KernelRowsCalls => "kernels.rows.calls",
             Counter::PoolJobs => "pool.jobs",
             Counter::PoolChunks => "pool.chunks",
+            Counter::TruncatedSkippedSteps => "truncated.skipped_steps",
+            Counter::EvogradPerturbations => "evograd.perturbations",
         }
     }
 

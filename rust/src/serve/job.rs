@@ -288,6 +288,36 @@ mod tests {
     }
 
     #[test]
+    fn new_modes_round_trip_and_key_their_own_engine_pools() {
+        for (mode, key_piece) in [
+            (HypergradMode::Truncated { horizon: 3 }, "truncated:3"),
+            (HypergradMode::Evograd, "evograd"),
+        ] {
+            let spec = JobSpec {
+                id: "m".to_string(),
+                mode,
+                ..JobSpec::default()
+            };
+            let round =
+                JobSpec::from_json(&spec.to_json(), "fallback").unwrap();
+            assert_eq!(round, spec);
+            let key = spec.engine_key(spec.mode, spec.remat);
+            assert_eq!(key, format!("hyperlr/sgd/{key_piece}/h1/b1/u4/full"));
+        }
+        // Different horizons must not share a warm engine: their
+        // backward plans cover different step counts.
+        let a = JobSpec::default().engine_key(
+            HypergradMode::Truncated { horizon: 2 },
+            CheckpointPolicy::Full,
+        );
+        let b = JobSpec::default().engine_key(
+            HypergradMode::Truncated { horizon: 4 },
+            CheckpointPolicy::Full,
+        );
+        assert_ne!(a, b);
+    }
+
+    #[test]
     fn defaults_fill_missing_fields() {
         let doc = Json::parse(r#"{"task":"hyperlr"}"#).unwrap();
         let spec = JobSpec::from_json(&doc, "job-3").unwrap();

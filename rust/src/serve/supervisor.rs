@@ -23,11 +23,13 @@
 //!    as finite differences (`nonfinite:<mode>->fd`): slower but
 //!    numerically decoupled from the taped path.  A failure while an
 //!    allocation-spike fault was held escalates the remat policy one
-//!    rung (`full → auto → remat{T}`, `remat{k} → remat{min(2k, T)}`),
-//!    trading recompute for a smaller live set under memory pressure.
+//!    rung (`full → auto → remat{T}`, `remat{k} → remat{min(2k, T)}`)
+//!    on the checkpointing modes (mixflow and truncated), trading
+//!    recompute for a smaller live set under memory pressure.
 //! 5. **Retry pacing** — between attempts the worker sleeps an
-//!    exponential backoff (`base·2^(n−1)`, capped) plus a jitter drawn
-//!    from a deterministic per-job [`Prng`] stream.
+//!    exponential backoff (`base·2^(n−1)`) plus a jitter drawn from a
+//!    deterministic per-job [`Prng`] stream; `backoff_cap_ms` bounds
+//!    the total per-retry delay, jitter included.
 //! 6. **Terminal record** — exactly one [`JobRecord`] per submitted
 //!    job, whatever happened: `ok`, `failed` or `shed`, carrying the
 //!    attempt count, degradation chain, engine generations and error.
@@ -286,6 +288,11 @@ fn run_attempt(
         spec.batch,
     );
     engine.configure_problem(problem.as_mut());
+    // Re-key per-run randomness (evograd's perturbation stream) to the
+    // job's seed: a warm pooled engine may have served any number of
+    // jobs before this one, and replay determinism requires the stream
+    // to depend only on the spec.
+    engine.reseed(spec.seed);
     let theta0 = problem.theta0();
     let mut eta = problem.eta0();
     if fault.nan {
@@ -446,7 +453,11 @@ fn process_job(
                         ));
                         mode = HypergradMode::Fd;
                     } else if fault.alloc
-                        && mode == HypergradMode::Mixflow
+                        && matches!(
+                            mode,
+                            HypergradMode::Mixflow
+                                | HypergradMode::Truncated { .. }
+                        )
                     {
                         if let Some(next) =
                             escalate_remat(remat, spec.unroll)
@@ -463,12 +474,20 @@ fn process_job(
                         .backoff_base_ms
                         .saturating_mul(1u64 << (attempt - 1).min(20))
                         .min(cfg.backoff_cap_ms);
+                    // One jitter draw per retry, unconditionally, so the
+                    // deterministic replay stream is identical whether or
+                    // not the cap bites.
+                    let jit = jitter
+                        .next_below(
+                            cfg.backoff_base_ms.clamp(1, u32::MAX as u64)
+                                as u32,
+                        ) as u64;
+                    // backoff_cap_ms bounds the *total* per-retry delay;
+                    // jitter must never push a capped exponential term
+                    // past the configured ceiling.
                     let delay = exp
-                        + jitter
-                            .next_below(
-                                cfg.backoff_base_ms.clamp(1, u32::MAX as u64)
-                                    as u32,
-                            ) as u64;
+                        .saturating_add(jit)
+                        .min(cfg.backoff_cap_ms);
                     backoff_ms += delay;
                     thread::sleep(Duration::from_millis(delay));
                 }
@@ -792,6 +811,42 @@ mod tests {
             }
             other => panic!("expected EngineQuarantined, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn backoff_delay_never_exceeds_the_cap() {
+        // Regression: jitter used to be added *after* the cap, so each
+        // retry could sleep up to backoff_base_ms past backoff_cap_ms.
+        // base=8/cap=10 makes the old bug visible: the capped
+        // exponential term alone reaches 10, so any non-zero jitter
+        // (drawn from [0, 8)) pushed the old sum over the ceiling.
+        let chaos = ChaosConfig {
+            seed: 7,
+            panic_rate: 1.0,
+            ..ChaosConfig::default()
+        };
+        let cfg = ServeConfig {
+            workers: 1,
+            max_retries: 3,
+            backoff_base_ms: 8,
+            backoff_cap_ms: 10,
+            chaos: Some(chaos),
+            ..ServeConfig::default()
+        };
+        let out = serve_jobs(vec![quick_spec("c0", 0)], &cfg);
+        let rec = &out.records[0];
+        assert_eq!(rec.attempts, 1 + cfg.max_retries);
+        assert!(rec.backoff_ms > 0, "retries must actually back off");
+        assert!(
+            rec.backoff_ms <= cfg.max_retries * cfg.backoff_cap_ms,
+            "total backoff {} ms must respect the {} ms per-retry cap",
+            rec.backoff_ms,
+            cfg.backoff_cap_ms
+        );
+        // The jitter stream is deterministic: a replay of the same
+        // seed/job sleeps the identical schedule.
+        let out2 = serve_jobs(vec![quick_spec("c0", 0)], &cfg);
+        assert_eq!(out2.records[0].backoff_ms, rec.backoff_ms);
     }
 
     #[test]

@@ -62,11 +62,18 @@ pub fn percentile(sorted: &[f64], pct: f64) -> f64 {
 }
 
 /// Geometric mean (used for aggregate ratio reporting, paper §5.2).
+///
+/// Defined only for strictly positive inputs: a zero, negative, or NaN
+/// value propagates NaN so corrupt ratios are visible in the report
+/// instead of being silently clamped into a plausible-looking number.
 pub fn geomean(values: &[f64]) -> f64 {
     if values.is_empty() {
         return 0.0;
     }
-    let s: f64 = values.iter().map(|v| v.max(1e-300).ln()).sum();
+    if values.iter().any(|&v| !(v > 0.0)) {
+        return f64::NAN;
+    }
+    let s: f64 = values.iter().map(|v| v.ln()).sum();
     (s / values.len() as f64).exp()
 }
 
@@ -141,6 +148,18 @@ mod tests {
         let g = geomean(&[2.0, 8.0]);
         assert!((g - 4.0).abs() < 1e-12);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn geomean_propagates_nan_for_non_positive() {
+        // Regression: zero/negative ratios used to be silently clamped
+        // to 1e-300, deflating the aggregate toward zero while still
+        // printing as a finite number.  They must poison the result.
+        assert!(geomean(&[2.0, 0.0]).is_nan());
+        assert!(geomean(&[2.0, -1.0]).is_nan());
+        assert!(geomean(&[2.0, f64::NAN]).is_nan());
+        // Positive-only inputs are unaffected by the guard.
+        assert!((geomean(&[4.0]) - 4.0).abs() < 1e-12);
     }
 
     #[test]

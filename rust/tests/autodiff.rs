@@ -786,8 +786,10 @@ fn property_cli_enum_names_round_trip() {
         HypergradMode::Naive,
         HypergradMode::Mixflow,
         HypergradMode::Fd,
+        HypergradMode::Truncated { horizon: 4 },
+        HypergradMode::Evograd,
     ] {
-        assert_eq!(HypergradMode::parse(mode.name()), Some(mode));
+        assert_eq!(HypergradMode::parse(&mode.name()), Some(mode));
     }
     for task in [
         NativeTask::HyperLr,

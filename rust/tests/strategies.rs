@@ -1,0 +1,438 @@
+//! Acceptance suite for the approximate hypergradient strategies:
+//! truncated back-propagation and EvoGrad.
+//!
+//! The load-bearing contracts:
+//!
+//! * **Exactness at full width** — `truncated:{horizon}` with
+//!   `horizon ≥ T` takes literally the same code path as mixflow
+//!   (`start = 0` reduces every windowing condition away), so the
+//!   hypergradient must be bit-for-bit identical across random tasks,
+//!   optimisers and checkpoint policies — not merely within 1e-12.
+//! * **Memory for bias** — a proper truncation (`horizon < T`) must
+//!   shrink both checkpoint bytes and the overall peak, monotonically
+//!   in the horizon.
+//! * **EvoGrad is O(1) in T** — no checkpoints ever, and the reported
+//!   outer loss is the unperturbed one (it matches mixflow's to the
+//!   values-vs-taped tolerance the fd oracle is held to).
+//! * **Determinism** — both strategies are bit-identical across kernel
+//!   thread counts, and EvoGrad's perturbation stream is a pure
+//!   function of (seed, outer step): rewinding via `reseed` replays
+//!   the exact estimate.
+//! * **Descent sanity** — averaged EvoGrad estimates point the same
+//!   way as the exact hypergradient on the hyper-LR task.
+
+use mixflow::autodiff::engine::{HypergradEngine, HypergradMode};
+use mixflow::autodiff::mixflow::{
+    mixflow_hypergrad, mixflow_hypergrad_with, CheckpointPolicy,
+};
+use mixflow::autodiff::optim::InnerOptimiser;
+use mixflow::autodiff::problems::{
+    AttentionProblem, HyperLrProblem, LossWeightingProblem,
+    MultiHeadAttentionProblem,
+};
+use mixflow::autodiff::tensor::Tensor;
+use mixflow::autodiff::BilevelProblem;
+use mixflow::obs::Counter;
+use mixflow::util::proptest;
+
+/// Random small bilevel instance spanning all four tasks and all three
+/// inner optimisers — the same family the engine equivalence properties
+/// use.
+fn random_problem(g: &mut proptest::Gen) -> Box<dyn BilevelProblem> {
+    let seed = g.rng.next_u64();
+    let d = g.usize(2, 4);
+    let hidden = g.usize(2, 5);
+    let classes = g.usize(2, 4);
+    let batch = g.usize(2, 5);
+    let unroll = g.usize(1, 4);
+    let alpha = g.f64(0.02, 0.12);
+    let opt = *g.choose(&[
+        InnerOptimiser::Sgd,
+        InnerOptimiser::momentum(),
+        InnerOptimiser::adam(),
+    ]);
+    match g.usize(0, 3) {
+        0 => Box::new(
+            HyperLrProblem::with_config(
+                seed, d, hidden, classes, batch, unroll, alpha,
+            )
+            .with_optimiser(opt),
+        ),
+        1 => Box::new(
+            LossWeightingProblem::with_config(
+                seed,
+                d,
+                hidden,
+                classes,
+                batch,
+                unroll,
+                alpha,
+                g.f64(0.0, 0.6),
+            )
+            .with_optimiser(opt),
+        ),
+        2 => Box::new(
+            AttentionProblem::with_config(
+                seed, d, batch, classes, unroll, alpha,
+            )
+            .with_optimiser(opt),
+        ),
+        _ => {
+            let heads = g.usize(1, 3);
+            let d_model = heads * g.usize(1, 2);
+            let seqs = g.usize(1, 3);
+            Box::new(
+                MultiHeadAttentionProblem::with_config(
+                    seed,
+                    d_model,
+                    heads,
+                    seqs,
+                    g.usize(2, 4),
+                    classes,
+                    unroll,
+                    alpha,
+                )
+                .with_optimiser(opt),
+            )
+        }
+    }
+}
+
+fn max_abs_diff(a: &[Tensor], b: &[Tensor]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| x.max_abs_diff(y))
+        .fold(0.0f64, f64::max)
+}
+
+#[test]
+fn property_truncated_full_horizon_is_bitwise_mixflow() {
+    // horizon = T and horizon > T (clamped) must both reproduce the
+    // mixflow hypergradient bit-for-bit across tasks × optimisers ×
+    // checkpoint policies — same code path, same op sequence, so the
+    // bound is literal 0.0, stronger than the 1e-12 acceptance line.
+    proptest::check("truncated(T)≡mixflow", 16, |g| {
+        let problem = random_problem(g);
+        let theta0 = problem.theta0();
+        let eta = problem.eta0();
+        let t = problem.unroll().max(1);
+        let policy = *g.choose(&[
+            CheckpointPolicy::Full,
+            CheckpointPolicy::Remat { segment: 2 },
+            CheckpointPolicy::Auto,
+        ]);
+        let full =
+            mixflow_hypergrad_with(problem.as_ref(), &theta0, &eta, policy);
+        for horizon in [t, t + 3] {
+            let mut engine = HypergradEngine::builder()
+                .mode(HypergradMode::Truncated { horizon })
+                .checkpoint(policy)
+                .build();
+            let trunc = engine.run(problem.as_ref(), &theta0, &eta);
+            let diff = max_abs_diff(&full.d_eta, &trunc.d_eta);
+            if diff != 0.0 {
+                return Err(format!(
+                    "truncated horizon {horizon} (T = {t}, {} policy, {} \
+                     opt) differs from mixflow by {diff:.3e}",
+                    policy.name(),
+                    problem.optimiser().name()
+                ));
+            }
+            if full.outer_loss.to_bits() != trunc.outer_loss.to_bits() {
+                return Err(format!(
+                    "truncated horizon {horizon} changed the outer loss: \
+                     {} vs {}",
+                    trunc.outer_loss, full.outer_loss
+                ));
+            }
+            if full.memory.checkpoint_bytes
+                != trunc.memory.checkpoint_bytes
+            {
+                return Err(format!(
+                    "full-width window must checkpoint exactly like \
+                     mixflow: {} vs {}",
+                    trunc.memory.checkpoint_bytes,
+                    full.memory.checkpoint_bytes
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_window_cuts_checkpoint_and_peak_memory_monotonically() {
+    // The acceptance criterion's shape: attention + Adam at T = 8, where
+    // the optimiser state doubles the per-step checkpoint payload.  A
+    // horizon < T must sit strictly below full mixflow on both ledgers,
+    // and shrinking the horizon further must never grow them.
+    let p = AttentionProblem::with_unroll(1, 8)
+        .with_optimiser(InnerOptimiser::adam());
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let full = mixflow_hypergrad(&p, &theta0, &eta);
+    let run_horizon = |h: usize| {
+        let mut engine = HypergradEngine::builder()
+            .mode(HypergradMode::Truncated { horizon: h })
+            .build();
+        engine.run(&p, &theta0, &eta)
+    };
+    let h4 = run_horizon(4);
+    let h2 = run_horizon(2);
+    for (label, trunc) in [("horizon 4", &h4), ("horizon 2", &h2)] {
+        assert!(
+            trunc.memory.checkpoint_bytes < full.memory.checkpoint_bytes,
+            "{label}: checkpoints {} not below full mixflow {}",
+            trunc.memory.checkpoint_bytes,
+            full.memory.checkpoint_bytes
+        );
+        assert!(
+            trunc.memory.peak_bytes < full.memory.peak_bytes,
+            "{label}: peak {} not below full mixflow {}",
+            trunc.memory.peak_bytes,
+            full.memory.peak_bytes
+        );
+    }
+    assert!(
+        h2.memory.checkpoint_bytes <= h4.memory.checkpoint_bytes,
+        "checkpoint bytes must be monotone in the horizon"
+    );
+}
+
+#[test]
+fn truncated_counts_the_steps_it_skips() {
+    // Telemetry: a horizon-2 window over T = 6 unrolls all six steps
+    // but differentiates only the last two — the registry must record
+    // the other four as skipped.
+    let p = HyperLrProblem::with_unroll(9, 6);
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let mut engine = HypergradEngine::builder()
+        .mode(HypergradMode::Truncated { horizon: 2 })
+        .telemetry(true)
+        .build();
+    let _ = engine.run(&p, &theta0, &eta);
+    assert_eq!(
+        engine.metrics().counter(Counter::TruncatedSkippedSteps),
+        4,
+        "T = 6 with horizon 2 skips exactly 4 adjoint steps"
+    );
+    // A full-width window skips nothing.
+    let mut full_width = HypergradEngine::builder()
+        .mode(HypergradMode::Truncated { horizon: 6 })
+        .telemetry(true)
+        .build();
+    let _ = full_width.run(&p, &theta0, &eta);
+    assert_eq!(
+        full_width.metrics().counter(Counter::TruncatedSkippedSteps),
+        0
+    );
+}
+
+#[test]
+fn evograd_is_o1_memory_and_counts_its_population() {
+    let p = HyperLrProblem::with_unroll(7, 6);
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let mut engine = HypergradEngine::builder()
+        .mode(HypergradMode::Evograd)
+        .evo_population(6)
+        .telemetry(true)
+        .build();
+    let h = engine.run(&p, &theta0, &eta);
+    assert_eq!(
+        h.memory.checkpoint_bytes, 0,
+        "evograd stores no inner-loop checkpoints"
+    );
+    assert!(h.outer_loss.is_finite());
+    assert!(h
+        .d_eta
+        .iter()
+        .all(|g| g.data.iter().all(|v| v.is_finite())));
+    assert_eq!(
+        engine.metrics().counter(Counter::EvogradPerturbations),
+        6,
+        "one counted perturbation per population member"
+    );
+    // The reported outer loss is the *unperturbed* one: same θ_T as the
+    // exact paths, so it matches mixflow to the values-vs-taped bound
+    // the fd oracle is held to.
+    let exact = mixflow_hypergrad(&p, &theta0, &eta);
+    assert!(
+        (h.outer_loss - exact.outer_loss).abs() < 1e-9,
+        "evograd outer loss {} vs mixflow {}",
+        h.outer_loss,
+        exact.outer_loss
+    );
+}
+
+#[test]
+fn evograd_replays_bit_for_bit_under_reseed() {
+    // The serving contract: the perturbation stream is a pure function
+    // of (seed, outer step).  Two runs after identical reseeds must be
+    // bit-for-bit equal, a different seed must actually change the
+    // estimate, and rewinding restores the original stream even after
+    // the engine has served intervening runs.
+    let p = HyperLrProblem::with_unroll(5, 4);
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let mut engine = HypergradEngine::builder()
+        .mode(HypergradMode::Evograd)
+        .evo_seed(11)
+        .build();
+    let first = engine.run(&p, &theta0, &eta);
+    let drift = engine.run(&p, &theta0, &eta);
+    assert!(
+        max_abs_diff(&first.d_eta, &drift.d_eta) != 0.0,
+        "consecutive outer steps must draw fresh populations"
+    );
+    engine.reseed(11);
+    let replay = engine.run(&p, &theta0, &eta);
+    assert_eq!(
+        max_abs_diff(&first.d_eta, &replay.d_eta),
+        0.0,
+        "reseed(11) must rewind the stream to the first run exactly"
+    );
+    engine.reseed(12);
+    let other = engine.run(&p, &theta0, &eta);
+    assert!(
+        max_abs_diff(&first.d_eta, &other.d_eta) != 0.0,
+        "a different seed must perturb differently"
+    );
+}
+
+#[test]
+fn evograd_estimates_a_descent_direction_on_hyperlr() {
+    // Descent sanity, pinned seeds: the softmax-weighted population
+    // estimate is biased (one-step η sensitivity) and stochastic, but
+    // averaged over a few fresh populations it must point the same way
+    // as the exact hypergradient on the hyper-LR task.  Everything here
+    // is deterministic — fixed problem seed, fixed evo seed — so this
+    // is a regression pin, not a flaky statistical test.
+    let p = HyperLrProblem::with_unroll(11, 3);
+    let theta0 = p.theta0();
+    let eta = p.eta0();
+    let exact = mixflow_hypergrad(&p, &theta0, &eta);
+    let mut engine = HypergradEngine::builder()
+        .mode(HypergradMode::Evograd)
+        .evo_population(32)
+        .evo_seed(7)
+        .build();
+    let mut mean: Vec<Tensor> =
+        eta.iter().map(|e| Tensor::zeros(&e.shape)).collect();
+    let runs = 8;
+    for _ in 0..runs {
+        let h = engine.run(&p, &theta0, &eta);
+        for (m, g) in mean.iter_mut().zip(h.d_eta.iter()) {
+            for (mv, gv) in m.data.iter_mut().zip(g.data.iter()) {
+                *mv += gv / runs as f64;
+            }
+        }
+    }
+    let mut dot = 0.0;
+    let mut n_mean = 0.0;
+    let mut n_exact = 0.0;
+    for (m, g) in mean.iter().zip(exact.d_eta.iter()) {
+        for (mv, gv) in m.data.iter().zip(g.data.iter()) {
+            dot += mv * gv;
+            n_mean += mv * mv;
+            n_exact += gv * gv;
+        }
+    }
+    let cosine = dot / (n_mean.sqrt() * n_exact.sqrt()).max(1e-300);
+    assert!(
+        cosine > 0.0,
+        "averaged evograd estimate must positively align with the exact \
+         hypergradient, got cosine {cosine:.4}"
+    );
+}
+
+#[test]
+fn property_new_modes_are_bit_identical_across_thread_counts() {
+    // The kernel pool's determinism contract extends to both new
+    // strategies: thread count must not change a single ULP.  (For
+    // evograd the engines share seed 0 / call 0, so the populations are
+    // identical by construction and any diff is a kernel-pool bug.)
+    proptest::check("strategies-thread-bit-identity", 8, |g| {
+        let problem = random_problem(g);
+        let horizon = g.usize(1, 5);
+        let mode = *g.choose(&[
+            HypergradMode::Truncated { horizon },
+            HypergradMode::Evograd,
+        ]);
+        let theta0 = problem.theta0();
+        let eta = problem.eta0();
+        let mut reference = None;
+        for &t in &[1usize, 4] {
+            let mut engine =
+                HypergradEngine::builder().mode(mode).threads(t).build();
+            let r = engine.run(problem.as_ref(), &theta0, &eta);
+            match &reference {
+                None => reference = Some(r),
+                Some(base) => {
+                    let diff = max_abs_diff(&base.d_eta, &r.d_eta);
+                    if diff != 0.0 {
+                        return Err(format!(
+                            "{mode:?}: d_eta differs by {diff:.3e} between \
+                             1 and {t} threads"
+                        ));
+                    }
+                    if base.outer_loss.to_bits() != r.outer_loss.to_bits() {
+                        return Err(format!(
+                            "{mode:?}: outer_loss bits differ between 1 \
+                             and {t} threads"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_trains_the_hyper_lr_toward_the_full_window_target() {
+    // End-to-end sanity that the truncated path is usable as a trainer
+    // gradient, not just correct in isolation: a few outer steps of
+    // horizon-2 truncated descent on hyper-LR must move η in the same
+    // direction as full mixflow from the same start, and reduce the
+    // outer loss.
+    let p = HyperLrProblem::with_unroll(13, 6);
+    let theta0 = p.theta0();
+    let mut eta_trunc = p.eta0();
+    let mut eta_full = p.eta0();
+    let mut trunc_engine = HypergradEngine::builder()
+        .mode(HypergradMode::Truncated { horizon: 2 })
+        .build();
+    let mut full_engine = HypergradEngine::builder().build();
+    let first_loss =
+        full_engine.run(&p, &theta0, &eta_full).outer_loss;
+    let lr = 0.05;
+    let mut last_trunc = f64::INFINITY;
+    let mut last_full = f64::INFINITY;
+    for _ in 0..6 {
+        let ht = trunc_engine.run(&p, &theta0, &eta_trunc);
+        let hf = full_engine.run(&p, &theta0, &eta_full);
+        last_trunc = ht.outer_loss;
+        last_full = hf.outer_loss;
+        for (e, g) in eta_trunc.iter_mut().zip(ht.d_eta.iter()) {
+            for (ev, gv) in e.data.iter_mut().zip(g.data.iter()) {
+                *ev -= lr * gv;
+            }
+        }
+        for (e, g) in eta_full.iter_mut().zip(hf.d_eta.iter()) {
+            for (ev, gv) in e.data.iter_mut().zip(g.data.iter()) {
+                *ev -= lr * gv;
+            }
+        }
+    }
+    assert!(
+        last_trunc < first_loss,
+        "truncated descent must reduce the outer loss: {last_trunc} vs \
+         first {first_loss}"
+    );
+    assert!(
+        last_full < first_loss,
+        "full mixflow descent must reduce the outer loss"
+    );
+}

@@ -15,7 +15,12 @@ fn small_grid_spec() -> SweepSpec {
     SweepSpec {
         tasks: vec![NativeTask::HyperLr, NativeTask::Attention],
         inner_opts: vec![InnerOptimiser::Sgd],
-        modes: vec![HypergradMode::Mixflow, HypergradMode::Naive],
+        modes: vec![
+            HypergradMode::Mixflow,
+            HypergradMode::Naive,
+            HypergradMode::Truncated { horizon: 1 },
+            HypergradMode::Evograd,
+        ],
         heads: vec![1, 2],
         batch: 2,
         remat: CheckpointPolicy::Full,
@@ -35,8 +40,8 @@ fn sweep_json_round_trips_with_grid_order_completeness() {
     let runs = run_sweep(&spec);
     let expected = spec.cells();
     assert_eq!(runs.len(), expected.len());
-    // 2 tasks × 1 opt × 2 modes × 2 heads × 2 seeds.
-    assert_eq!(expected.len(), 16);
+    // 2 tasks × 1 opt × 4 modes × 2 heads × 2 seeds.
+    assert_eq!(expected.len(), 32);
 
     // Golden-file round trip: dump, re-read, parse.
     let doc = sweep_report_json(&spec, &runs);
@@ -75,7 +80,7 @@ fn sweep_json_round_trips_with_grid_order_completeness() {
         );
         assert_eq!(
             row.get("mode").and_then(Json::as_str),
-            Some(want.mode.name()),
+            Some(want.mode.name().as_str()),
         );
         assert_eq!(
             row.get("heads").and_then(Json::as_u64),
